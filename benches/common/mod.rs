@@ -1,0 +1,64 @@
+//! Shared bench plumbing (the offline stand-in for criterion's harness).
+//!
+//! Each figure bench regenerates its figure through the coordinator,
+//! prints the paper-style ASCII rendering, writes the JSON report next
+//! to `target/criterion/`-style output, and reports the wall time of
+//! the regeneration itself (the simulator's own performance, tracked in
+//! EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
+
+use harbor::config::ExperimentConfig;
+use harbor::coordinator::Coordinator;
+use harbor::util::json::Value;
+
+#[allow(dead_code)]
+pub fn run_figure_bench(figure: &str) {
+    let cfg = ExperimentConfig::paper_default(figure).expect("known figure");
+    let coordinator = Coordinator::new();
+    eprintln!(
+        "[bench:{figure}] reps={} seed={} calibration={}",
+        cfg.reps, cfg.seed, coordinator.table.source
+    );
+
+    // timed regeneration (what `cargo bench` measures)
+    let t0 = Instant::now();
+    let figs = coordinator.run(&cfg).expect("figure runs");
+    let elapsed = t0.elapsed();
+
+    for f in &figs {
+        println!("{}", f.render());
+    }
+
+    let out_dir = std::path::Path::new("target/figure-reports");
+    std::fs::create_dir_all(out_dir).ok();
+    let json = Value::Arr(figs.iter().map(|f| f.to_json()).collect());
+    let path = out_dir.join(format!("{figure}.json"));
+    std::fs::write(&path, json.to_pretty()).ok();
+
+    println!(
+        "[bench:{figure}] regenerated {} figure(s) in {:.3}s (report: {})",
+        figs.len(),
+        elapsed.as_secs_f64(),
+        path.display()
+    );
+}
+
+/// Tiny timing helper for the micro benches: runs `f` in batches until
+/// ~0.2 s elapsed, returns ns/iter.
+#[allow(dead_code)]
+pub fn time_it<F: FnMut()>(label: &str, mut f: F) -> f64 {
+    // warm-up
+    for _ in 0..3 {
+        f();
+    }
+    let mut iters: u64 = 0;
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < 0.2 {
+        f();
+        iters += 1;
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("  {label:44} {:>12.0} ns/iter  ({iters} iters)", ns);
+    ns
+}

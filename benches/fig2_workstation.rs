@@ -1,0 +1,8 @@
+//! Regenerates Fig 2: four single-process FEniCS tests on the 16-core
+//! workstation across docker / rkt / native / VM (5 reps, error bars).
+//! Expected shape: docker ≈ rkt ≈ native (<1%); VM ≈ +15%.
+mod common;
+
+fn main() {
+    common::run_figure_bench("fig2");
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig 3: the C++ Poisson app on Edison at 24/48/96/192
+//! ranks under native / Shifter+system-MPI / Shifter+container-MPI.
+//! Expected shape: (a) ≈ (b) everywhere; (c) comparable on one node and
+//! divergent (solve-dominated) across nodes, off-scale at 192.
+mod common;
+
+fn main() {
+    common::run_figure_bench("fig3");
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig 4: the Python app on Edison at 24/48/96 ranks,
+//! native vs Shifter+system-MPI. Expected shape: per-phase compute
+//! equal; native total dominated by the import phase, growing with rank
+//! count and more variable (MDS contention noise).
+mod common;
+
+fn main() {
+    common::run_figure_bench("fig4");
+}

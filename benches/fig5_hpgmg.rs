@@ -1,0 +1,10 @@
+//! Regenerates Fig 5: HPGMG-FE throughput (DOF/s, higher is better).
+//! 5a — 16-core workstation, docker/rkt/native: native wins by ~3%
+//! (AVX on tuned loops). 5b — Edison at 192 ranks, native vs Shifter:
+//! parity at larger problem sizes.
+mod common;
+
+fn main() {
+    common::run_figure_bench("fig5a");
+    common::run_figure_bench("fig5b");
+}

@@ -1,0 +1,126 @@
+//! Micro-benchmarks of the simulator's hot paths (the §Perf targets).
+//!
+//! The figure benches measure *virtual* time; this bench measures the
+//! *simulator's own* throughput: DES primitives, hashing, the halo
+//! exchange data plane, the communication cost model, the import
+//! replay, and raw PJRT dispatch. Before/after numbers for the
+//! performance pass live in EXPERIMENTS.md §Perf.
+
+mod common;
+
+use harbor::cluster::{launch, MachineSpec};
+use harbor::container::image::{FileEntry, Layer};
+use harbor::des::{Duration, EventQueue, FifoResource, VirtualTime};
+use harbor::fem::grid::{exchange_halos, Decomp, LocalField};
+use harbor::mpi::Comm;
+use harbor::net::{Fabric, FabricKind};
+use harbor::pyimport::{replay, ModuleGraph};
+use harbor::runtime::{artifacts_available, Engine, TensorBuf};
+
+use common::time_it;
+
+fn main() {
+    println!("== micro: DES substrate ==");
+    time_it("event queue push+pop (1k events)", || {
+        let mut q = EventQueue::new();
+        for i in 0..1000u64 {
+            q.push(VirtualTime::ZERO + Duration::from_nanos(i % 97), i);
+        }
+        while q.pop().is_some() {}
+    });
+    time_it("fifo resource 1k submissions", || {
+        let mut r = FifoResource::new(16);
+        for i in 0..1000u64 {
+            r.submit(
+                VirtualTime::ZERO + Duration::from_nanos(i),
+                Duration::from_micros(100),
+            );
+        }
+    });
+
+    println!("== micro: container substrate ==");
+    let files: Vec<FileEntry> = (0..200)
+        .map(|i| FileEntry {
+            path: format!("/usr/lib/f{i}.so"),
+            bytes: 10_000 + i as u64,
+        })
+        .collect();
+    time_it("layer derive (sha256, 200-file manifest)", || {
+        let l = Layer::derive(None, "RUN apt-get install petsc", files.clone());
+        std::hint::black_box(l.id);
+    });
+
+    println!("== micro: MPI cost model ==");
+    let machine = MachineSpec::edison();
+    let alloc = launch(&machine, 192).unwrap();
+    let decomp = Decomp::new(192, 32);
+    let msgs = decomp.halo_messages(decomp.face_bytes());
+    time_it("comm.exchange 192-rank halo msg list", || {
+        let mut comm = Comm::new(alloc.clone(), Fabric::by_kind(FabricKind::Aries));
+        comm.exchange(&msgs);
+        std::hint::black_box(comm.max_clock());
+    });
+    time_it("allreduce x100, 192 ranks", || {
+        let mut comm = Comm::new(alloc.clone(), Fabric::by_kind(FabricKind::Aries));
+        for _ in 0..100 {
+            comm.allreduce(8);
+        }
+    });
+
+    println!("== micro: halo-exchange data plane (real f32 faces) ==");
+    let d8 = Decomp::new(8, 32);
+    let ws = launch(&MachineSpec::workstation(), 8).unwrap();
+    let mut fields: Vec<LocalField> = (0..8)
+        .map(|r| {
+            LocalField::from_interior(
+                32,
+                &(0..32 * 32 * 32).map(|i| (i + r) as f32).collect::<Vec<_>>(),
+            )
+        })
+        .collect();
+    time_it("exchange_halos 8 ranks x 32³ blocks", || {
+        let mut comm = Comm::new(ws.clone(), Fabric::shared_mem());
+        exchange_halos(&d8, &mut fields, &mut comm);
+    });
+
+    println!("== micro: import replay ==");
+    let graph = ModuleGraph::fenics_stack();
+    let alloc24 = launch(&machine, 24).unwrap();
+    time_it("pyimport replay, 24 ranks x fenics stack", || {
+        let mut fs = harbor::fs::ParallelFs::edison(1);
+        let rep = replay(&graph, &alloc24, &mut fs, VirtualTime::ZERO);
+        std::hint::black_box(rep.wall);
+    });
+
+    println!("== micro: PJRT dispatch ==");
+    if artifacts_available() {
+        let mut engine = Engine::open_default().unwrap();
+        engine.warm("dot_L4096").unwrap();
+        let a = TensorBuf::new(vec![4096], vec![1.0; 4096]);
+        time_it("engine.execute dot_L4096 (dispatch+copy)", || {
+            let out = engine.execute("dot_L4096", &[a.clone(), a.clone()]).unwrap();
+            std::hint::black_box(out[0].data[0]);
+        });
+        engine.warm("cg_apdot_p3d_n32").unwrap();
+        let p = TensorBuf::zeros(vec![34, 34, 34]);
+        time_it("engine.execute cg_apdot_p3d_n32", || {
+            let out = engine.execute("cg_apdot_p3d_n32", &[p.clone()]).unwrap();
+            std::hint::black_box(out[1].data[0]);
+        });
+    } else {
+        println!("  (skipped: artifacts not built)");
+    }
+
+    println!("== micro: end-to-end simulation throughput ==");
+    let table = harbor::runtime::CalibrationTable::builtin_fallback();
+    time_it("fig3 cell: 96-rank modeled app run", || {
+        let mut exec = harbor::fem::exec::Exec::Modeled { table: &table };
+        let b = harbor::workload::run_poisson_app(
+            harbor::platform::Platform::Native,
+            &mut exec,
+            &harbor::workload::AppConfig::cpp(96, 1),
+        )
+        .unwrap();
+        std::hint::black_box(b.total());
+    });
+}

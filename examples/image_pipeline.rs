@@ -1,0 +1,56 @@
+//! The Fig 1 pipeline: Dockerfile → cloud build → registry → pull on a
+//! laptop and on the HPC machine — plus what an incremental change
+//! costs (the §3.4 workflow: "making small configuration changes
+//! requires changing just one file").
+//!
+//! Run with: `cargo run --release --example image_pipeline`
+
+use harbor::container::{Builder, Buildfile, LayerStore, Registry};
+use harbor::coordinator::{deploy_pipeline, FENICS_BUILDFILE};
+
+fn main() -> anyhow::Result<()> {
+    println!("== Fig 1: build -> push -> pull on every platform ==\n");
+    let trace = deploy_pipeline()?;
+    print!("{}", trace.render());
+
+    println!("\n== incremental change: one extra directive ==");
+    // The CI builder keeps its layer cache between commits; a new
+    // directive at the end rebuilds only itself.
+    let mut builder = Builder::new();
+    let mut ci = LayerStore::new();
+    let v1 = builder.build(
+        &Buildfile::parse(FENICS_BUILDFILE)?,
+        "quay.io/fenicsproject/stable:2016.1.0r1",
+        &mut ci,
+    )?;
+    let changed = format!("{FENICS_BUILDFILE}RUN pip install matplotlib\n");
+    let v2 = builder.build(
+        &Buildfile::parse(&changed)?,
+        "quay.io/fenicsproject/stable:2016.2.0.dev0",
+        &mut ci,
+    )?;
+    println!(
+        "v1: {} layers built; v2 (one-line change): {} built, {} cached",
+        v1.layers_built, v2.layers_built, v2.layers_cached
+    );
+
+    println!("\n== users pull the update: only new layers move ==");
+    let mut registry = Registry::new();
+    registry.push(&v1.image, &ci)?;
+    registry.push(&v2.image, &ci)?;
+    let mut user = LayerStore::new();
+    let (_, first) = registry.pull("quay.io/fenicsproject/stable:2016.1.0r1", &mut user)?;
+    let (_, update) = registry.pull("quay.io/fenicsproject/stable:2016.2.0.dev0", &mut user)?;
+    println!(
+        "initial pull: {} MB in {}\nupdate pull:  {} MB in {} ({} layers reused)",
+        first.bytes_transferred / 1_000_000,
+        first.time,
+        update.bytes_transferred / 1_000_000,
+        update.time,
+        update.layers_reused,
+    );
+    assert!(update.bytes_transferred < first.bytes_transferred / 5);
+
+    println!("\nimage_pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Quickstart: the paper's §2.2 walk-through, end to end.
+//!
+//! Builds the paper's example image (Ubuntu + SciPy) from a Buildfile,
+//! tags it, starts a container from it, execs a command, and shows the
+//! layered-filesystem properties (content hashes, caching, dedup) the
+//! paper highlights.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use harbor::container::runtime::{by_kind, RuntimeKind};
+use harbor::container::{Builder, Buildfile, Container, LayerStore, Registry};
+use harbor::des::VirtualTime;
+
+const SCIPY_BUILDFILE: &str = r#"
+# The paper's §2.2 example, verbatim structure
+FROM ubuntu:16.04
+USER root
+RUN apt-get -y update && \
+ apt-get -y upgrade && \
+ apt-get -y install python-scipy && \
+ rm -rf /var/lib/apt/lists/* /tmp/* /var/tmp/*
+"#;
+
+fn main() -> anyhow::Result<()> {
+    println!("== 1. docker build . ==");
+    let bf = Buildfile::parse(SCIPY_BUILDFILE)?;
+    let mut store = LayerStore::new();
+    let mut builder = Builder::new();
+    let report = builder.build(&bf, "scipy-image:latest", &mut store)?;
+    println!(
+        "built image {} ({} layers, {} MB, simulated build {})",
+        report.image.id,
+        report.image.layers.len(),
+        report.image.size_bytes(&store) / 1_000_000,
+        report.build_time
+    );
+
+    println!("\n== 2. rebuild: every layer comes from the cache ==");
+    let again = builder.build(&bf, "scipy-image:latest", &mut store)?;
+    println!(
+        "cache hits: {} / {} (same content hash: {})",
+        again.layers_cached,
+        again.image.layers.len(),
+        again.image.id == report.image.id
+    );
+    assert_eq!(again.layers_built, 0);
+
+    println!("\n== 3. push / pull through a registry ==");
+    let mut registry = Registry::new();
+    registry.push(&report.image, &store)?;
+    let mut laptop = LayerStore::new();
+    let (pulled, pull) = registry.pull("scipy-image:latest", &mut laptop)?;
+    println!(
+        "pulled {}: {} layers, {} MB in {}",
+        pulled.reference,
+        pull.layers_transferred,
+        pull.bytes_transferred / 1_000_000,
+        pull.time
+    );
+
+    println!("\n== 4. docker run -ti scipy-image python ==");
+    let docker = by_kind(RuntimeKind::Docker);
+    let start_cost = docker.startup_overhead(&pulled);
+    let mut c = Container::create(1, pulled.id.clone(), VirtualTime::ZERO);
+    c.start(VirtualTime::ZERO + start_cost)?;
+    c.exec("python -c 'import scipy; print(scipy.__version__)'")?;
+    c.exit(
+        0,
+        VirtualTime::ZERO + start_cost + harbor::des::Duration::from_millis(900),
+    )?;
+    println!(
+        "container {} ran `{}` (startup {start_cost}, total {})",
+        c.id,
+        c.exec_log[0],
+        c.runtime().unwrap()
+    );
+
+    println!("\n== 5. a second image FROM the same base dedups in the store ==");
+    // a different CI job (fresh builder, no layer cache) pushes into the
+    // same store: content addressing dedups the shared base physically
+    let bf2 = Buildfile::parse("FROM ubuntu:16.04\nRUN apt-get -y install python-numpy")?;
+    let before = store.physical_bytes();
+    Builder::new().build(&bf2, "numpy-image:latest", &mut store)?;
+    println!(
+        "added {} MB physically (base shared); store dedup ratio {:.2}x",
+        (store.physical_bytes() - before) / 1_000_000,
+        store.dedup_ratio()
+    );
+
+    println!("\nquickstart OK");
+    Ok(())
+}

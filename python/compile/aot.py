@@ -1,0 +1,85 @@
+# AOT export: lower every L2 entry point to HLO *text* + a manifest.
+#
+# Interchange format is HLO text, NOT serialized HloModuleProto:
+# jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+# pinned xla_extension (0.5.1) rejects (`proto.id() <= INT_MAX`); the text
+# parser reassigns ids and round-trips cleanly.  Lowered with
+# return_tuple=True, so the Rust side unwraps a tuple even for single
+# outputs.  (See /opt/xla-example/load_hlo and its README.)
+#
+# This script is the ONLY place Python touches the build: `make artifacts`
+# runs it once; the Rust binary is self-contained afterwards.
+#
+# Usage:  python -m compile.aot --out ../artifacts [--only name1,name2]
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+
+from . import model
+from .kernels import ref  # noqa: F401  (import check: oracle must stay in sync)
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_entry(name, fn, specs, out_dir):
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *specs)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    meta = {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "inputs": [
+            {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+        ],
+        "outputs": [
+            {"shape": list(o.shape), "dtype": str(o.dtype)} for o in outs
+        ],
+        "elapsed_s": round(time.time() - t0, 3),
+    }
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default="", help="comma-separated entry filter")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    only = {s for s in args.only.split(",") if s}
+    entries = {
+        k: v for k, v in model.ENTRIES.items() if not only or k in only
+    }
+    manifest = {"format": "hlo-text/return-tuple", "entries": []}
+    for name, (fn, specs) in sorted(entries.items()):
+        meta = export_entry(name, fn, specs, args.out)
+        manifest["entries"].append(meta)
+        print(f"  [aot] {name:28s} {meta['elapsed_s']:6.2f}s", file=sys.stderr)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['entries'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

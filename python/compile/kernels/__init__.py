@@ -1,0 +1,2 @@
+# L1 Pallas kernels + pure-jnp oracle (ref.py).
+from . import blas1, ref, smoother, stencil, transfer  # noqa: F401

@@ -1,0 +1,74 @@
+# L1 Pallas kernels: fused BLAS-1 fragments of the CG iteration.
+#
+# CG's non-stencil work is bandwidth-bound vector arithmetic.  Fusing the
+# solution/residual update with the local reduction (x' = x + a p,
+# r' = r - a Ap, rr = <r', r'>) means each vector is streamed through
+# VMEM exactly once per iteration — the same fusion FEniCS gets from
+# PETSc's VecAXPY/VecDot pipelining on the paper's testbeds.
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .stencil import INTERPRET
+
+
+def _dot_kernel(a_ref, b_ref, o_ref):
+    o_ref[0] = jnp.sum(a_ref[...] * b_ref[...])
+
+
+def dot(a, b):
+    """<a, b> over flat f32 vectors; returns shape-(1,) partial sum."""
+    return pl.pallas_call(
+        _dot_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), a.dtype),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+def axpy(alpha, x, y):
+    """alpha * x + y; alpha is a shape-(1,) array."""
+    return pl.pallas_call(
+        _axpy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=INTERPRET,
+    )(alpha, x, y)
+
+
+def _cg_update_kernel(alpha_ref, x_ref, r_ref, p_ref, ap_ref, xo_ref, ro_ref, rro_ref):
+    a = alpha_ref[0]
+    xo_ref[...] = x_ref[...] + a * p_ref[...]
+    rn = r_ref[...] - a * ap_ref[...]
+    ro_ref[...] = rn
+    rro_ref[0] = jnp.sum(rn * rn)
+
+
+def cg_update(alpha, x, r, p, ap):
+    """Fused CG update: (x + a p, r - a Ap, <r', r'>). Flat vectors."""
+    n = x.shape[0]
+    return pl.pallas_call(
+        _cg_update_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), x.dtype),
+            jax.ShapeDtypeStruct((n,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ),
+        interpret=INTERPRET,
+    )(alpha, x, r, p, ap)
+
+
+def _cg_pupdate_kernel(beta_ref, r_ref, p_ref, o_ref):
+    o_ref[...] = r_ref[...] + beta_ref[0] * p_ref[...]
+
+
+def cg_pupdate(beta, r, p):
+    """p' = r + beta * p. Flat vectors."""
+    return pl.pallas_call(
+        _cg_pupdate_kernel,
+        out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
+        interpret=INTERPRET,
+    )(beta, r, p)

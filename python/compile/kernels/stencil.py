@@ -1,0 +1,134 @@
+# L1 Pallas kernels: stencil operator applications.
+#
+# The computational hot-spot of every workload in the paper's evaluation
+# (Poisson CG/AMG, elasticity, HPGMG) is the application of a constant-
+# coefficient stencil to a halo-padded block.  These kernels express that
+# hot-spot as Pallas kernels that stream z-slabs through VMEM-sized tiles:
+# the input block for grid step i is the slab [i*bz, i*bz + bz + 2) of the
+# halo-padded array (one halo ring kept resident), the output block is the
+# interior slab [i*bz, i*bz + bz).
+#
+# interpret=True everywhere: this session's PJRT backend is CPU; real-TPU
+# lowering would emit a Mosaic custom-call the CPU plugin cannot execute.
+# The BlockSpec/tiling structure is still the real one — see
+# DESIGN.md §10 for the VMEM/MXU accounting.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT: interpret mode is mandatory (see module docstring)
+
+
+def _pick_bz(nz: int, budget_cells: int, plane: int) -> int:
+    """Largest slab depth whose (bz+2)-deep input tile fits the cell budget."""
+    bz = max(1, min(nz, budget_cells // max(plane, 1) - 2))
+    while nz % bz != 0:
+        bz -= 1
+    return max(bz, 1)
+
+
+# ---------------------------------------------------------------------------
+# 7-point 3D Laplacian:  out = 6*c - sum(face neighbours)
+# ---------------------------------------------------------------------------
+
+def _laplace3d_kernel(u_ref, o_ref, *, bz):
+    i = pl.program_id(0)
+    # Load one z-slab plus its two halo planes; y/x halos are in the slab.
+    s = u_ref[pl.dslice(i * bz, bz + 2), :, :]
+    c = s[1:-1, 1:-1, 1:-1]
+    lap = (
+        6.0 * c
+        - s[:-2, 1:-1, 1:-1]
+        - s[2:, 1:-1, 1:-1]
+        - s[1:-1, :-2, 1:-1]
+        - s[1:-1, 2:, 1:-1]
+        - s[1:-1, 1:-1, :-2]
+        - s[1:-1, 1:-1, 2:]
+    )
+    o_ref[pl.dslice(i * bz, bz), :, :] = lap
+
+
+def laplace3d_apply(u_halo, *, vmem_budget_cells=1 << 20):
+    """A u for the scaled 7-point operator. u_halo: (nz+2, ny+2, nx+2)."""
+    nzp, nyp, nxp = u_halo.shape
+    nz, ny, nx = nzp - 2, nyp - 2, nxp - 2
+    bz = _pick_bz(nz, vmem_budget_cells, nyp * nxp)
+    return pl.pallas_call(
+        functools.partial(_laplace3d_kernel, bz=bz),
+        out_shape=jax.ShapeDtypeStruct((nz, ny, nx), u_halo.dtype),
+        grid=(nz // bz,),
+        interpret=INTERPRET,
+    )(u_halo)
+
+
+# ---------------------------------------------------------------------------
+# 5-point 2D Laplacian (whole-array kernel; 2D problems are small)
+# ---------------------------------------------------------------------------
+
+def _laplace2d_kernel(u_ref, o_ref):
+    s = u_ref[...]
+    c = s[1:-1, 1:-1]
+    o_ref[...] = 4.0 * c - s[:-2, 1:-1] - s[2:, 1:-1] - s[1:-1, :-2] - s[1:-1, 2:]
+
+
+def laplace2d_apply(u_halo):
+    """A u for the scaled 5-point operator. u_halo: (ny+2, nx+2)."""
+    nyp, nxp = u_halo.shape
+    return pl.pallas_call(
+        _laplace2d_kernel,
+        out_shape=jax.ShapeDtypeStruct((nyp - 2, nxp - 2), u_halo.dtype),
+        interpret=INTERPRET,
+    )(u_halo)
+
+
+# ---------------------------------------------------------------------------
+# Lamé (linear elasticity) operator, vector field (3, nz+2, ny+2, nx+2).
+# Fused kernel: all three output components computed from one resident
+# slab of all three input components (9 stencil passes share loads).
+# ---------------------------------------------------------------------------
+
+def _elast3d_kernel(u_ref, o_ref, *, bz, mu, lam):
+    i = pl.program_id(0)
+    s = u_ref[:, pl.dslice(i * bz, bz + 2), :, :]  # (3, bz+2, ny+2, nx+2)
+
+    def d2(a, axis):
+        sl = [slice(1, -1)] * 3
+        lo, hi = list(sl), list(sl)
+        lo[axis] = slice(0, -2)
+        hi[axis] = slice(2, None)
+        return a[tuple(lo)] + a[tuple(hi)] - 2.0 * a[tuple(sl)]
+
+    def dxy(a, ax_a, ax_b):
+        def shifted(da, db):
+            sl = [slice(1, -1)] * 3
+            sl[ax_a] = slice(2, None) if da == 1 else slice(0, -2)
+            sl[ax_b] = slice(2, None) if db == 1 else slice(0, -2)
+            return a[tuple(sl)]
+
+        return shifted(1, 1) - shifted(1, -1) - shifted(-1, 1) + shifted(-1, -1)
+
+    outs = []
+    for ci in range(3):
+        lap_i = d2(s[ci], 0) + d2(s[ci], 1) + d2(s[ci], 2)
+        grad_div = d2(s[ci], ci)
+        for cj in range(3):
+            if cj != ci:
+                grad_div = grad_div + 0.25 * dxy(s[cj], ci, cj)
+        outs.append(-(mu * lap_i + (lam + mu) * grad_div))
+    o_ref[:, pl.dslice(i * bz, bz), :, :] = jnp.stack(outs)
+
+
+def elasticity3d_apply(u_halo, mu=1.0, lam=1.0, *, vmem_budget_cells=1 << 20):
+    """A u for the scaled Lamé operator. u_halo: (3, nz+2, ny+2, nx+2)."""
+    _, nzp, nyp, nxp = u_halo.shape
+    nz, ny, nx = nzp - 2, nyp - 2, nxp - 2
+    bz = _pick_bz(nz, vmem_budget_cells // 3, nyp * nxp)
+    return pl.pallas_call(
+        functools.partial(_elast3d_kernel, bz=bz, mu=mu, lam=lam),
+        out_shape=jax.ShapeDtypeStruct((3, nz, ny, nx), u_halo.dtype),
+        grid=(nz // bz,),
+        interpret=INTERPRET,
+    )(u_halo)

@@ -1,0 +1,105 @@
+# L1 Pallas kernels: multigrid grid-transfer operators.
+#
+# Cell-centred full-weighting restriction (mean of 8 fine children) and
+# cell-centred trilinear prolongation (Dirichlet ghosts).
+# Whole-array kernels: transfer operands are at most the fine-level block,
+# and the coarse side is 8x smaller, so a single VMEM-resident tile
+# suffices for every level of the HPGMG ladder we export (<= 64^3 local).
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .stencil import INTERPRET
+
+
+def _restrict3d_kernel(r_ref, o_ref):
+    r = r_ref[...]
+    n = r.shape[0] // 2
+    o_ref[...] = r.reshape(n, 2, n, 2, n, 2).mean(axis=(1, 3, 5))
+
+
+def restrict3d(r):
+    """Full-weighting (8-mean) restriction (2n)^3 -> n^3."""
+    n = r.shape[0] // 2
+    return pl.pallas_call(
+        _restrict3d_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n, n), r.dtype),
+        interpret=INTERPRET,
+    )(r)
+
+
+def _restrict3d_tri_kernel(r_ref, o_ref):
+    out = r_ref[...]
+    for ax in range(3):
+        m = out.shape[ax] - 2
+        sl = lambda s: tuple(s if d == ax else slice(None) for d in range(out.ndim))
+        a = out[sl(slice(0, m, 2))]
+        b = out[sl(slice(1, m + 1, 2))]
+        c = out[sl(slice(2, m + 2, 2))]
+        d = out[sl(slice(3, None, 2))]
+        out = (0.25 * a + 0.75 * b + 0.75 * c + 0.25 * d) / 2.0
+    o_ref[...] = out
+
+
+def restrict3d_tri(r_halo):
+    """Variational restriction R = P^T / 8 (transpose of the trilinear
+    prolongation): halo-padded (2n+2)^3 fine residual -> n^3 coarse.
+    The halo carries neighbour residuals at block interfaces (zeros at
+    physical boundaries), so the distributed restriction equals the
+    global one."""
+    n = (r_halo.shape[0] - 2) // 2
+    return pl.pallas_call(
+        _restrict3d_tri_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n, n), r_halo.dtype),
+        interpret=INTERPRET,
+    )(r_halo)
+
+
+def _interp_axis(a, axis):
+    """One axis of cell-centred trilinear interpolation; `a` has ghosts
+    along `axis`: fine(2j) = .75 c_j + .25 c_{j-1}, fine(2j+1) = .75 c_j +
+    .25 c_{j+1}."""
+    sl = lambda s: tuple(s if d == axis else slice(None) for d in range(a.ndim))
+    c = a[sl(slice(1, -1))]
+    lo = a[sl(slice(0, -2))]
+    hi = a[sl(slice(2, None))]
+    st = jnp.stack([0.75 * c + 0.25 * lo, 0.75 * c + 0.25 * hi], axis=axis + 1)
+    shp = list(c.shape)
+    shp[axis] *= 2
+    return st.reshape(shp)
+
+
+def _prolong3d_halo_kernel(e_ref, o_ref):
+    # input is fully halo-padded (n+2)^3; each axis pass consumes that
+    # axis's ghost layer: (m, ...) -> (2(m-2), ...)
+    out = e_ref[...]
+    for ax in range(3):
+        out = _interp_axis(out, ax)
+    o_ref[...] = out
+
+
+def prolong3d_halo(e_halo):
+    """Cell-centred trilinear prolongation with *supplied* ghosts:
+    (n+2)^3 -> (2n)^3.
+
+    In the distributed multigrid ladder the ghosts come from the halo
+    exchange of the coarse correction — interpolating with real
+    neighbour values (instead of zeros) at block interfaces is what
+    keeps the V-cycle factor grid-independent across ranks.  (Edge and
+    corner ghosts are not exchanged and enter as whatever the caller
+    padded; the resulting perturbation lives on O(n) cells per block
+    versus O(n^2) for faces.)
+    """
+    n = e_halo.shape[0] - 2
+    return pl.pallas_call(
+        _prolong3d_halo_kernel,
+        out_shape=jax.ShapeDtypeStruct((2 * n, 2 * n, 2 * n), e_halo.dtype),
+        interpret=INTERPRET,
+    )(e_halo)
+
+
+def prolong3d(e):
+    """Cell-centred trilinear prolongation n^3 -> (2n)^3 with zero
+    (Dirichlet) ghosts — the single-domain case."""
+    return prolong3d_halo(jnp.pad(e, 1))

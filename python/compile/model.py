@@ -1,0 +1,259 @@
+# L2: JAX compute graphs for the FEM workload suite, composed from the
+# Pallas kernels in `kernels/` and AOT-exported (by `aot.py`) as HLO text
+# for the Rust coordinator.
+#
+# Every function here is a *per-rank local* computation: distributed
+# structure (halo exchange, allreduce) lives in Rust (`harbor::mpi`,
+# `harbor::fem`).  Each exported entry point therefore takes halo-padded
+# local blocks and returns local partials, so the HLO is identical whether
+# the rank is one of 1 or one of 192.
+#
+# Entry-point registry: `ENTRIES` maps artifact name -> (fn, arg specs).
+# `aot.py` lowers each entry with jax.jit(...).lower(*specs), converts to
+# HLO *text* (see aot.py for why text, not serialized proto) and writes
+# artifacts/<name>.hlo.txt plus a manifest consumed by `harbor::runtime`.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import blas1, smoother, stencil, transfer
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+# ---------------------------------------------------------------------------
+# CG building blocks (Poisson 3D and elasticity 3D)
+# ---------------------------------------------------------------------------
+
+def cg_apdot_p3d(p_halo):
+    """Ap = A p (7-point), plus the local partial <p, Ap>.
+
+    p_halo: (n+2, n+2, n+2) halo-padded search direction.
+    Returns (Ap flat (n^3,), pAp partial (1,)).
+    """
+    ap = stencil.laplace3d_apply(p_halo)
+    apf = ap.reshape(-1)
+    pf = p_halo[1:-1, 1:-1, 1:-1].reshape(-1)
+    return apf, blas1.dot(pf, apf)
+
+
+def cg_apdot_el3d(u_halo):
+    """Lamé-operator apply + local <p, Ap>. u_halo: (3, n+2, n+2, n+2)."""
+    ap = stencil.elasticity3d_apply(u_halo)
+    apf = ap.reshape(-1)
+    pf = u_halo[:, 1:-1, 1:-1, 1:-1].reshape(-1)
+    return apf, blas1.dot(pf, apf)
+
+
+def cg_update(alpha, x, r, p, ap):
+    """Fused (x + a p, r - a Ap, local <r',r'>) on flat vectors."""
+    return blas1.cg_update(alpha, x, r, p, ap)
+
+
+def cg_pupdate(beta, r, p):
+    """p' = r + beta p on flat vectors."""
+    return (blas1.cg_pupdate(beta, r, p),)
+
+
+def dot2(a, b):
+    """Standalone local partial dot (used for <r,z> in preconditioned CG)."""
+    return (blas1.dot(a, b),)
+
+
+# ---------------------------------------------------------------------------
+# RHS assembly (manufactured solution, cell-centred coordinates)
+# ---------------------------------------------------------------------------
+
+def assemble_rhs3d(origin, h, *, n):
+    """f = h^2 * 3 pi^2 sin(pi x) sin(pi y) sin(pi z) on the local block.
+
+    origin: (3,) f32 global index of this rank's first interior cell
+    (iz, iy, ix); h: (1,) f32 grid spacing. Returns flat (n^3,).
+    """
+    iz = jax.lax.broadcasted_iota(F32, (n, n, n), 0) + origin[0]
+    iy = jax.lax.broadcasted_iota(F32, (n, n, n), 1) + origin[1]
+    ix = jax.lax.broadcasted_iota(F32, (n, n, n), 2) + origin[2]
+    pi = jnp.float32(jnp.pi)
+    x = (ix + 0.5) * h[0]
+    y = (iy + 0.5) * h[0]
+    z = (iz + 0.5) * h[0]
+    src = 3.0 * pi * pi * jnp.sin(pi * x) * jnp.sin(pi * y) * jnp.sin(pi * z)
+    return ((h[0] * h[0] * src).reshape(-1),)
+
+
+# ---------------------------------------------------------------------------
+# Dense LU direct solve (Fig 2 "Poisson LU", 2D)
+# ---------------------------------------------------------------------------
+
+def lu_poisson2d(f, *, n):
+    """Assemble the dense scaled 5-point matrix in-graph and solve A u = f
+    by in-graph Gauss-Jordan elimination.
+
+    Matches the paper's 'Poisson LU' workstation test: the reported time
+    includes factorisation, which dominates (O(N^3)).
+
+    NB: `jnp.linalg.solve` lowers to a typed-FFI LAPACK custom call that
+    the pinned xla_extension (0.5.1) cannot execute, so the elimination
+    is written out as a `fori_loop` of masked rank-1 updates — pure HLO.
+    Pivot-free is fine: the scaled 5-point matrix is a symmetric
+    M-matrix (diagonally dominant).
+    """
+    nn = n * n
+    t = 2.0 * jnp.eye(n, dtype=F32) - jnp.eye(n, k=1, dtype=F32) - jnp.eye(n, k=-1, dtype=F32)
+    i = jnp.eye(n, dtype=F32)
+    a = jnp.kron(t, i) + jnp.kron(i, t)
+    ab = jnp.concatenate([a, f.reshape(-1, 1)], axis=1)  # (nn, nn+1)
+
+    def step(k, ab):
+        col = ab[:, k] / ab[k, k]
+        mask = (jnp.arange(nn) != k).astype(F32)
+        return ab - jnp.outer(mask * col, ab[k])
+
+    ab = jax.lax.fori_loop(0, nn, step, ab)
+    u = ab[:, nn] / jnp.diagonal(ab[:, :nn])
+    return (u.reshape(n, n),)
+
+
+# ---------------------------------------------------------------------------
+# Geometric multigrid (single-domain: Fig 2 "Poisson AMG" substitute)
+# ---------------------------------------------------------------------------
+
+def _pad(u):
+    return jnp.pad(u, 1)
+
+
+def _vcycle(u, f, nu, min_n):
+    n = u.shape[0]
+    if n <= min_n:
+        for _ in range(8 * nu):
+            u = smoother.jacobi3d(_pad(u), f)
+        return u
+    for _ in range(nu):
+        u = smoother.jacobi3d(_pad(u), f)
+    r = smoother.residual3d(_pad(u), f)
+    # 4x: the (2h)^2/h^2 factor of the h^2-scaled operator on the coarse
+    # grid; variational (P^T) restriction keeps the correction stable on
+    # deep ladders (see kernels/transfer.py).
+    rc = 4.0 * transfer.restrict3d_tri(_pad(r))
+    ec = _vcycle(jnp.zeros_like(rc), rc, nu, min_n)
+    u = u + transfer.prolong3d(ec)
+    for _ in range(nu):
+        u = smoother.jacobi3d(_pad(u), f)
+    return u
+
+
+def precond_vcycle(r, *, n, nu=2, min_n=4):
+    """z = M^{-1} r via one V-cycle from zero. Flat in, flat out."""
+    z = _vcycle(jnp.zeros((n, n, n), F32), r.reshape(n, n, n), nu, min_n)
+    return (z.reshape(-1),)
+
+
+# ---------------------------------------------------------------------------
+# HPGMG-FE ladder (distributed; one entry per level operation)
+# ---------------------------------------------------------------------------
+
+def smooth3d(u_halo, f):
+    """One fused weighted-Jacobi sweep on the local block."""
+    return (smoother.jacobi3d(u_halo, f),)
+
+
+def resid3d(u_halo, f):
+    """Local residual r = f - A u."""
+    return (smoother.residual3d(u_halo, f),)
+
+
+def restrict3d(r_halo):
+    """Residual restriction to the next-coarser block: variational
+    (trilinear-transpose) weights over the halo-padded fine residual,
+    including the 4x (2h/h)^2 rescaling of the h^2-scaled operator."""
+    return (4.0 * transfer.restrict3d_tri(r_halo),)
+
+
+def prolong_add3d(u_fine, e_halo):
+    """Coarse-grid correction: u += P e, with the coarse correction
+    supplied halo-padded ((n+2)^3) so interpolation at block interfaces
+    uses the neighbours' values (filled by the Rust halo exchange)."""
+    return (u_fine + transfer.prolong3d_halo(e_halo),)
+
+
+def coarse_solve3d(f, *, n, sweeps=48):
+    """Bottom-of-ladder solve by heavy Jacobi smoothing (n is tiny)."""
+    u = jnp.zeros((n, n, n), F32)
+    for _ in range(sweeps):
+        u = smoother.jacobi3d(_pad(u), f)
+    return (u,)
+
+
+def norm2(a):
+    """Local partial sum of squares (for residual norms)."""
+    return (blas1.dot(a, a),)
+
+
+# ---------------------------------------------------------------------------
+# Entry-point registry: artifact name -> (callable, [arg specs])
+#
+# Local block sizes: Poisson CG at n in {16, 32}; elasticity at n = 16;
+# HPGMG ladder 32 -> 16 -> 8 -> 4; 2D LU at n = 32; flat-vector entries at
+# L in {4096, 32768, 12288 (= 3 * 16^3)}.
+# ---------------------------------------------------------------------------
+
+CG_SIZES = (16, 32)
+EL_N = 16
+LU_N = 32
+GMG_N = 32
+LADDER = (32, 16, 8, 4)
+FLAT_SIZES = (16 ** 3, 32 ** 3, 3 * 16 ** 3)
+
+
+def build_entries():
+    e = {}
+    for n in CG_SIZES:
+        e[f"cg_apdot_p3d_n{n}"] = (cg_apdot_p3d, [_spec(n + 2, n + 2, n + 2)])
+        e[f"assemble_rhs3d_n{n}"] = (
+            functools.partial(assemble_rhs3d, n=n),
+            [_spec(3), _spec(1)],
+        )
+    e[f"cg_apdot_el3d_n{EL_N}"] = (
+        cg_apdot_el3d,
+        [_spec(3, EL_N + 2, EL_N + 2, EL_N + 2)],
+    )
+    for ell in FLAT_SIZES:
+        e[f"cg_update_L{ell}"] = (
+            cg_update,
+            [_spec(1), _spec(ell), _spec(ell), _spec(ell), _spec(ell)],
+        )
+        e[f"cg_pupdate_L{ell}"] = (cg_pupdate, [_spec(1), _spec(ell), _spec(ell)])
+        e[f"dot_L{ell}"] = (dot2, [_spec(ell), _spec(ell)])
+    e[f"lu_poisson2d_n{LU_N}"] = (
+        functools.partial(lu_poisson2d, n=LU_N),
+        [_spec(LU_N, LU_N)],
+    )
+    e[f"precond_vcycle_n{GMG_N}"] = (
+        functools.partial(precond_vcycle, n=GMG_N),
+        [_spec(GMG_N ** 3)],
+    )
+    for n in LADDER:
+        e[f"smooth3d_n{n}"] = (smooth3d, [_spec(n + 2, n + 2, n + 2), _spec(n, n, n)])
+        e[f"resid3d_n{n}"] = (resid3d, [_spec(n + 2, n + 2, n + 2), _spec(n, n, n)])
+        e[f"norm2_n{n}"] = (lambda a: norm2(a.reshape(-1)), [_spec(n, n, n)])
+    for n in LADDER[:-1]:
+        e[f"restrict3d_n{n}"] = (restrict3d, [_spec(n + 2, n + 2, n + 2)])
+    for n in LADDER[1:]:
+        e[f"prolong_add3d_n{n}"] = (
+            prolong_add3d,
+            [_spec(2 * n, 2 * n, 2 * n), _spec(n + 2, n + 2, n + 2)],
+        )
+    e[f"coarse_solve3d_n{LADDER[-1]}"] = (
+        functools.partial(coarse_solve3d, n=LADDER[-1]),
+        [_spec(LADDER[-1], LADDER[-1], LADDER[-1])],
+    )
+    return e
+
+
+ENTRIES = build_entries()

@@ -1,0 +1,297 @@
+# Kernel-vs-oracle correctness: every Pallas kernel must match the pure-jnp
+# reference in ref.py.  This is the CORE correctness signal of the L1 layer;
+# the Rust integration tests build on it transitively.
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import blas1, ref, smoother, stencil, transfer
+
+RTOL = 1e-4
+ATOL = 1e-5
+
+
+def rand(shape, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Stencils
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [4, 8, 16, 32])
+def test_laplace3d_matches_ref(n):
+    u = rand((n + 2, n + 2, n + 2), seed=n)
+    np.testing.assert_allclose(
+        stencil.laplace3d_apply(u), ref.laplace3d_apply(u), rtol=RTOL, atol=ATOL
+    )
+
+
+@pytest.mark.parametrize("shape", [(4, 4), (8, 16), (32, 32), (5, 7)])
+def test_laplace2d_matches_ref(shape):
+    u = rand((shape[0] + 2, shape[1] + 2), seed=shape[0])
+    np.testing.assert_allclose(
+        stencil.laplace2d_apply(u), ref.laplace2d_apply(u), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_laplace3d_nonuniform_block():
+    # nz not divisible by the default slab: _pick_bz must still tile exactly.
+    u = rand((9, 6, 10), seed=3)
+    np.testing.assert_allclose(
+        stencil.laplace3d_apply(u, vmem_budget_cells=200),
+        ref.laplace3d_apply(u),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+def test_laplace3d_tiling_invariance():
+    # The answer must not depend on the chosen slab depth.
+    u = rand((18, 18, 18), seed=7)
+    full = stencil.laplace3d_apply(u, vmem_budget_cells=1 << 24)
+    tiny = stencil.laplace3d_apply(u, vmem_budget_cells=18 * 18 * 3)
+    np.testing.assert_allclose(full, tiny, rtol=RTOL, atol=ATOL)
+
+
+def test_laplace3d_constant_field_is_zero():
+    # A constant field has zero Laplacian in the interior (away from the
+    # boundary ring, where the zero halo bites).
+    u = jnp.ones((10, 10, 10))
+    out = stencil.laplace3d_apply(u)
+    np.testing.assert_allclose(out[1:-1, 1:-1, 1:-1], 0.0, atol=ATOL)
+
+
+@pytest.mark.parametrize("n", [4, 8, 16])
+def test_elasticity3d_matches_ref(n):
+    u = rand((3, n + 2, n + 2, n + 2), seed=n)
+    np.testing.assert_allclose(
+        stencil.elasticity3d_apply(u), ref.elasticity3d_apply(u), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_elasticity3d_lame_params():
+    u = rand((3, 6, 6, 6), seed=5)
+    got = stencil.elasticity3d_apply(u, mu=2.5, lam=0.7)
+    want = ref.elasticity3d_apply(u, mu=2.5, lam=0.7)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_elasticity3d_symmetry():
+    # The Dirichlet Lamé operator is symmetric on interior dofs:
+    # <Au, v> == <u, Av> with zero halos.
+    ui = rand((3, 6, 6, 6), seed=11)
+    vi = rand((3, 6, 6, 6), seed=12)
+    pad = lambda a: jnp.pad(a, ((0, 0), (1, 1), (1, 1), (1, 1)))
+    au = stencil.elasticity3d_apply(pad(ui))
+    av = stencil.elasticity3d_apply(pad(vi))
+    lhs = jnp.vdot(au, vi)
+    rhs = jnp.vdot(ui, av)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Smoother / residual
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [4, 8, 16])
+def test_jacobi3d_matches_ref(n):
+    u = rand((n + 2, n + 2, n + 2), seed=n)
+    f = rand((n, n, n), seed=n + 100)
+    np.testing.assert_allclose(
+        smoother.jacobi3d(u, f), ref.jacobi3d(u, f), rtol=RTOL, atol=ATOL
+    )
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 32])
+def test_residual3d_matches_ref(n):
+    u = rand((n + 2, n + 2, n + 2), seed=n)
+    f = rand((n, n, n), seed=n + 100)
+    np.testing.assert_allclose(
+        smoother.residual3d(u, f), ref.residual3d(u, f), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_jacobi3d_fixed_point():
+    # If A u == f the smoother must leave u unchanged.
+    n = 8
+    u = rand((n + 2, n + 2, n + 2), seed=42)
+    f = ref.laplace3d_apply(u)
+    out = smoother.jacobi3d(u, f)
+    np.testing.assert_allclose(out, u[1:-1, 1:-1, 1:-1], rtol=RTOL, atol=ATOL)
+
+
+def test_jacobi3d_reduces_error():
+    # Smoothing from zero must reduce the residual norm for a Poisson RHS.
+    n = 16
+    f = jnp.ones((n, n, n))
+    u = jnp.zeros((n, n, n))
+    r0 = float(jnp.linalg.norm(f))
+    for _ in range(5):
+        u = smoother.jacobi3d(jnp.pad(u, 1), f)
+    r5 = float(jnp.linalg.norm(ref.residual3d(jnp.pad(u, 1), f)))
+    assert r5 < r0
+
+
+# ---------------------------------------------------------------------------
+# Grid transfer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [4, 8, 16])
+def test_restrict3d_matches_ref(n):
+    r = rand((2 * n, 2 * n, 2 * n), seed=n)
+    np.testing.assert_allclose(
+        transfer.restrict3d(r), ref.restrict3d(r), rtol=RTOL, atol=ATOL
+    )
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_prolong3d_matches_ref(n):
+    e = rand((n, n, n), seed=n)
+    np.testing.assert_allclose(
+        transfer.prolong3d(e), ref.prolong3d(e), rtol=RTOL, atol=ATOL
+    )
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_prolong3d_halo_matches_ref(n):
+    e = rand((n + 2, n + 2, n + 2), seed=n + 50)
+    np.testing.assert_allclose(
+        transfer.prolong3d_halo(e), ref.prolong3d_halo(e), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_prolong3d_halo_zero_pad_equals_plain():
+    e = rand((4, 4, 4), seed=77)
+    np.testing.assert_allclose(
+        transfer.prolong3d_halo(jnp.pad(e, 1)),
+        transfer.prolong3d(e),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+def test_prolong_constant_interior():
+    # Trilinear prolongation reproduces constants away from the Dirichlet
+    # boundary ring (where the zero ghosts bite).
+    e = jnp.full((4, 4, 4), 2.0)
+    out = transfer.prolong3d(e)
+    np.testing.assert_allclose(out[2:-2, 2:-2, 2:-2], 2.0, rtol=RTOL)
+
+
+def test_prolong_linear_exact_interior():
+    # Trilinear prolongation is exact on (cell-centred) linear functions
+    # in the interior.
+    n = 4
+    xc = (jnp.arange(n) + 0.5) * 2.0  # coarse centres, h_c = 2
+    e = jnp.broadcast_to(xc[:, None, None], (n, n, n)).astype(jnp.float32)
+    out = transfer.prolong3d(e)
+    xf = (jnp.arange(2 * n) + 0.5) * 1.0
+    want = jnp.broadcast_to(xf[:, None, None], (2 * n, 2 * n, 2 * n))
+    np.testing.assert_allclose(
+        out[2:-2, 2:-2, 2:-2], want[2:-2, 2:-2, 2:-2], rtol=1e-3, atol=1e-4
+    )
+
+
+def test_restrict_constant_preserved():
+    r = jnp.full((8, 8, 8), 3.25)
+    np.testing.assert_allclose(transfer.restrict3d(r), 3.25, rtol=RTOL)
+
+
+# ---------------------------------------------------------------------------
+# BLAS-1 / fused CG fragments
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 256, 4096])
+def test_dot_matches_ref(n):
+    a, b = rand((n,), 1), rand((n,), 2)
+    np.testing.assert_allclose(
+        blas1.dot(a, b)[0], ref.dot(a, b), rtol=1e-3, atol=1e-3
+    )
+
+
+@pytest.mark.parametrize("n", [8, 1024])
+def test_axpy_matches_ref(n):
+    a = jnp.asarray([1.7], dtype=jnp.float32)
+    x, y = rand((n,), 3), rand((n,), 4)
+    np.testing.assert_allclose(
+        blas1.axpy(a, x, y), ref.axpy(1.7, x, y), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_cg_update_matches_composition():
+    n = 512
+    alpha = jnp.asarray([0.37], dtype=jnp.float32)
+    x, r, p, ap = (rand((n,), s) for s in (1, 2, 3, 4))
+    x2, r2, rr = blas1.cg_update(alpha, x, r, p, ap)
+    np.testing.assert_allclose(x2, x + 0.37 * p, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(r2, r - 0.37 * ap, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(rr[0], ref.dot(r2, r2), rtol=1e-3, atol=1e-3)
+
+
+def test_cg_pupdate_matches_composition():
+    n = 512
+    beta = jnp.asarray([0.81], dtype=jnp.float32)
+    r, p = rand((n,), 5), rand((n,), 6)
+    np.testing.assert_allclose(
+        blas1.cg_pupdate(beta, r, p), r + 0.81 * p, rtol=RTOL, atol=ATOL
+    )
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis shape/dtype sweeps (cheap sizes only; interpret mode is slow)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nz=st.integers(2, 10),
+    ny=st.integers(2, 10),
+    nx=st.integers(2, 10),
+    seed=st.integers(0, 2**16),
+)
+def test_laplace3d_hypothesis(nz, ny, nx, seed):
+    u = rand((nz + 2, ny + 2, nx + 2), seed=seed)
+    np.testing.assert_allclose(
+        stencil.laplace3d_apply(u), ref.laplace3d_apply(u), rtol=RTOL, atol=1e-4
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ny=st.integers(1, 24),
+    nx=st.integers(1, 24),
+    seed=st.integers(0, 2**16),
+)
+def test_laplace2d_hypothesis(ny, nx, seed):
+    u = rand((ny + 2, nx + 2), seed=seed)
+    np.testing.assert_allclose(
+        stencil.laplace2d_apply(u), ref.laplace2d_apply(u), rtol=RTOL, atol=1e-4
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 2048), seed=st.integers(0, 2**16))
+def test_dot_hypothesis(n, seed):
+    a, b = rand((n,), seed), rand((n,), seed + 1)
+    np.testing.assert_allclose(
+        blas1.dot(a, b)[0], ref.dot(a, b), rtol=2e-3, atol=2e-3
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dtype=st.sampled_from([jnp.float32, jnp.float64]),
+    n=st.integers(2, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_laplace3d_dtypes(dtype, n, seed):
+    if dtype == jnp.float64 and not jax.config.jax_enable_x64:
+        dtype = jnp.float32  # x64 disabled: degrade to f32 (still a valid case)
+    u = rand((n + 2, n + 2, n + 2), seed=seed, dtype=dtype)
+    got = stencil.laplace3d_apply(u)
+    assert got.dtype == u.dtype
+    np.testing.assert_allclose(got, ref.laplace3d_apply(u), rtol=RTOL, atol=1e-4)

@@ -1,0 +1,205 @@
+# Model-level tests: the L2 entry points that get AOT-exported must be
+# numerically correct (vs ref.py whole-problem oracles) and shape-stable
+# (the manifest the Rust runtime consumes is generated from these shapes).
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# CG fragments
+# ---------------------------------------------------------------------------
+
+def test_cg_apdot_p3d():
+    n = 8
+    p = rand((n + 2, n + 2, n + 2), 1)
+    ap, pap = model.cg_apdot_p3d(p)
+    want = ref.laplace3d_apply(p).reshape(-1)
+    np.testing.assert_allclose(ap, want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        pap[0],
+        ref.dot(p[1:-1, 1:-1, 1:-1].reshape(-1), want),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+
+
+def test_cg_apdot_el3d():
+    n = 6
+    u = rand((3, n + 2, n + 2, n + 2), 2)
+    ap, pap = model.cg_apdot_el3d(u)
+    want = ref.elasticity3d_apply(u).reshape(-1)
+    np.testing.assert_allclose(ap, want, rtol=1e-4, atol=1e-4)
+
+
+def test_full_cg_via_model_fragments():
+    # Drive a complete CG solve using ONLY the exported fragments, exactly
+    # as the Rust fem::cg driver does, and compare to the oracle solver.
+    n = 8
+    f = ref.manufactured_rhs3d(n, (0, 0, 0), n, 1.0 / n).reshape(-1)
+    x = jnp.zeros_like(f)
+    r = f
+    p = f
+    rr = float(ref.dot(r, r))
+    for _ in range(200):
+        ap, pap = model.cg_apdot_p3d(jnp.pad(p.reshape(n, n, n), 1))
+        alpha = jnp.asarray([rr / float(pap[0])], dtype=jnp.float32)
+        x, r, rr_new = model.cg_update(alpha, x, r, p, ap)
+        rr_new = float(rr_new[0])
+        if np.sqrt(rr_new) < 1e-5:
+            break
+        beta = jnp.asarray([rr_new / rr], dtype=jnp.float32)
+        (p,) = model.cg_pupdate(beta, r, p)
+        rr = rr_new
+    u_oracle, _ = ref.cg_solve3d(f.reshape(n, n, n), tol=1e-8)
+    np.testing.assert_allclose(
+        x.reshape(n, n, n), u_oracle, rtol=5e-3, atol=5e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# Assembly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("origin", [(0, 0, 0), (8, 0, 4)])
+def test_assemble_rhs3d(origin):
+    n, ng = 8, 16
+    h = 1.0 / ng
+    (f,) = model.assemble_rhs3d(
+        jnp.asarray(origin, dtype=jnp.float32),
+        jnp.asarray([h], dtype=jnp.float32),
+        n=n,
+    )
+    want = ref.manufactured_rhs3d(ng, origin, n, h).reshape(-1)
+    np.testing.assert_allclose(f, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Direct solve + multigrid
+# ---------------------------------------------------------------------------
+
+def test_lu_poisson2d():
+    n = 16
+    f = rand((n, n), 3)
+    (u,) = model.lu_poisson2d(f, n=n)
+    want = ref.lu_solve2d(f)
+    np.testing.assert_allclose(u, want, rtol=1e-2, atol=1e-3)
+    # and the solve really inverts the operator:
+    au = ref.laplace2d_apply(jnp.pad(u, 1))
+    np.testing.assert_allclose(au, f, rtol=1e-2, atol=1e-2)
+
+
+def test_vcycle_reduces_residual():
+    n = 16
+    f = ref.manufactured_rhs3d(n, (0, 0, 0), n, 1.0 / n)
+    u = jnp.zeros((n, n, n), jnp.float32)
+    r0 = float(jnp.linalg.norm(f))
+    u = model._vcycle(u, f, nu=2, min_n=4)
+    r1 = float(jnp.linalg.norm(ref.residual3d(jnp.pad(u, 1), f)))
+    u = model._vcycle(u, f, nu=2, min_n=4)
+    r2 = float(jnp.linalg.norm(ref.residual3d(jnp.pad(u, 1), f)))
+    assert r1 < 0.7 * r0, (r0, r1)  # first cycle from zero guess is weakest
+    assert r2 < 0.5 * r1, (r1, r2)
+
+
+def test_precond_vcycle_is_spd_like():
+    # A usable CG preconditioner must at minimum satisfy <r, M r> > 0.
+    n = model.GMG_N
+    r = rand((n**3,), 7)
+    (z,) = model.precond_vcycle(r, n=n)
+    assert float(jnp.vdot(r, z)) > 0.0
+
+
+def test_vcycle_matches_ref_vcycle():
+    n = 8
+    f = rand((n, n, n), 9)
+    u0 = rand((n, n, n), 10)
+    got = model._vcycle(u0, f, nu=1, min_n=4)
+    want = ref.vcycle3d(u0, f, nu=1, min_n=4)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# HPGMG ladder entries
+# ---------------------------------------------------------------------------
+
+def test_smooth_resid_roundtrip():
+    n = 8
+    u = rand((n + 2, n + 2, n + 2), 11)
+    f = rand((n, n, n), 12)
+    (s,) = model.smooth3d(u, f)
+    np.testing.assert_allclose(s, ref.jacobi3d(u, f), rtol=1e-4, atol=1e-4)
+    (r,) = model.resid3d(u, f)
+    np.testing.assert_allclose(r, ref.residual3d(u, f), rtol=1e-4, atol=1e-4)
+
+
+def test_prolong_add_zero_halo_matches_single_domain():
+    n = 4
+    u = rand((2 * n, 2 * n, 2 * n), 13)
+    e = rand((n, n, n), 14)
+    (got,) = model.prolong_add3d(u, jnp.pad(e, 1))
+    np.testing.assert_allclose(
+        got, u + ref.prolong3d(e), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_prolong_add_uses_supplied_halo():
+    n = 4
+    u = jnp.zeros((2 * n, 2 * n, 2 * n), jnp.float32)
+    e_halo = rand((n + 2, n + 2, n + 2), 15)
+    (got,) = model.prolong_add3d(u, e_halo)
+    np.testing.assert_allclose(
+        got, ref.prolong3d_halo(e_halo), rtol=1e-4, atol=1e-4
+    )
+    # and it differs from the zero-ghost result near the faces
+    (zero,) = model.prolong_add3d(
+        u, jnp.pad(e_halo[1:-1, 1:-1, 1:-1], 1)
+    )
+    assert not np.allclose(got, zero)
+
+
+def test_coarse_solve_accuracy():
+    # The bottom solve must essentially invert A on the tiny grid.
+    n = 4
+    u_true = rand((n, n, n), 15)
+    f = ref.laplace3d_apply(jnp.pad(u_true, 1))
+    (u,) = model.coarse_solve3d(f, n=n)
+    r = float(jnp.linalg.norm(ref.residual3d(jnp.pad(u, 1), f)))
+    assert r < 0.05 * float(jnp.linalg.norm(f))
+
+
+# ---------------------------------------------------------------------------
+# Registry / export sanity
+# ---------------------------------------------------------------------------
+
+def test_entry_registry_complete():
+    names = set(model.ENTRIES)
+    for n in model.CG_SIZES:
+        assert f"cg_apdot_p3d_n{n}" in names
+        assert f"assemble_rhs3d_n{n}" in names
+    for ell in model.FLAT_SIZES:
+        assert f"cg_update_L{ell}" in names
+    for n in model.LADDER:
+        assert f"smooth3d_n{n}" in names
+    assert f"lu_poisson2d_n{model.LU_N}" in names
+    assert f"precond_vcycle_n{model.GMG_N}" in names
+
+
+def test_entries_traceable_and_shapes():
+    # every entry must trace with its declared specs and yield static shapes
+    for name, (fn, specs) in model.ENTRIES.items():
+        outs = jax.eval_shape(fn, *specs)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        for o in outs:
+            assert all(int(d) > 0 for d in o.shape) or o.shape == (), name

@@ -1,0 +1,223 @@
+//! Benchmark harness and paper-style reporting.
+//!
+//! Offline stand-in for `criterion`: [`repeat`] runs a measurement
+//! closure `n` times (the paper uses 3–5 repetitions with error bars)
+//! and aggregates into [`Stats`]; [`Figure`] renders grouped bars —
+//! optionally stacked by phase — as ASCII (the terminal version of the
+//! paper's Figs 2–5) and as JSON for machine consumption.
+
+use crate::metrics::Stats;
+use crate::util::json::Value;
+
+/// Run `f` for `reps` repetitions (passing the repetition index, which
+/// callers fold into their simulation seed) and aggregate.
+pub fn repeat(reps: usize, mut f: impl FnMut(usize) -> f64) -> Stats {
+    Stats::from_samples((0..reps).map(&mut f).collect())
+}
+
+/// One bar of a figure.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub label: String,
+    pub stats: Stats,
+    /// Optional per-phase means (stacked-bar figures: Figs 3 and 4).
+    pub breakdown: Vec<(String, f64)>,
+}
+
+impl Row {
+    pub fn new(label: impl Into<String>, stats: Stats) -> Self {
+        Row {
+            label: label.into(),
+            stats,
+            breakdown: Vec::new(),
+        }
+    }
+
+    pub fn with_breakdown(mut self, phases: Vec<(String, f64)>) -> Self {
+        self.breakdown = phases;
+        self
+    }
+}
+
+/// A renderable figure.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    pub title: String,
+    pub unit: String,
+    /// `true` for throughput plots (Fig 5): longer bars are better.
+    pub higher_better: bool,
+    pub rows: Vec<Row>,
+    pub notes: Vec<String>,
+}
+
+impl Figure {
+    pub fn new(title: impl Into<String>, unit: impl Into<String>, higher_better: bool) -> Self {
+        Figure {
+            title: title.into(),
+            unit: unit.into(),
+            higher_better,
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Row) {
+        self.rows.push(row);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// ASCII rendering: label, bar scaled to the max mean, mean ± std.
+    pub fn render(&self) -> String {
+        const WIDTH: usize = 44;
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        out.push_str(&format!(
+            "({}; {} bars are better)\n",
+            self.unit,
+            if self.higher_better { "longer" } else { "shorter" }
+        ));
+        let max = self
+            .rows
+            .iter()
+            .map(|r| r.stats.mean())
+            .fold(0.0f64, f64::max)
+            .max(1e-30);
+        let label_w = self.rows.iter().map(|r| r.label.len()).max().unwrap_or(0);
+        for row in &self.rows {
+            let mean = row.stats.mean();
+            let frac = (mean / max).clamp(0.0, 1.0);
+            let filled = (frac * WIDTH as f64).round() as usize;
+            let bar: String = "█".repeat(filled) + &"·".repeat(WIDTH - filled);
+            out.push_str(&format!(
+                "  {:label_w$}  {bar}  {:>10.4} ± {:.4}\n",
+                row.label,
+                mean,
+                row.stats.std(),
+            ));
+            if !row.breakdown.is_empty() {
+                let phases: Vec<String> = row
+                    .breakdown
+                    .iter()
+                    .map(|(name, secs)| format!("{name} {secs:.3}"))
+                    .collect();
+                out.push_str(&format!(
+                    "  {:label_w$}    [{}]\n",
+                    "",
+                    phases.join(" | ")
+                ));
+            }
+        }
+        for n in &self.notes {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        out
+    }
+
+    /// Machine-readable form.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("title", Value::str(self.title.clone())),
+            ("unit", Value::str(self.unit.clone())),
+            ("higher_better", Value::Bool(self.higher_better)),
+            (
+                "rows",
+                Value::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Value::obj(vec![
+                                ("label", Value::str(r.label.clone())),
+                                ("mean", Value::num(r.stats.mean())),
+                                ("std", Value::num(r.stats.std())),
+                                ("n", Value::num(r.stats.n() as f64)),
+                                (
+                                    "samples",
+                                    Value::Arr(
+                                        r.stats.samples.iter().map(|&s| Value::num(s)).collect(),
+                                    ),
+                                ),
+                                (
+                                    "breakdown",
+                                    Value::Obj(
+                                        r.breakdown
+                                            .iter()
+                                            .map(|(k, v)| (k.clone(), Value::num(*v)))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "notes",
+                Value::Arr(self.notes.iter().map(|n| Value::str(n.clone())).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeat_collects_reps() {
+        let s = repeat(5, |i| i as f64);
+        assert_eq!(s.n(), 5);
+        assert_eq!(s.mean(), 2.0);
+    }
+
+    #[test]
+    fn render_contains_labels_and_values() {
+        let mut fig = Figure::new("Fig 2: workstation", "seconds", false);
+        fig.push(Row::new("native", Stats::from_samples(vec![1.0, 1.1])));
+        fig.push(Row::new("docker", Stats::from_samples(vec![1.05])));
+        fig.note("docker within 1% of native");
+        let text = fig.render();
+        assert!(text.contains("native"));
+        assert!(text.contains("docker"));
+        assert!(text.contains("shorter bars are better"));
+        assert!(text.contains("note: docker"));
+    }
+
+    #[test]
+    fn bars_scale_to_max() {
+        let mut fig = Figure::new("t", "s", false);
+        fig.push(Row::new("big", Stats::from_samples(vec![10.0])));
+        fig.push(Row::new("small", Stats::from_samples(vec![1.0])));
+        let text = fig.render();
+        let big_bar = text.lines().find(|l| l.contains("big")).unwrap();
+        let small_bar = text.lines().find(|l| l.contains("small")).unwrap();
+        let count = |s: &str| s.chars().filter(|&c| c == '█').count();
+        assert!(count(big_bar) > 8 * count(small_bar));
+    }
+
+    #[test]
+    fn breakdown_renders_inline() {
+        let mut fig = Figure::new("t", "s", false);
+        fig.push(
+            Row::new("native", Stats::from_samples(vec![3.0]))
+                .with_breakdown(vec![("solve".into(), 2.0), ("io".into(), 1.0)]),
+        );
+        let text = fig.render();
+        assert!(text.contains("solve 2.000"));
+        assert!(text.contains("io 1.000"));
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let mut fig = Figure::new("t", "s", true);
+        fig.push(Row::new("a", Stats::from_samples(vec![1.0, 2.0])));
+        let v = fig.to_json();
+        let parsed = crate::util::json::parse(&v.to_pretty()).unwrap();
+        assert_eq!(parsed.get("higher_better").as_bool(), Some(true));
+        let rows = parsed.get("rows").as_arr().unwrap();
+        assert_eq!(rows[0].get("mean").as_f64(), Some(1.5));
+        assert_eq!(rows[0].get("samples").as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,224 @@
+//! Machines, nodes, and job launch.
+//!
+//! Two machine models cover the paper's testbeds: a 16-core Xeon
+//! workstation (Fig 2, Fig 5a) and *Edison*, the NERSC Cray XC30 used
+//! for Figs 3, 4, 5b (24 cores/node, Aries interconnect, Lustre).  The
+//! SLURM-like [`launch`] maps MPI ranks onto nodes block-wise — one rank
+//! per core, exactly as `srun -n N` does with default placement.
+
+
+use crate::des::Duration;
+use crate::net::FabricKind;
+
+/// Static description of a machine (the "testbed").
+#[derive(Debug, Clone)]
+pub struct MachineSpec {
+    pub name: String,
+    pub cores_per_node: usize,
+    pub num_nodes: usize,
+    /// The fabric the *system* MPI library drives.
+    pub host_fabric: FabricKind,
+    /// Whether the system MPI exposes an MPICH-compatible ABI that a
+    /// container can link against at runtime (the Cray MPI does).
+    pub system_mpi_abi_compatible: bool,
+    /// Run-to-run multiplicative compute jitter (gives the error bars).
+    pub compute_jitter: f64,
+    /// Native filesystem: `true` = parallel (Lustre-like), else local.
+    pub parallel_fs: bool,
+    /// Time for the batch system to start one process on a node.
+    pub process_spawn: DurationMs,
+}
+
+/// Serde-friendly milliseconds wrapper.
+#[derive(Debug, Clone, Copy)]
+pub struct DurationMs(pub f64);
+
+impl DurationMs {
+    pub fn duration(self) -> Duration {
+        Duration::from_secs_f64(self.0 / 1e3)
+    }
+}
+
+impl MachineSpec {
+    /// The Fig 2 workstation: 2x E5-2670 (16 cores), 128 GB, local SSD.
+    pub fn workstation() -> Self {
+        MachineSpec {
+            name: "workstation".into(),
+            cores_per_node: 16,
+            num_nodes: 1,
+            host_fabric: FabricKind::SharedMem,
+            system_mpi_abi_compatible: true,
+            compute_jitter: 0.01,
+            parallel_fs: false,
+            process_spawn: DurationMs(5.0),
+        }
+    }
+
+    /// Edison: Cray XC30, 2x E5-2695v2 per node (24 cores), Aries,
+    /// Lustre scratch.  5576 nodes in the real machine; we only model
+    /// the slice a job allocates.
+    pub fn edison() -> Self {
+        MachineSpec {
+            name: "edison".into(),
+            cores_per_node: 24,
+            num_nodes: 5576,
+            host_fabric: FabricKind::Aries,
+            system_mpi_abi_compatible: true,
+            compute_jitter: 0.015,
+            parallel_fs: true,
+            process_spawn: DurationMs(20.0),
+        }
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.cores_per_node * self.num_nodes
+    }
+}
+
+/// A job's rank → node placement.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    pub machine: MachineSpec_,
+    /// `node_of[rank]` = node index.
+    pub node_of: Vec<usize>,
+    pub nodes_used: usize,
+}
+
+// The allocation embeds a trimmed copy of the machine identity to avoid
+// dragging lifetimes through every simulation structure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MachineSpec_ {
+    pub name: String,
+    pub cores_per_node: usize,
+}
+
+/// Why a launch was refused (Display/Error hand-rolled; the crate keeps
+/// its dependency set small rather than pulling in `thiserror`).
+#[derive(Debug)]
+pub enum LaunchError {
+    TooLarge {
+        requested: usize,
+        available: usize,
+        machine: String,
+    },
+    ZeroRanks,
+}
+
+impl std::fmt::Display for LaunchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LaunchError::TooLarge {
+                requested,
+                available,
+                machine,
+            } => write!(
+                f,
+                "job needs {requested} cores but {machine} has {available}"
+            ),
+            LaunchError::ZeroRanks => write!(f, "zero ranks requested"),
+        }
+    }
+}
+impl std::error::Error for LaunchError {}
+
+/// `srun -n ranks`: block placement, one rank per core.
+pub fn launch(machine: &MachineSpec, ranks: usize) -> Result<Allocation, LaunchError> {
+    if ranks == 0 {
+        return Err(LaunchError::ZeroRanks);
+    }
+    if ranks > machine.total_cores() {
+        return Err(LaunchError::TooLarge {
+            requested: ranks,
+            available: machine.total_cores(),
+            machine: machine.name.clone(),
+        });
+    }
+    let node_of: Vec<usize> = (0..ranks).map(|r| r / machine.cores_per_node).collect();
+    let nodes_used = node_of.last().map(|&n| n + 1).unwrap_or(0);
+    Ok(Allocation {
+        machine: MachineSpec_ {
+            name: machine.name.clone(),
+            cores_per_node: machine.cores_per_node,
+        },
+        node_of,
+        nodes_used,
+    })
+}
+
+impl Allocation {
+    pub fn ranks(&self) -> usize {
+        self.node_of.len()
+    }
+
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of[a] == self.node_of[b]
+    }
+
+    /// Ranks hosted on `node`.
+    pub fn ranks_on_node(&self, node: usize) -> impl Iterator<Item = usize> + '_ {
+        self.node_of
+            .iter()
+            .enumerate()
+            .filter(move |(_, &n)| n == node)
+            .map(|(r, _)| r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workstation_is_single_node() {
+        let m = MachineSpec::workstation();
+        assert_eq!(m.total_cores(), 16);
+        let a = launch(&m, 16).unwrap();
+        assert_eq!(a.nodes_used, 1);
+        assert!(a.same_node(0, 15));
+    }
+
+    #[test]
+    fn edison_block_placement() {
+        let m = MachineSpec::edison();
+        let a = launch(&m, 192).unwrap();
+        assert_eq!(a.nodes_used, 8);
+        assert_eq!(a.node_of[0], 0);
+        assert_eq!(a.node_of[23], 0);
+        assert_eq!(a.node_of[24], 1);
+        assert_eq!(a.node_of[191], 7);
+        assert!(a.same_node(0, 23));
+        assert!(!a.same_node(23, 24));
+    }
+
+    #[test]
+    fn partial_last_node() {
+        let m = MachineSpec::edison();
+        let a = launch(&m, 30).unwrap();
+        assert_eq!(a.nodes_used, 2);
+        assert_eq!(a.ranks_on_node(1).count(), 6);
+    }
+
+    #[test]
+    fn oversubscription_rejected() {
+        let m = MachineSpec::workstation();
+        let err = launch(&m, 17).unwrap_err();
+        assert!(matches!(err, LaunchError::TooLarge { .. }));
+        assert!(err.to_string().contains("17"));
+    }
+
+    #[test]
+    fn zero_ranks_rejected() {
+        assert!(matches!(
+            launch(&MachineSpec::workstation(), 0),
+            Err(LaunchError::ZeroRanks)
+        ));
+    }
+
+    #[test]
+    fn ranks_on_node_enumerates() {
+        let m = MachineSpec::edison();
+        let a = launch(&m, 48).unwrap();
+        let on0: Vec<_> = a.ranks_on_node(0).collect();
+        assert_eq!(on0, (0..24).collect::<Vec<_>>());
+    }
+}

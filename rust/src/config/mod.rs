@@ -1,0 +1,168 @@
+//! Experiment configuration (JSON-backed).
+//!
+//! Experiments are reproducible cells of (figure, repetitions, seed,
+//! rank counts, problem sizes).  Defaults mirror the paper's setups;
+//! `harbor bench --config exp.json` overrides them from a file, and
+//! every report embeds the config that produced it.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Configuration of one figure regeneration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Which figure: "fig2", "fig3", "fig4", "fig5a", "fig5b".
+    pub figure: String,
+    /// Repetitions per bar (the paper: 5 on the workstation, 3 on Edison).
+    pub reps: usize,
+    /// Base RNG seed (rep `i` uses `seed + i`).
+    pub seed: u64,
+    /// MPI rank counts (Figs 3/4 sweep).
+    pub ranks: Vec<usize>,
+    /// HPGMG problem-size indices (Fig 5 sweep; see `fem::gmg::LADDER`).
+    pub sizes: Vec<usize>,
+}
+
+impl ExperimentConfig {
+    /// The paper's setup for each figure.
+    pub fn paper_default(figure: &str) -> Result<Self> {
+        let cfg = match figure {
+            "fig2" => ExperimentConfig {
+                figure: "fig2".into(),
+                reps: 5,
+                seed: 42,
+                ranks: vec![1],
+                sizes: vec![],
+            },
+            "fig3" => ExperimentConfig {
+                figure: "fig3".into(),
+                reps: 3,
+                seed: 42,
+                ranks: vec![24, 48, 96, 192],
+                sizes: vec![],
+            },
+            "fig4" => ExperimentConfig {
+                figure: "fig4".into(),
+                reps: 3,
+                seed: 42,
+                ranks: vec![24, 48, 96],
+                sizes: vec![],
+            },
+            "fig5a" => ExperimentConfig {
+                figure: "fig5a".into(),
+                reps: 5,
+                seed: 42,
+                ranks: vec![16],
+                sizes: vec![2, 1, 0],
+            },
+            "fig5b" => ExperimentConfig {
+                figure: "fig5b".into(),
+                reps: 5,
+                seed: 42,
+                ranks: vec![192],
+                sizes: vec![2, 1, 0],
+            },
+            other => anyhow::bail!("unknown figure `{other}` (fig2|fig3|fig4|fig5a|fig5b)"),
+        };
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("figure", Value::str(self.figure.clone())),
+            ("reps", Value::num(self.reps as f64)),
+            ("seed", Value::num(self.seed as f64)),
+            (
+                "ranks",
+                Value::Arr(self.ranks.iter().map(|&r| Value::num(r as f64)).collect()),
+            ),
+            (
+                "sizes",
+                Value::Arr(self.sizes.iter().map(|&s| Value::num(s as f64)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let figure = v
+            .get("figure")
+            .as_str()
+            .context("config missing `figure`")?
+            .to_string();
+        let mut cfg = Self::paper_default(&figure)?;
+        if let Some(r) = v.get("reps").as_u64() {
+            cfg.reps = r as usize;
+        }
+        if let Some(s) = v.get("seed").as_u64() {
+            cfg.seed = s;
+        }
+        if let Some(arr) = v.get("ranks").as_arr() {
+            cfg.ranks = arr
+                .iter()
+                .map(|x| x.as_u64().map(|u| u as usize).context("bad rank"))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(arr) = v.get("sizes").as_arr() {
+            cfg.sizes = arr
+                .iter()
+                .map(|x| x.as_u64().map(|u| u as usize).context("bad size"))
+                .collect::<Result<_>>()?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_the_paper() {
+        let f3 = ExperimentConfig::paper_default("fig3").unwrap();
+        assert_eq!(f3.ranks, vec![24, 48, 96, 192]);
+        assert_eq!(f3.reps, 3);
+        let f2 = ExperimentConfig::paper_default("fig2").unwrap();
+        assert_eq!(f2.reps, 5);
+        assert!(ExperimentConfig::paper_default("fig9").is_err());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let cfg = ExperimentConfig::paper_default("fig4").unwrap();
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn overrides_apply_over_defaults() {
+        let v = json::parse(r#"{"figure": "fig3", "reps": 7, "ranks": [24]}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.reps, 7);
+        assert_eq!(cfg.ranks, vec![24]);
+        assert_eq!(cfg.seed, 42); // default survives
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let cfg = ExperimentConfig::paper_default("fig5a").unwrap();
+        let path = std::env::temp_dir().join("harbor-exp-test.json");
+        cfg.save(&path).unwrap();
+        let back = ExperimentConfig::load(&path).unwrap();
+        assert_eq!(cfg, back);
+        let _ = std::fs::remove_file(&path);
+    }
+}

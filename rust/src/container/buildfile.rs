@@ -1,0 +1,312 @@
+//! Buildfile (Dockerfile-DSL) parser.
+//!
+//! Supports the directives the paper's own Dockerfiles use (§2.2, §3.4):
+//! `FROM`, `RUN`, `ENV`, `USER`, `WORKDIR`, `COPY`, `ENTRYPOINT`,
+//! `LABEL`, plus `ARCH_OPT` — our explicit spelling of the paper's
+//! "provision the container with scripts to build performance-critical
+//! binaries on the host" recommendation (§4.3): images built with
+//! `ARCH_OPT` use host-architecture instruction sets (AVX) and do not
+//! pay the Fig 5a penalty.
+//!
+//! Syntax: one directive per line, `\` continuations, `#` comments.
+
+/// A parsed build directive.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Directive {
+    From(String),
+    Run(String),
+    Env { key: String, value: String },
+    User(String),
+    Workdir(String),
+    Copy { src: String, dst: String },
+    Entrypoint(String),
+    Label { key: String, value: String },
+    /// Build performance-critical binaries for the host architecture.
+    ArchOpt,
+}
+
+impl Directive {
+    /// The canonical text form (what layer hashes commit to).
+    pub fn canonical(&self) -> String {
+        match self {
+            Directive::From(b) => format!("FROM {b}"),
+            Directive::Run(c) => format!("RUN {c}"),
+            Directive::Env { key, value } => format!("ENV {key}={value}"),
+            Directive::User(u) => format!("USER {u}"),
+            Directive::Workdir(w) => format!("WORKDIR {w}"),
+            Directive::Copy { src, dst } => format!("COPY {src} {dst}"),
+            Directive::Entrypoint(e) => format!("ENTRYPOINT {e}"),
+            Directive::Label { key, value } => format!("LABEL {key}={value}"),
+            Directive::ArchOpt => "ARCH_OPT".to_string(),
+        }
+    }
+}
+
+/// A parsed buildfile.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Buildfile {
+    pub directives: Vec<Directive>,
+}
+
+/// Parse failure with line context.
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "buildfile line {}: {}", self.line, self.message)
+    }
+}
+impl std::error::Error for ParseError {}
+
+impl Buildfile {
+    /// Parse buildfile text.
+    pub fn parse(text: &str) -> Result<Buildfile, ParseError> {
+        // 1. splice continuations, track original line numbers
+        let mut logical: Vec<(usize, String)> = Vec::new();
+        let mut pending: Option<(usize, String)> = None;
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = raw.trim_end();
+            let stripped = line.trim_start();
+            if pending.is_none() && (stripped.is_empty() || stripped.starts_with('#')) {
+                continue;
+            }
+            let (start, mut acc) = pending.take().unwrap_or((line_no, String::new()));
+            let (frag, cont) = match line.strip_suffix('\\') {
+                Some(f) => (f, true),
+                None => (line, false),
+            };
+            if !acc.is_empty() {
+                acc.push(' ');
+            }
+            acc.push_str(frag.trim());
+            if cont {
+                pending = Some((start, acc));
+            } else {
+                logical.push((start, acc));
+            }
+        }
+        if let Some((start, _)) = pending {
+            return Err(ParseError {
+                line: start,
+                message: "dangling line continuation".into(),
+            });
+        }
+
+        // 2. parse directives
+        let mut directives = Vec::new();
+        for (line, text) in logical {
+            let (word, rest) = match text.split_once(char::is_whitespace) {
+                Some((w, r)) => (w, r.trim()),
+                None => (text.as_str(), ""),
+            };
+            let need = |what: &str| -> Result<(), ParseError> {
+                if rest.is_empty() {
+                    Err(ParseError {
+                        line,
+                        message: format!("{word} requires {what}"),
+                    })
+                } else {
+                    Ok(())
+                }
+            };
+            let kv = |what: &str| -> Result<(String, String), ParseError> {
+                rest.split_once('=')
+                    .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+                    .ok_or_else(|| ParseError {
+                        line,
+                        message: format!("{word} requires {what} as KEY=VALUE"),
+                    })
+            };
+            let d = match word.to_ascii_uppercase().as_str() {
+                "FROM" => {
+                    need("a base reference")?;
+                    Directive::From(rest.to_string())
+                }
+                "RUN" => {
+                    need("a command")?;
+                    Directive::Run(rest.to_string())
+                }
+                "ENV" => {
+                    let (key, value) = kv("an assignment")?;
+                    Directive::Env { key, value }
+                }
+                "USER" => {
+                    need("a user name")?;
+                    Directive::User(rest.to_string())
+                }
+                "WORKDIR" => {
+                    need("a path")?;
+                    Directive::Workdir(rest.to_string())
+                }
+                "COPY" => {
+                    need("source and destination")?;
+                    let (src, dst) = rest.split_once(char::is_whitespace).ok_or(ParseError {
+                        line,
+                        message: "COPY requires source and destination".into(),
+                    })?;
+                    Directive::Copy {
+                        src: src.trim().to_string(),
+                        dst: dst.trim().to_string(),
+                    }
+                }
+                "ENTRYPOINT" => {
+                    need("a command")?;
+                    Directive::Entrypoint(rest.to_string())
+                }
+                "LABEL" => {
+                    let (key, value) = kv("a label")?;
+                    Directive::Label { key, value }
+                }
+                "ARCH_OPT" => Directive::ArchOpt,
+                other => {
+                    return Err(ParseError {
+                        line,
+                        message: format!("unknown directive `{other}`"),
+                    })
+                }
+            };
+            directives.push(d);
+        }
+
+        // 3. structural checks
+        match directives.first() {
+            Some(Directive::From(_)) => {}
+            _ => {
+                return Err(ParseError {
+                    line: 1,
+                    message: "buildfile must start with FROM".into(),
+                })
+            }
+        }
+        if directives
+            .iter()
+            .skip(1)
+            .any(|d| matches!(d, Directive::From(_)))
+        {
+            return Err(ParseError {
+                line: 0,
+                message: "multi-stage builds (second FROM) are not supported".into(),
+            });
+        }
+        Ok(Buildfile { directives })
+    }
+
+    /// The base reference of the first FROM.
+    pub fn base(&self) -> &str {
+        match &self.directives[0] {
+            Directive::From(b) => b,
+            _ => unreachable!("parse() guarantees FROM first"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PAPER_EXAMPLE: &str = r#"
+# The paper's §2.2 example
+FROM ubuntu:16.04
+USER root
+RUN apt-get -y update && \
+ apt-get -y upgrade && \
+ apt-get -y install python-scipy && \
+ rm -rf /var/lib/apt/lists/* /tmp/* /var/tmp/*
+"#;
+
+    #[test]
+    fn parses_the_papers_example() {
+        let bf = Buildfile::parse(PAPER_EXAMPLE).unwrap();
+        assert_eq!(bf.base(), "ubuntu:16.04");
+        assert_eq!(bf.directives.len(), 3);
+        match &bf.directives[2] {
+            Directive::Run(cmd) => {
+                assert!(cmd.contains("apt-get -y update"));
+                assert!(cmd.contains("python-scipy"));
+                assert!(!cmd.contains('\\'));
+            }
+            other => panic!("expected RUN, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn env_label_parsing() {
+        let bf = Buildfile::parse("FROM a:b\nENV FOO=bar baz\nLABEL org.x=1").unwrap();
+        assert_eq!(
+            bf.directives[1],
+            Directive::Env {
+                key: "FOO".into(),
+                value: "bar baz".into()
+            }
+        );
+        assert_eq!(
+            bf.directives[2],
+            Directive::Label {
+                key: "org.x".into(),
+                value: "1".into()
+            }
+        );
+    }
+
+    #[test]
+    fn copy_and_arch_opt() {
+        let bf = Buildfile::parse("FROM a:b\nCOPY ./src /app\nARCH_OPT").unwrap();
+        assert_eq!(
+            bf.directives[1],
+            Directive::Copy {
+                src: "./src".into(),
+                dst: "/app".into()
+            }
+        );
+        assert_eq!(bf.directives[2], Directive::ArchOpt);
+    }
+
+    #[test]
+    fn must_start_with_from() {
+        let err = Buildfile::parse("RUN echo hi").unwrap_err();
+        assert!(err.message.contains("must start with FROM"));
+    }
+
+    #[test]
+    fn rejects_multistage() {
+        let err = Buildfile::parse("FROM a:1\nFROM b:2").unwrap_err();
+        assert!(err.message.contains("multi-stage"));
+    }
+
+    #[test]
+    fn rejects_unknown_directive() {
+        let err = Buildfile::parse("FROM a:1\nVOLUME /data").unwrap_err();
+        assert!(err.message.contains("unknown directive"));
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn rejects_dangling_continuation() {
+        let err = Buildfile::parse("FROM a:1\nRUN x \\").unwrap_err();
+        assert!(err.message.contains("dangling"));
+    }
+
+    #[test]
+    fn rejects_empty_run() {
+        let err = Buildfile::parse("FROM a:1\nRUN").unwrap_err();
+        assert!(err.message.contains("requires"));
+    }
+
+    #[test]
+    fn canonical_round_trip() {
+        let bf = Buildfile::parse("FROM u:1\nENV A=b\nRUN make -j").unwrap();
+        let canon: Vec<_> = bf.directives.iter().map(|d| d.canonical()).collect();
+        assert_eq!(canon, vec!["FROM u:1", "ENV A=b", "RUN make -j"]);
+    }
+
+    #[test]
+    fn case_insensitive_directives() {
+        let bf = Buildfile::parse("from u:1\nrun echo").unwrap();
+        assert_eq!(bf.directives.len(), 2);
+    }
+}

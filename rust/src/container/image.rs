@@ -1,0 +1,212 @@
+//! Images and layers.
+//!
+//! A [`Layer`] is an immutable filesystem delta produced by one build
+//! directive; its [`LayerId`] is the sha256 of (parent layer id, the
+//! directive text, the file manifest), so identical build steps on
+//! identical parents hash identically — the property that makes layer
+//! caching and registry dedup sound.  An [`Image`] is an ordered stack
+//! of layer ids plus runtime configuration (env, entrypoint, arch
+//! flags), itself content-addressed.
+
+use sha2::{Digest, Sha256};
+
+/// Content hash of a layer (hex sha256).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LayerId(pub String);
+
+/// Content hash of an image config (hex sha256).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ImageId(pub String);
+
+impl std::fmt::Display for LayerId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", &self.0[..12.min(self.0.len())])
+    }
+}
+
+impl std::fmt::Display for ImageId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", &self.0[..12.min(self.0.len())])
+    }
+}
+
+/// One file recorded in a layer's manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileEntry {
+    pub path: String,
+    pub bytes: u64,
+}
+
+/// An immutable filesystem delta.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub id: LayerId,
+    /// The build directive that produced this layer (provenance).
+    pub directive: String,
+    /// Files added/changed by this layer.
+    pub files: Vec<FileEntry>,
+    /// Compressed transfer size (what push/pull move).
+    pub bytes: u64,
+}
+
+impl Layer {
+    /// Derive a layer from its parent, directive, and file manifest.
+    /// The id commits to all three.
+    pub fn derive(parent: Option<&LayerId>, directive: &str, files: Vec<FileEntry>) -> Self {
+        let mut h = Sha256::new();
+        h.update(parent.map(|p| p.0.as_str()).unwrap_or("scratch").as_bytes());
+        h.update([0u8]);
+        h.update(directive.as_bytes());
+        for f in &files {
+            h.update([0u8]);
+            h.update(f.path.as_bytes());
+            h.update(f.bytes.to_le_bytes());
+        }
+        let bytes = files.iter().map(|f| f.bytes).sum();
+        Layer {
+            id: LayerId(hex(&h.finalize())),
+            directive: directive.to_string(),
+            files,
+            bytes,
+        }
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.files.len()
+    }
+}
+
+/// An immutable image: layer stack + runtime config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Image {
+    pub id: ImageId,
+    /// `repository:tag`, e.g. `quay.io/fenicsproject/stable:2016.1.0r1`.
+    pub reference: String,
+    pub layers: Vec<LayerId>,
+    pub env: Vec<(String, String)>,
+    pub entrypoint: Option<String>,
+    pub labels: Vec<(String, String)>,
+    /// Whether the image was built with host-architecture optimisation
+    /// (`ARCH_OPT` directive): controls the Fig 5a AVX penalty.
+    pub arch_optimized: bool,
+}
+
+impl Image {
+    /// Content-address an image from its parts.
+    pub fn seal(
+        reference: &str,
+        layers: Vec<LayerId>,
+        env: Vec<(String, String)>,
+        entrypoint: Option<String>,
+        labels: Vec<(String, String)>,
+        arch_optimized: bool,
+    ) -> Self {
+        let mut h = Sha256::new();
+        for l in &layers {
+            h.update(l.0.as_bytes());
+            h.update([0u8]);
+        }
+        for (k, v) in &env {
+            h.update(k.as_bytes());
+            h.update([b'=']);
+            h.update(v.as_bytes());
+        }
+        if let Some(e) = &entrypoint {
+            h.update(e.as_bytes());
+        }
+        h.update([arch_optimized as u8]);
+        Image {
+            id: ImageId(hex(&h.finalize())),
+            reference: reference.to_string(),
+            layers,
+            env,
+            entrypoint,
+            labels,
+            arch_optimized,
+        }
+    }
+
+    /// Total compressed size given the layer store (bytes).
+    pub fn size_bytes(&self, store: &super::LayerStore) -> u64 {
+        self.layers
+            .iter()
+            .filter_map(|id| store.get(id))
+            .map(|l| l.bytes)
+            .sum()
+    }
+
+    /// Total number of files across layers (what an importer would see).
+    pub fn file_count(&self, store: &super::LayerStore) -> usize {
+        self.layers
+            .iter()
+            .filter_map(|id| store.get(id))
+            .map(|l| l.file_count())
+            .sum()
+    }
+}
+
+pub(crate) fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn files(n: usize, sz: u64) -> Vec<FileEntry> {
+        (0..n)
+            .map(|i| FileEntry {
+                path: format!("/usr/lib/f{i}.so"),
+                bytes: sz,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn layer_id_is_content_addressed() {
+        let a = Layer::derive(None, "RUN apt-get install scipy", files(3, 10));
+        let b = Layer::derive(None, "RUN apt-get install scipy", files(3, 10));
+        assert_eq!(a.id, b.id);
+        let c = Layer::derive(None, "RUN apt-get install numpy", files(3, 10));
+        assert_ne!(a.id, c.id);
+    }
+
+    #[test]
+    fn layer_id_commits_to_parent() {
+        let p1 = Layer::derive(None, "FROM ubuntu:16.04", files(1, 1));
+        let p2 = Layer::derive(None, "FROM alpine:3.4", files(1, 1));
+        let a = Layer::derive(Some(&p1.id), "RUN x", files(2, 5));
+        let b = Layer::derive(Some(&p2.id), "RUN x", files(2, 5));
+        assert_ne!(a.id, b.id);
+    }
+
+    #[test]
+    fn layer_size_is_manifest_sum() {
+        let l = Layer::derive(None, "RUN y", files(4, 100));
+        assert_eq!(l.bytes, 400);
+        assert_eq!(l.file_count(), 4);
+    }
+
+    #[test]
+    fn image_id_commits_to_layers_and_config() {
+        let l = Layer::derive(None, "FROM ubuntu", files(1, 1));
+        let base = |arch| {
+            Image::seal(
+                "t:1",
+                vec![l.id.clone()],
+                vec![("A".into(), "1".into())],
+                None,
+                vec![],
+                arch,
+            )
+        };
+        assert_eq!(base(false).id, base(false).id);
+        assert_ne!(base(false).id, base(true).id);
+    }
+
+    #[test]
+    fn display_truncates_hash() {
+        let l = Layer::derive(None, "RUN z", vec![]);
+        assert_eq!(format!("{}", l.id).len(), 12);
+    }
+}

@@ -1,0 +1,181 @@
+//! Container lifecycle: the state machine a runtime drives.
+//!
+//! Mirrors §2.1's image/container distinction: a [`Container`] is a
+//! runtime instantiation of an image, with its own (thin) writable layer
+//! and a Created → Running → Exited life, timestamped in virtual time.
+
+use crate::des::VirtualTime;
+
+use super::image::ImageId;
+
+/// Lifecycle states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContainerState {
+    Created,
+    Running,
+    Exited { code: i32 },
+}
+
+/// A runtime instantiation of an image.
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub id: u64,
+    pub image: ImageId,
+    pub state: ContainerState,
+    pub created_at: VirtualTime,
+    pub started_at: Option<VirtualTime>,
+    pub exited_at: Option<VirtualTime>,
+    /// Bytes written to the container's writable layer.
+    pub scratch_bytes: u64,
+    /// Commands exec'd inside (provenance for experiment traces).
+    pub exec_log: Vec<String>,
+}
+
+/// Invalid state transition.
+#[derive(Debug, PartialEq, Eq)]
+pub struct StateError {
+    pub from: &'static str,
+    pub action: &'static str,
+}
+impl std::fmt::Display for StateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cannot {} a container in state {}", self.action, self.from)
+    }
+}
+impl std::error::Error for StateError {}
+
+impl Container {
+    pub fn create(id: u64, image: ImageId, at: VirtualTime) -> Self {
+        Container {
+            id,
+            image,
+            state: ContainerState::Created,
+            created_at: at,
+            started_at: None,
+            exited_at: None,
+            scratch_bytes: 0,
+            exec_log: Vec::new(),
+        }
+    }
+
+    pub fn start(&mut self, at: VirtualTime) -> Result<(), StateError> {
+        match self.state {
+            ContainerState::Created => {
+                self.state = ContainerState::Running;
+                self.started_at = Some(at);
+                Ok(())
+            }
+            ContainerState::Running => Err(StateError {
+                from: "running",
+                action: "start",
+            }),
+            ContainerState::Exited { .. } => Err(StateError {
+                from: "exited",
+                action: "start",
+            }),
+        }
+    }
+
+    pub fn exec(&mut self, cmd: &str) -> Result<(), StateError> {
+        if self.state != ContainerState::Running {
+            return Err(StateError {
+                from: self.state_name(),
+                action: "exec in",
+            });
+        }
+        self.exec_log.push(cmd.to_string());
+        Ok(())
+    }
+
+    pub fn exit(&mut self, code: i32, at: VirtualTime) -> Result<(), StateError> {
+        if self.state != ContainerState::Running {
+            return Err(StateError {
+                from: self.state_name(),
+                action: "stop",
+            });
+        }
+        self.state = ContainerState::Exited { code };
+        self.exited_at = Some(at);
+        Ok(())
+    }
+
+    pub fn write_scratch(&mut self, bytes: u64) {
+        self.scratch_bytes += bytes;
+    }
+
+    fn state_name(&self) -> &'static str {
+        match self.state {
+            ContainerState::Created => "created",
+            ContainerState::Running => "running",
+            ContainerState::Exited { .. } => "exited",
+        }
+    }
+
+    /// Wall time spent running (if finished).
+    pub fn runtime(&self) -> Option<crate::des::Duration> {
+        Some(self.exited_at? - self.started_at?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::Duration;
+
+    fn t(ms: u64) -> VirtualTime {
+        VirtualTime::ZERO + Duration::from_millis(ms)
+    }
+
+    fn new_container() -> Container {
+        Container::create(1, ImageId("abc".into()), t(0))
+    }
+
+    #[test]
+    fn happy_path() {
+        let mut c = new_container();
+        assert_eq!(c.state, ContainerState::Created);
+        c.start(t(10)).unwrap();
+        c.exec("./demo_poisson").unwrap();
+        c.exit(0, t(500)).unwrap();
+        assert_eq!(c.state, ContainerState::Exited { code: 0 });
+        assert_eq!(c.runtime(), Some(Duration::from_millis(490)));
+        assert_eq!(c.exec_log, vec!["./demo_poisson"]);
+    }
+
+    #[test]
+    fn cannot_start_twice() {
+        let mut c = new_container();
+        c.start(t(1)).unwrap();
+        assert!(c.start(t(2)).is_err());
+    }
+
+    #[test]
+    fn cannot_exec_before_start() {
+        let mut c = new_container();
+        let err = c.exec("ls").unwrap_err();
+        assert_eq!(err.from, "created");
+    }
+
+    #[test]
+    fn cannot_stop_created() {
+        let mut c = new_container();
+        assert!(c.exit(0, t(1)).is_err());
+    }
+
+    #[test]
+    fn cannot_restart_exited() {
+        let mut c = new_container();
+        c.start(t(1)).unwrap();
+        c.exit(1, t(2)).unwrap();
+        assert!(c.start(t(3)).is_err());
+        assert!(c.exec("x").is_err());
+    }
+
+    #[test]
+    fn scratch_accounting() {
+        let mut c = new_container();
+        c.write_scratch(4096);
+        c.write_scratch(100);
+        assert_eq!(c.scratch_bytes, 4196);
+    }
+}

@@ -1,0 +1,48 @@
+//! The container substrate.
+//!
+//! Everything §2–§3 of the paper describes is implemented here as a
+//! simulated-but-mechanically-faithful stack:
+//!
+//! * [`image`] — immutable images built from content-addressed layers;
+//!   every layer and image carries the sha256 of its build inputs, so
+//!   identical builds dedup and "every image is associated with a
+//!   mathematical hash" (§3.1) holds literally.
+//! * [`store`] — the layered file system: a content-addressed store in
+//!   which shared base layers are stored once (§2.2's compactness
+//!   argument is measurable via [`store::LayerStore::dedup_ratio`]).
+//! * [`buildfile`] — parser for the Dockerfile-like build DSL
+//!   (`FROM` / `RUN` / `ENV` / `COPY` / `USER` / `WORKDIR` /
+//!   `ENTRYPOINT` / `LABEL` / `ARCH_OPT`).
+//! * [`builder`] — executes a buildfile into an image, with layer
+//!   caching keyed on (parent hash, directive) — the same cache rule
+//!   Docker uses.
+//! * [`registry`] — a quay.io-like registry: push/pull move only the
+//!   layers the other side is missing, with transfer times from a
+//!   bandwidth model (pull times show up in the deployment pipeline
+//!   example and coordinator traces).
+//! * [`lifecycle`] — the container state machine (Created → Running →
+//!   Exited) a runtime drives.
+//! * [`session`] — the `fenicsproject` wrapper script (§3.2): notebook /
+//!   start / stop workflows over the raw runtime.
+//! * [`runtime`] — the four runtime adapters the paper benchmarks:
+//!   Docker, rkt, Shifter, and a VirtualBox-style VM, each expressed as
+//!   the overheads/filesystem/MPI-resolution behaviours that distinguish
+//!   them in the figures.
+
+pub mod buildfile;
+pub mod builder;
+pub mod image;
+pub mod lifecycle;
+pub mod registry;
+pub mod runtime;
+pub mod session;
+pub mod store;
+
+pub use buildfile::{Buildfile, Directive};
+pub use builder::Builder;
+pub use image::{Image, ImageId, Layer, LayerId};
+pub use lifecycle::{Container, ContainerState};
+pub use registry::{PullReport, Registry};
+pub use runtime::{ContainerRuntime, RuntimeKind};
+pub use session::{SessionKind, SessionManager};
+pub use store::LayerStore;

@@ -1,0 +1,220 @@
+//! Image registry (quay.io-like).
+//!
+//! Holds tagged images plus their layers; `push`/`pull` move only the
+//! layers the receiving side is missing (the layered-filesystem dedup of
+//! §2.2), with transfer time from a bandwidth model.  `pull` is what the
+//! coordinator calls when deploying to a machine, and what `shifterimg
+//! pull` maps to on the HPC side.
+
+use std::collections::HashMap;
+
+use crate::des::Duration;
+
+use super::image::{Image, LayerId};
+use super::store::LayerStore;
+
+/// What a pull did (for traces/README tables).
+#[derive(Debug, Clone)]
+pub struct PullReport {
+    pub reference: String,
+    pub layers_transferred: usize,
+    pub layers_reused: usize,
+    pub bytes_transferred: u64,
+    pub time: Duration,
+}
+
+/// A registry: tag → image, plus the layer blobs.
+#[derive(Debug, Default)]
+pub struct Registry {
+    images: HashMap<String, Image>,
+    pub layers: LayerStore,
+    /// Download bandwidth clients see (bytes/s).
+    pub bytes_per_sec: f64,
+    /// Per-layer request latency.
+    pub per_layer_rtt: Duration,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry {
+            images: HashMap::new(),
+            layers: LayerStore::new(),
+            bytes_per_sec: 30.0e6, // a decent WAN link to quay.io
+            per_layer_rtt: Duration::from_millis(120),
+        }
+    }
+
+    /// Push an image (and any layers the registry is missing).
+    pub fn push(&mut self, image: &Image, source: &LayerStore) -> Result<(), MissingLayer> {
+        for id in &image.layers {
+            if !self.layers.contains(id) {
+                let layer = source.get(id).ok_or_else(|| MissingLayer(id.clone()))?;
+                self.layers.insert(layer.clone());
+            }
+        }
+        self.images.insert(image.reference.clone(), image.clone());
+        Ok(())
+    }
+
+    /// Pull `reference` into `dest`, transferring only missing layers.
+    pub fn pull(&self, reference: &str, dest: &mut LayerStore) -> Result<(Image, PullReport), PullError> {
+        let image = self
+            .images
+            .get(reference)
+            .ok_or_else(|| PullError::UnknownReference(reference.to_string()))?;
+        let missing: Vec<LayerId> = dest
+            .missing(&image.layers)
+            .into_iter()
+            .cloned()
+            .collect();
+        let mut bytes = 0u64;
+        for id in &missing {
+            let layer = self
+                .layers
+                .get(id)
+                .ok_or_else(|| PullError::CorruptRegistry(id.clone()))?;
+            bytes += layer.bytes;
+            dest.insert(layer.clone());
+        }
+        let time = self.per_layer_rtt * missing.len() as u64
+            + Duration::from_secs_f64(bytes as f64 / self.bytes_per_sec);
+        Ok((
+            image.clone(),
+            PullReport {
+                reference: reference.to_string(),
+                layers_transferred: missing.len(),
+                layers_reused: image.layers.len() - missing.len(),
+                bytes_transferred: bytes,
+                time,
+            },
+        ))
+    }
+
+    pub fn tags(&self) -> impl Iterator<Item = &str> {
+        self.images.keys().map(|s| s.as_str())
+    }
+
+    pub fn contains(&self, reference: &str) -> bool {
+        self.images.contains_key(reference)
+    }
+}
+
+/// Push failed: the source store lacks a layer the image references.
+#[derive(Debug)]
+pub struct MissingLayer(pub LayerId);
+impl std::fmt::Display for MissingLayer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "source store is missing layer {}", self.0)
+    }
+}
+impl std::error::Error for MissingLayer {}
+
+/// Pull failures.
+#[derive(Debug)]
+pub enum PullError {
+    UnknownReference(String),
+    CorruptRegistry(LayerId),
+}
+impl std::fmt::Display for PullError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PullError::UnknownReference(r) => write!(f, "no such image: {r}"),
+            PullError::CorruptRegistry(l) => write!(f, "registry lost layer {l}"),
+        }
+    }
+}
+impl std::error::Error for PullError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::buildfile::Buildfile;
+    use crate::container::builder::Builder;
+
+    fn built(reference: &str, text: &str) -> (Image, LayerStore) {
+        let mut store = LayerStore::new();
+        let image = Builder::new()
+            .build(&Buildfile::parse(text).unwrap(), reference, &mut store)
+            .unwrap()
+            .image;
+        (image, store)
+    }
+
+    #[test]
+    fn push_pull_round_trip() {
+        let (image, store) = built("a:1", "FROM ubuntu:16.04\nRUN echo x");
+        let mut reg = Registry::new();
+        reg.push(&image, &store).unwrap();
+        let mut dest = LayerStore::new();
+        let (pulled, report) = reg.pull("a:1", &mut dest).unwrap();
+        assert_eq!(pulled.id, image.id);
+        assert_eq!(report.layers_transferred, 2);
+        assert_eq!(report.layers_reused, 0);
+        assert!(report.time > Duration::ZERO);
+        assert_eq!(dest.len(), 2);
+    }
+
+    #[test]
+    fn second_pull_reuses_base_layers() {
+        let mut builder = Builder::new();
+        let mut store = LayerStore::new();
+        let bf = |t| Buildfile::parse(t).unwrap();
+        let a = builder
+            .build(&bf("FROM ubuntu:16.04\nRUN echo a"), "a:1", &mut store)
+            .unwrap()
+            .image;
+        let b = builder
+            .build(&bf("FROM ubuntu:16.04\nRUN echo b"), "b:1", &mut store)
+            .unwrap()
+            .image;
+        let mut reg = Registry::new();
+        reg.push(&a, &store).unwrap();
+        reg.push(&b, &store).unwrap();
+
+        let mut dest = LayerStore::new();
+        let (_, r1) = reg.pull("a:1", &mut dest).unwrap();
+        let (_, r2) = reg.pull("b:1", &mut dest).unwrap();
+        assert_eq!(r1.layers_transferred, 2);
+        assert_eq!(r2.layers_transferred, 1, "base came from the local store");
+        assert_eq!(r2.layers_reused, 1);
+        assert!(r2.bytes_transferred < r1.bytes_transferred / 10);
+    }
+
+    #[test]
+    fn pull_time_scales_with_bytes() {
+        let (big, store) = built("big:1", "FROM quay.io/fenicsproject/stable");
+        let (small, store2) = built("small:1", "FROM alpine:3.4");
+        let mut reg = Registry::new();
+        reg.push(&big, &store).unwrap();
+        reg.push(&small, &store2).unwrap();
+        let t_big = reg.pull("big:1", &mut LayerStore::new()).unwrap().1.time;
+        let t_small = reg.pull("small:1", &mut LayerStore::new()).unwrap().1.time;
+        assert!(t_big.as_secs_f64() > 5.0 * t_small.as_secs_f64());
+    }
+
+    #[test]
+    fn unknown_reference() {
+        let reg = Registry::new();
+        assert!(matches!(
+            reg.pull("ghost:1", &mut LayerStore::new()),
+            Err(PullError::UnknownReference(_))
+        ));
+    }
+
+    #[test]
+    fn push_requires_source_layers() {
+        let (image, _) = built("a:1", "FROM alpine:3.4");
+        let empty = LayerStore::new();
+        let mut reg = Registry::new();
+        assert!(reg.push(&image, &empty).is_err());
+    }
+
+    #[test]
+    fn tags_listing() {
+        let (image, store) = built("repo/app:2.0", "FROM alpine:3.4");
+        let mut reg = Registry::new();
+        reg.push(&image, &store).unwrap();
+        assert!(reg.contains("repo/app:2.0"));
+        assert_eq!(reg.tags().collect::<Vec<_>>(), vec!["repo/app:2.0"]);
+    }
+}

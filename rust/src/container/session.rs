@@ -1,0 +1,307 @@
+//! The `fenicsproject` wrapper (§3.2): user-friendly workflows over the
+//! raw container runtime.
+//!
+//! The paper's wrapper script hides the Docker CLI's sharp edges behind
+//! three workflows the tutorials use: `notebook` (a Jupyter session with
+//! port mapping and a shared volume), `start`/`stop` (a persistent named
+//! project container), and `run` (one-shot command).  [`SessionManager`]
+//! reproduces those semantics — named sessions, persistence across
+//! start/stop, shared-volume bookkeeping, port allocation — on top of
+//! [`super::lifecycle`] and the runtime adapters, in virtual time.
+
+use std::collections::HashMap;
+
+use crate::des::{Duration, VirtualTime};
+
+use super::image::Image;
+use super::lifecycle::{Container, ContainerState};
+use super::runtime::{by_kind, RuntimeKind};
+
+/// What kind of session a project runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionKind {
+    /// `fenicsproject notebook <name>`: Jupyter + port map.
+    Notebook,
+    /// `fenicsproject start <name>`: interactive shell container.
+    Shell,
+}
+
+/// One named project session.
+#[derive(Debug)]
+pub struct Session {
+    pub name: String,
+    pub kind: SessionKind,
+    pub container: Container,
+    /// Host port mapped to the container's 8888 (notebooks only).
+    pub port: Option<u16>,
+    /// Host path shared at /home/fenics/shared.
+    pub shared_volume: String,
+    /// Times the session was resumed (`start` after `stop`).
+    pub resumes: u32,
+}
+
+/// Errors the wrapper reports to users.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SessionError {
+    AlreadyExists(String),
+    NoSuchSession(String),
+    NotRunning(String),
+    AlreadyRunning(String),
+    NoFreePorts,
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::AlreadyExists(n) => {
+                write!(f, "project `{n}` already exists (use start to resume)")
+            }
+            SessionError::NoSuchSession(n) => write!(f, "no project named `{n}`"),
+            SessionError::NotRunning(n) => write!(f, "project `{n}` is not running"),
+            SessionError::AlreadyRunning(n) => write!(f, "project `{n}` is already running"),
+            SessionError::NoFreePorts => write!(f, "no free ports in the notebook range"),
+        }
+    }
+}
+impl std::error::Error for SessionError {}
+
+/// The `fenicsproject` wrapper state (one per user machine).
+pub struct SessionManager {
+    image: Image,
+    runtime: RuntimeKind,
+    sessions: HashMap<String, Session>,
+    next_id: u64,
+    ports: Vec<u16>,
+    clock: VirtualTime,
+}
+
+impl SessionManager {
+    pub fn new(image: Image, runtime: RuntimeKind) -> Self {
+        SessionManager {
+            image,
+            runtime,
+            sessions: HashMap::new(),
+            next_id: 1,
+            // the wrapper allocates 127.0.0.1:8888.. upward
+            ports: (8888..8898).collect(),
+            clock: VirtualTime::ZERO,
+        }
+    }
+
+    pub fn now(&self) -> VirtualTime {
+        self.clock
+    }
+
+    fn advance(&mut self, d: Duration) {
+        self.clock += d;
+    }
+
+    /// `fenicsproject notebook <name> [dir]`
+    pub fn notebook(&mut self, name: &str, host_dir: &str) -> Result<&Session, SessionError> {
+        self.create(name, SessionKind::Notebook, host_dir)
+    }
+
+    /// `fenicsproject create <name>` + `start`
+    pub fn start_new(&mut self, name: &str, host_dir: &str) -> Result<&Session, SessionError> {
+        self.create(name, SessionKind::Shell, host_dir)
+    }
+
+    fn create(
+        &mut self,
+        name: &str,
+        kind: SessionKind,
+        host_dir: &str,
+    ) -> Result<&Session, SessionError> {
+        if self.sessions.contains_key(name) {
+            return Err(SessionError::AlreadyExists(name.to_string()));
+        }
+        let port = match kind {
+            SessionKind::Notebook => Some(self.ports.pop().ok_or(SessionError::NoFreePorts)?),
+            SessionKind::Shell => None,
+        };
+        let rt = by_kind(self.runtime);
+        let start_cost = rt.startup_overhead(&self.image);
+        let mut container = Container::create(self.next_id, self.image.id.clone(), self.clock);
+        self.next_id += 1;
+        self.advance(start_cost);
+        container.start(self.clock).expect("fresh container starts");
+        if kind == SessionKind::Notebook {
+            container
+                .exec("jupyter-notebook --ip=0.0.0.0")
+                .expect("running container");
+            // jupyter's own startup
+            self.advance(Duration::from_millis(1800));
+        }
+        let session = Session {
+            name: name.to_string(),
+            kind,
+            container,
+            port,
+            shared_volume: host_dir.to_string(),
+            resumes: 0,
+        };
+        self.sessions.insert(name.to_string(), session);
+        Ok(&self.sessions[name])
+    }
+
+    /// `fenicsproject stop <name>` — persists state (the writable layer
+    /// survives; docker `stop`, not `rm`).
+    pub fn stop(&mut self, name: &str) -> Result<(), SessionError> {
+        self.advance(Duration::from_millis(300));
+        let now = self.clock;
+        let s = self
+            .sessions
+            .get_mut(name)
+            .ok_or_else(|| SessionError::NoSuchSession(name.to_string()))?;
+        s.container
+            .exit(0, now)
+            .map_err(|_| SessionError::NotRunning(name.to_string()))
+    }
+
+    /// `fenicsproject start <name>` — resume a stopped project.
+    pub fn start(&mut self, name: &str) -> Result<(), SessionError> {
+        self.advance(Duration::from_millis(350));
+        let now = self.clock;
+        let next_id = self.next_id;
+        let s = self
+            .sessions
+            .get_mut(name)
+            .ok_or_else(|| SessionError::NoSuchSession(name.to_string()))?;
+        match s.container.state {
+            ContainerState::Running => Err(SessionError::AlreadyRunning(name.to_string())),
+            _ => {
+                // docker start reuses the same container (and its
+                // writable layer); we model that as a fresh lifecycle
+                // that inherits scratch bytes
+                let scratch = s.container.scratch_bytes;
+                let mut c = Container::create(next_id, s.container.image.clone(), now);
+                c.start(now).expect("fresh container starts");
+                c.scratch_bytes = scratch;
+                s.container = c;
+                s.resumes += 1;
+                self.next_id += 1;
+                Ok(())
+            }
+        }
+    }
+
+    /// Run a command inside a running session.
+    pub fn exec(&mut self, name: &str, cmd: &str) -> Result<(), SessionError> {
+        let s = self
+            .sessions
+            .get_mut(name)
+            .ok_or_else(|| SessionError::NoSuchSession(name.to_string()))?;
+        s.container
+            .exec(cmd)
+            .map_err(|_| SessionError::NotRunning(name.to_string()))
+    }
+
+    /// The notebook URL the wrapper prints for the user.
+    pub fn notebook_url(&self, name: &str) -> Option<String> {
+        let s = self.sessions.get(name)?;
+        s.port.map(|p| format!("http://127.0.0.1:{p}/?token=fenics"))
+    }
+
+    pub fn list(&self) -> Vec<(&str, &'static str)> {
+        let mut out: Vec<_> = self
+            .sessions
+            .values()
+            .map(|s| {
+                let state = match s.container.state {
+                    ContainerState::Running => "running",
+                    ContainerState::Created => "created",
+                    ContainerState::Exited { .. } => "stopped",
+                };
+                (s.name.as_str(), state)
+            })
+            .collect();
+        out.sort();
+        out
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Session> {
+        self.sessions.get(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::fenics_image;
+
+    fn manager() -> SessionManager {
+        let (image, _) = fenics_image();
+        SessionManager::new(image, RuntimeKind::Docker)
+    }
+
+    #[test]
+    fn notebook_workflow() {
+        let mut m = manager();
+        let s = m.notebook("my-project", "/home/user/work").unwrap();
+        assert_eq!(s.kind, SessionKind::Notebook);
+        assert_eq!(s.port, Some(8897)); // allocated from the top
+        assert_eq!(s.container.state, ContainerState::Running);
+        assert_eq!(s.container.exec_log[0], "jupyter-notebook --ip=0.0.0.0");
+        assert!(m.notebook_url("my-project").unwrap().contains("8897"));
+        // startup (docker + jupyter) took simulated seconds
+        assert!(m.now().as_secs_f64() > 1.0);
+    }
+
+    #[test]
+    fn start_stop_resume_persists() {
+        let mut m = manager();
+        m.start_new("thesis", "/home/user/thesis").unwrap();
+        m.exec("thesis", "python demo.py").unwrap();
+        m.sessions.get_mut("thesis").unwrap().container.write_scratch(4096);
+        m.stop("thesis").unwrap();
+        assert_eq!(m.list(), vec![("thesis", "stopped")]);
+        m.start("thesis").unwrap();
+        let s = m.get("thesis").unwrap();
+        assert_eq!(s.container.state, ContainerState::Running);
+        assert_eq!(s.resumes, 1);
+        assert_eq!(s.container.scratch_bytes, 4096, "writable layer persisted");
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut m = manager();
+        m.start_new("p", "/w").unwrap();
+        assert_eq!(
+            m.start_new("p", "/w").unwrap_err(),
+            SessionError::AlreadyExists("p".into())
+        );
+    }
+
+    #[test]
+    fn lifecycle_errors_are_user_errors() {
+        let mut m = manager();
+        assert!(matches!(m.stop("ghost"), Err(SessionError::NoSuchSession(_))));
+        m.start_new("p", "/w").unwrap();
+        assert!(matches!(m.start("p"), Err(SessionError::AlreadyRunning(_))));
+        m.stop("p").unwrap();
+        assert!(matches!(m.stop("p"), Err(SessionError::NotRunning(_))));
+        assert!(matches!(m.exec("p", "ls"), Err(SessionError::NotRunning(_))));
+    }
+
+    #[test]
+    fn ports_are_finite_and_unique() {
+        let mut m = manager();
+        let mut ports = std::collections::HashSet::new();
+        for i in 0..10 {
+            let s = m.notebook(&format!("n{i}"), "/w").unwrap();
+            assert!(ports.insert(s.port.unwrap()));
+        }
+        assert!(matches!(
+            m.notebook("overflow", "/w"),
+            Err(SessionError::NoFreePorts)
+        ));
+    }
+
+    #[test]
+    fn shell_sessions_have_no_port() {
+        let mut m = manager();
+        m.start_new("s", "/w").unwrap();
+        assert_eq!(m.get("s").unwrap().port, None);
+        assert!(m.notebook_url("s").is_none());
+    }
+}

@@ -1,0 +1,131 @@
+//! Content-addressed layer store — "the layered file system".
+//!
+//! Layers are stored by content hash, so two images `FROM` the same base
+//! share its layers physically.  [`LayerStore::dedup_ratio`] quantifies
+//! §2.2's compactness claim (a pipeline of images over a common base
+//! stores the base once).
+
+use std::collections::HashMap;
+
+use super::image::{Layer, LayerId};
+
+/// Content-addressed store of layers.
+#[derive(Debug, Clone, Default)]
+pub struct LayerStore {
+    layers: HashMap<LayerId, Layer>,
+    /// Total logical bytes ever inserted (including duplicates).
+    logical_bytes: u64,
+    inserts: u64,
+}
+
+impl LayerStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a layer; returns `true` if it was new (a store miss).
+    pub fn insert(&mut self, layer: Layer) -> bool {
+        self.logical_bytes += layer.bytes;
+        self.inserts += 1;
+        self.layers.insert(layer.id.clone(), layer).is_none()
+    }
+
+    pub fn get(&self, id: &LayerId) -> Option<&Layer> {
+        self.layers.get(id)
+    }
+
+    pub fn contains(&self, id: &LayerId) -> bool {
+        self.layers.contains_key(id)
+    }
+
+    /// Physical bytes actually stored (deduplicated).
+    pub fn physical_bytes(&self) -> u64 {
+        self.layers.values().map(|l| l.bytes).sum()
+    }
+
+    /// Logical bytes inserted over the store's lifetime.
+    pub fn logical_bytes(&self) -> u64 {
+        self.logical_bytes
+    }
+
+    /// logical / physical; > 1 means sharing is paying off.
+    pub fn dedup_ratio(&self) -> f64 {
+        let p = self.physical_bytes();
+        if p == 0 {
+            1.0
+        } else {
+            self.logical_bytes as f64 / p as f64
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Which of `wanted` are *not* present (what a pull must transfer).
+    pub fn missing<'a>(&self, wanted: &'a [LayerId]) -> Vec<&'a LayerId> {
+        wanted.iter().filter(|id| !self.contains(id)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::image::FileEntry;
+
+    fn layer(tag: &str, bytes: u64) -> Layer {
+        Layer::derive(
+            None,
+            tag,
+            vec![FileEntry {
+                path: format!("/{tag}"),
+                bytes,
+            }],
+        )
+    }
+
+    #[test]
+    fn insert_dedups_by_content() {
+        let mut s = LayerStore::new();
+        assert!(s.insert(layer("a", 100)));
+        assert!(!s.insert(layer("a", 100))); // identical content: miss=false
+        assert!(s.insert(layer("b", 50)));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.physical_bytes(), 150);
+        assert_eq!(s.logical_bytes(), 250);
+        assert!((s.dedup_ratio() - 250.0 / 150.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_reports_what_a_pull_needs() {
+        let mut s = LayerStore::new();
+        let a = layer("a", 1);
+        let b = layer("b", 1);
+        s.insert(a.clone());
+        let wanted = vec![a.id.clone(), b.id.clone()];
+        let miss = s.missing(&wanted);
+        assert_eq!(miss.len(), 1);
+        assert_eq!(miss[0], &b.id);
+    }
+
+    #[test]
+    fn empty_store() {
+        let s = LayerStore::new();
+        assert!(s.is_empty());
+        assert_eq!(s.dedup_ratio(), 1.0);
+        assert_eq!(s.physical_bytes(), 0);
+    }
+
+    #[test]
+    fn get_round_trips() {
+        let mut s = LayerStore::new();
+        let l = layer("x", 7);
+        s.insert(l.clone());
+        assert_eq!(s.get(&l.id).unwrap().bytes, 7);
+        assert!(s.get(&LayerId("nope".into())).is_none());
+    }
+}

@@ -1,0 +1,386 @@
+//! Experiment orchestration — the paper's Fig 1 pipeline plus the
+//! evaluation matrix.
+//!
+//! [`deploy_pipeline`] walks the full image lifecycle the paper
+//! describes (§3.4): parse the Dockerfile → build (layer cache, content
+//! hashes) → push to the registry → pull onto the workstation and onto
+//! Edison (Shifter's `shifterimg pull`), reporting layer reuse and
+//! transfer times.
+//!
+//! [`Coordinator`] regenerates the evaluation figures: each
+//! `ExperimentConfig` expands into the (platform × ranks × size × rep)
+//! matrix, every cell runs the corresponding workload through the
+//! simulated deployment, and the results aggregate into paper-style
+//! [`Figure`]s.
+
+use anyhow::Result;
+
+use crate::bench::{repeat, Figure, Row};
+use crate::config::ExperimentConfig;
+use crate::container::{Builder, Buildfile, LayerStore, PullReport, Registry};
+use crate::des::Duration;
+use crate::fem::exec::Exec;
+use crate::metrics::Stats;
+use crate::platform::Platform;
+use crate::runtime::CalibrationTable;
+use crate::workload::{
+    run_fig2, run_hpgmg, run_poisson_app, AppConfig, Fig2Test, HpgmgConfig,
+};
+
+/// The FEniCS-stack buildfile the pipeline builds (the project's real
+/// Dockerfile collapsed to our DSL).
+pub const FENICS_BUILDFILE: &str = "\
+FROM ubuntu:16.04
+USER root
+RUN apt-get -y update && apt-get -y install petsc slepc openmpi-bin mpich
+RUN apt-get -y install python-numpy python-scipy python-sympy swig
+RUN pip install ufl ffc fiat instant
+RUN git clone dolfin && cmake dolfin && make -j install
+ENV FENICS_HOME=/home/fenics
+USER fenics
+WORKDIR /home/fenics
+ENTRYPOINT /bin/bash
+";
+
+/// One machine's pull in the deployment trace.
+#[derive(Debug, Clone)]
+pub struct DeployTarget {
+    pub machine: String,
+    pub pull: PullReport,
+}
+
+/// The full §3.4 pipeline record.
+#[derive(Debug, Clone)]
+pub struct DeploymentTrace {
+    pub image_id: String,
+    pub layers_built: usize,
+    pub layers_cached: usize,
+    pub build_time: Duration,
+    pub image_bytes: u64,
+    pub image_files: usize,
+    pub targets: Vec<DeployTarget>,
+}
+
+impl DeploymentTrace {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "image {} ({} MB, {} files): {} layers built, {} cached, build {}\n",
+            &self.image_id[..12],
+            self.image_bytes / 1_000_000,
+            self.image_files,
+            self.layers_built,
+            self.layers_cached,
+            self.build_time,
+        ));
+        for t in &self.targets {
+            s.push_str(&format!(
+                "  pull -> {:12} {} layers ({} reused), {} MB in {}\n",
+                t.machine,
+                t.pull.layers_transferred,
+                t.pull.layers_reused,
+                t.pull.bytes_transferred / 1_000_000,
+                t.pull.time,
+            ));
+        }
+        s
+    }
+}
+
+/// Run the Fig 1 pipeline: build → push → pull on each target machine.
+/// `second_build` demonstrates layer caching (a config-only change).
+pub fn deploy_pipeline() -> Result<DeploymentTrace> {
+    let bf = Buildfile::parse(FENICS_BUILDFILE)?;
+    let mut builder = Builder::new();
+    let mut ci_store = LayerStore::new();
+    let report = builder.build(&bf, "quay.io/fenicsproject/stable:2016.1.0r1", &mut ci_store)?;
+
+    let mut registry = Registry::new();
+    registry.push(&report.image, &ci_store)?;
+
+    let mut targets = Vec::new();
+    for machine in ["workstation", "edison"] {
+        let mut local = LayerStore::new();
+        let (_, pull) = registry.pull("quay.io/fenicsproject/stable:2016.1.0r1", &mut local)?;
+        targets.push(DeployTarget {
+            machine: machine.to_string(),
+            pull,
+        });
+    }
+
+    Ok(DeploymentTrace {
+        image_id: report.image.id.0.clone(),
+        layers_built: report.layers_built,
+        layers_cached: report.layers_cached,
+        build_time: report.build_time,
+        image_bytes: report.image.size_bytes(&registry.layers),
+        image_files: report.image.file_count(&registry.layers),
+        targets,
+    })
+}
+
+/// Figure runner over the modeled (calibrated) execution mode.
+pub struct Coordinator {
+    pub table: CalibrationTable,
+}
+
+impl Coordinator {
+    /// Load the measured calibration table if available (else the
+    /// built-in fallback — reports record which).
+    pub fn new() -> Self {
+        Coordinator {
+            table: CalibrationTable::load_or_default(None),
+        }
+    }
+
+    pub fn with_table(table: CalibrationTable) -> Self {
+        Coordinator { table }
+    }
+
+    /// Regenerate the figures selected by `cfg`.
+    pub fn run(&self, cfg: &ExperimentConfig) -> Result<Vec<Figure>> {
+        match cfg.figure.as_str() {
+            "fig2" => self.fig2(cfg),
+            "fig3" => self.fig3(cfg),
+            "fig4" => self.fig4(cfg),
+            "fig5a" => self.fig5(cfg, true),
+            "fig5b" => self.fig5(cfg, false),
+            other => anyhow::bail!("unknown figure `{other}`"),
+        }
+    }
+
+    fn exec(&self) -> Exec<'_> {
+        Exec::Modeled { table: &self.table }
+    }
+
+    fn fig2(&self, cfg: &ExperimentConfig) -> Result<Vec<Figure>> {
+        let mut figures = Vec::new();
+        for test in Fig2Test::ALL {
+            let mut fig = Figure::new(
+                format!("Fig 2 — {} (workstation)", test.label()),
+                "run time [s]",
+                false,
+            );
+            for platform in Platform::workstation_set() {
+                let stats = repeat(cfg.reps, |rep| {
+                    let mut exec = self.exec();
+                    run_fig2(test, platform, &mut exec, cfg.seed + rep as u64)
+                        .expect("fig2 run")
+                        .as_secs_f64()
+                });
+                fig.push(Row::new(platform.label(), stats));
+            }
+            fig.note(format!("calibration: {}", self.table.source));
+            figures.push(fig);
+        }
+        Ok(figures)
+    }
+
+    fn fig3(&self, cfg: &ExperimentConfig) -> Result<Vec<Figure>> {
+        let mut figures = Vec::new();
+        for &ranks in &cfg.ranks {
+            let mut fig = Figure::new(
+                format!("Fig 3 — C++ benchmark, Edison, {ranks} MPI processes"),
+                "run time [s]",
+                false,
+            );
+            for platform in Platform::edison_cpp_set() {
+                let mut breakdown_acc: Vec<(String, f64)> = Vec::new();
+                let stats = repeat(cfg.reps, |rep| {
+                    let mut exec = self.exec();
+                    let b = run_poisson_app(
+                        platform,
+                        &mut exec,
+                        &AppConfig::cpp(ranks, cfg.seed + rep as u64),
+                    )
+                    .expect("fig3 run");
+                    if rep == 0 {
+                        breakdown_acc = b
+                            .phase_names()
+                            .iter()
+                            .map(|p| (p.clone(), b.get(p)))
+                            .collect();
+                    }
+                    b.total()
+                });
+                fig.push(Row::new(platform.label(), stats).with_breakdown(breakdown_acc));
+            }
+            if ranks > 96 {
+                fig.note("container-MPI bar is off-scale in the paper (truncated x-axis)");
+            }
+            figures.push(fig);
+        }
+        Ok(figures)
+    }
+
+    fn fig4(&self, cfg: &ExperimentConfig) -> Result<Vec<Figure>> {
+        let mut figures = Vec::new();
+        for &ranks in &cfg.ranks {
+            let mut fig = Figure::new(
+                format!("Fig 4 — Python benchmark, Edison, {ranks} MPI processes"),
+                "run time [s]",
+                false,
+            );
+            for platform in Platform::edison_python_set() {
+                let mut breakdown_acc: Vec<(String, f64)> = Vec::new();
+                let stats = repeat(cfg.reps, |rep| {
+                    let mut exec = self.exec();
+                    let b = run_poisson_app(
+                        platform,
+                        &mut exec,
+                        &AppConfig::python(ranks, cfg.seed + rep as u64),
+                    )
+                    .expect("fig4 run");
+                    if rep == 0 {
+                        breakdown_acc = b
+                            .phase_names()
+                            .iter()
+                            .map(|p| (p.clone(), b.get(p)))
+                            .collect();
+                    }
+                    b.total()
+                });
+                fig.push(Row::new(platform.label(), stats).with_breakdown(breakdown_acc));
+            }
+            fig.note("native total dominated by the Python import phase (MDS contention)");
+            figures.push(fig);
+        }
+        Ok(figures)
+    }
+
+    fn fig5(&self, cfg: &ExperimentConfig, workstation: bool) -> Result<Vec<Figure>> {
+        let platforms: Vec<Platform> = if workstation {
+            vec![Platform::Docker, Platform::Rkt, Platform::Native]
+        } else {
+            vec![Platform::Native, Platform::ShifterSystemMpi]
+        };
+        let mut figures = Vec::new();
+        for &size in &cfg.sizes {
+            let (which, ranks) = if workstation {
+                ("5a — 16-core workstation", cfg.ranks[0])
+            } else {
+                ("5b — Edison, 192 cores", cfg.ranks[0])
+            };
+            let dofs_per_rank = crate::fem::gmg::LADDER[size].pow(3);
+            let mut fig = Figure::new(
+                format!("Fig {which}: HPGMG-FE, {dofs_per_rank} DOF/rank"),
+                "DOF/s",
+                true,
+            );
+            for &platform in &platforms {
+                let stats = repeat(cfg.reps, |rep| {
+                    let mut exec = self.exec();
+                    let mut hc = if workstation {
+                        HpgmgConfig::workstation(size, cfg.seed + rep as u64)
+                    } else {
+                        HpgmgConfig::edison(size, cfg.seed + rep as u64)
+                    };
+                    hc.ranks = ranks;
+                    run_hpgmg(platform, &mut exec, &hc)
+                        .expect("hpgmg run")
+                        .dofs_per_second
+                });
+                fig.push(Row::new(platform.label(), stats));
+            }
+            figures.push(fig);
+        }
+        Ok(figures)
+    }
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Aggregate stats for one platform column across figures (used by the
+/// summary table in reports).
+pub fn column_summary(figures: &[Figure], label: &str) -> Option<Stats> {
+    let samples: Vec<f64> = figures
+        .iter()
+        .flat_map(|f| f.rows.iter())
+        .filter(|r| r.label == label)
+        .flat_map(|r| r.stats.samples.iter().copied())
+        .collect();
+    if samples.is_empty() {
+        None
+    } else {
+        Some(Stats::from_samples(samples))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deploy_pipeline_round_trips() {
+        let trace = deploy_pipeline().unwrap();
+        assert!(trace.layers_built >= 5);
+        assert!(trace.image_bytes > 100_000_000);
+        assert_eq!(trace.targets.len(), 2);
+        // both pulls move the full image (fresh stores)
+        for t in &trace.targets {
+            assert_eq!(t.pull.layers_reused, 0);
+            assert!(t.pull.time > Duration::ZERO);
+        }
+        let text = trace.render();
+        assert!(text.contains("edison"));
+        assert!(text.contains("layers built"));
+    }
+
+    #[test]
+    fn fig2_produces_four_figures_with_four_bars() {
+        let cfg = ExperimentConfig {
+            reps: 2,
+            ..ExperimentConfig::paper_default("fig2").unwrap()
+        };
+        let figs = Coordinator::new().run(&cfg).unwrap();
+        assert_eq!(figs.len(), 4);
+        for f in &figs {
+            assert_eq!(f.rows.len(), 4);
+            assert!(f.rows.iter().all(|r| r.stats.mean() > 0.0));
+        }
+    }
+
+    #[test]
+    fn fig3_has_ranks_sweep_and_breakdowns() {
+        let cfg = ExperimentConfig {
+            reps: 1,
+            ranks: vec![24, 48],
+            ..ExperimentConfig::paper_default("fig3").unwrap()
+        };
+        let figs = Coordinator::new().run(&cfg).unwrap();
+        assert_eq!(figs.len(), 2);
+        for f in &figs {
+            assert_eq!(f.rows.len(), 3);
+            assert!(!f.rows[0].breakdown.is_empty());
+        }
+    }
+
+    #[test]
+    fn fig5a_higher_is_better() {
+        let cfg = ExperimentConfig {
+            reps: 1,
+            sizes: vec![0],
+            ..ExperimentConfig::paper_default("fig5a").unwrap()
+        };
+        let figs = Coordinator::new().run(&cfg).unwrap();
+        assert_eq!(figs.len(), 1);
+        assert!(figs[0].higher_better);
+        assert_eq!(figs[0].rows.len(), 3);
+    }
+
+    #[test]
+    fn column_summary_collects_across_figures() {
+        let cfg = ExperimentConfig {
+            reps: 2,
+            ..ExperimentConfig::paper_default("fig2").unwrap()
+        };
+        let figs = Coordinator::new().run(&cfg).unwrap();
+        let native = column_summary(&figs, "native").unwrap();
+        assert_eq!(native.n(), 8); // 4 tests x 2 reps
+        assert!(column_summary(&figs, "slurm").is_none());
+    }
+}

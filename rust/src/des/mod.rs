@@ -1,0 +1,26 @@
+//! Discrete-event simulation substrate.
+//!
+//! Everything in `harbor` that happens "on the cluster" happens in
+//! **virtual time**: container start-up, metadata requests against the
+//! parallel filesystem, MPI messages, and the (really-executed) compute
+//! segments whose durations come from the PJRT calibration table.  This
+//! module provides the three primitives the rest of the crate builds on:
+//!
+//! * [`VirtualTime`] / [`Duration`] — nanosecond-resolution virtual clock
+//!   arithmetic (plain newtypes over `u64`/`i64`-free math, `Ord`, cheap).
+//! * [`EventQueue`] — a deterministic priority queue of timed events with
+//!   FIFO tie-breaking (two events at the same timestamp pop in push
+//!   order; simulations are bit-reproducible for a fixed seed).
+//! * [`FifoResource`] — a `c`-server queueing station with deterministic
+//!   service times; models the Lustre metadata server, NICs under
+//!   contention, and the registry's upload slots.
+
+mod queue;
+mod resource;
+mod rng;
+mod time;
+
+pub use queue::EventQueue;
+pub use resource::FifoResource;
+pub use rng::SimRng;
+pub use time::{Duration, VirtualTime};

@@ -1,0 +1,136 @@
+//! Deterministic timed event queue.
+//!
+//! A `BinaryHeap` keyed on `(time, sequence)`: events scheduled for the
+//! same instant pop in the order they were pushed, so a simulation's
+//! event interleaving is a pure function of its inputs and seed.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::VirtualTime;
+
+/// A priority queue of `(VirtualTime, T)` events with FIFO tie-breaking.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Reverse<(VirtualTime, u64, usize)>>,
+    // Events are stored out-of-line so `T` needs no `Ord`.
+    slots: Vec<Option<T>>,
+    free: Vec<usize>,
+    seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            seq: 0,
+        }
+    }
+
+    /// Schedule `event` at `time`.
+    pub fn push(&mut self, time: VirtualTime, event: T) {
+        let slot = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = Some(event);
+                i
+            }
+            None => {
+                self.slots.push(Some(event));
+                self.slots.len() - 1
+            }
+        };
+        self.heap.push(Reverse((time, self.seq, slot)));
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event (FIFO among equal timestamps).
+    pub fn pop(&mut self) -> Option<(VirtualTime, T)> {
+        let Reverse((time, _, slot)) = self.heap.pop()?;
+        let event = self.slots[slot].take().expect("event slot occupied");
+        self.free.push(slot);
+        Some((time, event))
+    }
+
+    /// Timestamp of the next event without removing it.
+    pub fn peek_time(&self) -> Option<VirtualTime> {
+        self.heap.peek().map(|Reverse((t, _, _))| *t)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::Duration;
+
+    fn t(ms: u64) -> VirtualTime {
+        VirtualTime::ZERO + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(t(30), "c");
+        q.push(t(10), "a");
+        q.push(t(20), "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn fifo_tiebreak_at_equal_times() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push(t(5), i);
+        }
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let mut q = EventQueue::new();
+        q.push(t(7), ());
+        assert_eq!(q.peek_time(), Some(t(7)));
+        assert_eq!(q.len(), 1);
+        assert!(q.pop().is_some());
+        assert!(q.is_empty());
+        assert_eq!(q.peek_time(), None);
+    }
+
+    #[test]
+    fn slot_reuse_after_pop() {
+        let mut q = EventQueue::new();
+        q.push(t(1), 1);
+        q.pop();
+        q.push(t(2), 2);
+        // the freed slot is reused, not grown
+        assert_eq!(q.slots.len(), 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(t(10), 10);
+        q.push(t(5), 5);
+        assert_eq!(q.pop().unwrap(), (t(5), 5));
+        q.push(t(1), 1);
+        assert_eq!(q.pop().unwrap(), (t(1), 1));
+        assert_eq!(q.pop().unwrap(), (t(10), 10));
+    }
+}

@@ -1,0 +1,140 @@
+//! Multi-server FIFO queueing station.
+//!
+//! Models contended shared services with deterministic service times:
+//! the Lustre metadata server (`c` RPC handlers), a node NIC (1 server,
+//! service time = bytes / bandwidth), or registry upload slots.  Work is
+//! submitted as `(arrival, service)` pairs; the station returns the
+//! completion instant under FIFO discipline, which is all the callers
+//! need to advance their own virtual clocks.
+
+use super::{Duration, VirtualTime};
+
+/// A `c`-server FIFO queue with deterministic service times.
+#[derive(Debug, Clone)]
+pub struct FifoResource {
+    /// Next instant each server becomes free, kept as a min-"heap" by
+    /// linear scan (c is small: MDS handlers ~4–32, NIC = 1).
+    free_at: Vec<VirtualTime>,
+    busy: Duration,
+    served: u64,
+}
+
+impl FifoResource {
+    /// A station with `servers` parallel servers (must be >= 1).
+    pub fn new(servers: usize) -> Self {
+        assert!(servers >= 1, "resource needs at least one server");
+        FifoResource {
+            free_at: vec![VirtualTime::ZERO; servers],
+            busy: Duration::ZERO,
+            served: 0,
+        }
+    }
+
+    /// Submit a request arriving at `arrival` needing `service` time.
+    /// Returns the completion instant. FIFO: the request takes the
+    /// earliest-free server, starting no earlier than `arrival`.
+    pub fn submit(&mut self, arrival: VirtualTime, service: Duration) -> VirtualTime {
+        let (idx, earliest) = self
+            .free_at
+            .iter()
+            .copied()
+            .enumerate()
+            .min_by_key(|&(i, t)| (t, i))
+            .expect("at least one server");
+        let start = earliest.max(arrival);
+        let done = start + service;
+        self.free_at[idx] = done;
+        self.busy += service;
+        self.served += 1;
+        done
+    }
+
+    /// Total service time delivered (for utilisation accounting).
+    pub fn busy_time(&self) -> Duration {
+        self.busy
+    }
+
+    /// Number of requests served.
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    /// Earliest instant any server is free.
+    pub fn next_free(&self) -> VirtualTime {
+        self.free_at.iter().copied().min().unwrap_or(VirtualTime::ZERO)
+    }
+
+    /// Forget all queued state (new simulation phase).
+    pub fn reset(&mut self) {
+        for t in &mut self.free_at {
+            *t = VirtualTime::ZERO;
+        }
+        self.busy = Duration::ZERO;
+        self.served = 0;
+    }
+
+    pub fn servers(&self) -> usize {
+        self.free_at.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(ms: u64) -> VirtualTime {
+        VirtualTime::ZERO + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn single_server_serialises() {
+        let mut r = FifoResource::new(1);
+        // three requests arriving together, 10ms each: finish 10/20/30
+        assert_eq!(r.submit(t(0), Duration::from_millis(10)), t(10));
+        assert_eq!(r.submit(t(0), Duration::from_millis(10)), t(20));
+        assert_eq!(r.submit(t(0), Duration::from_millis(10)), t(30));
+    }
+
+    #[test]
+    fn idle_server_starts_at_arrival() {
+        let mut r = FifoResource::new(1);
+        assert_eq!(r.submit(t(100), Duration::from_millis(5)), t(105));
+    }
+
+    #[test]
+    fn two_servers_halve_the_queue() {
+        let mut r = FifoResource::new(2);
+        let done: Vec<_> = (0..4)
+            .map(|_| r.submit(t(0), Duration::from_millis(10)))
+            .collect();
+        assert_eq!(done, vec![t(10), t(10), t(20), t(20)]);
+    }
+
+    #[test]
+    fn late_arrival_does_not_wait_for_queue_drain() {
+        let mut r = FifoResource::new(1);
+        r.submit(t(0), Duration::from_millis(10));
+        // arrives after the backlog cleared: starts immediately
+        assert_eq!(r.submit(t(50), Duration::from_millis(1)), t(51));
+    }
+
+    #[test]
+    fn accounting() {
+        let mut r = FifoResource::new(3);
+        for _ in 0..6 {
+            r.submit(t(0), Duration::from_millis(2));
+        }
+        assert_eq!(r.served(), 6);
+        assert_eq!(r.busy_time(), Duration::from_millis(12));
+        assert_eq!(r.servers(), 3);
+        r.reset();
+        assert_eq!(r.served(), 0);
+        assert_eq!(r.next_free(), VirtualTime::ZERO);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_servers_rejected() {
+        FifoResource::new(0);
+    }
+}

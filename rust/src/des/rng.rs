@@ -1,0 +1,112 @@
+//! Deterministic simulation randomness.
+//!
+//! Every stochastic element of the simulation (run-to-run jitter that
+//! produces the paper's error bars, filesystem service-time noise) draws
+//! from a `SimRng` seeded from the experiment seed + a stream label, so
+//! results are reproducible and independent streams don't alias.
+
+use crate::util::rng::Xoshiro256;
+
+/// Deterministic RNG stream for one simulation component.
+#[derive(Debug, Clone)]
+pub struct SimRng {
+    rng: Xoshiro256,
+    /// Spare Box–Muller normal (the transform yields two per draw;
+    /// caching the sine branch halves the ln/sqrt cost in FS-noise-heavy
+    /// simulations — EXPERIMENTS.md §Perf).
+    spare_normal: Option<f64>,
+}
+
+impl SimRng {
+    /// Derive a stream from an experiment seed and a component label.
+    pub fn new(seed: u64, stream: &str) -> Self {
+        // fold the label into the seed with FNV-1a so streams differ
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in stream.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        SimRng {
+            rng: Xoshiro256::seed_from_u64(seed ^ h),
+            spare_normal: None,
+        }
+    }
+
+    /// Multiplicative jitter factor in `[1-eps, 1+eps]` (uniform).
+    pub fn jitter(&mut self, eps: f64) -> f64 {
+        1.0 + self.rng.range_f64(-eps, eps)
+    }
+
+    /// Heavy-tail factor >= 1 used for FS contention spikes:
+    /// `1 + |N(0,1)| * sigma` via Box–Muller (both branches used).
+    pub fn spike(&mut self, sigma: f64) -> f64 {
+        let n = match self.spare_normal.take() {
+            Some(n) => n,
+            None => {
+                let u: f64 = self.rng.next_f64().max(1e-12);
+                let v: f64 = self.rng.next_f64();
+                let r = (-2.0 * u.ln()).sqrt();
+                let (sin, cos) = (2.0 * std::f64::consts::PI * v).sin_cos();
+                self.spare_normal = Some(r * sin);
+                r * cos
+            }
+        };
+        1.0 + n.abs() * sigma
+    }
+
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn index(&mut self, n: usize) -> usize {
+        self.rng.below(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed_and_stream() {
+        let mut a = SimRng::new(42, "fs");
+        let mut b = SimRng::new(42, "fs");
+        for _ in 0..10 {
+            assert_eq!(a.jitter(0.05).to_bits(), b.jitter(0.05).to_bits());
+        }
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut a = SimRng::new(42, "fs");
+        let mut b = SimRng::new(42, "net");
+        let va: Vec<u64> = (0..8).map(|_| a.jitter(0.5).to_bits()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.jitter(0.5).to_bits()).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn jitter_bounds() {
+        let mut r = SimRng::new(7, "x");
+        for _ in 0..1000 {
+            let j = r.jitter(0.02);
+            assert!((0.98..=1.02).contains(&j), "jitter {j} out of bounds");
+        }
+    }
+
+    #[test]
+    fn spike_is_at_least_one() {
+        let mut r = SimRng::new(9, "spike");
+        for _ in 0..1000 {
+            assert!(r.spike(0.3) >= 1.0);
+        }
+    }
+
+    #[test]
+    fn index_in_range() {
+        let mut r = SimRng::new(1, "idx");
+        for _ in 0..100 {
+            assert!(r.index(5) < 5);
+        }
+    }
+}

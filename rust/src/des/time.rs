@@ -1,0 +1,189 @@
+//! Virtual-clock arithmetic.
+//!
+//! `VirtualTime` is an instant (nanoseconds since simulation start);
+//! `Duration` is a span. Both are thin `u64` newtypes so they are `Copy`,
+//! `Ord`, and hashable, and so accidental mixing of instants and spans is
+//! a type error rather than a bug.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Mul, Sub};
+
+/// A span of virtual time, in nanoseconds.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Duration(pub u64);
+
+impl Duration {
+    pub const ZERO: Duration = Duration(0);
+
+    pub fn from_nanos(ns: u64) -> Self {
+        Duration(ns)
+    }
+    pub fn from_micros(us: u64) -> Self {
+        Duration(us * 1_000)
+    }
+    pub fn from_millis(ms: u64) -> Self {
+        Duration(ms * 1_000_000)
+    }
+    /// From (possibly fractional) seconds; saturates at 0 for negatives.
+    pub fn from_secs_f64(s: f64) -> Self {
+        Duration((s.max(0.0) * 1e9).round() as u64)
+    }
+    pub fn as_nanos(self) -> u64 {
+        self.0
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+    /// Scale by a dimensionless factor (platform overheads, noise).
+    pub fn scale(self, factor: f64) -> Self {
+        Duration::from_secs_f64(self.as_secs_f64() * factor)
+    }
+    pub fn max(self, other: Self) -> Self {
+        Duration(self.0.max(other.0))
+    }
+}
+
+impl Add for Duration {
+    type Output = Duration;
+    fn add(self, rhs: Duration) -> Duration {
+        Duration(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for Duration {
+    fn add_assign(&mut self, rhs: Duration) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Mul<u64> for Duration {
+    type Output = Duration;
+    fn mul(self, rhs: u64) -> Duration {
+        Duration(self.0 * rhs)
+    }
+}
+
+impl Sum for Duration {
+    fn sum<I: Iterator<Item = Duration>>(iter: I) -> Duration {
+        iter.fold(Duration::ZERO, |a, b| a + b)
+    }
+}
+
+impl fmt::Debug for Duration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.6}s", self.as_secs_f64())
+    }
+}
+
+impl fmt::Display for Duration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.as_secs_f64();
+        if s >= 1.0 {
+            write!(f, "{s:.3}s")
+        } else if s >= 1e-3 {
+            write!(f, "{:.3}ms", s * 1e3)
+        } else {
+            write!(f, "{:.1}us", s * 1e6)
+        }
+    }
+}
+
+/// An instant in virtual time (nanoseconds since simulation start).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct VirtualTime(pub u64);
+
+impl VirtualTime {
+    pub const ZERO: VirtualTime = VirtualTime(0);
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+    pub fn max(self, other: Self) -> Self {
+        VirtualTime(self.0.max(other.0))
+    }
+    /// Span from an earlier instant (panics if `earlier` is later).
+    pub fn since(self, earlier: VirtualTime) -> Duration {
+        Duration(self.0 - earlier.0)
+    }
+}
+
+impl Add<Duration> for VirtualTime {
+    type Output = VirtualTime;
+    fn add(self, rhs: Duration) -> VirtualTime {
+        VirtualTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign<Duration> for VirtualTime {
+    fn add_assign(&mut self, rhs: Duration) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for VirtualTime {
+    type Output = Duration;
+    fn sub(self, rhs: VirtualTime) -> Duration {
+        Duration(self.0 - rhs.0)
+    }
+}
+
+impl fmt::Debug for VirtualTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "t={:.6}s", self.as_secs_f64())
+    }
+}
+
+impl fmt::Display for VirtualTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "t={:.6}s", self.as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_arithmetic() {
+        let a = Duration::from_millis(2);
+        let b = Duration::from_micros(500);
+        assert_eq!((a + b).as_nanos(), 2_500_000);
+        assert_eq!((a * 3).as_nanos(), 6_000_000);
+        assert_eq!(Duration::from_secs_f64(1.5).as_nanos(), 1_500_000_000);
+    }
+
+    #[test]
+    fn negative_seconds_saturate() {
+        assert_eq!(Duration::from_secs_f64(-3.0), Duration::ZERO);
+    }
+
+    #[test]
+    fn scaling() {
+        let d = Duration::from_millis(100);
+        assert_eq!(d.scale(1.15).as_nanos(), 115_000_000);
+        assert_eq!(d.scale(0.0), Duration::ZERO);
+    }
+
+    #[test]
+    fn instant_span_relationship() {
+        let t0 = VirtualTime::ZERO;
+        let t1 = t0 + Duration::from_millis(5);
+        assert_eq!(t1 - t0, Duration::from_millis(5));
+        assert_eq!(t1.since(t0), Duration::from_millis(5));
+        assert!(t1 > t0);
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(format!("{}", Duration::from_secs_f64(2.5)), "2.500s");
+        assert_eq!(format!("{}", Duration::from_millis(12)), "12.000ms");
+        assert_eq!(format!("{}", Duration::from_micros(7)), "7.0us");
+    }
+
+    #[test]
+    fn sum_of_durations() {
+        let total: Duration = (1..=4).map(Duration::from_millis).sum();
+        assert_eq!(total, Duration::from_millis(10));
+    }
+}

@@ -1,0 +1,486 @@
+//! Conjugate-gradient drivers.
+//!
+//! [`distributed_cg`] is the solver inside the paper's Fig 3/4 test
+//! program (and the elasticity/Poisson tests of Fig 2 when run on one
+//! rank): per-iteration it exchanges halos, applies the stencil operator
+//! through the AOT `cg_apdot` artifact, and reduces scalars through the
+//! simulated MPI — the same control flow whether compute is `Real`
+//! (actual PJRT numerics) or `Modeled` (calibrated costs only).
+//!
+//! [`precond_cg_single`] is the Fig 2 "Poisson AMG" stand-in: CG
+//! preconditioned with one geometric-multigrid V-cycle per iteration
+//! (AMG → GMG substitution, DESIGN.md §2), single rank.
+
+use anyhow::{bail, Result};
+
+use crate::mpi::Comm;
+use crate::runtime::TensorBuf;
+
+use super::exec::{ComputeScale, Exec};
+use super::grid::{exchange_halos, Decomp, LocalField};
+
+/// Solver configuration.
+#[derive(Debug, Clone)]
+pub struct CgConfig {
+    /// Relative-residual tolerance (‖r‖ / ‖b‖).
+    pub tol: f64,
+    pub max_iters: usize,
+    /// Iteration count to simulate in `Modeled` mode (no residual is
+    /// available without data; use [`estimate_cg_iters`]).
+    pub modeled_iters: usize,
+    /// Solve the vector Lamé system instead of scalar Poisson
+    /// (requires `n_local == 16`, the exported elasticity shape).
+    pub elasticity: bool,
+}
+
+impl Default for CgConfig {
+    fn default() -> Self {
+        CgConfig {
+            tol: 1e-5,
+            max_iters: 2000,
+            modeled_iters: 64,
+            elasticity: false,
+        }
+    }
+}
+
+/// Solver result.
+#[derive(Debug, Clone)]
+pub struct CgOutcome {
+    pub iters: usize,
+    /// Final relative residual (`None` in modeled mode).
+    pub rel_residual: Option<f64>,
+    /// Per-rank interior solutions (real mode only).
+    pub solution: Option<Vec<Vec<f32>>>,
+}
+
+/// Practical CG iteration estimate for the scaled 7-point Poisson
+/// operator at global resolution `n_global`, to relative tolerance
+/// `tol`: CG needs O(√κ) = O(n) iterations with a tol-dependent log
+/// factor.  The constant 1.4 is fitted against *real* distributed
+/// solves (44 iterations at n = 32, tol = 1e-5; see the integration
+/// test `cg_iteration_estimate_matches_real_runs`).
+pub fn estimate_cg_iters(n_global: usize, tol: f64) -> usize {
+    let tol_factor = (2.0 / tol).ln() / (2.0f64 / 1e-5).ln();
+    (1.4 * n_global as f64 * tol_factor).ceil().max(4.0) as usize
+}
+
+/// Distributed CG for `A x = b` on `decomp`'s grid.
+///
+/// `rhs`: per-rank interior right-hand sides (real mode; pass `&[]` in
+/// modeled mode). Scalar problems use length-`n³` interiors; elasticity
+/// uses `3·n³` (component-major).
+pub fn distributed_cg(
+    exec: &mut Exec,
+    comm: &mut Comm,
+    scale: &mut ComputeScale,
+    decomp: &Decomp,
+    rhs: &[Vec<f32>],
+    cfg: &CgConfig,
+) -> Result<CgOutcome> {
+    let ranks = decomp.ranks();
+    let n = decomp.n_local;
+    let ncomp = if cfg.elasticity { 3 } else { 1 };
+    let local_len = ncomp * n * n * n;
+    let (apdot_entry, update_entry, pupdate_entry) = entries(n, cfg.elasticity)?;
+
+    if comm.size() != ranks {
+        bail!("communicator has {} ranks, decomposition {}", comm.size(), ranks);
+    }
+
+    if exec.is_real() {
+        if rhs.len() != ranks {
+            bail!("real mode needs one RHS per rank ({} given, {ranks} ranks)", rhs.len());
+        }
+        for (r, b) in rhs.iter().enumerate() {
+            if b.len() != local_len {
+                bail!("rank {r}: RHS length {} != {local_len}", b.len());
+            }
+        }
+    }
+
+    // ---- modeled mode: charge the phase structure, no data -------------
+    if let Exec::Modeled { table } = exec {
+        // PERF: hoist the per-entry calibration lookups and the halo
+        // message list out of the iteration loop (they are loop-invariant;
+        // doing them per call made the BTreeMap the hot path of large
+        // simulations — see EXPERIMENTS.md §Perf).
+        let apdot_cost = table.cost(apdot_entry);
+        let update_cost = table.cost(update_entry);
+        let pupdate_cost = table.cost(pupdate_entry);
+        let msgs = decomp.halo_messages(decomp.face_bytes() * ncomp as u64);
+        for _ in 0..cfg.modeled_iters {
+            comm.exchange(&msgs);
+            for r in 0..ranks {
+                exec.charge(comm, scale, r, apdot_cost);
+            }
+            comm.allreduce(8);
+            for r in 0..ranks {
+                exec.charge(comm, scale, r, update_cost);
+            }
+            comm.allreduce(8);
+            for r in 0..ranks {
+                exec.charge(comm, scale, r, pupdate_cost);
+            }
+        }
+        return Ok(CgOutcome {
+            iters: cfg.modeled_iters,
+            rel_residual: None,
+            solution: None,
+        });
+    }
+
+    // ---- real mode: actual numerics -------------------------------------
+    let mut x: Vec<Vec<f32>> = vec![vec![0.0; local_len]; ranks];
+    let mut r: Vec<Vec<f32>> = rhs.to_vec();
+    let mut p: Vec<Vec<f32>> = rhs.to_vec();
+
+    let rr0: f64 = r.iter().flat_map(|v| v.iter()).map(|&v| (v as f64) * v as f64).sum();
+    let norm_b = rr0.sqrt().max(1e-30);
+    let mut rr = rr0;
+    let mut iters = 0;
+
+    for _ in 0..cfg.max_iters {
+        // halo exchange on p (per component)
+        let mut p_fields = fields_from_flat(decomp, &p, n, ncomp);
+        for comp_fields in p_fields.iter_mut() {
+            exchange_halos(decomp, comp_fields, comm);
+        }
+
+        // Ap and local <p, Ap>
+        let mut ap: Vec<Vec<f32>> = Vec::with_capacity(ranks);
+        let mut pap = 0.0f64;
+        for rank in 0..ranks {
+            let input = padded_input(&p_fields, rank, n, ncomp);
+            let out = exec
+                .call(comm, scale, rank, apdot_entry, &[input])?
+                .expect("real mode returns data");
+            pap += out[1].data[0] as f64;
+            ap.push(out[0].data.clone());
+        }
+        comm.allreduce(8);
+
+        if pap.abs() < 1e-30 {
+            bail!("CG breakdown: <p, Ap> ~ 0 at iteration {iters}");
+        }
+        let alpha = (rr / pap) as f32;
+
+        // fused update x, r, local rr
+        let mut rr_new = 0.0f64;
+        for rank in 0..ranks {
+            let out = exec
+                .call(
+                    comm,
+                    scale,
+                    rank,
+                    update_entry,
+                    &[
+                        TensorBuf::scalar1(alpha),
+                        TensorBuf::new(vec![local_len], x[rank].clone()),
+                        TensorBuf::new(vec![local_len], r[rank].clone()),
+                        TensorBuf::new(vec![local_len], p[rank].clone()),
+                        TensorBuf::new(vec![local_len], ap[rank].clone()),
+                    ],
+                )?
+                .expect("real mode returns data");
+            x[rank] = out[0].data.clone();
+            r[rank] = out[1].data.clone();
+            rr_new += out[2].data[0] as f64;
+        }
+        comm.allreduce(8);
+        iters += 1;
+
+        if rr_new.sqrt() <= cfg.tol * norm_b {
+            rr = rr_new;
+            break;
+        }
+
+        let beta = (rr_new / rr) as f32;
+        for rank in 0..ranks {
+            let out = exec
+                .call(
+                    comm,
+                    scale,
+                    rank,
+                    pupdate_entry,
+                    &[
+                        TensorBuf::scalar1(beta),
+                        TensorBuf::new(vec![local_len], r[rank].clone()),
+                        TensorBuf::new(vec![local_len], p[rank].clone()),
+                    ],
+                )?
+                .expect("real mode returns data");
+            p[rank] = out[0].data.clone();
+        }
+        rr = rr_new;
+    }
+
+    Ok(CgOutcome {
+        iters,
+        rel_residual: Some(rr.sqrt() / norm_b),
+        solution: Some(x),
+    })
+}
+
+fn entries(n: usize, elasticity: bool) -> Result<(&'static str, &'static str, &'static str)> {
+    Ok(if elasticity {
+        if n != 16 {
+            bail!("elasticity artifacts are exported at n_local = 16 (got {n})");
+        }
+        ("cg_apdot_el3d_n16", "cg_update_L12288", "cg_pupdate_L12288")
+    } else {
+        match n {
+            16 => ("cg_apdot_p3d_n16", "cg_update_L4096", "cg_pupdate_L4096"),
+            32 => ("cg_apdot_p3d_n32", "cg_update_L32768", "cg_pupdate_L32768"),
+            _ => bail!("Poisson artifacts are exported at n_local ∈ {{16, 32}} (got {n})"),
+        }
+    })
+}
+
+/// Per-component halo-padded fields from flat per-rank vectors.
+fn fields_from_flat(
+    decomp: &Decomp,
+    flat: &[Vec<f32>],
+    n: usize,
+    ncomp: usize,
+) -> Vec<Vec<LocalField>> {
+    let block = n * n * n;
+    (0..ncomp)
+        .map(|c| {
+            (0..decomp.ranks())
+                .map(|r| LocalField::from_interior(n, &flat[r][c * block..(c + 1) * block]))
+                .collect()
+        })
+        .collect()
+}
+
+/// Assemble the (possibly multi-component) padded input tensor.
+fn padded_input(fields: &[Vec<LocalField>], rank: usize, n: usize, ncomp: usize) -> TensorBuf {
+    let np = n + 2;
+    if ncomp == 1 {
+        TensorBuf::new(vec![np, np, np], fields[0][rank].data.clone())
+    } else {
+        let mut data = Vec::with_capacity(ncomp * np * np * np);
+        for comp_fields in fields {
+            data.extend_from_slice(&comp_fields[rank].data);
+        }
+        TensorBuf::new(vec![ncomp, np, np, np], data)
+    }
+}
+
+/// Single-rank CG preconditioned by one GMG V-cycle per iteration
+/// (the Fig 2 "Poisson AMG" test; n = 32 fixed by the exported shapes).
+pub fn precond_cg_single(
+    exec: &mut Exec,
+    comm: &mut Comm,
+    scale: &mut ComputeScale,
+    rhs: &[f32],
+    tol: f64,
+    max_iters: usize,
+    modeled_iters: usize,
+) -> Result<CgOutcome> {
+    const N: usize = 32;
+    const L: usize = N * N * N;
+    let decomp = Decomp::new(1, N);
+
+    if !exec.is_real() {
+        for _ in 0..modeled_iters {
+            exec.call(comm, scale, 0, "cg_apdot_p3d_n32", &[])?;
+            exec.call(comm, scale, 0, "cg_update_L32768", &[])?;
+            exec.call(comm, scale, 0, "precond_vcycle_n32", &[])?;
+            exec.call(comm, scale, 0, "dot_L32768", &[])?;
+            exec.call(comm, scale, 0, "cg_pupdate_L32768", &[])?;
+        }
+        return Ok(CgOutcome {
+            iters: modeled_iters,
+            rel_residual: None,
+            solution: None,
+        });
+    }
+
+    if rhs.len() != L {
+        bail!("rhs must be {L} long (32³)");
+    }
+
+    let pad = |v: &[f32]| {
+        let f = LocalField::from_interior(N, v);
+        TensorBuf::new(vec![N + 2, N + 2, N + 2], f.data)
+    };
+    let flat = |v: Vec<f32>| TensorBuf::new(vec![L], v);
+
+    let mut x = vec![0.0f32; L];
+    let mut r = rhs.to_vec();
+    let norm_b = r.iter().map(|&v| (v as f64) * v as f64).sum::<f64>().sqrt().max(1e-30);
+
+    // z = M r ; p = z ; rz = <r, z>
+    let z0 = exec
+        .call(comm, scale, 0, "precond_vcycle_n32", &[flat(r.clone())])?
+        .unwrap()[0]
+        .data
+        .clone();
+    let mut p = z0.clone();
+    let mut rz = exec
+        .call(comm, scale, 0, "dot_L32768", &[flat(r.clone()), flat(z0)])?
+        .unwrap()[0]
+        .data[0] as f64;
+    let mut iters = 0;
+    let mut rel = 1.0;
+
+    for _ in 0..max_iters {
+        let _ = &decomp; // single rank: halo pad is all-zero Dirichlet
+        let out = exec.call(comm, scale, 0, "cg_apdot_p3d_n32", &[pad(&p)])?.unwrap();
+        let ap = out[0].data.clone();
+        let pap = out[1].data[0] as f64;
+        if pap.abs() < 1e-30 {
+            bail!("PCG breakdown at iteration {iters}");
+        }
+        let alpha = (rz / pap) as f32;
+        let out = exec
+            .call(
+                comm,
+                scale,
+                0,
+                "cg_update_L32768",
+                &[
+                    TensorBuf::scalar1(alpha),
+                    flat(x.clone()),
+                    flat(r.clone()),
+                    flat(p.clone()),
+                    flat(ap),
+                ],
+            )?
+            .unwrap();
+        x = out[0].data.clone();
+        r = out[1].data.clone();
+        let rr_new = out[2].data[0] as f64;
+        iters += 1;
+        rel = rr_new.sqrt() / norm_b;
+        if rel <= tol {
+            break;
+        }
+        let z = exec
+            .call(comm, scale, 0, "precond_vcycle_n32", &[flat(r.clone())])?
+            .unwrap()[0]
+            .data
+            .clone();
+        let rz_new = exec
+            .call(comm, scale, 0, "dot_L32768", &[flat(r.clone()), flat(z.clone())])?
+            .unwrap()[0]
+            .data[0] as f64;
+        let beta = (rz_new / rz) as f32;
+        let out = exec
+            .call(
+                comm,
+                scale,
+                0,
+                "cg_pupdate_L32768",
+                &[TensorBuf::scalar1(beta), flat(z), flat(p.clone())],
+            )?
+            .unwrap();
+        p = out[0].data.clone();
+        rz = rz_new;
+    }
+
+    Ok(CgOutcome {
+        iters,
+        rel_residual: Some(rel),
+        solution: Some(vec![x]),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{launch, MachineSpec};
+    use crate::net::{Fabric, FabricKind};
+    use crate::runtime::CalibrationTable;
+
+    #[test]
+    fn iteration_estimate_scales_linearly_in_n() {
+        let a = estimate_cg_iters(32, 1e-5);
+        let b = estimate_cg_iters(64, 1e-5);
+        assert!(b > a && b < 3 * a, "{a} vs {b}");
+        assert!(estimate_cg_iters(32, 1e-8) > estimate_cg_iters(32, 1e-3));
+        assert!(estimate_cg_iters(1, 1e-5) >= 4);
+    }
+
+    #[test]
+    fn modeled_cg_charges_phases() {
+        let table = CalibrationTable::builtin_fallback();
+        let decomp = Decomp::new(8, 16);
+        let m = MachineSpec::edison();
+        let mut comm = Comm::new(launch(&m, 8).unwrap(), Fabric::by_kind(FabricKind::Aries));
+        let mut scale = ComputeScale::none();
+        let cfg = CgConfig {
+            modeled_iters: 10,
+            ..CgConfig::default()
+        };
+        let out = distributed_cg(
+            &mut Exec::Modeled { table: &table },
+            &mut comm,
+            &mut scale,
+            &decomp,
+            &[],
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(out.iters, 10);
+        assert!(out.solution.is_none());
+        assert_eq!(comm.stats().allreduces, 20);
+        // 10 iters x halo messages
+        assert!(comm.stats().p2p_messages > 0);
+        assert!(comm.max_clock().as_secs_f64() > 0.0);
+    }
+
+    #[test]
+    fn modeled_cg_tcp_slower_than_aries() {
+        let table = CalibrationTable::builtin_fallback();
+        let decomp = Decomp::new(48, 32);
+        let m = MachineSpec::edison();
+        let cfg = CgConfig {
+            modeled_iters: 20,
+            ..CgConfig::default()
+        };
+        let run = |kind| {
+            let mut comm = Comm::new(launch(&m, 48).unwrap(), Fabric::by_kind(kind));
+            distributed_cg(
+                &mut Exec::Modeled { table: &table },
+                &mut comm,
+                &mut ComputeScale::none(),
+                &decomp,
+                &[],
+                &cfg,
+            )
+            .unwrap();
+            comm.max_clock().as_secs_f64()
+        };
+        let aries = run(FabricKind::Aries);
+        let tcp = run(FabricKind::TcpEthernet);
+        assert!(tcp > 3.0 * aries, "aries {aries}, tcp {tcp}");
+    }
+
+    #[test]
+    fn wrong_rank_count_is_rejected() {
+        let table = CalibrationTable::builtin_fallback();
+        let decomp = Decomp::new(8, 16);
+        let m = MachineSpec::edison();
+        let mut comm = Comm::new(launch(&m, 4).unwrap(), Fabric::by_kind(FabricKind::Aries));
+        let err = distributed_cg(
+            &mut Exec::Modeled { table: &table },
+            &mut comm,
+            &mut ComputeScale::none(),
+            &decomp,
+            &[],
+            &CgConfig::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("ranks"));
+    }
+
+    #[test]
+    fn unsupported_block_size_is_rejected() {
+        assert!(entries(24, false).is_err());
+        assert!(entries(32, true).is_err());
+        assert!(entries(16, true).is_ok());
+    }
+}

@@ -1,0 +1,192 @@
+//! Execution modes for per-rank compute segments.
+//!
+//! `Real` actually executes the AOT artifact through PJRT, measures the
+//! wall time, and charges it (scaled by the platform's compute factor
+//! and the machine's run-to-run jitter) to the rank's virtual clock.
+//! `Modeled` charges the calibrated per-call cost instead and returns no
+//! data — the mode used for 24–192-rank simulations, where executing
+//! every rank's kernels for real would make the simulator itself the
+//! bottleneck without changing the figure shapes (DESIGN.md §3).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::des::{Duration, SimRng};
+use crate::mpi::Comm;
+use crate::runtime::{CalibrationTable, Engine, TensorBuf};
+
+/// How compute segments execute.
+pub enum Exec<'a> {
+    /// Run PJRT for real; charge measured time.
+    Real { engine: &'a mut Engine },
+    /// Charge calibrated cost; no data produced.
+    Modeled { table: &'a CalibrationTable },
+}
+
+/// Per-run scaling applied to every compute segment.
+#[derive(Debug, Clone)]
+pub struct ComputeScale {
+    /// Platform compute factor (VM ≈ 1.15, others 1.0).
+    pub factor: f64,
+    /// Architecture penalty for generic binaries on tuned kernels
+    /// (Fig 5a; 1.0 unless the workload opts in).
+    pub arch_factor: f64,
+    /// Run-to-run jitter source (error bars).
+    pub rng: SimRng,
+    /// Jitter amplitude (from the machine spec).
+    pub jitter_eps: f64,
+}
+
+impl ComputeScale {
+    pub fn new(factor: f64, arch_factor: f64, seed: u64, jitter_eps: f64) -> Self {
+        ComputeScale {
+            factor,
+            arch_factor,
+            rng: SimRng::new(seed, "compute-scale"),
+            jitter_eps,
+        }
+    }
+
+    /// Identity scaling (tests).
+    pub fn none() -> Self {
+        Self::new(1.0, 1.0, 0, 0.0)
+    }
+
+    /// Public alias of `apply` for modeled fast paths that charge
+    /// precomputed costs without the `Exec::call` indirection.
+    pub fn apply_pub(&mut self, d: Duration) -> Duration {
+        self.apply(d)
+    }
+
+    fn apply(&mut self, d: Duration) -> Duration {
+        let j = if self.jitter_eps > 0.0 {
+            self.rng.jitter(self.jitter_eps)
+        } else {
+            1.0
+        };
+        d.scale(self.factor * self.arch_factor * j)
+    }
+}
+
+impl<'a> Exec<'a> {
+    /// Execute `entry` as rank `rank`'s work: advance its clock, return
+    /// outputs in `Real` mode (`None` in `Modeled`).
+    pub fn call(
+        &mut self,
+        comm: &mut Comm,
+        scale: &mut ComputeScale,
+        rank: usize,
+        entry: &str,
+        inputs: &[TensorBuf],
+    ) -> Result<Option<Vec<TensorBuf>>> {
+        match self {
+            Exec::Real { engine } => {
+                let t0 = Instant::now();
+                let out = engine.execute(entry, inputs)?;
+                let wall = Duration::from_secs_f64(t0.elapsed().as_secs_f64());
+                comm.advance(rank, scale.apply(wall));
+                Ok(Some(out))
+            }
+            Exec::Modeled { table } => {
+                let cost = table.cost(entry);
+                comm.advance(rank, scale.apply(cost));
+                Ok(None)
+            }
+        }
+    }
+
+    /// Charge rank-local non-kernel work (mesh bookkeeping, etc.).
+    pub fn charge(&mut self, comm: &mut Comm, scale: &mut ComputeScale, rank: usize, d: Duration) {
+        comm.advance(rank, scale.apply(d));
+    }
+
+    pub fn is_real(&self) -> bool {
+        matches!(self, Exec::Real { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{launch, MachineSpec};
+    use crate::net::{Fabric, FabricKind};
+
+    fn comm(ranks: usize) -> Comm {
+        Comm::new(
+            launch(&MachineSpec::workstation(), ranks).unwrap(),
+            Fabric::by_kind(FabricKind::SharedMem),
+        )
+    }
+
+    #[test]
+    fn modeled_charges_table_cost() {
+        let table = CalibrationTable::builtin_fallback();
+        let mut exec = Exec::Modeled { table: &table };
+        let mut scale = ComputeScale::none();
+        let mut c = comm(2);
+        exec.call(&mut c, &mut scale, 0, "dot_L4096", &[]).unwrap();
+        assert_eq!(c.clock(0), crate::des::VirtualTime::ZERO + table.cost("dot_L4096"));
+        assert_eq!(c.clock(1), crate::des::VirtualTime::ZERO);
+    }
+
+    #[test]
+    fn scale_factor_multiplies() {
+        let table = CalibrationTable::builtin_fallback();
+        let mut exec = Exec::Modeled { table: &table };
+        let mut scale = ComputeScale::new(1.15, 1.0, 0, 0.0);
+        let mut c = comm(1);
+        exec.call(&mut c, &mut scale, 0, "dot_L4096", &[]).unwrap();
+        let want = table.cost("dot_L4096").scale(1.15);
+        assert_eq!(c.clock(0).since(crate::des::VirtualTime::ZERO), want);
+    }
+
+    #[test]
+    fn arch_factor_applies() {
+        let table = CalibrationTable::builtin_fallback();
+        let mut a = comm(1);
+        let mut b = comm(1);
+        Exec::Modeled { table: &table }
+            .call(&mut a, &mut ComputeScale::new(1.0, 1.03, 0, 0.0), 0, "smooth3d_n32", &[])
+            .unwrap();
+        Exec::Modeled { table: &table }
+            .call(&mut b, &mut ComputeScale::none(), 0, "smooth3d_n32", &[])
+            .unwrap();
+        assert!(a.clock(0) > b.clock(0));
+    }
+
+    #[test]
+    fn jitter_varies_but_brackets() {
+        let table = CalibrationTable::builtin_fallback();
+        let base = table.cost("smooth3d_n32").as_secs_f64();
+        let mut scale = ComputeScale::new(1.0, 1.0, 7, 0.05);
+        let mut c = comm(1);
+        let mut exec = Exec::Modeled { table: &table };
+        for _ in 0..50 {
+            exec.call(&mut c, &mut scale, 0, "smooth3d_n32", &[]).unwrap();
+        }
+        let total = c.clock(0).as_secs_f64();
+        assert!((total - 50.0 * base).abs() < 50.0 * base * 0.05);
+        assert!(total != 50.0 * base, "jitter should not be exactly zero");
+    }
+
+    #[test]
+    fn real_mode_produces_data_and_time() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut engine = Engine::open_default().unwrap();
+        let mut exec = Exec::Real { engine: &mut engine };
+        let mut scale = ComputeScale::none();
+        let mut c = comm(1);
+        let a = TensorBuf::new(vec![4096], vec![1.0; 4096]);
+        let out = exec
+            .call(&mut c, &mut scale, 0, "dot_L4096", &[a.clone(), a])
+            .unwrap()
+            .unwrap();
+        assert!((out[0].data[0] - 4096.0).abs() < 1.0);
+        assert!(c.clock(0).as_secs_f64() > 0.0);
+        assert!(exec.is_real());
+    }
+}

@@ -1,0 +1,420 @@
+//! Distributed geometric-multigrid V-cycles (the HPGMG-FE engine).
+//!
+//! Each rank owns one block per level of the ladder 32³ → 16³ → 8³ → 4³
+//! (the shapes the smoother/residual/transfer artifacts were exported
+//! at).  A V-cycle smooths with halo exchange at every level, restricts
+//! the residual, recurses, and applies the coarse correction; the
+//! coarsest level is solved by heavy Jacobi smoothing *with halo
+//! exchange between sweeps* — a genuinely global coarse solve (vs
+//! HPGMG's agglomeration; DESIGN.md §2 documents the substitution).
+//! Block-local coarse solves (zero halos) stall on smooth modes, which
+//! is why the exchange matters.
+
+use anyhow::{bail, Result};
+
+use crate::mpi::Comm;
+use crate::runtime::TensorBuf;
+
+use super::exec::{ComputeScale, Exec};
+use super::grid::{exchange_halos, Decomp, LocalField};
+
+/// The exported ladder (fine → coarse block edges).
+pub const LADDER: [usize; 4] = [32, 16, 8, 4];
+
+/// Sweeps of halo-exchanged Jacobi at the coarsest level (the global
+/// coarse "solve"). The coarsest global grid is small (ranks^(1/3) * 4
+/// per axis), where Jacobi's O(h^2) factor is benign.
+pub const COARSE_SWEEPS: usize = 48;
+
+/// Multigrid run configuration.
+#[derive(Debug, Clone)]
+pub struct GmgConfig {
+    /// Pre/post smoothing sweeps per level.
+    pub nu: usize,
+    /// V-cycles to run.
+    pub cycles: usize,
+    /// Index into [`LADDER`] of the fine level (0 = 32³ blocks; 1 = 16³;
+    /// 2 = 8³ — the Fig 5 problem-size axis).
+    pub fine_level: usize,
+}
+
+impl Default for GmgConfig {
+    fn default() -> Self {
+        GmgConfig { nu: 2, cycles: 4, fine_level: 0 }
+    }
+}
+
+/// Outcome of a multigrid run.
+#[derive(Debug, Clone)]
+pub struct GmgOutcome {
+    pub cycles: usize,
+    /// ‖r‖₂ after each cycle (real mode; empty in modeled mode).
+    pub residual_history: Vec<f64>,
+    /// Per-rank interior solutions at the fine level (real mode).
+    pub solution: Option<Vec<Vec<f32>>>,
+}
+
+/// State per level (real mode): u and f per rank.
+struct Level {
+    n: usize,
+    u: Vec<Vec<f32>>, // per-rank interiors
+    f: Vec<Vec<f32>>,
+}
+
+/// Run `cfg.cycles` V-cycles on `A u = f` (fine blocks are 32³).
+pub fn vcycles(
+    exec: &mut Exec,
+    comm: &mut Comm,
+    scale: &mut ComputeScale,
+    decomp: &Decomp,
+    rhs: &[Vec<f32>],
+    cfg: &GmgConfig,
+) -> Result<GmgOutcome> {
+    let fine = cfg.fine_level;
+    if fine >= LADDER.len() - 1 {
+        bail!("fine_level {} leaves no coarse levels", fine);
+    }
+    if decomp.n_local != LADDER[fine] {
+        bail!(
+            "fine blocks must be {}³ for fine_level {fine} (got {}³)",
+            LADDER[fine],
+            decomp.n_local
+        );
+    }
+    let ranks = decomp.ranks();
+
+    if !exec.is_real() {
+        for _ in 0..cfg.cycles {
+            modeled_vcycle(exec, comm, scale, decomp, fine, cfg.nu)?;
+            comm.allreduce(8); // residual-norm check per cycle
+        }
+        return Ok(GmgOutcome {
+            cycles: cfg.cycles,
+            residual_history: Vec::new(),
+            solution: None,
+        });
+    }
+
+    if rhs.len() != ranks {
+        bail!("real mode needs one RHS per rank");
+    }
+    let block = LADDER[fine].pow(3);
+    for (r, b) in rhs.iter().enumerate() {
+        if b.len() != block {
+            bail!("rank {r}: rhs length {} != {block}", b.len());
+        }
+    }
+
+    let mut state = Level {
+        n: LADDER[fine],
+        u: vec![vec![0.0; block]; ranks],
+        f: rhs.to_vec(),
+    };
+    let mut history = Vec::with_capacity(cfg.cycles);
+    for _ in 0..cfg.cycles {
+        real_vcycle(exec, comm, scale, decomp, &mut state, fine, cfg.nu)?;
+        history.push(residual_norm(exec, comm, scale, decomp, &state, fine)?);
+    }
+    Ok(GmgOutcome {
+        cycles: cfg.cycles,
+        residual_history: history,
+        solution: Some(state.u),
+    })
+}
+
+fn level_decomp(decomp: &Decomp, level: usize) -> Decomp {
+    let mut d = decomp.clone();
+    d.n_local = LADDER[level];
+    d
+}
+
+/// Timing-only V-cycle at `level`.
+///
+/// PERF: entry names are formatted and cost-looked-up once per level
+/// invocation (not per rank/sweep), and the halo message lists are
+/// built once — the modeled ladder is pure arithmetic after that.
+fn modeled_vcycle(
+    exec: &mut Exec,
+    comm: &mut Comm,
+    scale: &mut ComputeScale,
+    decomp: &Decomp,
+    level: usize,
+    nu: usize,
+) -> Result<()> {
+    let n = LADDER[level];
+    let d = level_decomp(decomp, level);
+    let ranks = decomp.ranks();
+    let Exec::Modeled { table } = exec else {
+        unreachable!("modeled_vcycle is only called in modeled mode");
+    };
+    let smooth_cost = table.cost(&format!("smooth3d_n{n}"));
+    let msgs = d.halo_messages((n * n * 4) as u64);
+
+    let smooth_phase =
+        |comm: &mut Comm, scale: &mut ComputeScale| {
+            comm.exchange(&msgs);
+            for r in 0..ranks {
+                comm.advance(r, scale_apply(scale, smooth_cost));
+            }
+        };
+
+    if level == LADDER.len() - 1 {
+        for _ in 0..COARSE_SWEEPS {
+            smooth_phase(comm, scale);
+        }
+        return Ok(());
+    }
+
+    for _ in 0..nu {
+        smooth_phase(comm, scale);
+    }
+    let resid_cost = table.cost(&format!("resid3d_n{n}"));
+    let restrict_cost = table.cost(&format!("restrict3d_n{n}"));
+    comm.exchange(&msgs);
+    for r in 0..ranks {
+        comm.advance(r, scale_apply(scale, resid_cost));
+    }
+    // residual halo exchange feeds the variational (P^T) restriction
+    comm.exchange(&msgs);
+    for r in 0..ranks {
+        comm.advance(r, scale_apply(scale, restrict_cost));
+    }
+    modeled_vcycle(exec, comm, scale, decomp, level + 1, nu)?;
+    // coarse-correction halo exchange feeds the trilinear prolongation
+    let nc = LADDER[level + 1];
+    let Exec::Modeled { table } = exec else { unreachable!() };
+    let prolong_cost = table.cost(&format!("prolong_add3d_n{nc}"));
+    let coarse_msgs = level_decomp(decomp, level + 1).halo_messages((nc * nc * 4) as u64);
+    comm.exchange(&coarse_msgs);
+    for r in 0..ranks {
+        comm.advance(r, scale_apply(scale, prolong_cost));
+    }
+    for _ in 0..nu {
+        smooth_phase(comm, scale);
+    }
+    Ok(())
+}
+
+/// Apply the platform/jitter scaling outside `Exec::call` (modeled fast
+/// path; mirrors `ComputeScale::apply`).
+fn scale_apply(scale: &mut ComputeScale, d: crate::des::Duration) -> crate::des::Duration {
+    scale.apply_pub(d)
+}
+
+/// Real-data V-cycle at `level` over `lev` state.
+fn real_vcycle(
+    exec: &mut Exec,
+    comm: &mut Comm,
+    scale: &mut ComputeScale,
+    decomp: &Decomp,
+    lev: &mut Level,
+    level: usize,
+    nu: usize,
+) -> Result<()> {
+    let n = lev.n;
+    let ranks = decomp.ranks();
+    let d = level_decomp(decomp, level);
+
+    if level == LADDER.len() - 1 {
+        // global coarse solve: heavy smoothing with halo exchange
+        for _ in 0..COARSE_SWEEPS {
+            smooth_once(exec, comm, scale, &d, lev)?;
+        }
+        return Ok(());
+    }
+    let _ = ranks;
+
+    for _ in 0..nu {
+        smooth_once(exec, comm, scale, &d, lev)?;
+    }
+
+    // residual, residual-halo exchange, then variational restriction
+    let u_fields = exchange(&d, &lev.u, comm);
+    let mut resid: Vec<Vec<f32>> = Vec::with_capacity(ranks);
+    for r in 0..ranks {
+        let u_pad = TensorBuf::new(vec![n + 2, n + 2, n + 2], u_fields[r].data.clone());
+        let f = TensorBuf::new(vec![n, n, n], lev.f[r].clone());
+        resid.push(
+            exec.call(comm, scale, r, &format!("resid3d_n{n}"), &[u_pad, f])?
+                .unwrap()[0]
+                .data
+                .clone(),
+        );
+    }
+    let r_fields = exchange(&d, &resid, comm);
+    let mut coarse_f: Vec<Vec<f32>> = Vec::with_capacity(ranks);
+    for r in 0..ranks {
+        let rc = exec
+            .call(
+                comm,
+                scale,
+                r,
+                &format!("restrict3d_n{n}"),
+                &[TensorBuf::new(
+                    vec![n + 2, n + 2, n + 2],
+                    r_fields[r].data.clone(),
+                )],
+            )?
+            .unwrap()[0]
+            .data
+            .clone();
+        coarse_f.push(rc);
+    }
+
+    let nc = LADDER[level + 1];
+    let mut coarse = Level {
+        n: nc,
+        u: vec![vec![0.0; nc * nc * nc]; ranks],
+        f: coarse_f,
+    };
+    real_vcycle(exec, comm, scale, decomp, &mut coarse, level + 1, nu)?;
+
+    // prolong + correct: exchange the coarse correction's halos first so
+    // interpolation at block interfaces uses neighbour values
+    let e_fields = exchange(&level_decomp(decomp, level + 1), &coarse.u, comm);
+    for r in 0..ranks {
+        let u_fine = TensorBuf::new(vec![n, n, n], lev.u[r].clone());
+        let e = TensorBuf::new(vec![nc + 2, nc + 2, nc + 2], e_fields[r].data.clone());
+        let out = exec
+            .call(comm, scale, r, &format!("prolong_add3d_n{nc}"), &[u_fine, e])?
+            .unwrap();
+        lev.u[r] = out[0].data.clone();
+    }
+
+    for _ in 0..nu {
+        smooth_once(exec, comm, scale, &d, lev)?;
+    }
+    Ok(())
+}
+
+fn exchange(d: &Decomp, interiors: &[Vec<f32>], comm: &mut Comm) -> Vec<LocalField> {
+    let mut fields: Vec<LocalField> = interiors
+        .iter()
+        .map(|u| LocalField::from_interior(d.n_local, u))
+        .collect();
+    exchange_halos(d, &mut fields, comm);
+    fields
+}
+
+fn smooth_once(
+    exec: &mut Exec,
+    comm: &mut Comm,
+    scale: &mut ComputeScale,
+    d: &Decomp,
+    lev: &mut Level,
+) -> Result<()> {
+    let n = lev.n;
+    let fields = exchange(d, &lev.u, comm);
+    for r in 0..d.ranks() {
+        let u_pad = TensorBuf::new(vec![n + 2, n + 2, n + 2], fields[r].data.clone());
+        let f = TensorBuf::new(vec![n, n, n], lev.f[r].clone());
+        let out = exec
+            .call(comm, scale, r, &format!("smooth3d_n{n}"), &[u_pad, f])?
+            .unwrap();
+        lev.u[r] = out[0].data.clone();
+    }
+    Ok(())
+}
+
+/// Global ‖f - A u‖₂ at the fine level (one allreduce).
+fn residual_norm(
+    exec: &mut Exec,
+    comm: &mut Comm,
+    scale: &mut ComputeScale,
+    decomp: &Decomp,
+    lev: &Level,
+    fine_level: usize,
+) -> Result<f64> {
+    let n = lev.n;
+    let d = level_decomp(decomp, fine_level);
+    let fields = exchange(&d, &lev.u, comm);
+    let mut total = 0.0f64;
+    for r in 0..decomp.ranks() {
+        let u_pad = TensorBuf::new(vec![n + 2, n + 2, n + 2], fields[r].data.clone());
+        let f = TensorBuf::new(vec![n, n, n], lev.f[r].clone());
+        let resid = exec
+            .call(comm, scale, r, &format!("resid3d_n{n}"), &[u_pad, f])?
+            .unwrap()[0]
+            .data
+            .clone();
+        let out = exec
+            .call(
+                comm,
+                scale,
+                r,
+                &format!("norm2_n{n}"),
+                &[TensorBuf::new(vec![n, n, n], resid)],
+            )?
+            .unwrap();
+        total += out[0].data[0] as f64;
+    }
+    comm.allreduce(8);
+    Ok(total.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{launch, MachineSpec};
+    use crate::net::{Fabric, FabricKind};
+    use crate::runtime::CalibrationTable;
+
+    #[test]
+    fn modeled_vcycles_cost_time_and_traffic() {
+        let table = CalibrationTable::builtin_fallback();
+        let decomp = Decomp::new(8, 32);
+        let m = MachineSpec::edison();
+        let mut comm = Comm::new(launch(&m, 8).unwrap(), Fabric::by_kind(FabricKind::Aries));
+        let out = vcycles(
+            &mut Exec::Modeled { table: &table },
+            &mut comm,
+            &mut ComputeScale::none(),
+            &decomp,
+            &[],
+            &GmgConfig { nu: 2, cycles: 3, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(out.cycles, 3);
+        assert!(comm.max_clock().as_secs_f64() > 0.0);
+        assert!(comm.stats().p2p_messages > 0);
+        assert_eq!(comm.stats().allreduces, 3);
+    }
+
+    #[test]
+    fn wrong_fine_size_rejected() {
+        let table = CalibrationTable::builtin_fallback();
+        let decomp = Decomp::new(8, 16);
+        let m = MachineSpec::edison();
+        let mut comm = Comm::new(launch(&m, 8).unwrap(), Fabric::by_kind(FabricKind::Aries));
+        assert!(vcycles(
+            &mut Exec::Modeled { table: &table },
+            &mut comm,
+            &mut ComputeScale::none(),
+            &decomp,
+            &[],
+            &GmgConfig::default(),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn deeper_nu_costs_more() {
+        let table = CalibrationTable::builtin_fallback();
+        let decomp = Decomp::new(8, 32);
+        let m = MachineSpec::edison();
+        let run = |nu| {
+            let mut comm = Comm::new(launch(&m, 8).unwrap(), Fabric::by_kind(FabricKind::Aries));
+            vcycles(
+                &mut Exec::Modeled { table: &table },
+                &mut comm,
+                &mut ComputeScale::none(),
+                &decomp,
+                &[],
+                &GmgConfig { nu, cycles: 1, ..Default::default() },
+            )
+            .unwrap();
+            comm.max_clock().as_secs_f64()
+        };
+        assert!(run(4) > run(1));
+    }
+}

@@ -1,0 +1,508 @@
+//! Domain decomposition and halo exchange.
+//!
+//! The global grid is `dims[d] * n_local` cells per axis, split into one
+//! `n_local`³ block per rank (matching the shapes the AOT artifacts were
+//! exported at).  Fields are stored halo-padded, `(n+2)`³, with zero
+//! halos at physical (Dirichlet) boundaries and neighbour data after an
+//! exchange.
+
+use crate::mpi::Comm;
+
+/// Near-cubic factorisation of `p` into three factors (descending
+/// products keep slabs compact): used to build the process grid.
+pub fn factor3(p: usize) -> [usize; 3] {
+    assert!(p > 0);
+    let mut best = [p, 1, 1];
+    let mut best_score = usize::MAX;
+    for a in 1..=p {
+        if p % a != 0 {
+            continue;
+        }
+        let q = p / a;
+        for b in 1..=q {
+            if q % b != 0 {
+                continue;
+            }
+            let c = q / b;
+            // surface-area proxy: sum of pairwise products (lower = more cubic)
+            let score = a * b + b * c + a * c;
+            if score < best_score {
+                best_score = score;
+                let mut f = [a, b, c];
+                f.sort_unstable();
+                best = f;
+            }
+        }
+    }
+    best
+}
+
+/// Face directions: `-z, +z, -y, +y, -x, +x`.
+pub const DIRS: usize = 6;
+
+/// 3D Cartesian decomposition of `ranks` blocks of `n_local`³ cells.
+#[derive(Debug, Clone)]
+pub struct Decomp {
+    pub n_local: usize,
+    /// Process-grid extents `[pz, py, px]`.
+    pub dims: [usize; 3],
+    /// Rank -> process-grid coordinates `[z, y, x]`.
+    pub coords: Vec<[usize; 3]>,
+}
+
+impl Decomp {
+    pub fn new(ranks: usize, n_local: usize) -> Self {
+        let dims = factor3(ranks);
+        let coords = (0..ranks)
+            .map(|r| {
+                let z = r / (dims[1] * dims[2]);
+                let y = (r / dims[2]) % dims[1];
+                let x = r % dims[2];
+                [z, y, x]
+            })
+            .collect();
+        Decomp {
+            n_local,
+            dims,
+            coords,
+        }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.coords.len()
+    }
+
+    /// Global grid extents `[nz, ny, nx]`.
+    pub fn n_global(&self) -> [usize; 3] {
+        [
+            self.dims[0] * self.n_local,
+            self.dims[1] * self.n_local,
+            self.dims[2] * self.n_local,
+        ]
+    }
+
+    /// Total degrees of freedom (scalar field).
+    pub fn dofs(&self) -> u64 {
+        self.n_global().iter().map(|&n| n as u64).product()
+    }
+
+    /// Rank at process coordinates, if inside the grid.
+    pub fn rank_at(&self, c: [isize; 3]) -> Option<usize> {
+        for d in 0..3 {
+            if c[d] < 0 || c[d] >= self.dims[d] as isize {
+                return None;
+            }
+        }
+        Some(
+            (c[0] as usize * self.dims[1] + c[1] as usize) * self.dims[2] + c[2] as usize,
+        )
+    }
+
+    /// The 6 face neighbours of `rank` (None at physical boundaries),
+    /// in [`DIRS`] order.
+    pub fn neighbors(&self, rank: usize) -> [Option<usize>; DIRS] {
+        let c = self.coords[rank];
+        let ci = [c[0] as isize, c[1] as isize, c[2] as isize];
+        [
+            self.rank_at([ci[0] - 1, ci[1], ci[2]]),
+            self.rank_at([ci[0] + 1, ci[1], ci[2]]),
+            self.rank_at([ci[0], ci[1] - 1, ci[2]]),
+            self.rank_at([ci[0], ci[1] + 1, ci[2]]),
+            self.rank_at([ci[0], ci[1], ci[2] - 1]),
+            self.rank_at([ci[0], ci[1], ci[2] + 1]),
+        ]
+    }
+
+    /// Global index of the first interior cell of `rank` (`[iz, iy, ix]`).
+    pub fn origin(&self, rank: usize) -> [usize; 3] {
+        let c = self.coords[rank];
+        [
+            c[0] * self.n_local,
+            c[1] * self.n_local,
+            c[2] * self.n_local,
+        ]
+    }
+
+    /// The halo-exchange message list: one message per shared face,
+    /// `bytes_per_face` each (what the simulated MPI charges).
+    pub fn halo_messages(&self, bytes_per_face: u64) -> Vec<(usize, usize, u64)> {
+        let mut msgs = Vec::new();
+        for r in 0..self.ranks() {
+            for nb in self.neighbors(r).into_iter().flatten() {
+                msgs.push((r, nb, bytes_per_face));
+            }
+        }
+        msgs
+    }
+
+    /// Face payload in bytes for a scalar f32 field at this block size.
+    pub fn face_bytes(&self) -> u64 {
+        (self.n_local * self.n_local * 4) as u64
+    }
+}
+
+/// A halo-padded scalar field on one rank: `(n+2)`³ f32, row-major
+/// `(z, y, x)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LocalField {
+    pub n: usize,
+    pub data: Vec<f32>,
+}
+
+impl LocalField {
+    pub fn zeros(n: usize) -> Self {
+        LocalField {
+            n,
+            data: vec![0.0; (n + 2) * (n + 2) * (n + 2)],
+        }
+    }
+
+    /// Build from interior values (halo zeroed).
+    pub fn from_interior(n: usize, interior: &[f32]) -> Self {
+        assert_eq!(interior.len(), n * n * n);
+        let mut f = Self::zeros(n);
+        for z in 0..n {
+            for y in 0..n {
+                let src = (z * n + y) * n;
+                let dst = f.idx(z + 1, y + 1, 1);
+                f.data[dst..dst + n].copy_from_slice(&interior[src..src + n]);
+            }
+        }
+        f
+    }
+
+    #[inline]
+    pub fn idx(&self, z: usize, y: usize, x: usize) -> usize {
+        let np = self.n + 2;
+        (z * np + y) * np + x
+    }
+
+    /// Copy the interior out (row-major n³).
+    pub fn interior(&self) -> Vec<f32> {
+        let n = self.n;
+        let mut out = vec![0.0; n * n * n];
+        for z in 0..n {
+            for y in 0..n {
+                let src = self.idx(z + 1, y + 1, 1);
+                let dst = (z * n + y) * n;
+                out[dst..dst + n].copy_from_slice(&self.data[src..src + n]);
+            }
+        }
+        out
+    }
+
+    /// Extract the interior face plane adjacent to direction `dir`
+    /// (what gets *sent* to the neighbour in that direction).
+    pub fn face(&self, dir: usize) -> Vec<f32> {
+        let n = self.n;
+        let mut out = Vec::with_capacity(n * n);
+        for a in 0..n {
+            for b in 0..n {
+                let (z, y, x) = face_coords(dir, 0, a, b, n);
+                out.push(self.data[self.idx(z, y, x)]);
+            }
+        }
+        out
+    }
+
+    /// Write a received neighbour plane into the halo for direction `dir`.
+    pub fn set_halo(&mut self, dir: usize, plane: &[f32]) {
+        let n = self.n;
+        assert_eq!(plane.len(), n * n);
+        let mut it = plane.iter();
+        for a in 0..n {
+            for b in 0..n {
+                let (z, y, x) = face_coords(dir, 1, a, b, n);
+                let i = self.idx(z, y, x);
+                self.data[i] = *it.next().unwrap();
+            }
+        }
+    }
+
+    /// Zero the halo plane for direction `dir` (physical boundary).
+    pub fn zero_halo(&mut self, dir: usize) {
+        let n = self.n;
+        let zeros = vec![0.0; n * n];
+        self.set_halo(dir, &zeros);
+    }
+}
+
+/// Coordinates of the (a, b)-th cell of a face plane.
+/// `halo = 0`: the interior plane adjacent to `dir` (send side);
+/// `halo = 1`: the halo plane in direction `dir` (receive side).
+fn face_coords(dir: usize, halo: usize, a: usize, b: usize, n: usize) -> (usize, usize, usize) {
+    let lo_int = 1; // first interior index (padded coords)
+    let hi_int = n; // last interior index
+    let lo_halo = 0;
+    let hi_halo = n + 1;
+    match (dir, halo) {
+        (0, 0) => (lo_int, a + 1, b + 1),  // send toward -z
+        (0, 1) => (lo_halo, a + 1, b + 1), // receive from -z
+        (1, 0) => (hi_int, a + 1, b + 1),
+        (1, 1) => (hi_halo, a + 1, b + 1),
+        (2, 0) => (a + 1, lo_int, b + 1),
+        (2, 1) => (a + 1, lo_halo, b + 1),
+        (3, 0) => (a + 1, hi_int, b + 1),
+        (3, 1) => (a + 1, hi_halo, b + 1),
+        (4, 0) => (a + 1, b + 1, lo_int),
+        (4, 1) => (a + 1, b + 1, lo_halo),
+        (5, 0) => (a + 1, b + 1, hi_int),
+        (5, 1) => (a + 1, b + 1, hi_halo),
+        _ => unreachable!("dir < 6, halo < 2"),
+    }
+}
+
+/// Opposite direction (`-z <-> +z`, ...).
+pub fn opposite(dir: usize) -> usize {
+    dir ^ 1
+}
+
+/// Extract/insert a full-width boundary plane for the dimension-ordered
+/// exchange. `axis` is the exchange axis; `lo` selects the low/high side;
+/// `halo` selects the interior plane (send side, 0) or the halo plane
+/// (receive side, 1). Axes *before* `axis` span their full padded width
+/// (their halos were exchanged in earlier phases, so edge/corner ghosts
+/// ride along); axes after span the interior only.
+fn plane_range(axis: usize, n: usize) -> impl Fn(usize) -> (usize, usize) {
+    move |other_axis: usize| {
+        if other_axis < axis {
+            (0, n + 2) // full padded width: earlier-phase halos included
+        } else {
+            (1, n + 1) // interior only
+        }
+    }
+}
+
+impl LocalField {
+    fn plane(&self, axis: usize, lo: bool, halo: bool) -> Vec<f32> {
+        let n = self.n;
+        let fixed = match (lo, halo) {
+            (true, false) => 1,      // interior plane adjacent to low side
+            (true, true) => 0,       // low halo plane
+            (false, false) => n,     // interior plane adjacent to high side
+            (false, true) => n + 1,  // high halo plane
+        };
+        let range = plane_range(axis, n);
+        let mut out = Vec::new();
+        let axes: Vec<usize> = (0..3).filter(|&a| a != axis).collect();
+        let (a0, a1) = (axes[0], axes[1]);
+        let (s0, e0) = range(a0);
+        let (s1, e1) = range(a1);
+        for i in s0..e0 {
+            for j in s1..e1 {
+                let mut c = [0usize; 3];
+                c[axis] = fixed;
+                c[a0] = i;
+                c[a1] = j;
+                out.push(self.data[self.idx(c[0], c[1], c[2])]);
+            }
+        }
+        out
+    }
+
+    fn set_plane(&mut self, axis: usize, lo: bool, plane: &[f32]) {
+        let n = self.n;
+        let fixed = if lo { 0 } else { n + 1 };
+        let range = plane_range(axis, n);
+        let axes: Vec<usize> = (0..3).filter(|&a| a != axis).collect();
+        let (a0, a1) = (axes[0], axes[1]);
+        let (s0, e0) = range(a0);
+        let (s1, e1) = range(a1);
+        let mut it = plane.iter();
+        for i in s0..e0 {
+            for j in s1..e1 {
+                let mut c = [0usize; 3];
+                c[axis] = fixed;
+                c[a0] = i;
+                c[a1] = j;
+                let idx = self.idx(c[0], c[1], c[2]);
+                self.data[idx] = *it.next().unwrap();
+            }
+        }
+    }
+}
+
+/// Exchange halos for one scalar field per rank: moves real data between
+/// the per-rank arrays *and* charges the communication to `comm`.
+///
+/// Dimension-ordered (z, then y, then x), with each later phase sending
+/// full-width planes that include the earlier phases' halos — so edge and
+/// corner ghosts are filled correctly (the standard 26-neighbour
+/// exchange via 6 messages). Physical boundaries hold zeros.
+pub fn exchange_halos(decomp: &Decomp, fields: &mut [LocalField], comm: &mut Comm) {
+    assert_eq!(fields.len(), decomp.ranks());
+    // physical boundaries (and stale edge/corner ghosts) zeroed first
+    for f in fields.iter_mut() {
+        let n = f.n;
+        let np = n + 2;
+        for z in 0..np {
+            for y in 0..np {
+                for x in 0..np {
+                    if z == 0 || z == np - 1 || y == 0 || y == np - 1 || x == 0 || x == np - 1 {
+                        let i = f.idx(z, y, x);
+                        f.data[i] = 0.0;
+                    }
+                }
+            }
+        }
+    }
+    for axis in 0..3 {
+        let mut incoming: Vec<(usize, bool, Vec<f32>)> = Vec::new();
+        for r in 0..decomp.ranks() {
+            let nbs = decomp.neighbors(r);
+            for (side_lo, dir) in [(true, 2 * axis), (false, 2 * axis + 1)] {
+                if let Some(nb) = nbs[dir] {
+                    // my plane toward `dir` lands in nb's opposite halo
+                    incoming.push((nb, !side_lo, fields[r].plane(axis, side_lo, false)));
+                }
+            }
+        }
+        for (nb, lo, plane) in incoming {
+            fields[nb].set_plane(axis, lo, &plane);
+        }
+    }
+    // timing: one message per shared face (payload ~ n² + ring)
+    comm.exchange(&decomp.halo_messages(decomp.face_bytes()));
+}
+
+/// Timing-only halo exchange (Modeled execution).
+pub fn exchange_halos_modeled(decomp: &Decomp, comm: &mut Comm, bytes_per_face: u64) {
+    comm.exchange(&decomp.halo_messages(bytes_per_face));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{launch, MachineSpec};
+    use crate::net::{Fabric, FabricKind};
+
+    #[test]
+    fn factor3_near_cubic() {
+        assert_eq!(factor3(8), [2, 2, 2]);
+        assert_eq!(factor3(24), [2, 3, 4]);
+        assert_eq!(factor3(27), [3, 3, 3]);
+        assert_eq!(factor3(1), [1, 1, 1]);
+        assert_eq!(factor3(192).iter().product::<usize>(), 192);
+        let f = factor3(192);
+        assert!(f[2] <= 8, "192 should split compactly: {f:?}");
+    }
+
+    #[test]
+    fn decomp_coords_round_trip() {
+        let d = Decomp::new(24, 16);
+        assert_eq!(d.dims.iter().product::<usize>(), 24);
+        for r in 0..24 {
+            let c = d.coords[r];
+            assert_eq!(
+                d.rank_at([c[0] as isize, c[1] as isize, c[2] as isize]),
+                Some(r)
+            );
+        }
+        assert_eq!(d.dofs(), (d.n_global().iter().product::<usize>()) as u64);
+    }
+
+    #[test]
+    fn neighbors_are_mutual() {
+        let d = Decomp::new(27, 8);
+        for r in 0..27 {
+            for (dir, nb) in d.neighbors(r).into_iter().enumerate() {
+                if let Some(nb) = nb {
+                    assert_eq!(
+                        d.neighbors(nb)[opposite(dir)],
+                        Some(r),
+                        "rank {r} dir {dir}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_ranks_have_no_outside_neighbors() {
+        let d = Decomp::new(8, 4); // 2x2x2
+        let nb = d.neighbors(0); // corner block
+        assert_eq!(nb.iter().flatten().count(), 3);
+    }
+
+    #[test]
+    fn field_interior_round_trip() {
+        let n = 4;
+        let interior: Vec<f32> = (0..n * n * n).map(|i| i as f32).collect();
+        let f = LocalField::from_interior(n, &interior);
+        assert_eq!(f.interior(), interior);
+        // halo is zero
+        assert_eq!(f.data[f.idx(0, 2, 2)], 0.0);
+        assert_eq!(f.data[f.idx(n + 1, 2, 2)], 0.0);
+    }
+
+    #[test]
+    fn face_and_set_halo_are_consistent() {
+        // sending my +x face to a neighbour and writing it into their -x
+        // halo must preserve (a, b) orientation
+        let n = 3;
+        let mut a = LocalField::zeros(n);
+        for z in 0..n {
+            for y in 0..n {
+                for x in 0..n {
+                    let i = a.idx(z + 1, y + 1, x + 1);
+                    a.data[i] = (100 * z + 10 * y + x) as f32;
+                }
+            }
+        }
+        let face = a.face(5); // +x interior plane
+        let mut b = LocalField::zeros(n);
+        b.set_halo(4, &face); // neighbour's -x halo
+        for z in 0..n {
+            for y in 0..n {
+                assert_eq!(
+                    b.data[b.idx(z + 1, y + 1, 0)],
+                    (100 * z + 10 * y + (n - 1)) as f32,
+                    "z={z} y={y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exchange_stitches_a_global_ramp() {
+        // 2 ranks along z; field = global z index. After the exchange,
+        // rank 0's +z halo must hold rank 1's first plane and vice versa.
+        let d = Decomp::new(2, 4);
+        assert_eq!(d.dims, [1, 1, 2]); // sorted ascending -> split along x
+        let n = 4;
+        let mut fields: Vec<LocalField> = (0..2)
+            .map(|r| {
+                let origin = d.origin(r);
+                let interior: Vec<f32> = (0..n * n * n)
+                    .map(|i| {
+                        let x = i % n;
+                        (origin[2] + x) as f32
+                    })
+                    .collect();
+                LocalField::from_interior(n, &interior)
+            })
+            .collect();
+        let m = MachineSpec::workstation();
+        let mut comm = Comm::new(launch(&m, 2).unwrap(), Fabric::by_kind(FabricKind::SharedMem));
+        exchange_halos(&d, &mut fields, &mut comm);
+        // rank 0 (+x halo) sees rank 1's first x-plane (global x = 4)
+        let f0 = &fields[0];
+        assert_eq!(f0.data[f0.idx(2, 2, n + 1)], 4.0);
+        // rank 1 (-x halo) sees rank 0's last x-plane (global x = 3)
+        let f1 = &fields[1];
+        assert_eq!(f1.data[f1.idx(2, 2, 0)], 3.0);
+        // physical boundaries stay zero
+        assert_eq!(f0.data[f0.idx(2, 2, 0)], 0.0);
+        // and the exchange was charged
+        assert!(comm.stats().p2p_messages == 2);
+        assert!(comm.max_clock().as_secs_f64() > 0.0);
+    }
+
+    #[test]
+    fn halo_message_list_counts_shared_faces() {
+        let d = Decomp::new(8, 4); // 2x2x2: 12 shared faces, 2 msgs each
+        let msgs = d.halo_messages(64);
+        assert_eq!(msgs.len(), 24);
+        assert!(msgs.iter().all(|&(_, _, b)| b == 64));
+    }
+}

@@ -1,0 +1,105 @@
+//! Dense-LU direct solve (the Fig 2 "Poisson LU" test).
+//!
+//! The paper's test solves a 2D Poisson problem with a direct LU
+//! factorisation; the exported `lu_poisson2d_n32` artifact assembles the
+//! dense scaled 5-point matrix in-graph and solves it (factorisation
+//! included, as in the paper's reported times).
+
+use anyhow::Result;
+
+use crate::mpi::Comm;
+use crate::runtime::TensorBuf;
+
+use super::exec::{ComputeScale, Exec};
+
+/// Grid edge of the exported 2D problem.
+pub const LU_N: usize = 32;
+
+/// Solve the 2D problem; returns the solution grid in real mode.
+pub fn lu_solve(
+    exec: &mut Exec,
+    comm: &mut Comm,
+    scale: &mut ComputeScale,
+    rhs: &[f32],
+) -> Result<Option<Vec<f32>>> {
+    if !exec.is_real() {
+        exec.call(comm, scale, 0, "lu_poisson2d_n32", &[])?;
+        return Ok(None);
+    }
+    let f = TensorBuf::new(vec![LU_N, LU_N], rhs.to_vec());
+    let out = exec.call(comm, scale, 0, "lu_poisson2d_n32", &[f])?.unwrap();
+    Ok(Some(out[0].data.clone()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{launch, MachineSpec};
+    use crate::net::{Fabric, FabricKind};
+    use crate::runtime::CalibrationTable;
+
+    #[test]
+    fn modeled_lu_charges_time() {
+        let table = CalibrationTable::builtin_fallback();
+        let m = MachineSpec::workstation();
+        let mut comm = Comm::new(launch(&m, 1).unwrap(), Fabric::by_kind(FabricKind::SharedMem));
+        let got = lu_solve(
+            &mut Exec::Modeled { table: &table },
+            &mut comm,
+            &mut ComputeScale::none(),
+            &[],
+        )
+        .unwrap();
+        assert!(got.is_none());
+        assert!(comm.max_clock().as_secs_f64() > 0.0);
+    }
+
+    #[test]
+    fn real_lu_inverts_the_operator() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut engine = crate::runtime::Engine::open_default().unwrap();
+        let m = MachineSpec::workstation();
+        let mut comm = Comm::new(launch(&m, 1).unwrap(), Fabric::by_kind(FabricKind::SharedMem));
+        // f = A u_true for a known u_true; the solve must recover it
+        let n = LU_N;
+        let u_true: Vec<f32> = (0..n * n)
+            .map(|i| ((i % 13) as f32 - 6.0) * 0.1)
+            .collect();
+        // apply the scaled 5-point operator in plain rust
+        let at = |z: &Vec<f32>, y: isize, x: isize| -> f32 {
+            if y < 0 || x < 0 || y >= n as isize || x >= n as isize {
+                0.0
+            } else {
+                z[(y as usize) * n + x as usize]
+            }
+        };
+        let mut f = vec![0.0f32; n * n];
+        for y in 0..n as isize {
+            for x in 0..n as isize {
+                f[(y as usize) * n + x as usize] = 4.0 * at(&u_true, y, x)
+                    - at(&u_true, y - 1, x)
+                    - at(&u_true, y + 1, x)
+                    - at(&u_true, y, x - 1)
+                    - at(&u_true, y, x + 1);
+            }
+        }
+        let got = lu_solve(
+            &mut Exec::Real { engine: &mut engine },
+            &mut comm,
+            &mut ComputeScale::none(),
+            &f,
+        )
+        .unwrap()
+        .unwrap();
+        let err: f32 = got
+            .iter()
+            .zip(&u_true)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 5e-3, "max error {err}");
+        assert!(comm.max_clock().as_secs_f64() > 0.0);
+    }
+}

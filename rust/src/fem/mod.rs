@@ -1,0 +1,32 @@
+//! Structured-grid FEM drivers — the "FEniCS" of this reproduction.
+//!
+//! The paper's test programs are Poisson and elasticity solves plus the
+//! HPGMG-FE benchmark.  This module owns their distributed drivers:
+//!
+//! * [`grid`] — 3D Cartesian domain decomposition, per-rank halo-padded
+//!   fields, and the face-exchange machinery (real data movement *and*
+//!   the message lists the simulated MPI charges for).
+//! * [`exec`] — the compute-execution abstraction: `Real` runs the AOT
+//!   artifacts through PJRT and charges measured wall time; `Modeled`
+//!   charges calibrated costs only (for 24–192-rank simulations).
+//! * [`cg`] — distributed conjugate gradients over the exported CG
+//!   fragments (`cg_apdot` / `cg_update` / `cg_pupdate`), identical
+//!   control flow in both execution modes; plus the single-domain
+//!   multigrid-preconditioned CG used by the Fig 2 "Poisson AMG" test.
+//! * [`gmg`] — the distributed V-cycle ladder used by HPGMG (Fig 5).
+//! * [`lu`] — the 2D dense-LU direct solve (Fig 2 "Poisson LU").
+//!
+//! Numerical ground truth: with `Exec::Real` the drivers produce actual
+//! solutions that integration tests compare against the pure-jnp oracle
+//! (to f32 tolerance); `Exec::Modeled` runs the same phase structure in
+//! virtual time only.
+
+pub mod cg;
+pub mod exec;
+pub mod gmg;
+pub mod grid;
+pub mod lu;
+
+pub use cg::{estimate_cg_iters, CgConfig, CgOutcome};
+pub use exec::Exec;
+pub use grid::{factor3, Decomp, LocalField};

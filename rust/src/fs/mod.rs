@@ -1,0 +1,85 @@
+//! Filesystem models.
+//!
+//! Fig 4's result — Python programs start *faster* inside a container on
+//! an HPC machine — is a filesystem story.  Natively, every MPI rank
+//! `import`s thousands of small files through the parallel filesystem's
+//! metadata server (MDS), which serialises; inside Shifter the image is a
+//! single loop-mounted file, so after one bulk read per node every
+//! metadata operation is a page-cache hit.  We model three filesystems:
+//!
+//! * [`LocalFs`] — workstation disk + warm page cache.
+//! * [`ParallelFs`] — Lustre-like: a contended MDS ([`FifoResource`])
+//!   for metadata plus aggregate OST bandwidth for data.
+//! * [`ImageFs`] — loop-mounted image: one bulk blob fetch per node
+//!   through the backing store, then page-cache service times.
+//!
+//! All operations take an arrival instant and return a completion
+//! instant in virtual time; contention emerges from the shared queues.
+
+mod image;
+mod local;
+mod parallel;
+
+pub use image::ImageFs;
+pub use local::LocalFs;
+pub use parallel::ParallelFs;
+
+use crate::des::VirtualTime;
+
+/// A filesystem operation issued by one rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsOp {
+    /// Path lookup + open (pure metadata).
+    Open,
+    /// `stat()` (pure metadata).
+    Stat,
+    /// Read `bytes` of data (metadata already done).
+    Read { bytes: u64 },
+    /// Write `bytes` of data.
+    Write { bytes: u64 },
+}
+
+/// Common interface: submit an op from a node, get the completion instant.
+pub trait FileSystem {
+    fn submit(&mut self, at: VirtualTime, node: usize, op: FsOp) -> VirtualTime;
+
+    /// `count` back-to-back metadata ops from one client. The default
+    /// loops over [`FsOp::Open`]; models with a queueing fast path
+    /// (ParallelFs) override it to enqueue one batched entry.
+    fn submit_meta_batch(&mut self, at: VirtualTime, node: usize, count: u32) -> VirtualTime {
+        let mut t = at;
+        for _ in 0..count {
+            t = self.submit(t, node, FsOp::Open);
+        }
+        t
+    }
+
+    /// Convenience: open + read in sequence.
+    fn open_read(&mut self, at: VirtualTime, node: usize, bytes: u64) -> VirtualTime {
+        let t = self.submit(at, node, FsOp::Open);
+        self.submit(t, node, FsOp::Read { bytes })
+    }
+
+    /// Convenience: open + write in sequence.
+    fn open_write(&mut self, at: VirtualTime, node: usize, bytes: u64) -> VirtualTime {
+        let t = self.submit(at, node, FsOp::Open);
+        self.submit(t, node, FsOp::Write { bytes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::Duration;
+
+    #[test]
+    fn open_read_composes() {
+        let mut fs = LocalFs::default();
+        let t0 = VirtualTime::ZERO;
+        let t_open = fs.submit(t0, 0, FsOp::Open);
+        let mut fs2 = LocalFs::default();
+        let t_both = fs2.open_read(t0, 0, 4096);
+        assert!(t_both > t_open);
+        assert!(t_both - t0 < Duration::from_millis(10));
+    }
+}

@@ -1,0 +1,69 @@
+//! # harbor
+//!
+//! A container-deployment simulator and FEM workload suite that reproduces
+//! *"Containers for portable, productive and performant scientific
+//! computing"* (Hale, Li, Richardson, Wells; 2016).
+//!
+//! The paper's subject — distributing one container image of a complex
+//! scientific stack (FEniCS) and running it without performance penalty on
+//! everything from a laptop to a Cray XC30 — is rebuilt here as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1/L2 (build-time Python)** — the FEM compute hot-spots (stencil
+//!   operators, multigrid smoothers, fused CG fragments) are Pallas
+//!   kernels composed into JAX entry points and AOT-lowered to HLO text
+//!   (`python/compile/`). Python never runs at simulation time.
+//! * **L3 (this crate)** — everything the paper's evaluation touches:
+//!   a container substrate (layered images, buildfiles, registry, and
+//!   Docker/rkt/Shifter/VM runtime adapters), an HPC cluster model
+//!   (Edison-like nodes, Aries/TCP/shared-memory fabrics, a Lustre-like
+//!   parallel filesystem with metadata-server contention), a simulated
+//!   MPI layer, the distributed FEM drivers that execute the AOT
+//!   artifacts through PJRT, and the benchmark harness that regenerates
+//!   every figure in the paper's evaluation (Figs 2–5).
+//!
+//! See `DESIGN.md` for the substitution table (what the paper ran on real
+//! hardware → what is simulated here and why the mechanism is preserved)
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! ## Crate layout
+//!
+//! | module | role |
+//! |---|---|
+//! | [`des`] | virtual clock, event queue, FIFO resources — the simulation substrate |
+//! | [`container`] | images, layer store, buildfile parser/builder, registry, runtimes |
+//! | [`cluster`] | machine specs (workstation / Edison), nodes, job launcher |
+//! | [`net`] | interconnect fabrics: shared-memory, Aries, TCP (α-β + contention) |
+//! | [`fs`] | filesystems: local disk, Lustre-like parallel FS, loop-mounted image FS |
+//! | [`mpi`] | simulated MPI: communicators, collectives, halo exchange, ABI resolver |
+//! | [`runtime`] | PJRT: load AOT HLO artifacts, compile, execute, calibrate |
+//! | [`fem`] | structured grids, domain decomposition, CG / multigrid / LU drivers |
+//! | [`pyimport`] | the "Python import problem": module graph replayed against the FS |
+//! | [`workload`] | the paper's benchmark programs (Figs 2, 3, 4, 5) |
+//! | [`platform`] | execution-platform profiles (native / docker / rkt / VM / Shifter) |
+//! | [`bench`] | repetition harness, statistics, paper-style report rendering |
+//! | [`config`] | TOML-backed experiment and machine configuration |
+//! | [`coordinator`] | experiment orchestration: provision → pull → launch → collect |
+//! | [`metrics`] | phase timers and per-phase breakdowns |
+
+pub mod bench;
+pub mod cluster;
+pub mod config;
+pub mod container;
+pub mod coordinator;
+pub mod des;
+pub mod fem;
+pub mod fs;
+pub mod metrics;
+pub mod mpi;
+pub mod net;
+pub mod platform;
+pub mod pyimport;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+pub use platform::Platform;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,322 @@
+//! `harbor` — CLI for the container-deployment simulator.
+//!
+//! Subcommands mirror the workflows in the paper:
+//!
+//! * `build`     — build an image from a Buildfile (§2.2's `docker build`)
+//! * `pipeline`  — the Fig 1 pipeline: build → push → pull everywhere
+//! * `resolve`   — show the MPI ABI resolution for a platform (§4.2)
+//! * `run`       — run the Edison test program once, print the breakdown
+//! * `bench`     — regenerate a figure (fig2 | fig3 | fig4 | fig5a | fig5b)
+//! * `calibrate` — measure per-artifact PJRT costs into calibration.json
+//! * `artifacts` — list the AOT artifacts the runtime can execute
+
+use std::process::ExitCode;
+
+use harbor::cluster::MachineSpec;
+use harbor::config::ExperimentConfig;
+use harbor::container::{Builder, Buildfile, LayerStore, RuntimeKind};
+use harbor::coordinator::{deploy_pipeline, Coordinator};
+use harbor::fem::exec::Exec;
+use harbor::mpi::AbiResolver;
+use harbor::platform::Platform;
+use harbor::runtime::{calibrate, CalibrationTable, Engine};
+use harbor::util::cli::Args;
+use harbor::util::json::Value;
+use harbor::workload::{run_poisson_app, AppConfig};
+
+const ABOUT: &str = "\
+harbor — reproduction of 'Containers for portable, productive and
+performant scientific computing' (Hale, Li, Richardson, Wells; 2016)
+
+USAGE:  harbor <COMMAND> [ARGS]
+
+COMMANDS:
+  build      build an image from a Buildfile
+  pipeline   run the Fig 1 deployment pipeline (build -> push -> pull)
+  resolve    show MPI ABI resolution for a machine/platform
+  run        run the Edison test program once, print phase breakdown
+  bench      regenerate a figure: fig2 | fig3 | fig4 | fig5a | fig5b | all
+  calibrate  measure per-artifact PJRT costs (writes calibration.json)
+  ablate     sensitivity sweeps: mds | nic | nu | layers | all
+  fenicsproject  demo the §3.2 wrapper workflows (notebook/start/stop)
+  artifacts  list AOT artifacts
+
+Run `harbor <COMMAND> --help` for details.";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        println!("{ABOUT}");
+        return ExitCode::SUCCESS;
+    };
+    let result = match cmd.as_str() {
+        "build" => cmd_build(rest),
+        "pipeline" => cmd_pipeline(rest),
+        "resolve" => cmd_resolve(rest),
+        "run" => cmd_run(rest),
+        "bench" => cmd_bench(rest),
+        "calibrate" => cmd_calibrate(rest),
+        "ablate" => cmd_ablate(rest),
+        "fenicsproject" => cmd_fenicsproject(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "--help" | "-h" | "help" => {
+            println!("{ABOUT}");
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown command `{other}`\n\n{ABOUT}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("{e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_build(raw: &[String]) -> anyhow::Result<()> {
+    let args = Args::new("build", "build an image from a Buildfile")
+        .positional("buildfile", "path to the Buildfile")
+        .opt("tag", "image reference to tag", Some("local/image:latest"));
+    let p = args.parse(raw)?;
+    let text = std::fs::read_to_string(p.pos(0))?;
+    let bf = Buildfile::parse(&text)?;
+    let mut store = LayerStore::new();
+    let report = Builder::new().build(&bf, p.req("tag"), &mut store)?;
+    println!(
+        "built {} -> image {} ({} layers new, {} cached, {} MB, {} files) in {}",
+        p.pos(0),
+        report.image.id,
+        report.layers_built,
+        report.layers_cached,
+        report.image.size_bytes(&store) / 1_000_000,
+        report.image.file_count(&store),
+        report.build_time,
+    );
+    for (i, layer) in report.image.layers.iter().enumerate() {
+        let l = store.get(layer).unwrap();
+        println!("  layer {i}: {} <- {}", layer, l.directive);
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(raw: &[String]) -> anyhow::Result<()> {
+    let args = Args::new("pipeline", "build -> push -> pull deployment pipeline");
+    args.parse(raw)?;
+    let trace = deploy_pipeline()?;
+    print!("{}", trace.render());
+    Ok(())
+}
+
+fn cmd_resolve(raw: &[String]) -> anyhow::Result<()> {
+    let args = Args::new("resolve", "show MPI ABI resolution (the §4.2 trick)")
+        .opt("machine", "workstation | edison", Some("edison"))
+        .opt("runtime", "native | docker | rkt | shifter | vm", Some("shifter"))
+        .switch("inject", "inject the host MPI via LD_LIBRARY_PATH");
+    let p = args.parse(raw)?;
+    let machine = machine_by_name(p.req("machine"))?;
+    let runtime = match p.req("runtime") {
+        "native" => RuntimeKind::Native,
+        "docker" => RuntimeKind::Docker,
+        "rkt" => RuntimeKind::Rkt,
+        "shifter" => RuntimeKind::Shifter,
+        "vm" => RuntimeKind::Vm,
+        other => anyhow::bail!("unknown runtime `{other}`"),
+    };
+    let res = AbiResolver {
+        machine: &machine,
+        runtime,
+        inject_host_mpi: p.flag("inject"),
+    }
+    .resolve();
+    println!(
+        "machine: {}  runtime: {runtime}  inject: {}",
+        machine.name,
+        p.flag("inject")
+    );
+    for step in &res.steps {
+        println!("  {step}");
+    }
+    println!("=> library: {}  fabric: {:?}", res.library, res.fabric);
+    Ok(())
+}
+
+fn cmd_run(raw: &[String]) -> anyhow::Result<()> {
+    let args = Args::new("run", "run the Edison test program once")
+        .opt(
+            "platform",
+            "native | shifter | shifter-container-mpi",
+            Some("native"),
+        )
+        .opt("ranks", "MPI ranks", Some("24"))
+        .opt("seed", "simulation seed", Some("42"))
+        .switch("python", "Python driver (adds the import phase)");
+    let p = args.parse(raw)?;
+    let platform: Platform = p.req("platform").parse().map_err(anyhow::Error::msg)?;
+    let ranks: usize = p.parse_num("ranks")?;
+    let seed: u64 = p.parse_num("seed")?;
+    let cfg = if p.flag("python") {
+        AppConfig::python(ranks, seed)
+    } else {
+        AppConfig::cpp(ranks, seed)
+    };
+    let table = CalibrationTable::load_or_default(None);
+    let breakdown = run_poisson_app(platform, &mut Exec::Modeled { table: &table }, &cfg)?;
+    println!(
+        "poisson app on edison: platform={platform} ranks={ranks} driver={}",
+        if p.flag("python") { "python" } else { "c++" }
+    );
+    for phase in breakdown.phase_names() {
+        println!("  {phase:10} {:10.4} s", breakdown.get(phase));
+    }
+    println!("  {:10} {:10.4} s", "total", breakdown.total());
+    Ok(())
+}
+
+fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
+    let args = Args::new("bench", "regenerate a figure from the paper")
+        .positional("figure", "fig2 | fig3 | fig4 | fig5a | fig5b | all")
+        .opt("reps", "repetitions per bar (paper: 5 ws / 3 hpc)", None)
+        .opt("seed", "base simulation seed", None)
+        .opt("config", "experiment config JSON (overrides defaults)", None)
+        .opt("out", "also write a JSON report to this path", None)
+        .switch("json", "print JSON instead of ASCII bars");
+    let p = args.parse(raw)?;
+    let figures: Vec<String> = match p.pos(0) {
+        "all" => ["fig2", "fig3", "fig4", "fig5a", "fig5b"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        one => vec![one.to_string()],
+    };
+    let coordinator = Coordinator::new();
+    let mut all_json = Vec::new();
+    for figure in &figures {
+        let mut cfg = match p.get("config") {
+            Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
+            None => ExperimentConfig::paper_default(figure)?,
+        };
+        cfg.figure = figure.clone();
+        if let Some(reps) = p.get("reps") {
+            cfg.reps = reps.parse()?;
+        }
+        if let Some(seed) = p.get("seed") {
+            cfg.seed = seed.parse()?;
+        }
+        let figs = coordinator.run(&cfg)?;
+        for f in &figs {
+            if p.flag("json") {
+                println!("{}", f.to_json().to_pretty());
+            } else {
+                println!("{}", f.render());
+            }
+            all_json.push(f.to_json());
+        }
+    }
+    if let Some(out) = p.get("out") {
+        std::fs::write(out, Value::Arr(all_json).to_pretty())?;
+        eprintln!("wrote JSON report to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(raw: &[String]) -> anyhow::Result<()> {
+    let args = Args::new("calibrate", "measure per-artifact PJRT execution costs")
+        .opt("out", "output path", Some("artifacts/calibration.json"))
+        .opt("reps", "measurement repetitions per entry", Some("5"));
+    let p = args.parse(raw)?;
+    let mut engine = Engine::open_default()?;
+    let reps: usize = p.parse_num("reps")?;
+    eprintln!(
+        "calibrating {} artifacts x {reps} reps ...",
+        engine.manifest().entries.len()
+    );
+    let table = calibrate(&mut engine, reps)?;
+    table.save(std::path::Path::new(p.req("out")))?;
+    println!(
+        "wrote {} entries to {} (source: {})",
+        table.len(),
+        p.req("out"),
+        table.source
+    );
+    Ok(())
+}
+
+fn cmd_ablate(raw: &[String]) -> anyhow::Result<()> {
+    let args = Args::new("ablate", "sensitivity sweeps over modelling choices")
+        .positional("study", "mds | nic | nu | layers | all");
+    let p = args.parse(raw)?;
+    let studies: Vec<&str> = match p.pos(0) {
+        "all" => harbor::workload::ablate::STUDIES.to_vec(),
+        one => vec![one],
+    };
+    for s in studies {
+        let a = harbor::workload::ablate::by_name(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown study `{s}` (mds|nic|nu|layers)"))?;
+        println!("{}", a.render());
+    }
+    Ok(())
+}
+
+fn cmd_fenicsproject(raw: &[String]) -> anyhow::Result<()> {
+    use harbor::container::{RuntimeKind, SessionManager};
+    let args = Args::new(
+        "fenicsproject",
+        "walk through the §3.2 wrapper workflows in virtual time",
+    )
+    .opt("name", "project name", Some("my-project"))
+    .opt("dir", "host directory shared into the container", Some("$(pwd)"));
+    let p = args.parse(raw)?;
+    let name = p.req("name");
+    let dir = p.req("dir");
+    let (image, _) = harbor::workload::fenics_image();
+    let mut m = SessionManager::new(image, RuntimeKind::Docker);
+
+    println!("$ fenicsproject notebook {name} {dir}");
+    m.notebook(name, dir).map_err(anyhow::Error::msg)?;
+    println!(
+        "  notebook running at {}  (shared volume: {dir} -> /home/fenics/shared)",
+        m.notebook_url(name).unwrap()
+    );
+
+    println!("$ fenicsproject stop {name}");
+    m.stop(name).map_err(anyhow::Error::msg)?;
+    println!("$ fenicsproject start {name}");
+    m.start(name).map_err(anyhow::Error::msg)?;
+    m.exec(name, "python3 demo_poisson.py").map_err(anyhow::Error::msg)?;
+    println!("  resumed with its writable layer intact; ran demo_poisson.py");
+
+    println!("$ fenicsproject list");
+    for (session, state) in m.list() {
+        println!("  {session:12} {state}");
+    }
+    println!("(virtual elapsed: {})", m.now());
+    Ok(())
+}
+
+fn cmd_artifacts(raw: &[String]) -> anyhow::Result<()> {
+    let args = Args::new("artifacts", "list AOT artifacts");
+    args.parse(raw)?;
+    let dir = harbor::runtime::artifacts_dir();
+    let manifest = harbor::runtime::Manifest::load(&dir)?;
+    println!(
+        "{} artifacts in {} (format {})",
+        manifest.entries.len(),
+        dir.display(),
+        manifest.format
+    );
+    for e in &manifest.entries {
+        let ins: Vec<String> = e.inputs.iter().map(|t| format!("{:?}", t.shape)).collect();
+        let outs: Vec<String> = e.outputs.iter().map(|t| format!("{:?}", t.shape)).collect();
+        println!("  {:28} {} -> {}", e.name, ins.join(", "), outs.join(", "));
+    }
+    Ok(())
+}
+
+fn machine_by_name(name: &str) -> anyhow::Result<MachineSpec> {
+    match name {
+        "workstation" => Ok(MachineSpec::workstation()),
+        "edison" => Ok(MachineSpec::edison()),
+        other => anyhow::bail!("unknown machine `{other}` (workstation|edison)"),
+    }
+}

@@ -1,0 +1,185 @@
+//! Phase timing and statistics.
+//!
+//! The paper reports every experiment as a per-phase breakdown (assemble /
+//! refine / solve / IO / import) with error bars over repeated runs.
+//! [`PhaseBreakdown`] accumulates virtual-time spans per named phase for
+//! one run; [`Stats`] aggregates repetitions into mean / std / min / max —
+//! the numbers the figures plot.
+
+use std::collections::BTreeMap;
+
+
+use crate::des::Duration;
+
+/// Per-phase virtual-time totals for a single run.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseBreakdown {
+    /// Phase name -> accumulated duration. BTreeMap for stable ordering.
+    phases: BTreeMap<String, Duration2>,
+    /// Insertion order of first occurrence (presentation order).
+    order: Vec<String>,
+}
+
+/// Serializable mirror of `des::Duration` (seconds as f64 on the wire).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Duration2 {
+    secs: f64,
+}
+
+impl From<Duration> for Duration2 {
+    fn from(d: Duration) -> Self {
+        Duration2 {
+            secs: d.as_secs_f64(),
+        }
+    }
+}
+
+impl Duration2 {
+    pub fn as_secs_f64(self) -> f64 {
+        self.secs
+    }
+}
+
+impl PhaseBreakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `d` to phase `name` (creating it on first use).
+    pub fn add(&mut self, name: &str, d: Duration) {
+        if !self.phases.contains_key(name) {
+            self.order.push(name.to_string());
+        }
+        let e = self.phases.entry(name.to_string()).or_default();
+        e.secs += d.as_secs_f64();
+    }
+
+    /// Seconds recorded for `name` (0.0 if absent).
+    pub fn get(&self, name: &str) -> f64 {
+        self.phases.get(name).map(|d| d.secs).unwrap_or(0.0)
+    }
+
+    /// Total across phases, in seconds.
+    pub fn total(&self) -> f64 {
+        self.phases.values().map(|d| d.secs).sum()
+    }
+
+    /// Phases in first-recorded order.
+    pub fn phase_names(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.phases.is_empty()
+    }
+
+    /// Machine-readable form: `{phase: seconds}`.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        Value::Obj(
+            self.phases
+                .iter()
+                .map(|(k, v)| (k.clone(), Value::Num(v.secs)))
+                .collect(),
+        )
+    }
+}
+
+/// Aggregate of repeated scalar measurements (seconds, DOF/s, ...).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: Vec<f64>,
+}
+
+impl Stats {
+    pub fn from_samples(samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty(), "stats over zero samples");
+        Stats { samples }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation (n-1); 0 for a single sample.
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Coefficient of variation (std / mean); the paper's "variability".
+    pub fn cv(&self) -> f64 {
+        let m = self.mean();
+        if m == 0.0 {
+            0.0
+        } else {
+            self.std() / m
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_accumulates_and_orders() {
+        let mut b = PhaseBreakdown::new();
+        b.add("solve", Duration::from_millis(100));
+        b.add("assemble", Duration::from_millis(50));
+        b.add("solve", Duration::from_millis(25));
+        assert_eq!(b.get("solve"), 0.125);
+        assert_eq!(b.get("assemble"), 0.050);
+        assert_eq!(b.get("missing"), 0.0);
+        assert!((b.total() - 0.175).abs() < 1e-12);
+        assert_eq!(b.phase_names(), &["solve".to_string(), "assemble".to_string()]);
+    }
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean(), 2.5);
+        assert!((s.std() - 1.2909944487).abs() < 1e-9);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(s.n(), 4);
+    }
+
+    #[test]
+    fn single_sample_has_zero_std() {
+        let s = Stats::from_samples(vec![3.0]);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.cv(), 0.0);
+    }
+
+    #[test]
+    fn breakdown_serializes() {
+        let mut b = PhaseBreakdown::new();
+        b.add("io", Duration::from_millis(7));
+        let j = b.to_json().to_string();
+        let v = crate::util::json::parse(&j).unwrap();
+        assert_eq!(v.get("io").as_f64(), Some(0.007));
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_stats_panics() {
+        Stats::from_samples(vec![]);
+    }
+}

@@ -1,0 +1,177 @@
+//! MPICH ABI resolution — the paper's deployment trick, §4.2.
+//!
+//! On Edison the job script copies the Cray MPI shared objects to a
+//! container-visible path and prepends it to `LD_LIBRARY_PATH`; because
+//! Cray MPI implements the MPICH ABI, the container's dynamically linked
+//! application transparently picks up the host library and with it the
+//! Aries fabric.  [`AbiResolver`] models that load-time search: which
+//! `libmpi.so` wins, whether its ABI matches what the binary was linked
+//! against, and therefore which fabric the job runs on.  The recorded
+//! steps double as the explanation users see in traces.
+
+use crate::cluster::MachineSpec;
+use crate::container::RuntimeKind;
+use crate::net::FabricKind;
+
+/// Outcome of resolving `libmpi.so.12` at container start.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct McaResolution {
+    /// The fabric the resolved library can drive.
+    pub fabric: FabricKind,
+    /// Which library won the search.
+    pub library: String,
+    /// Human-readable resolution trace (one line per search step).
+    pub steps: Vec<String>,
+}
+
+/// Models the dynamic-linker search for the MPI library.
+pub struct AbiResolver<'m> {
+    pub machine: &'m MachineSpec,
+    pub runtime: RuntimeKind,
+    /// `LD_LIBRARY_PATH` injection of the host MPI (the Bahls trick).
+    pub inject_host_mpi: bool,
+}
+
+impl<'m> AbiResolver<'m> {
+    pub fn resolve(&self) -> McaResolution {
+        let mut steps = Vec::new();
+
+        if self.runtime == RuntimeKind::Native {
+            steps.push(format!(
+                "native binary linked against system MPI on {}",
+                self.machine.name
+            ));
+            return McaResolution {
+                fabric: self.machine.host_fabric,
+                library: "system libmpi.so.12".into(),
+                steps,
+            };
+        }
+
+        if self.inject_host_mpi {
+            steps.push("LD_LIBRARY_PATH=$SCRATCH/hpc-mpich/lib prepended".into());
+            if self.machine.system_mpi_abi_compatible {
+                steps.push("host libmpi.so.12 found; ABI check: MPICH-compatible ✓".into());
+                steps.push(format!(
+                    "binding to host MPI -> {:?} fabric",
+                    self.machine.host_fabric
+                ));
+                return McaResolution {
+                    fabric: self.machine.host_fabric,
+                    library: "host (Cray) libmpi.so.12".into(),
+                    steps,
+                };
+            }
+            steps.push(
+                "host libmpi.so.12 found but ABI-incompatible; loader falls through".into(),
+            );
+        } else {
+            steps.push("no host-library injection requested".into());
+        }
+
+        steps.push("container's bundled MPICH (Ubuntu package) resolved".into());
+        let fabric = if self.machine.num_nodes == 1 {
+            steps.push("single node: nemesis shared-memory channel".into());
+            FabricKind::SharedMem
+        } else {
+            steps.push("multi-node: MPICH has no Aries netmod -> TCP over management Ethernet".into());
+            FabricKind::TcpEthernet
+        };
+        McaResolution {
+            fabric,
+            library: "container libmpi.so.12 (MPICH)".into(),
+            steps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shifter_with_injection_gets_aries() {
+        let edison = MachineSpec::edison();
+        let r = AbiResolver {
+            machine: &edison,
+            runtime: RuntimeKind::Shifter,
+            inject_host_mpi: true,
+        }
+        .resolve();
+        assert_eq!(r.fabric, FabricKind::Aries);
+        assert!(r.library.contains("Cray"));
+        assert!(r.steps.iter().any(|s| s.contains("ABI check")));
+    }
+
+    #[test]
+    fn shifter_without_injection_falls_to_tcp() {
+        let edison = MachineSpec::edison();
+        let r = AbiResolver {
+            machine: &edison,
+            runtime: RuntimeKind::Shifter,
+            inject_host_mpi: false,
+        }
+        .resolve();
+        assert_eq!(r.fabric, FabricKind::TcpEthernet);
+        assert!(r.steps.iter().any(|s| s.contains("TCP")));
+    }
+
+    #[test]
+    fn abi_mismatch_defeats_injection() {
+        let mut m = MachineSpec::edison();
+        m.system_mpi_abi_compatible = false;
+        let r = AbiResolver {
+            machine: &m,
+            runtime: RuntimeKind::Shifter,
+            inject_host_mpi: true,
+        }
+        .resolve();
+        assert_eq!(r.fabric, FabricKind::TcpEthernet);
+        assert!(r.steps.iter().any(|s| s.contains("ABI-incompatible")));
+    }
+
+    #[test]
+    fn workstation_container_mpi_is_shared_mem() {
+        let ws = MachineSpec::workstation();
+        let r = AbiResolver {
+            machine: &ws,
+            runtime: RuntimeKind::Docker,
+            inject_host_mpi: false,
+        }
+        .resolve();
+        assert_eq!(r.fabric, FabricKind::SharedMem);
+    }
+
+    #[test]
+    fn native_short_circuits() {
+        let edison = MachineSpec::edison();
+        let r = AbiResolver {
+            machine: &edison,
+            runtime: RuntimeKind::Native,
+            inject_host_mpi: false,
+        }
+        .resolve();
+        assert_eq!(r.fabric, FabricKind::Aries);
+        assert_eq!(r.steps.len(), 1);
+    }
+
+    #[test]
+    fn resolution_matches_runtime_adapter() {
+        // AbiResolver and ContainerRuntime::resolve_fabric must agree
+        use crate::container::runtime::by_kind;
+        let edison = MachineSpec::edison();
+        for kind in [RuntimeKind::Shifter, RuntimeKind::Docker, RuntimeKind::Native] {
+            for inject in [false, true] {
+                let via_resolver = AbiResolver {
+                    machine: &edison,
+                    runtime: kind,
+                    inject_host_mpi: inject,
+                }
+                .resolve()
+                .fabric;
+                let via_adapter = by_kind(kind).resolve_fabric(&edison, inject);
+                assert_eq!(via_resolver, via_adapter, "{kind:?} inject={inject}");
+            }
+        }
+    }
+}

@@ -1,0 +1,316 @@
+//! The communicator: per-rank virtual clocks + costed collectives.
+
+use crate::cluster::Allocation;
+use crate::des::{Duration, VirtualTime};
+use crate::net::Fabric;
+
+/// Cumulative communication statistics (for reports and tests).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CommStats {
+    pub p2p_messages: u64,
+    pub p2p_bytes: u64,
+    pub allreduces: u64,
+    pub barriers: u64,
+}
+
+/// A simulated communicator over an allocation's ranks.
+///
+/// All operations are *phase* operations: they read the clocks as they
+/// stand at entry, compute arrival times, and write the updated clocks.
+/// This snapshot semantics makes the result independent of rank
+/// iteration order, which keeps simulations deterministic.
+#[derive(Debug, Clone)]
+pub struct Comm {
+    alloc: Allocation,
+    fabric: Fabric,
+    clocks: Vec<VirtualTime>,
+    stats: CommStats,
+    // reusable scratch (see `exchange`)
+    entry_scratch: Vec<VirtualTime>,
+    node_bytes_scratch: Vec<u64>,
+}
+
+impl Comm {
+    pub fn new(alloc: Allocation, fabric: Fabric) -> Self {
+        let n = alloc.ranks();
+        Comm {
+            alloc,
+            fabric,
+            clocks: vec![VirtualTime::ZERO; n],
+            stats: CommStats::default(),
+            entry_scratch: Vec::with_capacity(n),
+            node_bytes_scratch: Vec::new(),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.clocks.len()
+    }
+
+    pub fn fabric(&self) -> &Fabric {
+        &self.fabric
+    }
+
+    pub fn allocation(&self) -> &Allocation {
+        &self.alloc
+    }
+
+    pub fn clock(&self, rank: usize) -> VirtualTime {
+        self.clocks[rank]
+    }
+
+    /// The job's wall clock: the furthest-ahead rank.
+    pub fn max_clock(&self) -> VirtualTime {
+        self.clocks.iter().copied().max().unwrap_or(VirtualTime::ZERO)
+    }
+
+    pub fn stats(&self) -> CommStats {
+        self.stats
+    }
+
+    /// Advance one rank's clock by local (compute / IO) work.
+    pub fn advance(&mut self, rank: usize, d: Duration) {
+        self.clocks[rank] += d;
+    }
+
+    /// Set every clock to at least `t` (e.g. after a containerised
+    /// process start completes at different times per rank).
+    pub fn advance_all_to(&mut self, t: VirtualTime) {
+        for c in &mut self.clocks {
+            *c = (*c).max(t);
+        }
+    }
+
+    /// One phase of point-to-point messages `(src, dst, bytes)`.
+    ///
+    /// Every message is timed from the *sender's* phase-entry clock;
+    /// each node's off-node bytes serialise through its NIC; a receiver
+    /// completes when its last incoming message lands (and not before
+    /// its own phase-entry clock).
+    pub fn exchange(&mut self, msgs: &[(usize, usize, u64)]) {
+        // PERF: `entry` snapshot and the per-node byte tally are flat
+        // vectors (a HashMap here was ~15% of large modeled runs; see
+        // EXPERIMENTS.md §Perf). The scratch buffers live on self so a
+        // solver iterating thousands of phases does not reallocate.
+        self.entry_scratch.clear();
+        self.entry_scratch.extend_from_slice(&self.clocks);
+        let entry = &self.entry_scratch;
+
+        if self.node_bytes_scratch.len() < self.alloc.nodes_used {
+            self.node_bytes_scratch.resize(self.alloc.nodes_used, 0);
+        }
+        for b in &mut self.node_bytes_scratch {
+            *b = 0;
+        }
+        for &(src, dst, bytes) in msgs {
+            if !self.alloc.same_node(src, dst) {
+                self.node_bytes_scratch[self.alloc.node_of[src]] += bytes;
+            }
+        }
+
+        // PERF: halo phases are uniform-payload, so the four possible
+        // path costs are computed once instead of per message (float ->
+        // Duration conversions were ~40% of a modeled exchange).
+        let uniform = msgs.first().map(|&(_, _, b)| b).filter(|&b| {
+            msgs.iter().all(|&(_, _, bytes)| bytes == b)
+        });
+        let pre = uniform.map(|b| {
+            (
+                self.fabric.p2p(b, true),
+                self.fabric.p2p(b, false),
+                self.fabric.p2p(0, true),
+                self.fabric.p2p(0, false),
+            )
+        });
+
+        for &(src, dst, bytes) in msgs {
+            let same = self.alloc.same_node(src, dst);
+            let (transfer, send_overhead) = match &pre {
+                Some((t_same, t_diff, o_same, o_diff)) => {
+                    if same {
+                        (*t_same, *o_same)
+                    } else {
+                        (*t_diff, *o_diff)
+                    }
+                }
+                None => (self.fabric.p2p(bytes, same), self.fabric.p2p(0, same)),
+            };
+            let mut arrive = entry[src] + transfer;
+            if !same {
+                let injected = self.node_bytes_scratch[self.alloc.node_of[src]];
+                arrive += self.fabric.nic_serialisation(injected);
+            }
+            self.clocks[dst] = self.clocks[dst].max(arrive);
+            // sending occupies the sender briefly (library overhead)
+            self.clocks[src] = self.clocks[src].max(entry[src] + send_overhead);
+        }
+        self.stats.p2p_messages += msgs.len() as u64;
+        self.stats.p2p_bytes += msgs.iter().map(|&(_, _, b)| b).sum::<u64>();
+    }
+
+    /// Allreduce of `bytes` per rank (recursive-doubling model):
+    /// a synchronising collective costing `2 ceil(log2 p) (α + s/β)` on
+    /// the worst path in the allocation.
+    pub fn allreduce(&mut self, bytes: u64) {
+        let p = self.size() as u64;
+        if p <= 1 {
+            return;
+        }
+        let start = self.max_clock();
+        let rounds = 64 - (p - 1).leading_zeros() as u64; // ceil(log2 p)
+        let multi_node = self.alloc.nodes_used > 1;
+        let per_round = self.fabric.p2p(bytes, !multi_node);
+        let cost = per_round * (2 * rounds);
+        let done = start + cost;
+        for c in &mut self.clocks {
+            *c = done;
+        }
+        self.stats.allreduces += 1;
+    }
+
+    /// Barrier: synchronise all clocks (tree of empty messages).
+    pub fn barrier(&mut self) {
+        let p = self.size() as u64;
+        let start = self.max_clock();
+        let rounds = if p <= 1 { 0 } else { 64 - (p - 1).leading_zeros() as u64 };
+        let multi_node = self.alloc.nodes_used > 1;
+        let done = start + self.fabric.p2p(0, !multi_node) * rounds;
+        for c in &mut self.clocks {
+            *c = done;
+        }
+        self.stats.barriers += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{launch, MachineSpec};
+    use crate::net::FabricKind;
+
+    fn comm(ranks: usize, fabric: FabricKind) -> Comm {
+        let m = MachineSpec::edison();
+        Comm::new(launch(&m, ranks).unwrap(), Fabric::by_kind(fabric))
+    }
+
+    #[test]
+    fn advance_moves_one_clock() {
+        let mut c = comm(4, FabricKind::Aries);
+        c.advance(2, Duration::from_millis(10));
+        assert_eq!(c.clock(2).as_secs_f64(), 0.010);
+        assert_eq!(c.clock(0), VirtualTime::ZERO);
+        assert_eq!(c.max_clock().as_secs_f64(), 0.010);
+    }
+
+    #[test]
+    fn exchange_order_independent() {
+        // same messages, different order => same clocks
+        let msgs_a = [(0usize, 1usize, 1000u64), (1, 0, 1000), (2, 3, 500)];
+        let mut msgs_b = msgs_a;
+        msgs_b.reverse();
+        let mut ca = comm(4, FabricKind::Aries);
+        let mut cb = comm(4, FabricKind::Aries);
+        ca.advance(1, Duration::from_millis(3));
+        cb.advance(1, Duration::from_millis(3));
+        ca.exchange(&msgs_a);
+        cb.exchange(&msgs_b);
+        for r in 0..4 {
+            assert_eq!(ca.clock(r), cb.clock(r), "rank {r}");
+        }
+    }
+
+    #[test]
+    fn receiver_waits_for_slow_sender() {
+        let mut c = comm(2, FabricKind::Aries);
+        c.advance(0, Duration::from_millis(50)); // rank 0 is behind in compute
+        c.exchange(&[(0, 1, 8)]);
+        assert!(c.clock(1).as_secs_f64() >= 0.050);
+    }
+
+    #[test]
+    fn tcp_cross_node_is_much_slower_than_aries() {
+        // ranks 0 and 47 are on different Edison nodes (24 cores/node)
+        let msg = [(0usize, 47usize, 1_000_000u64)];
+        let mut aries = comm(48, FabricKind::Aries);
+        let mut tcp = comm(48, FabricKind::TcpEthernet);
+        aries.exchange(&msg);
+        tcp.exchange(&msg);
+        let ratio = tcp.clock(47).as_secs_f64() / aries.clock(47).as_secs_f64();
+        assert!(ratio > 20.0, "expected order-of-magnitude gap, got {ratio}");
+    }
+
+    #[test]
+    fn same_node_exchange_fabric_insensitive() {
+        let msg = [(0usize, 1usize, 1_000_000u64)];
+        let mut aries = comm(24, FabricKind::Aries);
+        let mut tcp = comm(24, FabricKind::TcpEthernet);
+        aries.exchange(&msg);
+        tcp.exchange(&msg);
+        let ratio = tcp.clock(1).as_secs_f64() / aries.clock(1).as_secs_f64();
+        assert!(ratio < 2.0, "single-node should not depend on fabric: {ratio}");
+    }
+
+    #[test]
+    fn nic_contention_compounds() {
+        // all 24 ranks of node 0 send off-node simultaneously over TCP:
+        // the shared GbE NIC serialises ~24 MB -> ~0.2 s extra
+        let msgs: Vec<_> = (0..24).map(|r| (r, 24 + r, 1_000_000u64)).collect();
+        let mut c = comm(48, FabricKind::TcpEthernet);
+        c.exchange(&msgs);
+        let worst = c.max_clock().as_secs_f64();
+        assert!(worst > 0.2, "expected NIC serialisation, got {worst}");
+    }
+
+    #[test]
+    fn allreduce_synchronises_everyone() {
+        let mut c = comm(8, FabricKind::Aries);
+        c.advance(3, Duration::from_millis(20));
+        c.allreduce(8);
+        let t = c.clock(0);
+        assert!(t.as_secs_f64() > 0.020);
+        for r in 0..8 {
+            assert_eq!(c.clock(r), t);
+        }
+        assert_eq!(c.stats().allreduces, 1);
+    }
+
+    #[test]
+    fn allreduce_cost_grows_with_ranks_and_fabric() {
+        let mut small = comm(24, FabricKind::Aries);
+        let mut large = comm(192, FabricKind::Aries);
+        small.allreduce(8);
+        large.allreduce(8);
+        assert!(large.max_clock() > small.max_clock());
+
+        let mut tcp = comm(192, FabricKind::TcpEthernet);
+        tcp.allreduce(8);
+        let ratio = tcp.max_clock().as_secs_f64() / large.max_clock().as_secs_f64();
+        assert!(ratio > 10.0, "TCP allreduce should dominate: {ratio}");
+    }
+
+    #[test]
+    fn single_rank_collectives_are_free() {
+        let mut c = comm(1, FabricKind::Aries);
+        c.allreduce(1 << 20);
+        c.barrier();
+        assert_eq!(c.max_clock(), VirtualTime::ZERO);
+    }
+
+    #[test]
+    fn barrier_counts_and_syncs() {
+        let mut c = comm(4, FabricKind::Aries);
+        c.advance(0, Duration::from_millis(1));
+        c.barrier();
+        assert_eq!(c.stats().barriers, 1);
+        let t = c.clock(0);
+        assert!((1..4).all(|r| c.clock(r) == t));
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut c = comm(4, FabricKind::Aries);
+        c.exchange(&[(0, 1, 100), (2, 3, 200)]);
+        assert_eq!(c.stats().p2p_messages, 2);
+        assert_eq!(c.stats().p2p_bytes, 300);
+    }
+}

@@ -1,0 +1,18 @@
+//! Simulated MPI.
+//!
+//! The FEM drivers are bulk-synchronous: local compute, halo exchange,
+//! allreduce, repeat.  [`Comm`] tracks one virtual clock per rank and
+//! advances them through those phases using the α-β fabric models plus
+//! per-node NIC serialisation — enough to reproduce the communication
+//! behaviour behind Figs 3–5 without packet-level simulation.
+//!
+//! [`AbiResolver`] models the paper's central deployment trick (§4.2):
+//! swapping the container's MPICH for the ABI-compatible Cray library at
+//! load time via `LD_LIBRARY_PATH`, which is what decides whether a job
+//! gets the Aries fabric or the TCP fallback.
+
+mod abi;
+mod comm;
+
+pub use abi::{AbiResolver, McaResolution};
+pub use comm::{Comm, CommStats};

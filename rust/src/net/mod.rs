@@ -1,0 +1,55 @@
+//! Interconnect fabrics.
+//!
+//! Fig 3's central result — container MPI collapses across nodes while
+//! host-MPI injection matches native — is entirely a fabric story: the
+//! Cray MPI library drives the Aries interconnect, the container's stock
+//! MPICH falls back to TCP over the management Ethernet.  We model each
+//! fabric with the standard α-β (latency/bandwidth) cost model plus a
+//! per-node NIC serialisation term for off-node traffic, which is what
+//! produces the super-linear blow-up the paper observes at 96/192 ranks.
+
+mod fabric;
+
+pub use fabric::{Fabric, FabricKind};
+
+use crate::des::Duration;
+
+/// α-β parameters for one transport path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PathCost {
+    /// One-way message latency.
+    pub alpha: Duration,
+    /// Bandwidth in bytes/second.
+    pub beta_bytes_per_sec: f64,
+}
+
+impl PathCost {
+    /// Time to move `bytes` point-to-point on this path.
+    pub fn transfer(&self, bytes: u64) -> Duration {
+        self.alpha + Duration::from_secs_f64(bytes as f64 / self.beta_bytes_per_sec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_is_alpha_plus_size_over_beta() {
+        let p = PathCost {
+            alpha: Duration::from_micros(10),
+            beta_bytes_per_sec: 1e9,
+        };
+        let t = p.transfer(1_000_000); // 1 MB at 1 GB/s = 1 ms
+        assert_eq!(t, Duration::from_micros(10) + Duration::from_millis(1));
+    }
+
+    #[test]
+    fn zero_bytes_costs_latency_only() {
+        let p = PathCost {
+            alpha: Duration::from_micros(3),
+            beta_bytes_per_sec: 1e9,
+        };
+        assert_eq!(p.transfer(0), Duration::from_micros(3));
+    }
+}

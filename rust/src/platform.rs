@@ -1,0 +1,164 @@
+//! Execution platforms — the columns of the paper's figures.
+//!
+//! A [`Platform`] bundles a container runtime choice with the MPI
+//! deployment decision; it is the unit the experiment matrix iterates
+//! over (Fig 2: native/docker/rkt/vm; Fig 3: native/shifter+system-MPI/
+//! shifter+container-MPI; Figs 4, 5: subsets of the same).
+
+
+use crate::container::RuntimeKind;
+
+/// One column of a figure: how the program is executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Platform {
+    /// Bare-metal build, system libraries.
+    Native,
+    /// Docker runtime, container libraries.
+    Docker,
+    /// rkt runtime, container libraries.
+    Rkt,
+    /// Docker inside a VirtualBox-style VM (the 2016 macOS/Windows path).
+    Vm,
+    /// Shifter with the host (Cray) MPI injected via the MPICH ABI.
+    ShifterSystemMpi,
+    /// Shifter with the container's own MPICH (TCP fallback off-node).
+    ShifterContainerMpi,
+}
+
+impl Platform {
+    /// The runtime adapter that instantiates this platform.
+    pub fn runtime_kind(self) -> RuntimeKind {
+        match self {
+            Platform::Native => RuntimeKind::Native,
+            Platform::Docker => RuntimeKind::Docker,
+            Platform::Rkt => RuntimeKind::Rkt,
+            Platform::Vm => RuntimeKind::Vm,
+            Platform::ShifterSystemMpi | Platform::ShifterContainerMpi => RuntimeKind::Shifter,
+        }
+    }
+
+    /// Whether the host MPI library is injected (§4.2's LD_LIBRARY_PATH
+    /// trick). Native "injection" is trivially true: it links the system
+    /// MPI at build time.
+    pub fn inject_host_mpi(self) -> bool {
+        matches!(self, Platform::Native | Platform::ShifterSystemMpi)
+    }
+
+    /// Figure-2 platform set (workstation, single process).
+    pub fn workstation_set() -> [Platform; 4] {
+        [
+            Platform::Docker,
+            Platform::Rkt,
+            Platform::Native,
+            Platform::Vm,
+        ]
+    }
+
+    /// Figure-3 platform set (Edison, MPI).
+    pub fn edison_cpp_set() -> [Platform; 3] {
+        [
+            Platform::Native,
+            Platform::ShifterSystemMpi,
+            Platform::ShifterContainerMpi,
+        ]
+    }
+
+    /// Figure-4 platform set (Edison, Python).
+    pub fn edison_python_set() -> [Platform; 2] {
+        [Platform::Native, Platform::ShifterSystemMpi]
+    }
+
+    /// Short label used in reports (matches the paper's legends).
+    pub fn label(self) -> &'static str {
+        match self {
+            Platform::Native => "native",
+            Platform::Docker => "docker",
+            Platform::Rkt => "rkt",
+            Platform::Vm => "vm",
+            Platform::ShifterSystemMpi => "shifter (system MPI)",
+            Platform::ShifterContainerMpi => "shifter (container MPI)",
+        }
+    }
+
+    /// Is this a containerised platform (anything but native)?
+    pub fn containerised(self) -> bool {
+        self != Platform::Native
+    }
+}
+
+impl std::fmt::Display for Platform {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+impl std::str::FromStr for Platform {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(Platform::Native),
+            "docker" => Ok(Platform::Docker),
+            "rkt" => Ok(Platform::Rkt),
+            "vm" => Ok(Platform::Vm),
+            "shifter" | "shifter-system-mpi" => Ok(Platform::ShifterSystemMpi),
+            "shifter-container-mpi" => Ok(Platform::ShifterContainerMpi),
+            other => Err(format!("unknown platform `{other}`")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_kind_mapping() {
+        assert_eq!(Platform::Native.runtime_kind(), RuntimeKind::Native);
+        assert_eq!(
+            Platform::ShifterSystemMpi.runtime_kind(),
+            RuntimeKind::Shifter
+        );
+        assert_eq!(
+            Platform::ShifterContainerMpi.runtime_kind(),
+            RuntimeKind::Shifter
+        );
+    }
+
+    #[test]
+    fn injection_policy() {
+        assert!(Platform::Native.inject_host_mpi());
+        assert!(Platform::ShifterSystemMpi.inject_host_mpi());
+        assert!(!Platform::ShifterContainerMpi.inject_host_mpi());
+        assert!(!Platform::Docker.inject_host_mpi());
+    }
+
+    #[test]
+    fn figure_sets_match_the_paper() {
+        assert_eq!(Platform::workstation_set().len(), 4);
+        assert_eq!(Platform::edison_cpp_set().len(), 3);
+        assert_eq!(Platform::edison_python_set().len(), 2);
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        for p in [
+            Platform::Native,
+            Platform::Docker,
+            Platform::Rkt,
+            Platform::Vm,
+        ] {
+            assert_eq!(p.label().parse::<Platform>().unwrap(), p);
+        }
+        assert_eq!(
+            "shifter-container-mpi".parse::<Platform>().unwrap(),
+            Platform::ShifterContainerMpi
+        );
+        assert!("qemu".parse::<Platform>().is_err());
+    }
+
+    #[test]
+    fn containerised_flag() {
+        assert!(!Platform::Native.containerised());
+        assert!(Platform::Docker.containerised());
+    }
+}

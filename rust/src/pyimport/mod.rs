@@ -1,0 +1,217 @@
+//! The "Python import problem" (§4.2, Fig 4).
+//!
+//! `import dolfin` on every MPI rank walks a deep module graph; each
+//! module costs a handful of filesystem metadata operations (locate the
+//! `.py`, the `.pyc`, `__init__` chains) plus a small read.  On a
+//! parallel filesystem those lookups contend at the metadata server; on
+//! a loop-mounted container image they hit the node page cache (after
+//! one bulk fetch).  [`ModuleGraph`] synthesises a FEniCS-scale import
+//! set; [`replay`] runs it for every rank against any [`FileSystem`]
+//! model and returns per-rank completion times.
+//!
+//! Scale reference: the paper reports >30 minutes at 1000 ranks on some
+//! systems, citing [17] (ARCHER measured minutes at hundreds of ranks);
+//! `fenics_stack()` sizes the graph to match FEniCS 2016 (~5k module
+//! files across dolfin/ufl/ffc/instant/numpy/sympy/six...).
+
+use crate::cluster::Allocation;
+use crate::des::{Duration, VirtualTime};
+use crate::fs::{FileSystem, FsOp};
+
+/// One module to import.
+#[derive(Debug, Clone)]
+pub struct Module {
+    pub name: String,
+    /// Metadata operations the interpreter issues to locate it
+    /// (path-entry stats, `.py`/`.pyc` lookups).
+    pub meta_ops: u32,
+    /// Source bytes read (and byte-compiled on first import).
+    pub bytes: u64,
+}
+
+/// A package's worth of modules.
+#[derive(Debug, Clone)]
+pub struct ModuleGraph {
+    pub modules: Vec<Module>,
+}
+
+impl ModuleGraph {
+    /// The FEniCS Python stack, sized from the 2016-era packages.
+    pub fn fenics_stack() -> Self {
+        // (package, module files, mean source bytes)
+        let packages: &[(&str, usize, u64)] = &[
+            ("dolfin", 320, 9_000),
+            ("ufl", 180, 11_000),
+            ("ffc", 140, 10_000),
+            ("fiat", 90, 12_000),
+            ("instant", 40, 8_000),
+            ("numpy", 420, 14_000),
+            ("scipy", 600, 13_000),
+            ("sympy", 900, 15_000),
+            ("mpi4py", 30, 9_000),
+            ("six+setuptools+pkg_resources", 160, 10_000),
+            ("stdlib", 800, 7_000),
+        ];
+        let mut modules = Vec::new();
+        for (pkg, count, mean) in packages {
+            for i in 0..*count {
+                modules.push(Module {
+                    name: format!("{pkg}.m{i}"),
+                    // sys.path has several entries; CPython stats each
+                    meta_ops: 4,
+                    bytes: *mean,
+                });
+            }
+        }
+        ModuleGraph { modules }
+    }
+
+    /// A small graph for tests.
+    pub fn small(n: usize) -> Self {
+        ModuleGraph {
+            modules: (0..n)
+                .map(|i| Module {
+                    name: format!("m{i}"),
+                    meta_ops: 3,
+                    bytes: 4_000,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn total_files(&self) -> usize {
+        self.modules.len()
+    }
+
+    pub fn total_meta_ops(&self) -> u64 {
+        self.modules.iter().map(|m| m.meta_ops as u64).sum()
+    }
+}
+
+/// Result of replaying the import phase.
+#[derive(Debug, Clone)]
+pub struct ImportReport {
+    /// Per-rank completion instant.
+    pub rank_done: Vec<VirtualTime>,
+    /// Max across ranks minus start (the phase's wall time).
+    pub wall: Duration,
+}
+
+/// Replay the import of `graph` on every rank of `alloc`, all starting
+/// at `start`, against filesystem `fs`.  Each rank issues its modules'
+/// metadata ops and reads sequentially (CPython imports are serial);
+/// cross-rank contention emerges inside the filesystem model.
+pub fn replay(
+    graph: &ModuleGraph,
+    alloc: &Allocation,
+    fs: &mut dyn FileSystem,
+    start: VirtualTime,
+) -> ImportReport {
+    let ranks = alloc.ranks();
+    let mut clocks = vec![start; ranks];
+    // interleave ranks module-by-module: closer to the real arrival
+    // pattern at the MDS than letting rank 0 finish everything first
+    for module in &graph.modules {
+        for (rank, clock) in clocks.iter_mut().enumerate() {
+            let node = alloc.node_of[rank];
+            let mut t = *clock;
+            // PERF: a module's metadata ops are sequential RPCs from one
+            // rank; batching them as one queue entry of meta_ops x
+            // service preserves per-rank totals and MDS utilisation
+            // while cutting simulator work ~4x (EXPERIMENTS.md §Perf).
+            t = fs.submit_meta_batch(t, node, module.meta_ops);
+            t = fs.submit(t, node, FsOp::Read { bytes: module.bytes });
+            // parse/compile cost (CPU, not FS): ~2 us per KB of source
+            t += Duration::from_nanos(module.bytes * 2);
+            *clock = t;
+        }
+    }
+    let done = clocks.iter().copied().max().unwrap_or(start);
+    ImportReport {
+        rank_done: clocks,
+        wall: done - start,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{launch, MachineSpec};
+    use crate::fs::{ImageFs, LocalFs, ParallelFs};
+
+    #[test]
+    fn fenics_stack_is_fenics_sized() {
+        let g = ModuleGraph::fenics_stack();
+        assert!(g.total_files() > 3_000, "got {}", g.total_files());
+        assert!(g.total_files() < 10_000);
+        assert!(g.total_meta_ops() > 10_000);
+    }
+
+    #[test]
+    fn contention_grows_with_ranks_on_lustre() {
+        let m = MachineSpec::edison();
+        let g = ModuleGraph::small(200);
+        let mut walls = Vec::new();
+        for ranks in [24usize, 96] {
+            let alloc = launch(&m, ranks).unwrap();
+            let mut fs = ParallelFs::edison(1);
+            let rep = replay(&g, &alloc, &mut fs, VirtualTime::ZERO);
+            walls.push(rep.wall.as_secs_f64());
+        }
+        assert!(
+            walls[1] > 2.0 * walls[0],
+            "import should degrade with rank count: {walls:?}"
+        );
+    }
+
+    #[test]
+    fn image_mount_beats_lustre_by_a_lot() {
+        let m = MachineSpec::edison();
+        let alloc = launch(&m, 96).unwrap();
+        let g = ModuleGraph::fenics_stack();
+
+        let mut lustre = ParallelFs::edison(2);
+        let native = replay(&g, &alloc, &mut lustre, VirtualTime::ZERO).wall;
+
+        let mut image = ImageFs::new(1_200_000_000, ParallelFs::edison(3));
+        let contained = replay(&g, &alloc, &mut image, VirtualTime::ZERO).wall;
+
+        assert!(
+            native.as_secs_f64() > 5.0 * contained.as_secs_f64(),
+            "native {native} vs container {contained}"
+        );
+    }
+
+    #[test]
+    fn workstation_import_is_fast_either_way() {
+        let m = MachineSpec::workstation();
+        let alloc = launch(&m, 1).unwrap();
+        let g = ModuleGraph::fenics_stack();
+        let mut fs = LocalFs::default();
+        let rep = replay(&g, &alloc, &mut fs, VirtualTime::ZERO);
+        assert!(rep.wall.as_secs_f64() < 2.0, "got {}", rep.wall);
+    }
+
+    #[test]
+    fn all_ranks_complete_and_are_recorded() {
+        let m = MachineSpec::edison();
+        let alloc = launch(&m, 48).unwrap();
+        let g = ModuleGraph::small(10);
+        let mut fs = ParallelFs::edison(4);
+        let rep = replay(&g, &alloc, &mut fs, VirtualTime::ZERO);
+        assert_eq!(rep.rank_done.len(), 48);
+        let max = rep.rank_done.iter().copied().max().unwrap();
+        assert_eq!(max - VirtualTime::ZERO, rep.wall);
+    }
+
+    #[test]
+    fn replay_respects_start_time() {
+        let m = MachineSpec::workstation();
+        let alloc = launch(&m, 2).unwrap();
+        let g = ModuleGraph::small(5);
+        let mut fs = LocalFs::default();
+        let start = VirtualTime::ZERO + Duration::from_millis(500);
+        let rep = replay(&g, &alloc, &mut fs, start);
+        assert!(rep.rank_done.iter().all(|&t| t > start));
+    }
+}

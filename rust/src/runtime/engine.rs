@@ -1,0 +1,285 @@
+//! The PJRT execution engine.
+//!
+//! One process-wide CPU client; executables are compiled from HLO text
+//! on first use and cached by entry name.  All tensors are f32 (the
+//! dtype the L2 layer exports); [`TensorBuf`] carries shape + data.
+//!
+//! Interchange is HLO *text* — see `python/compile/aot.py` for why the
+//! serialized-proto path is a dead end with this xla_extension build.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{EntryMeta, Manifest};
+
+/// A host-side f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorBuf {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorBuf {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        TensorBuf { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product::<usize>().max(1);
+        TensorBuf {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn scalar1(v: f32) -> Self {
+        TensorBuf {
+            shape: vec![1],
+            data: vec![v],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Compiled-executable cache over the PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Total `execute` calls (performance accounting).
+    pub calls: u64,
+}
+
+impl Engine {
+    /// Open the artifacts directory (compiles lazily, per entry).
+    pub fn open(dir: PathBuf) -> Result<Engine> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            dir,
+            manifest,
+            cache: HashMap::new(),
+            calls: 0,
+        })
+    }
+
+    /// Open the default artifacts location.
+    pub fn open_default() -> Result<Engine> {
+        Engine::open(super::artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn compile(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let entry = self
+                .manifest
+                .entry(name)
+                .with_context(|| format!("no such artifact `{name}`"))?
+                .clone();
+            let path = self.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Pre-compile an entry (warm-up; e.g. before timing).
+    pub fn warm(&mut self, name: &str) -> Result<()> {
+        self.compile(name).map(|_| ())
+    }
+
+    /// Execute `name` with `inputs`; returns the tuple elements.
+    pub fn execute(&mut self, name: &str, inputs: &[TensorBuf]) -> Result<Vec<TensorBuf>> {
+        let entry = self
+            .manifest
+            .entry(name)
+            .with_context(|| format!("no such artifact `{name}`"))?
+            .clone();
+        self.check_inputs(&entry, inputs)?;
+
+        self.compile(name)?;
+        let exe = &self.cache[name];
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let lit = xla::Literal::vec1(&t.data);
+                if t.shape.len() == 1 {
+                    Ok(lit)
+                } else {
+                    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+                }
+            })
+            .collect::<Result<_>>()?;
+
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple literal.
+        let elems = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {name}: {e:?}"))?;
+        if elems.len() != entry.outputs.len() {
+            bail!(
+                "{name}: manifest promises {} outputs, executable returned {}",
+                entry.outputs.len(),
+                elems.len()
+            );
+        }
+        self.calls += 1;
+        elems
+            .into_iter()
+            .zip(&entry.outputs)
+            .map(|(lit, meta)| {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("reading output of {name}: {e:?}"))?;
+                Ok(TensorBuf::new(meta.shape.clone(), data))
+            })
+            .collect()
+    }
+
+    fn check_inputs(&self, entry: &EntryMeta, inputs: &[TensorBuf]) -> Result<()> {
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                entry.name,
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, meta)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            if t.shape != meta.shape {
+                bail!(
+                    "{} input {i}: expected shape {:?}, got {:?}",
+                    entry.name,
+                    meta.shape,
+                    t.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, artifacts_dir};
+
+    fn engine() -> Option<Engine> {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(Engine::open(artifacts_dir()).unwrap())
+    }
+
+    #[test]
+    fn tensorbuf_basics() {
+        let z = TensorBuf::zeros(vec![2, 3]);
+        assert_eq!(z.len(), 6);
+        assert_eq!(TensorBuf::scalar1(2.5).data, vec![2.5]);
+    }
+
+    #[test]
+    fn dot_entry_computes_a_dot_product() {
+        let Some(mut e) = engine() else { return };
+        let n = 4096;
+        let a = TensorBuf::new(vec![n], (0..n).map(|i| (i % 7) as f32 * 0.1).collect());
+        let b = TensorBuf::new(vec![n], (0..n).map(|i| (i % 5) as f32 * 0.2).collect());
+        let out = e.execute("dot_L4096", &[a.clone(), b.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        let want: f32 = a.data.iter().zip(&b.data).map(|(x, y)| x * y).sum();
+        let got = out[0].data[0];
+        assert!(
+            (got - want).abs() <= 1e-2 * want.abs().max(1.0),
+            "got {got}, want {want}"
+        );
+        assert_eq!(e.calls, 1);
+    }
+
+    #[test]
+    fn laplacian_entry_matches_manual_stencil() {
+        let Some(mut e) = engine() else { return };
+        let n = 16usize;
+        let np = n + 2;
+        // u = linear ramp in x: interior Laplacian of the *scaled* operator
+        // is -h^2 lap = 0 in the interior away from the zero-halo boundary
+        let mut u = vec![0.0f32; np * np * np];
+        for z in 0..np {
+            for y in 0..np {
+                for x in 0..np {
+                    u[(z * np + y) * np + x] = x as f32;
+                }
+            }
+        }
+        let out = e
+            .execute("cg_apdot_p3d_n16", &[TensorBuf::new(vec![np, np, np], u)])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let ap = &out[0];
+        assert_eq!(ap.len(), n * n * n);
+        // interior cell well away from the boundary: 6c - sum(neigh) = 0
+        let idx = |z: usize, y: usize, x: usize| (z * n + y) * n + x;
+        assert!(ap.data[idx(7, 7, 7)].abs() < 1e-4);
+    }
+
+    #[test]
+    fn wrong_shape_is_rejected_before_pjrt() {
+        let Some(mut e) = engine() else { return };
+        let bad = TensorBuf::zeros(vec![3, 3]);
+        let err = e.execute("dot_L4096", &[bad.clone(), bad]).unwrap_err();
+        assert!(err.to_string().contains("expected shape"));
+    }
+
+    #[test]
+    fn wrong_arity_is_rejected() {
+        let Some(mut e) = engine() else { return };
+        let err = e
+            .execute("dot_L4096", &[TensorBuf::zeros(vec![4096])])
+            .unwrap_err();
+        assert!(err.to_string().contains("expected 2 inputs"));
+    }
+
+    #[test]
+    fn unknown_entry_is_an_error() {
+        let Some(mut e) = engine() else { return };
+        assert!(e.execute("nonexistent", &[]).is_err());
+    }
+
+    #[test]
+    fn executables_are_cached() {
+        let Some(mut e) = engine() else { return };
+        let a = TensorBuf::zeros(vec![4096]);
+        e.execute("dot_L4096", &[a.clone(), a.clone()]).unwrap();
+        e.execute("dot_L4096", &[a.clone(), a]).unwrap();
+        assert_eq!(e.cache.len(), 1);
+        assert_eq!(e.calls, 2);
+    }
+}

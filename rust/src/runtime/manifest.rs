@@ -1,0 +1,180 @@
+//! The AOT artifact manifest (written by `python/compile/aot.py`).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json;
+
+/// Input/output tensor description.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &json::Value) -> Result<Self> {
+        let shape = v
+            .get("shape")
+            .as_arr()
+            .context("tensor meta missing `shape`")?
+            .iter()
+            .map(|d| d.as_u64().map(|u| u as usize).context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .as_str()
+            .context("tensor meta missing `dtype`")?
+            .to_string();
+        Ok(TensorMeta { shape, dtype })
+    }
+}
+
+/// One AOT-exported entry point.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub name: String,
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    pub entries: Vec<EntryMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = json::parse(text).context("parsing manifest.json")?;
+        let format = v
+            .get("format")
+            .as_str()
+            .context("manifest missing `format`")?
+            .to_string();
+        if format != "hlo-text/return-tuple" {
+            bail!("unsupported artifact format `{format}` (want hlo-text/return-tuple)");
+        }
+        let mut entries = Vec::new();
+        for e in v.get("entries").as_arr().context("manifest missing `entries`")? {
+            let name = e.get("name").as_str().context("entry missing name")?;
+            let file = e.get("file").as_str().context("entry missing file")?;
+            let sha256 = e.get("sha256").as_str().unwrap_or("").to_string();
+            let inputs = e
+                .get("inputs")
+                .as_arr()
+                .context("entry missing inputs")?
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")
+                .as_arr()
+                .context("entry missing outputs")?
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(EntryMeta {
+                name: name.to_string(),
+                file: file.to_string(),
+                sha256,
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest { format, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&EntryMeta> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|e| e.name.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text/return-tuple",
+      "entries": [
+        {"name": "dot_L4096", "file": "dot_L4096.hlo.txt", "sha256": "ab",
+         "inputs": [{"shape": [4096], "dtype": "float32"},
+                    {"shape": [4096], "dtype": "float32"}],
+         "outputs": [{"shape": [1], "dtype": "float32"}],
+         "elapsed_s": 0.1}
+      ]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.entry("dot_L4096").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![4096]);
+        assert_eq!(e.inputs[0].element_count(), 4096);
+        assert_eq!(e.outputs[0].shape, vec![1]);
+        assert_eq!(e.file, "dot_L4096.hlo.txt");
+    }
+
+    #[test]
+    fn unknown_entry_is_none() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.entry("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text/return-tuple", "proto");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"format": "hlo-text/return-tuple"}"#).is_err());
+        assert!(Manifest::parse("{}").is_err());
+    }
+
+    #[test]
+    fn scalar_shape_counts_one() {
+        let t = TensorMeta {
+            shape: vec![],
+            dtype: "float32".into(),
+        };
+        assert_eq!(t.element_count(), 1);
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&crate::runtime::artifacts_dir()).unwrap();
+        assert!(m.entries.len() >= 30, "expected the full entry set");
+        assert!(m.entry("cg_apdot_p3d_n16").is_some());
+        assert!(m.entry("lu_poisson2d_n32").is_some());
+        for e in &m.entries {
+            assert!(!e.inputs.is_empty() || e.name.starts_with("const"), "{}", e.name);
+            assert!(!e.outputs.is_empty(), "{}", e.name);
+        }
+    }
+}

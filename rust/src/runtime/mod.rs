@@ -1,0 +1,46 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` (the only step that runs Python) lowers every L2
+//! entry point to HLO *text* plus a `manifest.json`.  This module is the
+//! request-path side: it parses the manifest, compiles each artifact
+//! once on the PJRT CPU client ([`Engine`]), caches the loaded
+//! executables, and exposes a typed `execute` over f32 buffers.
+//!
+//! [`calibrate`] measures the wall-clock cost of each entry point —
+//! those per-call costs are what the discrete-event simulation charges
+//! for compute segments at scale (DESIGN.md §3), so the simulated
+//! figures rest on *measured* compute times, not guesses.
+
+mod calibrate;
+mod engine;
+mod manifest;
+
+pub use calibrate::{calibrate, CalibrationTable};
+pub use engine::{Engine, TensorBuf};
+pub use manifest::{EntryMeta, Manifest};
+
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$HARBOR_ARTIFACTS` or `./artifacts`
+/// relative to the workspace root (walking up from cwd).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("HARBOR_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// True if the AOT artifacts are present (tests that need PJRT skip
+/// politely when they are not).
+pub fn artifacts_available() -> bool {
+    Path::new(&artifacts_dir()).join("manifest.json").exists()
+}

@@ -1,0 +1,272 @@
+//! A tiny declarative flag parser (the offline stand-in for `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and generated `--help` text.  Subcommand dispatch lives in
+//! `main.rs`; this handles one command's arguments.
+
+use std::collections::BTreeMap;
+
+/// Specification of one flag.
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<&'static str>,
+}
+
+/// Declarative argument parser for one (sub)command.
+#[derive(Debug, Clone)]
+pub struct Args {
+    command: &'static str,
+    about: &'static str,
+    flags: Vec<FlagSpec>,
+    positional: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed results.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+/// CLI usage error (message already formatted for the user).
+#[derive(Debug)]
+pub struct UsageError(pub String);
+impl std::fmt::Display for UsageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for UsageError {}
+
+impl Args {
+    pub fn new(command: &'static str, about: &'static str) -> Self {
+        Args {
+            command,
+            about,
+            flags: Vec::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// `--name <value>` with optional default.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            takes_value: true,
+            default,
+        });
+        self
+    }
+
+    /// Boolean `--name`.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Required positional argument.
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional.push((name, help));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  harbor {}", self.command, self.about, self.command);
+        for (p, _) in &self.positional {
+            s.push_str(&format!(" <{p}>"));
+        }
+        if !self.flags.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        if !self.positional.is_empty() {
+            s.push_str("\n\nARGS:\n");
+            for (p, h) in &self.positional {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        s.push_str("\n\nOPTIONS:\n");
+        for f in &self.flags {
+            let mut line = format!("  --{}", f.name);
+            if f.takes_value {
+                line.push_str(" <value>");
+            }
+            if let Some(d) = f.default {
+                line.push_str(&format!(" (default: {d})"));
+            }
+            s.push_str(&format!("{line}\n      {}\n", f.help));
+        }
+        s
+    }
+
+    /// Parse raw args (not including the subcommand word).
+    pub fn parse(&self, raw: &[String]) -> Result<Parsed, UsageError> {
+        let mut values = BTreeMap::new();
+        let mut bools = BTreeMap::new();
+        let mut positional = Vec::new();
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                values.insert(f.name.to_string(), d.to_string());
+            }
+            if !f.takes_value {
+                bools.insert(f.name.to_string(), false);
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if a == "--help" || a == "-h" {
+                return Err(UsageError(self.usage()));
+            }
+            if let Some(name_val) = a.strip_prefix("--") {
+                let (name, inline) = match name_val.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name_val, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| UsageError(format!("unknown flag --{name}\n\n{}", self.usage())))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| UsageError(format!("--{name} needs a value")))?
+                        }
+                    };
+                    values.insert(name.to_string(), v);
+                } else {
+                    if inline.is_some() {
+                        return Err(UsageError(format!("--{name} takes no value")));
+                    }
+                    bools.insert(name.to_string(), true);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        if positional.len() < self.positional.len() {
+            return Err(UsageError(format!(
+                "missing required argument <{}>\n\n{}",
+                self.positional[positional.len()].0,
+                self.usage()
+            )));
+        }
+        Ok(Parsed {
+            values,
+            bools,
+            positional,
+        })
+    }
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Value of a defaulted flag (panics if the flag was not declared
+    /// with a default — a programming error, not a user error).
+    pub fn req(&self, name: &str) -> &str {
+        self.get(name)
+            .unwrap_or_else(|| panic!("flag --{name} has no value or default"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn pos(&self, idx: usize) -> &str {
+        &self.positional[idx]
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, name: &str) -> Result<T, UsageError> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| UsageError(format!("--{name} is required")))?;
+        raw.parse()
+            .map_err(|_| UsageError(format!("--{name}: cannot parse `{raw}`")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args() -> Args {
+        Args::new("bench", "run a figure benchmark")
+            .opt("reps", "repetitions", Some("5"))
+            .opt("out", "output path", None)
+            .switch("json", "emit JSON")
+            .positional("figure", "which figure")
+    }
+
+    fn raw(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_everything() {
+        let p = args()
+            .parse(&raw(&["fig2", "--reps", "3", "--json", "--out=report.json"]))
+            .unwrap();
+        assert_eq!(p.pos(0), "fig2");
+        assert_eq!(p.req("reps"), "3");
+        assert_eq!(p.get("out"), Some("report.json"));
+        assert!(p.flag("json"));
+        assert_eq!(p.parse_num::<usize>("reps").unwrap(), 3);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = args().parse(&raw(&["fig3"])).unwrap();
+        assert_eq!(p.req("reps"), "5");
+        assert_eq!(p.get("out"), None);
+        assert!(!p.flag("json"));
+    }
+
+    #[test]
+    fn missing_positional_is_an_error() {
+        let e = args().parse(&raw(&["--reps", "2"])).unwrap_err();
+        assert!(e.0.contains("<figure>"));
+    }
+
+    #[test]
+    fn unknown_flag_is_an_error() {
+        let e = args().parse(&raw(&["fig2", "--bogus"])).unwrap_err();
+        assert!(e.0.contains("--bogus"));
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        let e = args().parse(&raw(&["fig2", "--reps"])).unwrap_err();
+        assert!(e.0.contains("needs a value"));
+    }
+
+    #[test]
+    fn bad_number_is_an_error() {
+        let p = args().parse(&raw(&["fig2", "--reps", "many"])).unwrap();
+        assert!(p.parse_num::<usize>("reps").is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let e = args().parse(&raw(&["--help"])).unwrap_err();
+        assert!(e.0.contains("USAGE"));
+        assert!(e.0.contains("--reps"));
+    }
+}

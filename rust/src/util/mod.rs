@@ -1,0 +1,19 @@
+//! Self-contained utilities.
+//!
+//! This build environment is fully offline with only the `xla` crate's
+//! dependency closure cached, so the staples a Rust project would import
+//! are implemented here instead:
+//!
+//! * [`json`] — a small, strict JSON parser + serializer (replaces
+//!   `serde_json`); used for the AOT artifact manifest, the calibration
+//!   table, and machine-readable benchmark reports.
+//! * [`rng`] — xoshiro256** PRNG (replaces `rand`); seeds the
+//!   deterministic simulation noise streams.
+//! * [`cli`] — a tiny declarative flag parser (replaces `clap`).
+//! * [`proptest`] — a miniature property-testing loop with failure-case
+//!   reporting (replaces `proptest` for our invariant tests).
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;

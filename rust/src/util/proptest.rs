@@ -1,0 +1,150 @@
+//! Miniature property-testing loop (the offline stand-in for `proptest`).
+//!
+//! [`run`] drives a property over `cases` randomly generated inputs; on
+//! failure it reports the seed and the case index so the exact input can
+//! be regenerated.  Generators are plain closures over [`Gen`], which
+//! wraps the crate RNG with convenience samplers.
+
+use super::rng::Xoshiro256;
+
+/// Input generator handle passed to property closures.
+pub struct Gen {
+    rng: Xoshiro256,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + (self.rng.next_u64() % (hi - lo + 1))
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// A vector of `len` items drawn by `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.below(items.len())]
+    }
+
+    /// An ASCII identifier-ish string.
+    pub fn ident(&mut self, max_len: usize) -> String {
+        let len = self.usize_in(1, max_len);
+        (0..len)
+            .map(|_| {
+                let alphabet = b"abcdefghijklmnopqrstuvwxyz0123456789_-";
+                alphabet[self.rng.below(alphabet.len())] as char
+            })
+            .collect()
+    }
+}
+
+/// Run `property` over `cases` random inputs. Panics (test failure) with
+/// the reproducing seed on the first violated case.
+pub fn run(name: &str, cases: usize, mut property: impl FnMut(&mut Gen) -> Result<(), String>) {
+    run_seeded(name, 0xda7a_5eed, cases, &mut property);
+}
+
+/// As [`run`] with an explicit base seed (used to reproduce failures).
+pub fn run_seeded(
+    name: &str,
+    base_seed: u64,
+    cases: usize,
+    property: &mut impl FnMut(&mut Gen) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut g = Gen {
+            rng: Xoshiro256::seed_from_u64(seed),
+        };
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property `{name}` failed on case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with run_seeded(\"{name}\", {seed:#x}, 1, ...)"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run("tautology", 50, |g| {
+            count += 1;
+            let x = g.usize_in(0, 10);
+            if x <= 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `falsum` failed")]
+    fn failing_property_panics_with_seed() {
+        run("falsum", 10, |g| {
+            let x = g.usize_in(0, 100);
+            if x < 101 {
+                Err(format!("x = {x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        run("bounds", 200, |g| {
+            let a = g.usize_in(3, 7);
+            let b = g.f64_in(-1.0, 1.0);
+            let c = g.u64_in(10, 20);
+            let s = g.ident(12);
+            if !(3..=7).contains(&a) {
+                return Err(format!("usize {a}"));
+            }
+            if !(-1.0..1.0).contains(&b) {
+                return Err(format!("f64 {b}"));
+            }
+            if !(10..=20).contains(&c) {
+                return Err(format!("u64 {c}"));
+            }
+            if s.is_empty() || s.len() > 12 {
+                return Err(format!("ident {s:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn vec_and_choose() {
+        run("vec-choose", 50, |g| {
+            let v = g.vec(5, |g| g.usize_in(0, 9));
+            if v.len() != 5 {
+                return Err("len".into());
+            }
+            let picked = *g.choose(&v);
+            if !v.contains(&picked) {
+                return Err("choose out of set".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,341 @@
+//! Ablation studies over the simulator's modelling choices.
+//!
+//! DESIGN.md grounds each figure in a mechanism (MDS queueing for Fig 4,
+//! NIC serialisation + latency for Fig 3, AVX arch flags for Fig 5a).
+//! These sweeps vary each mechanism's parameter and report how the
+//! corresponding figure statistic responds — showing the conclusions are
+//! driven by the mechanism, not by a hand-picked constant.  Run with
+//! `harbor ablate <study>`; asserted qualitatively in the unit tests.
+
+use crate::cluster::{launch, MachineSpec};
+use crate::des::{Duration, VirtualTime};
+use crate::fem::exec::{ComputeScale, Exec};
+use crate::fem::gmg::{vcycles, GmgConfig};
+use crate::fem::grid::Decomp;
+use crate::fs::{ImageFs, ParallelFs};
+use crate::mpi::Comm;
+use crate::net::Fabric;
+use crate::pyimport::{replay, ModuleGraph};
+use crate::runtime::CalibrationTable;
+
+/// One ablation row: parameter value -> observed statistic(s).
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub param: f64,
+    pub values: Vec<(String, f64)>,
+}
+
+/// A completed study.
+#[derive(Debug, Clone)]
+pub struct Ablation {
+    pub name: String,
+    pub param_name: String,
+    pub rows: Vec<AblationRow>,
+    pub conclusion: String,
+}
+
+impl Ablation {
+    pub fn render(&self) -> String {
+        let mut s = format!("== ablation: {} ==\n", self.name);
+        if let Some(first) = self.rows.first() {
+            s.push_str(&format!("{:>14}", self.param_name));
+            for (k, _) in &first.values {
+                s.push_str(&format!("  {k:>16}"));
+            }
+            s.push('\n');
+        }
+        for row in &self.rows {
+            s.push_str(&format!("{:>14.3}", row.param));
+            for (_, v) in &row.values {
+                s.push_str(&format!("  {v:>16.4}"));
+            }
+            s.push('\n');
+        }
+        s.push_str(&format!("-> {}\n", self.conclusion));
+        s
+    }
+}
+
+/// Fig 4 mechanism: the native import time vs the MDS handler pool.
+/// More handlers = less serialisation; the container side is flat.
+pub fn mds_handlers(ranks: usize) -> Ablation {
+    let machine = MachineSpec::edison();
+    let alloc = launch(&machine, ranks).expect("fits");
+    let graph = ModuleGraph::fenics_stack();
+    let mut rows = Vec::new();
+    for handlers in [4usize, 8, 16, 32, 64, 128] {
+        let mut native_fs = ParallelFs::new(
+            handlers,
+            Duration::from_micros(100),
+            48.0e9,
+            0.0, // noise off: isolate the queueing effect
+            1,
+        );
+        let native = replay(&graph, &alloc, &mut native_fs, VirtualTime::ZERO)
+            .wall
+            .as_secs_f64();
+        let mut image_fs = ImageFs::new(
+            1_200_000_000,
+            ParallelFs::new(handlers, Duration::from_micros(100), 48.0e9, 0.0, 2),
+        );
+        let shifter = replay(&graph, &alloc, &mut image_fs, VirtualTime::ZERO)
+            .wall
+            .as_secs_f64();
+        rows.push(AblationRow {
+            param: handlers as f64,
+            values: vec![
+                ("native [s]".into(), native),
+                ("shifter [s]".into(), shifter),
+                ("speedup".into(), native / shifter),
+            ],
+        });
+    }
+    Ablation {
+        name: format!("Fig 4 vs MDS handler pool ({ranks} ranks)"),
+        param_name: "mds handlers".into(),
+        rows,
+        conclusion: "native import scales ~1/handlers (pure queueing); the container \
+                     path is handler-independent — the Fig 4 gap is the MDS, not a constant"
+            .into(),
+    }
+}
+
+/// Fig 3 mechanism: container-MPI blow-up vs the fallback NIC bandwidth.
+pub fn nic_bandwidth(ranks: usize) -> Ablation {
+    let table = CalibrationTable::builtin_fallback();
+    let machine = MachineSpec::edison();
+    let decomp = Decomp::new(ranks, 32);
+    let mut rows = Vec::new();
+    for mbps in [50.0f64, 117.0, 500.0, 1250.0, 5000.0, 10000.0] {
+        let mut fabric = Fabric::tcp_ethernet();
+        fabric.inter_node.beta_bytes_per_sec = mbps * 1e6;
+        fabric.nic_bytes_per_sec = mbps * 1e6;
+        let mut comm = Comm::new(launch(&machine, ranks).unwrap(), fabric);
+        let mut aries = Comm::new(launch(&machine, ranks).unwrap(), Fabric::aries());
+        let cfg = crate::fem::cg::CgConfig {
+            modeled_iters: 50,
+            ..Default::default()
+        };
+        for (c, _) in [(&mut comm, 0), (&mut aries, 1)] {
+            crate::fem::cg::distributed_cg(
+                &mut Exec::Modeled { table: &table },
+                c,
+                &mut ComputeScale::none(),
+                &decomp,
+                &[],
+                &cfg,
+            )
+            .expect("modeled cg");
+        }
+        rows.push(AblationRow {
+            param: mbps,
+            values: vec![
+                ("tcp solve [s]".into(), comm.max_clock().as_secs_f64()),
+                ("aries [s]".into(), aries.max_clock().as_secs_f64()),
+                (
+                    "ratio".into(),
+                    comm.max_clock().as_secs_f64() / aries.max_clock().as_secs_f64(),
+                ),
+            ],
+        });
+    }
+    Ablation {
+        name: format!("Fig 3 vs fallback-fabric bandwidth ({ranks} ranks)"),
+        param_name: "NIC [MB/s]".into(),
+        rows,
+        conclusion: "the container-MPI penalty shrinks as the fallback fabric approaches \
+                     Aries bandwidth but never reaches parity (50 us latency floor) — \
+                     matching the paper's 'load the system MPI' recommendation"
+            .into(),
+    }
+}
+
+/// GMG design choice: smoothing sweeps per level (nu) vs virtual solve
+/// time — V(1,1) is cheapest per cycle but converges slower; the modeled
+/// cost says what the paper-style benchmark pays for robustness.
+pub fn gmg_nu(ranks: usize) -> Ablation {
+    let table = CalibrationTable::builtin_fallback();
+    let machine = MachineSpec::edison();
+    let decomp = Decomp::new(ranks, 32);
+    let mut rows = Vec::new();
+    for nu in [1usize, 2, 3, 4] {
+        let mut comm = Comm::new(launch(&machine, ranks).unwrap(), Fabric::aries());
+        vcycles(
+            &mut Exec::Modeled { table: &table },
+            &mut comm,
+            &mut ComputeScale::none(),
+            &decomp,
+            &[],
+            &GmgConfig {
+                nu,
+                cycles: 8,
+                fine_level: 0,
+            },
+        )
+        .expect("modeled gmg");
+        let wall = comm.max_clock().as_secs_f64();
+        rows.push(AblationRow {
+            param: nu as f64,
+            values: vec![
+                ("8 cycles [s]".into(), wall),
+                (
+                    "Mdof/s".into(),
+                    decomp.dofs() as f64 * 8.0 / wall / 1e6,
+                ),
+            ],
+        });
+    }
+    Ablation {
+        name: format!("HPGMG cost vs smoothing sweeps ({ranks} ranks)"),
+        param_name: "nu".into(),
+        rows,
+        conclusion: "per-cycle cost is ~linear in nu; V(2,2) (the paper-era default) \
+                     doubles the smoother work of V(1,1) for ~one extra digit per cycle"
+            .into(),
+    }
+}
+
+/// Image design choice: layer granularity vs incremental pull cost.
+/// One fat layer re-ships everything on any change; many thin layers
+/// pull incrementally but pay per-layer round-trips.
+pub fn layer_granularity() -> Ablation {
+    use crate::container::image::FileEntry;
+    use crate::container::{Layer, LayerStore, Registry};
+
+    let total_bytes: u64 = 1_000_000_000;
+    let mut rows = Vec::new();
+    for layers in [1usize, 2, 5, 10, 25, 50] {
+        // build an image of `layers` equal layers, then "change" the last
+        // one and measure the update pull
+        let mut store = LayerStore::new();
+        let make = |tag: &str, store: &mut LayerStore| {
+            let mut ids = Vec::new();
+            let mut parent = None;
+            for i in 0..layers {
+                let directive = if i == layers - 1 {
+                    format!("RUN {tag}")
+                } else {
+                    format!("RUN step{i}")
+                };
+                let layer = Layer::derive(
+                    parent.as_ref(),
+                    &directive,
+                    vec![FileEntry {
+                        path: format!("/l{i}"),
+                        bytes: total_bytes / layers as u64,
+                    }],
+                );
+                parent = Some(layer.id.clone());
+                ids.push(layer.id.clone());
+                store.insert(layer);
+            }
+            crate::container::Image::seal(tag, ids, vec![], None, vec![], false)
+        };
+        let v1 = make("v1", &mut store);
+        let v2 = make("v2", &mut store);
+        let mut registry = Registry::new();
+        registry.push(&v1, &store).unwrap();
+        registry.push(&v2, &store).unwrap();
+        let mut user = LayerStore::new();
+        let (_, first) = registry.pull("v1", &mut user).unwrap();
+        let (_, update) = registry.pull("v2", &mut user).unwrap();
+        rows.push(AblationRow {
+            param: layers as f64,
+            values: vec![
+                ("first pull [s]".into(), first.time.as_secs_f64()),
+                ("update [s]".into(), update.time.as_secs_f64()),
+                (
+                    "update MB".into(),
+                    update.bytes_transferred as f64 / 1e6,
+                ),
+            ],
+        });
+    }
+    Ablation {
+        name: "incremental pull vs layer granularity (1 GB image)".into(),
+        param_name: "layers".into(),
+        rows,
+        conclusion: "a single fat layer re-ships the full GB on any change; past ~10 \
+                     layers the per-layer RTT dominates first pulls — the FEniCS \
+                     image's handful of role-separated layers (§3.4) is the sweet spot"
+            .into(),
+    }
+}
+
+/// All studies by name.
+pub fn by_name(name: &str) -> Option<Ablation> {
+    match name {
+        "mds" => Some(mds_handlers(96)),
+        "nic" => Some(nic_bandwidth(96)),
+        "nu" => Some(gmg_nu(64)),
+        "layers" => Some(layer_granularity()),
+        _ => None,
+    }
+}
+
+pub const STUDIES: [&str; 4] = ["mds", "nic", "nu", "layers"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mds_ablation_shows_queueing() {
+        let a = mds_handlers(48);
+        // native time falls as handlers grow
+        let first = a.rows.first().unwrap();
+        let last = a.rows.last().unwrap();
+        assert!(first.values[0].1 > 2.0 * last.values[0].1);
+        // shifter roughly flat
+        let shifter_span = a
+            .rows
+            .iter()
+            .map(|r| r.values[1].1)
+            .fold((f64::INFINITY, 0.0f64), |(lo, hi), v| (lo.min(v), hi.max(v)));
+        assert!(shifter_span.1 / shifter_span.0 < 1.5);
+    }
+
+    #[test]
+    fn nic_ablation_monotone_and_bounded_below() {
+        let a = nic_bandwidth(48);
+        let ratios: Vec<f64> = a.rows.iter().map(|r| r.values[2].1).collect();
+        for w in ratios.windows(2) {
+            assert!(w[1] <= w[0] * 1.01, "ratio should fall with bandwidth: {ratios:?}");
+        }
+        // latency floor: even at 10 GB/s TCP never reaches parity
+        assert!(*ratios.last().unwrap() > 1.05);
+    }
+
+    #[test]
+    fn nu_ablation_linearish() {
+        let a = gmg_nu(8);
+        let t1 = a.rows[0].values[0].1;
+        let t4 = a.rows[3].values[0].1;
+        assert!(t4 > 2.0 * t1 && t4 < 5.0 * t1, "t1={t1} t4={t4}");
+    }
+
+    #[test]
+    fn layer_ablation_tradeoff() {
+        let a = layer_granularity();
+        let one = &a.rows[0];
+        let many = a.rows.last().unwrap();
+        // fat layer: update re-ships ~everything
+        assert!(one.values[2].1 > 900.0);
+        // thin layers: update ships ~1/50
+        assert!(many.values[2].1 < 50.0);
+        // but thin layers pay more round-trips on first pull
+        assert!(many.values[0].1 > one.values[0].1);
+    }
+
+    #[test]
+    fn registry_of_studies() {
+        for s in STUDIES {
+            assert!(by_name(s).is_some(), "{s}");
+        }
+        assert!(by_name("bogus").is_none());
+        // and they all render
+        let text = by_name("layers").unwrap().render();
+        assert!(text.contains("ablation"));
+        assert!(text.contains("->"));
+    }
+}

@@ -1,0 +1,208 @@
+//! Fig 2: four single-process FEniCS tests on the workstation.
+//!
+//! 'Poisson LU' solves a 2D Poisson problem by dense LU; 'Poisson AMG'
+//! solves 3D Poisson with CG preconditioned by multigrid (AMG → GMG
+//! substitution); 'IO' reads a large mesh and writes a solution through
+//! the platform's filesystem; 'elasticity' solves the 3D Lamé system
+//! with CG.  Reported run times exclude container start-up and JIT, as
+//! in the paper (§4.1).
+
+use anyhow::Result;
+
+use crate::des::{Duration, VirtualTime};
+use crate::fem::cg::{distributed_cg, precond_cg_single, CgConfig};
+use crate::fem::exec::Exec;
+use crate::fem::grid::Decomp;
+use crate::fem::lu::lu_solve;
+use crate::fs::FsOp;
+use crate::platform::Platform;
+use crate::workload::RunSetup;
+
+use crate::cluster::MachineSpec;
+
+/// The four workstation tests, in the paper's order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Fig2Test {
+    PoissonLu,
+    PoissonAmg,
+    Io,
+    Elasticity,
+}
+
+impl Fig2Test {
+    pub const ALL: [Fig2Test; 4] = [
+        Fig2Test::PoissonLu,
+        Fig2Test::PoissonAmg,
+        Fig2Test::Io,
+        Fig2Test::Elasticity,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Fig2Test::PoissonLu => "Poisson LU",
+            Fig2Test::PoissonAmg => "Poisson AMG",
+            Fig2Test::Io => "IO",
+            Fig2Test::Elasticity => "elasticity",
+        }
+    }
+}
+
+/// Mesh/solution sizes for the IO test (bytes). Sized so the test takes
+/// seconds on a workstation disk, like the paper's.
+const IO_MESH_BYTES: u64 = 800_000_000;
+const IO_SOLUTION_BYTES: u64 = 200_000_000;
+
+/// Iterations the modeled solvers charge (solver-phase structure; the
+/// real-mode integration tests pin these against actual solves).
+const AMG_MODELED_ITERS: usize = 14;
+const ELASTICITY_MODELED_ITERS: usize = 80;
+/// Repeated solves per test so run times land in the paper's "seconds"
+/// regime rather than microseconds (the paper's tests use meshes far
+/// larger than our exported 32³ blocks; repetition recovers the same
+/// compute-bound behaviour at identical per-call cost).
+const SOLVE_ROUNDS: usize = 6;
+
+/// Run one Fig 2 test on `platform`; returns the test's run time.
+pub fn run_fig2(
+    test: Fig2Test,
+    platform: Platform,
+    exec: &mut Exec,
+    seed: u64,
+) -> Result<Duration> {
+    let setup = RunSetup::new(MachineSpec::workstation(), platform, 1, seed);
+    let mut comm = setup.comm();
+    let mut scale = setup.scale(false);
+
+    match test {
+        Fig2Test::PoissonLu => {
+            for _ in 0..SOLVE_ROUNDS {
+                let rhs = vec![1.0f32; 32 * 32];
+                lu_solve(exec, &mut comm, &mut scale, &rhs)?;
+            }
+        }
+        Fig2Test::PoissonAmg => {
+            for round in 0..SOLVE_ROUNDS {
+                let rhs: Vec<f32> = (0..32usize.pow(3))
+                    .map(|i| ((i + round) % 11) as f32 * 0.1 - 0.5)
+                    .collect();
+                precond_cg_single(
+                    exec,
+                    &mut comm,
+                    &mut scale,
+                    &rhs,
+                    1e-5,
+                    200,
+                    AMG_MODELED_ITERS,
+                )?;
+            }
+        }
+        Fig2Test::Io => {
+            // mesh read + solution write through the platform's data FS
+            let mut fs = setup.data_fs();
+            let t0 = comm.clock(0);
+            let t1 = fs.submit(t0, 0, FsOp::Open);
+            let t2 = fs.submit(t1, 0, FsOp::Read { bytes: IO_MESH_BYTES });
+            // partition/convert the mesh (compute, scaled by platform)
+            comm.advance(0, Duration::from_secs_f64(0.8).scale(scale.factor));
+            let t3 = fs.submit(t2.max(comm.clock(0)), 0, FsOp::Open);
+            let t4 = fs.submit(t3, 0, FsOp::Write { bytes: IO_SOLUTION_BYTES });
+            comm.advance_all_to(t4);
+        }
+        Fig2Test::Elasticity => {
+            let n = 16usize;
+            let decomp = Decomp::new(1, n);
+            let rhs: Vec<Vec<f32>> = vec![(0..3 * n * n * n)
+                .map(|i| ((i % 7) as f32 - 3.0) * 0.05)
+                .collect()];
+            let cfg = CgConfig {
+                elasticity: true,
+                tol: 1e-5,
+                modeled_iters: ELASTICITY_MODELED_ITERS,
+                ..CgConfig::default()
+            };
+            for _ in 0..SOLVE_ROUNDS {
+                distributed_cg(
+                    exec,
+                    &mut comm,
+                    &mut scale,
+                    &decomp,
+                    if exec.is_real() { &rhs } else { &[] },
+                    &cfg,
+                )?;
+            }
+        }
+    }
+    Ok(comm.max_clock() - VirtualTime::ZERO)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::CalibrationTable;
+
+    fn run_modeled(test: Fig2Test, platform: Platform, seed: u64) -> f64 {
+        let table = CalibrationTable::builtin_fallback();
+        run_fig2(test, platform, &mut Exec::Modeled { table: &table }, seed)
+            .unwrap()
+            .as_secs_f64()
+    }
+
+    #[test]
+    fn all_tests_produce_positive_times() {
+        for test in Fig2Test::ALL {
+            for platform in Platform::workstation_set() {
+                let t = run_modeled(test, platform, 0);
+                assert!(t > 0.0, "{test:?} on {platform}");
+            }
+        }
+    }
+
+    #[test]
+    fn docker_rkt_native_within_percent_scale() {
+        // the paper's headline: container ≈ native on compute tests
+        for test in [Fig2Test::PoissonLu, Fig2Test::PoissonAmg, Fig2Test::Elasticity] {
+            let native = run_modeled(test, Platform::Native, 1);
+            let docker = run_modeled(test, Platform::Docker, 1);
+            let rkt = run_modeled(test, Platform::Rkt, 1);
+            for (name, t) in [("docker", docker), ("rkt", rkt)] {
+                let diff = (t - native).abs() / native;
+                assert!(diff < 0.05, "{test:?} {name}: {diff:.3} vs native");
+            }
+        }
+    }
+
+    #[test]
+    fn vm_pays_roughly_fifteen_percent_on_compute() {
+        for test in [Fig2Test::PoissonAmg, Fig2Test::Elasticity] {
+            let native = run_modeled(test, Platform::Native, 2);
+            let vm = run_modeled(test, Platform::Vm, 2);
+            let ratio = vm / native;
+            assert!(
+                (1.08..1.25).contains(&ratio),
+                "{test:?}: vm/native = {ratio:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn vm_io_slower_than_native_io() {
+        let native = run_modeled(Fig2Test::Io, Platform::Native, 3);
+        let vm = run_modeled(Fig2Test::Io, Platform::Vm, 3);
+        assert!(vm > 1.1 * native, "vm {vm} vs native {native}");
+    }
+
+    #[test]
+    fn io_test_is_io_bound() {
+        // IO time must dwarf its compute fraction
+        let t = run_modeled(Fig2Test::Io, Platform::Native, 4);
+        assert!(t > 1.5, "expected seconds of IO, got {t}");
+    }
+
+    #[test]
+    fn repeated_runs_jitter_but_agree() {
+        let a = run_modeled(Fig2Test::PoissonAmg, Platform::Native, 10);
+        let b = run_modeled(Fig2Test::PoissonAmg, Platform::Native, 11);
+        assert!(a != b, "different seeds should jitter");
+        assert!((a - b).abs() / a < 0.05);
+    }
+}

@@ -1,0 +1,172 @@
+//! HPGMG-FE (Fig 5): geometric-multigrid throughput benchmark.
+//!
+//! HPGMG ranks machines by finite-element multigrid throughput (DOF/s,
+//! higher is better).  Our port runs V-cycles on the exported ladder and
+//! reports `dofs * cycles / wall`.  It is the one workload where the
+//! *architecture* of the binary matters (§4.3): images built without
+//! `ARCH_OPT` lose AVX on the tuned smoother loops and pay the ~3 %
+//! penalty native builds (and `ARCH_OPT` images) do not.
+
+use anyhow::Result;
+
+use crate::cluster::MachineSpec;
+use crate::des::VirtualTime;
+use crate::fem::exec::Exec;
+use crate::fem::gmg::{vcycles, GmgConfig, LADDER};
+use crate::fem::grid::Decomp;
+use crate::platform::Platform;
+use crate::workload::RunSetup;
+
+/// One HPGMG run.
+#[derive(Debug, Clone)]
+pub struct HpgmgConfig {
+    pub machine: MachineSpec,
+    pub ranks: usize,
+    /// Problem-size index: 0 = 32³ blocks (largest), 1 = 16³, 2 = 8³.
+    pub fine_level: usize,
+    pub cycles: usize,
+    pub seed: u64,
+    /// Whether the image was built with `ARCH_OPT`.
+    pub arch_optimized_image: bool,
+}
+
+impl HpgmgConfig {
+    pub fn workstation(fine_level: usize, seed: u64) -> Self {
+        HpgmgConfig {
+            machine: MachineSpec::workstation(),
+            ranks: 16,
+            fine_level,
+            cycles: 8,
+            seed,
+            arch_optimized_image: false,
+        }
+    }
+
+    pub fn edison(fine_level: usize, seed: u64) -> Self {
+        HpgmgConfig {
+            machine: MachineSpec::edison(),
+            ranks: 192,
+            fine_level,
+            cycles: 8,
+            seed,
+            arch_optimized_image: false,
+        }
+    }
+}
+
+/// Result: the figure's y-axis.
+#[derive(Debug, Clone)]
+pub struct HpgmgResult {
+    pub dofs: u64,
+    pub wall_seconds: f64,
+    pub dofs_per_second: f64,
+}
+
+/// Run HPGMG under `platform`.
+pub fn run_hpgmg(platform: Platform, exec: &mut Exec, cfg: &HpgmgConfig) -> Result<HpgmgResult> {
+    let mut setup = RunSetup::new(cfg.machine.clone(), platform, cfg.ranks, cfg.seed);
+    if cfg.arch_optimized_image {
+        let (image, _) = crate::workload::fenics_image_opt(true);
+        setup.image = image;
+    }
+    let decomp = Decomp::new(cfg.ranks, LADDER[cfg.fine_level]);
+    let mut comm = setup.comm();
+    // tuned = true: HPGMG is the workload where arch flags matter
+    let mut scale = setup.scale(true);
+
+    let rhs: Vec<Vec<f32>> = if exec.is_real() {
+        let block = LADDER[cfg.fine_level].pow(3);
+        (0..cfg.ranks)
+            .map(|r| {
+                (0..block)
+                    .map(|i| (((i + r) % 17) as f32 - 8.0) * 0.1)
+                    .collect()
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+
+    let gmg_cfg = GmgConfig {
+        nu: 2,
+        cycles: cfg.cycles,
+        fine_level: cfg.fine_level,
+    };
+    let outcome = vcycles(exec, &mut comm, &mut scale, &decomp, &rhs, &gmg_cfg)?;
+
+    let wall = (comm.max_clock() - VirtualTime::ZERO).as_secs_f64();
+    let dofs = decomp.dofs();
+    Ok(HpgmgResult {
+        dofs,
+        wall_seconds: wall,
+        dofs_per_second: dofs as f64 * outcome.cycles as f64 / wall,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::CalibrationTable;
+
+    fn run(platform: Platform, cfg: &HpgmgConfig) -> HpgmgResult {
+        let table = CalibrationTable::builtin_fallback();
+        run_hpgmg(platform, &mut Exec::Modeled { table: &table }, cfg).unwrap()
+    }
+
+    #[test]
+    fn fig5a_native_beats_containers_by_a_few_percent() {
+        let cfg = HpgmgConfig::workstation(0, 1);
+        let native = run(Platform::Native, &cfg).dofs_per_second;
+        let docker = run(Platform::Docker, &cfg).dofs_per_second;
+        let rkt = run(Platform::Rkt, &cfg).dofs_per_second;
+        for (name, t) in [("docker", docker), ("rkt", rkt)] {
+            let gap = (native - t) / native;
+            assert!(
+                (0.005..0.08).contains(&gap),
+                "{name}: native should win by ~3%, gap {gap:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn arch_opt_image_closes_the_gap() {
+        let mut cfg = HpgmgConfig::workstation(0, 2);
+        let native = run(Platform::Native, &cfg).dofs_per_second;
+        cfg.arch_optimized_image = true;
+        let docker_opt = run(Platform::Docker, &cfg).dofs_per_second;
+        let gap = (native - docker_opt).abs() / native;
+        assert!(gap < 0.02, "ARCH_OPT should match native: gap {gap:.4}");
+    }
+
+    #[test]
+    fn fig5b_shifter_matches_native_at_larger_sizes() {
+        let cfg = HpgmgConfig::edison(0, 3);
+        let native = run(Platform::Native, &cfg).dofs_per_second;
+        let shifter = run(Platform::ShifterSystemMpi, &cfg).dofs_per_second;
+        let gap = (native - shifter).abs() / native;
+        assert!(gap < 0.08, "gap {gap:.4}");
+    }
+
+    #[test]
+    fn throughput_grows_with_problem_size() {
+        // larger local blocks amortise latency: higher DOF/s
+        let big = run(Platform::Native, &HpgmgConfig::workstation(0, 4));
+        let small = run(Platform::Native, &HpgmgConfig::workstation(2, 4));
+        assert!(
+            big.dofs_per_second > small.dofs_per_second,
+            "big {} vs small {}",
+            big.dofs_per_second,
+            small.dofs_per_second
+        );
+        assert!(big.dofs > small.dofs);
+    }
+
+    #[test]
+    fn dofs_accounting() {
+        let cfg = HpgmgConfig::workstation(0, 5);
+        let r = run(Platform::Native, &cfg);
+        // 16 ranks x 32^3
+        assert_eq!(r.dofs, 16 * 32 * 32 * 32);
+        assert!(r.wall_seconds > 0.0);
+    }
+}

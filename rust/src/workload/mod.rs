@@ -1,0 +1,240 @@
+//! The paper's benchmark programs.
+//!
+//! * [`fig2`] — the four single-process workstation tests (Poisson LU,
+//!   Poisson AMG, IO, Elasticity) across native/docker/rkt/VM.
+//! * [`poisson_app`] — the Edison test program of Figs 3 and 4
+//!   (assemble → refine → solve → IO, plus the Python import phase),
+//!   distributed over 24–192 ranks.
+//! * [`hpgmg`] — the HPGMG-FE throughput benchmark of Fig 5.
+//! * [`ablate`] — sensitivity sweeps over the modelling choices behind
+//!   each figure (MDS pool, fallback NIC, smoothing depth, layering).
+//!
+//! All workloads run through [`RunSetup`], which wires the platform's
+//! container runtime, MPI resolution, filesystem policy, and overheads —
+//! the same plumbing an experiment on the real systems would traverse.
+
+pub mod ablate;
+pub mod fig2;
+pub mod hpgmg;
+pub mod poisson_app;
+
+pub use ablate::{Ablation, AblationRow};
+pub use fig2::{run_fig2, Fig2Test};
+pub use hpgmg::{run_hpgmg, HpgmgConfig, HpgmgResult};
+pub use poisson_app::{run_poisson_app, AppConfig};
+
+use crate::cluster::{launch, MachineSpec};
+use crate::container::runtime::{by_kind, ContainerRuntime, FsPolicy};
+use crate::container::{Builder, Buildfile, Image, LayerStore};
+use crate::des::Duration;
+use crate::fem::exec::ComputeScale;
+use crate::fs::{FileSystem, ImageFs, LocalFs, ParallelFs};
+use crate::mpi::{AbiResolver, Comm};
+use crate::net::Fabric;
+use crate::platform::Platform;
+
+/// The standard FEniCS image every containerised experiment runs
+/// (mirrors `quay.io/fenicsproject/stable:2016.1.0r1`).
+pub fn fenics_image() -> (Image, LayerStore) {
+    fenics_image_opt(false)
+}
+
+/// As [`fenics_image`], optionally with host-architecture optimisation
+/// (the `ARCH_OPT` buildfile directive — removes the Fig 5a penalty).
+pub fn fenics_image_opt(arch_opt: bool) -> (Image, LayerStore) {
+    let text = format!(
+        "FROM quay.io/fenicsproject/stable:2016.1.0r1\n\
+         USER fenics\n\
+         WORKDIR /home/fenics\n\
+         ENV FENICS_VERSION=2016.1.0\n\
+         {}ENTRYPOINT /bin/bash",
+        if arch_opt { "ARCH_OPT\n" } else { "" }
+    );
+    let bf = Buildfile::parse(&text).expect("static buildfile parses");
+    let mut store = LayerStore::new();
+    let report = Builder::new()
+        .build(&bf, "quay.io/fenicsproject/stable:2016.1.0r1", &mut store)
+        .expect("known base");
+    (report.image, store)
+}
+
+/// Everything needed to execute one (machine, platform, ranks) cell of
+/// the experiment matrix.
+pub struct RunSetup {
+    pub machine: MachineSpec,
+    pub platform: Platform,
+    pub ranks: usize,
+    pub seed: u64,
+    pub image: Image,
+}
+
+impl RunSetup {
+    pub fn new(machine: MachineSpec, platform: Platform, ranks: usize, seed: u64) -> Self {
+        let (image, _) = fenics_image();
+        RunSetup {
+            machine,
+            platform,
+            ranks,
+            seed,
+            image,
+        }
+    }
+
+    fn runtime(&self) -> Box<dyn ContainerRuntime> {
+        by_kind(self.platform.runtime_kind())
+    }
+
+    /// Build the communicator with the fabric the ABI resolution yields.
+    pub fn comm(&self) -> Comm {
+        let resolution = AbiResolver {
+            machine: &self.machine,
+            runtime: self.platform.runtime_kind(),
+            inject_host_mpi: self.platform.inject_host_mpi(),
+        }
+        .resolve();
+        let alloc = launch(&self.machine, self.ranks).expect("allocation fits machine");
+        Comm::new(alloc, Fabric::by_kind(resolution.fabric))
+    }
+
+    /// Compute scaling for this platform (VM factor, arch penalty when
+    /// `tuned`, machine jitter).
+    pub fn scale(&self, tuned: bool) -> ComputeScale {
+        let rt = self.runtime();
+        let arch = if tuned { rt.arch_penalty(&self.image) } else { 1.0 };
+        ComputeScale::new(
+            rt.compute_factor(),
+            arch,
+            self.seed,
+            self.machine.compute_jitter,
+        )
+    }
+
+    /// Container start overhead (zero for native).
+    pub fn startup(&self) -> Duration {
+        self.runtime().startup_overhead(&self.image)
+    }
+
+    /// The filesystem the application's *code/imports* come from.
+    pub fn code_fs(&self) -> Box<dyn FileSystem> {
+        match self.runtime().fs_policy() {
+            FsPolicy::Host => {
+                if self.machine.parallel_fs {
+                    Box::new(ParallelFs::edison(self.seed))
+                } else {
+                    Box::new(LocalFs::default())
+                }
+            }
+            FsPolicy::Overlay => {
+                // union FS over the local layer store: metadata slightly
+                // dearer than bare local, data near-native
+                Box::new(LocalFs::new(Duration::from_micros(3), 480.0e6))
+            }
+            FsPolicy::ImageMount => Box::new(ImageFs::new(
+                1_200_000_000,
+                ParallelFs::edison(self.seed.wrapping_add(1)),
+            )),
+            FsPolicy::VmDisk => {
+                // virtio block device: every op pays the hypervisor exit
+                // (~15% data-path penalty, Fig 2 / Macdonnell & Lu [19])
+                Box::new(LocalFs::new(Duration::from_micros(8), 435.0e6))
+            }
+        }
+    }
+
+    /// The filesystem application *data* IO goes to (the paper's best
+    /// practice: bind-mounted host storage for data [12], so container
+    /// platforms see near-host data rates; the VM still pays
+    /// virtualisation).
+    pub fn data_fs(&self) -> Box<dyn FileSystem> {
+        if self.machine.parallel_fs {
+            // scratch Lustre, containerised or not (Shifter images are
+            // read-only: data always lands on the host FS)
+            return Box::new(ParallelFs::edison(self.seed.wrapping_add(2)));
+        }
+        match self.runtime().fs_policy() {
+            FsPolicy::VmDisk => Box::new(LocalFs::new(Duration::from_micros(8), 435.0e6)),
+            FsPolicy::Overlay => Box::new(LocalFs::new(Duration::from_micros(2), 490.0e6)),
+            _ => Box::new(LocalFs::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::FabricKind;
+
+    #[test]
+    fn fenics_image_is_realistic() {
+        let (image, store) = fenics_image();
+        assert!(image.size_bytes(&store) > 500_000_000);
+        assert!(image.file_count(&store) > 4_000);
+        assert!(!image.arch_optimized);
+        let (opt, _) = fenics_image_opt(true);
+        assert!(opt.arch_optimized);
+        assert_ne!(image.id, opt.id);
+    }
+
+    #[test]
+    fn setup_resolves_fabrics_per_platform() {
+        let edison = MachineSpec::edison();
+        let f = |p: Platform| {
+            RunSetup::new(edison.clone(), p, 48, 0)
+                .comm()
+                .fabric()
+                .kind
+        };
+        assert_eq!(f(Platform::Native), FabricKind::Aries);
+        assert_eq!(f(Platform::ShifterSystemMpi), FabricKind::Aries);
+        assert_eq!(f(Platform::ShifterContainerMpi), FabricKind::TcpEthernet);
+    }
+
+    #[test]
+    fn vm_scale_is_slower() {
+        let ws = MachineSpec::workstation();
+        let mut vm = RunSetup::new(ws.clone(), Platform::Vm, 1, 0).scale(false);
+        let mut native = RunSetup::new(ws, Platform::Native, 1, 0).scale(false);
+        let d = Duration::from_millis(100);
+        // strip jitter by comparing means over many applications
+        let mean = |s: &mut ComputeScale| {
+            (0..200)
+                .map(|_| {
+                    let mut c = Duration::ZERO;
+                    c += d;
+                    // apply through a scale-only path: use scale(factor)
+                    s.factor * s.arch_factor
+                })
+                .sum::<f64>()
+                / 200.0
+        };
+        assert!(mean(&mut vm) > 1.1);
+        assert!((mean(&mut native) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn startup_zero_only_for_native() {
+        let ws = MachineSpec::workstation();
+        assert_eq!(
+            RunSetup::new(ws.clone(), Platform::Native, 1, 0).startup(),
+            Duration::ZERO
+        );
+        assert!(RunSetup::new(ws, Platform::Docker, 1, 0).startup() > Duration::ZERO);
+    }
+
+    #[test]
+    fn code_fs_policies_differ() {
+        use crate::des::VirtualTime;
+        use crate::fs::FsOp;
+        let edison = MachineSpec::edison();
+        // Shifter's image mount: opens after warm-up are microseconds;
+        // native Lustre opens cost MDS time
+        let mut shifter_fs =
+            RunSetup::new(edison.clone(), Platform::ShifterSystemMpi, 24, 1).code_fs();
+        let mut native_fs = RunSetup::new(edison, Platform::Native, 24, 1).code_fs();
+        let warm = shifter_fs.submit(VirtualTime::ZERO, 0, FsOp::Open);
+        let second = shifter_fs.submit(warm, 0, FsOp::Open) - warm;
+        let native_open =
+            native_fs.submit(VirtualTime::ZERO, 0, FsOp::Open) - VirtualTime::ZERO;
+        assert!(second < native_open);
+    }
+}

@@ -1,0 +1,199 @@
+//! Integration: the six figure-shape claims of DESIGN.md §6, asserted
+//! programmatically over the full coordinator path (deterministic
+//! builtin calibration so CI does not depend on machine speed).
+
+use harbor::config::ExperimentConfig;
+use harbor::coordinator::Coordinator;
+use harbor::runtime::CalibrationTable;
+
+fn coordinator() -> Coordinator {
+    Coordinator::with_table(CalibrationTable::builtin_fallback())
+}
+
+fn mean(figs: &[harbor::bench::Figure], fig_idx: usize, label: &str) -> f64 {
+    figs[fig_idx]
+        .rows
+        .iter()
+        .find(|r| r.label == label)
+        .unwrap_or_else(|| panic!("no row `{label}`"))
+        .stats
+        .mean()
+}
+
+#[test]
+fn fig2_docker_rkt_native_within_one_percentish_vm_fifteen() {
+    let cfg = ExperimentConfig {
+        reps: 3,
+        ..ExperimentConfig::paper_default("fig2").unwrap()
+    };
+    let figs = coordinator().run(&cfg).unwrap();
+    assert_eq!(figs.len(), 4);
+    for (i, fig) in figs.iter().enumerate() {
+        let native = mean(&figs, i, "native");
+        let docker = mean(&figs, i, "docker");
+        let rkt = mean(&figs, i, "rkt");
+        let vm = mean(&figs, i, "vm");
+        assert!(
+            (docker - native).abs() / native < 0.05,
+            "{}: docker vs native",
+            fig.title
+        );
+        assert!((rkt - native).abs() / native < 0.05, "{}: rkt", fig.title);
+        let vm_ratio = vm / native;
+        assert!(
+            (1.05..1.35).contains(&vm_ratio),
+            "{}: vm/native = {vm_ratio:.3}",
+            fig.title
+        );
+    }
+}
+
+#[test]
+fn fig3_native_equals_shifter_system_mpi_and_container_mpi_diverges() {
+    let cfg = ExperimentConfig {
+        reps: 2,
+        ..ExperimentConfig::paper_default("fig3").unwrap()
+    };
+    let figs = coordinator().run(&cfg).unwrap();
+    assert_eq!(figs.len(), 4); // 24, 48, 96, 192
+
+    for (i, &ranks) in [24usize, 48, 96, 192].iter().enumerate() {
+        let native = mean(&figs, i, "native");
+        let sys = mean(&figs, i, "shifter (system MPI)");
+        let cont = mean(&figs, i, "shifter (container MPI)");
+        assert!(
+            (sys - native).abs() / native < 0.10,
+            "ranks {ranks}: system-MPI shifter should match native"
+        );
+        if ranks == 24 {
+            // single node: container MPI survives
+            assert!(cont / native < 1.5, "ranks 24: container MPI ok on-node");
+        } else {
+            assert!(
+                cont / native > 2.0,
+                "ranks {ranks}: container MPI should blow up, got {:.2}x",
+                cont / native
+            );
+        }
+    }
+    // ... and the divergence grows with scale
+    let r48 = mean(&figs, 1, "shifter (container MPI)") / mean(&figs, 1, "native");
+    let r192 = mean(&figs, 3, "shifter (container MPI)") / mean(&figs, 3, "native");
+    assert!(r192 > r48, "divergence should grow: {r48:.2} -> {r192:.2}");
+}
+
+#[test]
+fn fig4_native_python_dominated_by_import_and_more_variable() {
+    let cfg = ExperimentConfig {
+        reps: 3,
+        ..ExperimentConfig::paper_default("fig4").unwrap()
+    };
+    let figs = coordinator().run(&cfg).unwrap();
+    assert_eq!(figs.len(), 3); // 24, 48, 96
+
+    for (i, &ranks) in [24usize, 48, 96].iter().enumerate() {
+        let native_row = figs[i].rows.iter().find(|r| r.label == "native").unwrap();
+        let shifter_row = figs[i]
+            .rows
+            .iter()
+            .find(|r| r.label == "shifter (system MPI)")
+            .unwrap();
+        let native = native_row.stats.mean();
+        let shifter = shifter_row.stats.mean();
+        assert!(
+            native > 1.5 * shifter,
+            "ranks {ranks}: native total should dominate (import)"
+        );
+        // per-phase compute must still match
+        let phase = |row: &harbor::bench::Row, name: &str| {
+            row.breakdown
+                .iter()
+                .find(|(k, _)| k == name)
+                .map(|(_, v)| *v)
+                .unwrap()
+        };
+        let solve_gap = (phase(native_row, "solve") - phase(shifter_row, "solve")).abs()
+            / phase(native_row, "solve");
+        assert!(solve_gap < 0.15, "ranks {ranks}: solve phases differ {solve_gap:.3}");
+        assert!(phase(native_row, "import") > 5.0 * phase(shifter_row, "import"));
+        // native is also more variable (MDS noise)
+        assert!(
+            native_row.stats.cv() >= shifter_row.stats.cv(),
+            "ranks {ranks}: native cv {} < shifter cv {}",
+            native_row.stats.cv(),
+            shifter_row.stats.cv()
+        );
+    }
+
+    // the import gap grows with rank count
+    let native_24 = mean(&figs, 0, "native");
+    let native_96 = mean(&figs, 2, "native");
+    assert!(native_96 > 2.0 * native_24);
+}
+
+#[test]
+fn fig5a_native_wins_by_single_digit_percent() {
+    let cfg = ExperimentConfig {
+        reps: 3,
+        sizes: vec![0],
+        ..ExperimentConfig::paper_default("fig5a").unwrap()
+    };
+    let figs = coordinator().run(&cfg).unwrap();
+    let native = mean(&figs, 0, "native");
+    let docker = mean(&figs, 0, "docker");
+    let rkt = mean(&figs, 0, "rkt");
+    for (name, t) in [("docker", docker), ("rkt", rkt)] {
+        let gap = (native - t) / native;
+        assert!(
+            (0.0..0.08).contains(&gap),
+            "{name}: expected small native win, gap {gap:.4}"
+        );
+    }
+}
+
+#[test]
+fn fig5b_shifter_parity_at_large_sizes() {
+    let cfg = ExperimentConfig {
+        reps: 3,
+        sizes: vec![0],
+        ..ExperimentConfig::paper_default("fig5b").unwrap()
+    };
+    let figs = coordinator().run(&cfg).unwrap();
+    let native = mean(&figs, 0, "native");
+    let shifter = mean(&figs, 0, "shifter (system MPI)");
+    let gap = (native - shifter).abs() / native;
+    assert!(gap < 0.08, "fig5b parity violated: {gap:.4}");
+}
+
+#[test]
+fn error_bars_are_populated() {
+    let cfg = ExperimentConfig {
+        reps: 4,
+        ..ExperimentConfig::paper_default("fig2").unwrap()
+    };
+    let figs = coordinator().run(&cfg).unwrap();
+    for fig in &figs {
+        for row in &fig.rows {
+            assert_eq!(row.stats.n(), 4);
+            // jitter produces non-identical samples on compute tests
+            if !fig.title.contains("IO") {
+                assert!(row.stats.std() > 0.0, "{}/{}", fig.title, row.label);
+            }
+        }
+    }
+}
+
+#[test]
+fn json_reports_parse_back() {
+    let cfg = ExperimentConfig {
+        reps: 1,
+        ranks: vec![24],
+        ..ExperimentConfig::paper_default("fig3").unwrap()
+    };
+    let figs = coordinator().run(&cfg).unwrap();
+    for f in figs {
+        let v = harbor::util::json::parse(&f.to_json().to_pretty()).unwrap();
+        assert_eq!(v.get("unit").as_str(), Some("run time [s]"));
+        assert!(!v.get("rows").as_arr().unwrap().is_empty());
+    }
+}

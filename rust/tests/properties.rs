@@ -1,0 +1,283 @@
+//! Property-based invariant tests (via `harbor::util::proptest`).
+//!
+//! Each property runs hundreds of randomly generated cases with a
+//! reproducing seed reported on failure.
+
+use harbor::cluster::{launch, MachineSpec};
+use harbor::container::image::{FileEntry, Layer};
+use harbor::container::LayerStore;
+use harbor::des::{Duration, EventQueue, FifoResource, VirtualTime};
+use harbor::fem::grid::{factor3, opposite, Decomp, LocalField};
+use harbor::mpi::Comm;
+use harbor::net::{Fabric, FabricKind};
+use harbor::util::json::{parse, Value};
+use harbor::util::proptest::{run, Gen};
+
+#[test]
+fn prop_event_queue_pops_sorted_and_fifo_stable() {
+    run("event-queue-order", 200, |g: &mut Gen| {
+        let n = g.usize_in(1, 200);
+        let mut q = EventQueue::new();
+        let mut items = Vec::new();
+        for i in 0..n {
+            let t = VirtualTime::ZERO + Duration::from_nanos(g.u64_in(0, 50)); // many ties
+            q.push(t, i);
+            items.push((t, i));
+        }
+        let mut last: Option<(VirtualTime, usize)> = None;
+        while let Some((t, i)) = q.pop() {
+            if let Some((lt, li)) = last {
+                if t < lt {
+                    return Err(format!("time went backwards: {lt:?} -> {t:?}"));
+                }
+                if t == lt {
+                    // FIFO among equal timestamps: push index must increase
+                    if i < li {
+                        return Err(format!("FIFO violated at {t:?}: {li} then {i}"));
+                    }
+                }
+            }
+            last = Some((t, i));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fifo_resource_conserves_and_orders() {
+    run("fifo-resource", 200, |g: &mut Gen| {
+        let servers = g.usize_in(1, 8);
+        let mut r = FifoResource::new(servers);
+        let n = g.usize_in(1, 100);
+        let mut total = Duration::ZERO;
+        let mut completions = Vec::new();
+        let mut arrival = VirtualTime::ZERO;
+        for _ in 0..n {
+            arrival = arrival + Duration::from_nanos(g.u64_in(0, 1000));
+            let service = Duration::from_nanos(g.u64_in(1, 10_000));
+            total += service;
+            let done = r.submit(arrival, service);
+            if done < arrival + service {
+                return Err("completed before arrival + service".into());
+            }
+            completions.push(done);
+        }
+        if r.busy_time() != total {
+            return Err("busy time != sum of service".into());
+        }
+        // utilisation bound: makespan * servers >= busy time
+        let makespan = completions.iter().max().unwrap().as_secs_f64();
+        if makespan * servers as f64 + 1e-12 < total.as_secs_f64() {
+            return Err("impossible utilisation".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_layer_store_content_addressing() {
+    run("layer-cas", 150, |g: &mut Gen| {
+        let mut store = LayerStore::new();
+        let n_layers = g.usize_in(1, 20);
+        for _ in 0..n_layers {
+            let directive = format!("RUN {}", g.ident(10));
+            let files: Vec<FileEntry> = (0..g.usize_in(0, 5))
+                .map(|i| FileEntry {
+                    path: format!("/f{i}"),
+                    bytes: g.u64_in(1, 10_000),
+                })
+                .collect();
+            let a = Layer::derive(None, &directive, files.clone());
+            let b = Layer::derive(None, &directive, files);
+            if a.id != b.id {
+                return Err("same content, different hash".into());
+            }
+            store.insert(a.clone());
+            let was_new = store.insert(b);
+            if was_new {
+                return Err("duplicate content stored twice".into());
+            }
+        }
+        if store.dedup_ratio() < 1.0 {
+            return Err("dedup ratio < 1".into());
+        }
+        if store.physical_bytes() > store.logical_bytes() {
+            return Err("physical > logical".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_factor3_products_and_sortedness() {
+    run("factor3", 300, |g: &mut Gen| {
+        let p = g.usize_in(1, 512);
+        let f = factor3(p);
+        if f.iter().product::<usize>() != p {
+            return Err(format!("{p}: product {:?}", f));
+        }
+        if !(f[0] <= f[1] && f[1] <= f[2]) {
+            return Err(format!("{p}: not sorted {f:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decomp_neighbors_mutual_and_message_list_symmetric() {
+    run("decomp-neighbors", 100, |g: &mut Gen| {
+        let ranks = g.usize_in(1, 64);
+        let d = Decomp::new(ranks, 8);
+        for r in 0..ranks {
+            for (dir, nb) in d.neighbors(r).into_iter().enumerate() {
+                if let Some(nb) = nb {
+                    if d.neighbors(nb)[opposite(dir)] != Some(r) {
+                        return Err(format!("rank {r} dir {dir}: not mutual"));
+                    }
+                }
+            }
+        }
+        // message list: every (a -> b) has a matching (b -> a)
+        let msgs = d.halo_messages(1);
+        for &(a, b, _) in &msgs {
+            if !msgs.iter().any(|&(x, y, _)| x == b && y == a) {
+                return Err(format!("asymmetric messages {a}->{b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_halo_exchange_conserves_data() {
+    // what rank A's face sends is exactly what rank B's halo receives
+    run("halo-conservation", 60, |g: &mut Gen| {
+        let ranks = *g.choose(&[2usize, 4, 8]);
+        let n = 4;
+        let d = Decomp::new(ranks, n);
+        let mut fields: Vec<LocalField> = (0..ranks)
+            .map(|r| {
+                let interior: Vec<f32> = (0..n * n * n)
+                    .map(|i| (r * 1000 + i) as f32 + g.f64_in(0.0, 1.0) as f32)
+                    .collect();
+                LocalField::from_interior(n, &interior)
+            })
+            .collect();
+        let faces_before: Vec<Vec<Vec<f32>>> = (0..ranks)
+            .map(|r| (0..6).map(|dir| fields[r].face(dir)).collect())
+            .collect();
+        let m = MachineSpec::workstation();
+        let mut comm = Comm::new(launch(&m, ranks).unwrap(), Fabric::shared_mem());
+        harbor::fem::grid::exchange_halos(&d, &mut fields, &mut comm);
+        for r in 0..ranks {
+            for (dir, nb) in d.neighbors(r).into_iter().enumerate() {
+                if let Some(nb) = nb {
+                    // my halo in `dir` must now hold nb's pre-exchange face
+                    // toward opposite(dir); compare via a probe field that
+                    // has ONLY that halo plane set
+                    let mut probe = LocalField::zeros(n);
+                    probe.set_halo(dir, &faces_before[nb][opposite(dir)]);
+                    let np = n + 2;
+                    for idx in 0..np * np * np {
+                        if probe.data[idx] != 0.0 && probe.data[idx] != fields[r].data[idx] {
+                            return Err(format!("rank {r} dir {dir}: halo mismatch"));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_comm_collectives_monotone_and_synchronising() {
+    run("comm-collectives", 80, |g: &mut Gen| {
+        let machine = MachineSpec::edison();
+        let ranks = g.usize_in(2, 96);
+        let kind = *g.choose(&[FabricKind::Aries, FabricKind::TcpEthernet]);
+        let mut comm = Comm::new(launch(&machine, ranks).unwrap(), Fabric::by_kind(kind));
+        // random per-rank head start
+        for r in 0..ranks {
+            comm.advance(r, Duration::from_nanos(g.u64_in(0, 1_000_000)));
+        }
+        let before = comm.max_clock();
+        let small = g.u64_in(1, 64);
+        comm.allreduce(small);
+        let after_small = comm.max_clock();
+        if after_small <= before {
+            return Err("allreduce did not advance time".into());
+        }
+        for r in 0..ranks {
+            if comm.clock(r) != after_small {
+                return Err("allreduce did not synchronise".into());
+            }
+        }
+        // bigger payload costs at least as much
+        let mut comm2 = Comm::new(launch(&machine, ranks).unwrap(), Fabric::by_kind(kind));
+        let mut comm3 = Comm::new(launch(&machine, ranks).unwrap(), Fabric::by_kind(kind));
+        comm2.allreduce(small);
+        comm3.allreduce(small * 1000);
+        if comm3.max_clock() < comm2.max_clock() {
+            return Err("allreduce cost not monotone in bytes".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_round_trip_fuzz() {
+    fn gen_value(g: &mut Gen, depth: usize) -> Value {
+        match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+            0 => Value::Null,
+            1 => Value::Bool(g.bool()),
+            2 => Value::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => Value::Str(g.ident(12)),
+            4 => Value::Arr((0..g.usize_in(0, 4)).map(|_| gen_value(g, depth - 1)).collect()),
+            _ => Value::Obj(
+                (0..g.usize_in(0, 4))
+                    .map(|_| (g.ident(8), gen_value(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    run("json-round-trip", 300, |g: &mut Gen| {
+        let v = gen_value(g, 3);
+        let compact = parse(&v.to_string()).map_err(|e| e.to_string())?;
+        let pretty = parse(&v.to_pretty()).map_err(|e| e.to_string())?;
+        if compact != v || pretty != v {
+            return Err(format!("round trip changed value: {v:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_launch_placement_block_invariants() {
+    run("placement", 200, |g: &mut Gen| {
+        let machine = MachineSpec::edison();
+        let ranks = g.usize_in(1, 400);
+        let alloc = launch(&machine, ranks).map_err(|e| e.to_string())?;
+        // block placement: node ids are non-decreasing and dense
+        let mut last = 0;
+        for &n in &alloc.node_of {
+            if n < last {
+                return Err("node ids decrease".into());
+            }
+            if n > last + 1 {
+                return Err("node ids skip".into());
+            }
+            last = last.max(n);
+        }
+        if alloc.nodes_used != last + 1 {
+            return Err("nodes_used wrong".into());
+        }
+        // no node hosts more ranks than cores
+        for node in 0..alloc.nodes_used {
+            if alloc.ranks_on_node(node).count() > machine.cores_per_node {
+                return Err(format!("node {node} oversubscribed"));
+            }
+        }
+        Ok(())
+    });
+}
