@@ -5,12 +5,48 @@
 //! to `target/criterion/`-style output, and reports the wall time of
 //! the regeneration itself (the simulator's own performance, tracked in
 //! EXPERIMENTS.md §Perf).
+//!
+//! Every measurement is also merged into a machine-readable
+//! `BENCH_micro.json` (override the path with `BENCH_MICRO_PATH`):
+//! ns/iter per micro substrate plus figure-regeneration wall times, so
+//! the perf trajectory is tracked across PRs rather than living only in
+//! scrollback.
 
 use std::time::Instant;
 
 use harbor::config::ExperimentConfig;
 use harbor::coordinator::Coordinator;
-use harbor::util::json::Value;
+use harbor::util::json::{self, Value};
+
+/// Where the machine-readable bench record accumulates.
+#[allow(dead_code)]
+pub fn bench_json_path() -> std::path::PathBuf {
+    std::env::var_os("BENCH_MICRO_PATH")
+        .map(Into::into)
+        .unwrap_or_else(|| "BENCH_micro.json".into())
+}
+
+/// Merge `(key, value)` pairs into the bench record. Existing keys are
+/// overwritten, everything else is preserved, and the file stays sorted
+/// (`util::json` objects are BTreeMaps) so diffs across PRs are stable.
+#[allow(dead_code)]
+pub fn record_bench(entries: &[(String, f64)]) {
+    let path = bench_json_path();
+    let mut obj = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| json::parse(&text).ok())
+        .and_then(|v| v.as_obj().cloned())
+        .unwrap_or_default();
+    for (k, v) in entries {
+        obj.insert(k.clone(), Value::Num(*v));
+    }
+    let out = Value::Obj(obj);
+    if let Err(e) = std::fs::write(&path, out.to_pretty()) {
+        eprintln!("[bench] could not write {}: {e}", path.display());
+    } else {
+        eprintln!("[bench] merged {} entries into {}", entries.len(), path.display());
+    }
+}
 
 #[allow(dead_code)]
 pub fn run_figure_bench(figure: &str) {
@@ -42,6 +78,10 @@ pub fn run_figure_bench(figure: &str) {
         elapsed.as_secs_f64(),
         path.display()
     );
+    record_bench(&[(
+        format!("{figure}_regen_wall_s"),
+        elapsed.as_secs_f64(),
+    )]);
 }
 
 /// Tiny timing helper for the micro benches: runs `f` in batches until
@@ -60,5 +100,19 @@ pub fn time_it<F: FnMut()>(label: &str, mut f: F) -> f64 {
     }
     let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
     println!("  {label:44} {:>12.0} ns/iter  ({iters} iters)", ns);
+    ns
+}
+
+/// [`time_it`] that also records `ns/iter` under `key` in
+/// `BENCH_micro.json` via the provided collector.
+#[allow(dead_code)]
+pub fn time_rec<F: FnMut()>(
+    out: &mut Vec<(String, f64)>,
+    key: &str,
+    label: &str,
+    f: F,
+) -> f64 {
+    let ns = time_it(label, f);
+    out.push((format!("{key}_ns_per_iter"), ns));
     ns
 }

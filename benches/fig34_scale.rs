@@ -1,0 +1,82 @@
+//! Paper-scale Fig 3/4 regeneration (1536 / 12288 / 98304 ranks) on the
+//! rank-class batched engine, plus the acceptance measurement: the
+//! batched-vs-per-rank wall-clock ratio for a Fig 4 cell at 12288 ranks
+//! (recorded as `fig4_speedup_12288x` in `BENCH_micro.json`; the bar is
+//! ≥ 10×). The per-rank baseline at 98304 ranks is not run — that is
+//! the point.
+//!
+//! `FIG34_SCALE_FULL=1` also regenerates the full scale sweeps through
+//! the coordinator (a few minutes of simulated-Edison figures).
+
+mod common;
+
+use std::time::Instant;
+
+use harbor::config::{ExperimentConfig, SCALE_RANKS};
+use harbor::coordinator::Coordinator;
+use harbor::fem::exec::Exec;
+use harbor::platform::Platform;
+use harbor::runtime::CalibrationTable;
+use harbor::workload::{run_poisson_app, AppConfig};
+
+use common::record_bench;
+
+fn cell_wall(python: bool, ranks: usize, batched: bool, table: &CalibrationTable) -> f64 {
+    let t0 = Instant::now();
+    let cfg = if python {
+        AppConfig::python(ranks, 42)
+    } else {
+        AppConfig::cpp(ranks, 42)
+    };
+    let cfg = if batched { cfg } else { cfg.per_rank() };
+    let mut exec = Exec::Modeled { table };
+    let b = run_poisson_app(Platform::Native, &mut exec, &cfg).expect("app run");
+    std::hint::black_box(b.total());
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let table = CalibrationTable::builtin_fallback();
+    let mut rec: Vec<(String, f64)> = Vec::new();
+
+    println!("== fig 3/4 cells on the batched engine ==");
+    for &ranks in &SCALE_RANKS {
+        let cpp = cell_wall(false, ranks, true, &table);
+        println!("  fig3 cell {ranks:>6} ranks (batched):  {cpp:8.3} s");
+        rec.push((format!("fig3_cell_{ranks}_batched_s"), cpp));
+        let py = cell_wall(true, ranks, true, &table);
+        println!("  fig4 cell {ranks:>6} ranks (batched):  {py:8.3} s");
+        rec.push((format!("fig4_cell_{ranks}_batched_s"), py));
+    }
+
+    println!("== acceptance: batched vs per-rank at 12288 ranks ==");
+    let batched = cell_wall(true, 12288, true, &table);
+    let per_rank = cell_wall(true, 12288, false, &table);
+    let speedup = per_rank / batched;
+    println!(
+        "  fig4 cell 12288 ranks: batched {batched:.3} s, per-rank {per_rank:.3} s => {speedup:.1}x"
+    );
+    rec.push(("fig4_cell_12288_per_rank_s".into(), per_rank));
+    rec.push(("fig4_speedup_12288x".into(), speedup));
+    if speedup < 10.0 {
+        eprintln!("  WARNING: speedup below the 10x acceptance bar");
+    }
+
+    if std::env::var_os("FIG34_SCALE_FULL").is_some() {
+        for figure in ["fig3", "fig4"] {
+            let cfg = ExperimentConfig::paper_scale(figure).expect("scale config");
+            let t0 = Instant::now();
+            let figs = Coordinator::with_table(CalibrationTable::builtin_fallback())
+                .run(&cfg)
+                .expect("scale sweep");
+            let wall = t0.elapsed().as_secs_f64();
+            for f in &figs {
+                println!("{}", f.render());
+            }
+            println!("[bench:{figure}-scale] full sweep in {wall:.3} s");
+            rec.push((format!("{figure}_scale_sweep_wall_s"), wall));
+        }
+    }
+
+    record_bench(&rec);
+}

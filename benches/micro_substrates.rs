@@ -2,9 +2,10 @@
 //!
 //! The figure benches measure *virtual* time; this bench measures the
 //! *simulator's own* throughput: DES primitives, hashing, the halo
-//! exchange data plane, the communication cost model, the import
-//! replay, and raw PJRT dispatch. Before/after numbers for the
-//! performance pass live in EXPERIMENTS.md §Perf.
+//! exchange data plane, the communication cost model (per-rank and
+//! class-batched), the import replay, and raw PJRT dispatch.
+//! Before/after numbers for the performance pass live in EXPERIMENTS.md
+//! §Perf, and every run merges its ns/iter into `BENCH_micro.json`.
 
 mod common;
 
@@ -14,26 +15,50 @@ use harbor::des::{Duration, EventQueue, FifoResource, VirtualTime};
 use harbor::fem::grid::{exchange_halos, Decomp, LocalField};
 use harbor::mpi::Comm;
 use harbor::net::{Fabric, FabricKind};
-use harbor::pyimport::{replay, ModuleGraph};
+use harbor::pyimport::{replay, replay_batched, ModuleGraph};
 use harbor::runtime::{artifacts_available, Engine, TensorBuf};
 
-use common::time_it;
+use common::{record_bench, time_rec};
 
 fn main() {
+    let mut rec: Vec<(String, f64)> = Vec::new();
+
     println!("== micro: DES substrate ==");
-    time_it("event queue push+pop (1k events)", || {
+    time_rec(&mut rec, "event_queue_1k", "event queue push+pop (1k events)", || {
         let mut q = EventQueue::new();
         for i in 0..1000u64 {
             q.push(VirtualTime::ZERO + Duration::from_nanos(i % 97), i);
         }
         while q.pop().is_some() {}
     });
-    time_it("fifo resource 1k submissions", || {
+    time_rec(
+        &mut rec,
+        "event_queue_1k_prealloc",
+        "event queue push+pop (1k events, with_capacity)",
+        || {
+            let mut q = EventQueue::with_capacity(1000);
+            for i in 0..1000u64 {
+                q.push(VirtualTime::ZERO + Duration::from_nanos(i % 97), i);
+            }
+            while q.pop().is_some() {}
+        },
+    );
+    time_rec(&mut rec, "fifo_1k", "fifo resource 1k submissions", || {
         let mut r = FifoResource::new(16);
         for i in 0..1000u64 {
             r.submit(
                 VirtualTime::ZERO + Duration::from_nanos(i),
                 Duration::from_micros(100),
+            );
+        }
+    });
+    time_rec(&mut rec, "fifo_burst_24x", "fifo resource 1k clients as 42 bursts of 24", || {
+        let mut r = FifoResource::new(16);
+        for i in 0..42u64 {
+            r.submit_many(
+                VirtualTime::ZERO + Duration::from_nanos(i),
+                Duration::from_micros(100),
+                24,
             );
         }
     });
@@ -45,7 +70,7 @@ fn main() {
             bytes: 10_000 + i as u64,
         })
         .collect();
-    time_it("layer derive (sha256, 200-file manifest)", || {
+    time_rec(&mut rec, "layer_derive", "layer derive (sha256, 200-file manifest)", || {
         let l = Layer::derive(None, "RUN apt-get install petsc", files.clone());
         std::hint::black_box(l.id);
     });
@@ -55,12 +80,73 @@ fn main() {
     let alloc = launch(&machine, 192).unwrap();
     let decomp = Decomp::new(192, 32);
     let msgs = decomp.halo_messages(decomp.face_bytes());
-    time_it("comm.exchange 192-rank halo msg list", || {
+    {
+        // same shape as the batched pair below (exchange + allreduce per
+        // iteration, Comm construction hoisted) so the two ns/iter values
+        // in BENCH_micro.json are directly comparable
         let mut comm = Comm::new(alloc.clone(), Fabric::by_kind(FabricKind::Aries));
-        comm.exchange(&msgs);
-        std::hint::black_box(comm.max_clock());
-    });
-    time_it("allreduce x100, 192 ranks", || {
+        time_rec(
+            &mut rec,
+            "exchange_192",
+            "exchange + allreduce, 192 ranks (per-rank)",
+            || {
+                comm.exchange(&msgs);
+                comm.allreduce(8);
+                std::hint::black_box(comm.max_clock());
+            },
+        );
+    }
+    {
+        let mut comm = Comm::new(alloc.clone(), Fabric::by_kind(FabricKind::Aries));
+        comm.set_classes(decomp.rank_classes(comm.allocation()));
+        let pattern = decomp.halo_pattern_for(&comm, decomp.face_bytes());
+        // + allreduce: resynchronises so every iteration takes the
+        // batched path (this is exactly one CG phase pair)
+        time_rec(
+            &mut rec,
+            "exchange_uniform_192",
+            "exchange_uniform + allreduce, 192 ranks (batched)",
+            || {
+                comm.exchange_uniform(&pattern);
+                comm.allreduce(8);
+                std::hint::black_box(comm.max_clock());
+            },
+        );
+    }
+    {
+        // the scale point the per-rank path cannot reach in figure time
+        let ranks = 12288;
+        let alloc_big = launch(&machine, ranks).unwrap();
+        let decomp_big = Decomp::new(ranks, 32);
+        let mut comm = Comm::new(alloc_big, Fabric::by_kind(FabricKind::Aries));
+        comm.set_classes(decomp_big.rank_classes(comm.allocation()));
+        let pattern = decomp_big.halo_pattern_for(&comm, decomp_big.face_bytes());
+        println!(
+            "  (12288 ranks collapse to {} classes)",
+            comm.classes().unwrap().len()
+        );
+        time_rec(
+            &mut rec,
+            "exchange_uniform_12288",
+            "exchange_uniform + allreduce, 12288 ranks (batched)",
+            || {
+                comm.exchange_uniform(&pattern);
+                comm.allreduce(8);
+                std::hint::black_box(comm.max_clock());
+            },
+        );
+        time_rec(
+            &mut rec,
+            "rank_classes_12288",
+            "decomp.rank_classes 12288 ranks (setup, once per job)",
+            || {
+                let d = Decomp::new(12288, 32);
+                let a = launch(&machine, 12288).unwrap();
+                std::hint::black_box(d.rank_classes(&a).len());
+            },
+        );
+    }
+    time_rec(&mut rec, "allreduce_100x192", "allreduce x100, 192 ranks", || {
         let mut comm = Comm::new(alloc.clone(), Fabric::by_kind(FabricKind::Aries));
         for _ in 0..100 {
             comm.allreduce(8);
@@ -78,7 +164,7 @@ fn main() {
             )
         })
         .collect();
-    time_it("exchange_halos 8 ranks x 32³ blocks", || {
+    time_rec(&mut rec, "exchange_halos_8x32", "exchange_halos 8 ranks x 32³ blocks", || {
         let mut comm = Comm::new(ws.clone(), Fabric::shared_mem());
         exchange_halos(&d8, &mut fields, &mut comm);
     });
@@ -86,24 +172,34 @@ fn main() {
     println!("== micro: import replay ==");
     let graph = ModuleGraph::fenics_stack();
     let alloc24 = launch(&machine, 24).unwrap();
-    time_it("pyimport replay, 24 ranks x fenics stack", || {
+    time_rec(&mut rec, "replay_24", "pyimport replay, 24 ranks x fenics stack", || {
         let mut fs = harbor::fs::ParallelFs::edison(1);
         let rep = replay(&graph, &alloc24, &mut fs, VirtualTime::ZERO);
         std::hint::black_box(rep.wall);
     });
+    time_rec(
+        &mut rec,
+        "replay_batched_24",
+        "pyimport replay_batched, 24 ranks x fenics stack",
+        || {
+            let mut fs = harbor::fs::ParallelFs::edison(1);
+            let rep = replay_batched(&graph, &alloc24, &mut fs, VirtualTime::ZERO);
+            std::hint::black_box(rep.wall);
+        },
+    );
 
     println!("== micro: PJRT dispatch ==");
     if artifacts_available() {
         let mut engine = Engine::open_default().unwrap();
         engine.warm("dot_L4096").unwrap();
         let a = TensorBuf::new(vec![4096], vec![1.0; 4096]);
-        time_it("engine.execute dot_L4096 (dispatch+copy)", || {
+        time_rec(&mut rec, "pjrt_dot", "engine.execute dot_L4096 (dispatch+copy)", || {
             let out = engine.execute("dot_L4096", &[a.clone(), a.clone()]).unwrap();
             std::hint::black_box(out[0].data[0]);
         });
         engine.warm("cg_apdot_p3d_n32").unwrap();
         let p = TensorBuf::zeros(vec![34, 34, 34]);
-        time_it("engine.execute cg_apdot_p3d_n32", || {
+        time_rec(&mut rec, "pjrt_apdot", "engine.execute cg_apdot_p3d_n32", || {
             let out = engine.execute("cg_apdot_p3d_n32", &[p.clone()]).unwrap();
             std::hint::black_box(out[1].data[0]);
         });
@@ -113,7 +209,7 @@ fn main() {
 
     println!("== micro: end-to-end simulation throughput ==");
     let table = harbor::runtime::CalibrationTable::builtin_fallback();
-    time_it("fig3 cell: 96-rank modeled app run", || {
+    time_rec(&mut rec, "fig3_cell_96", "fig3 cell: 96-rank modeled app run (batched)", || {
         let mut exec = harbor::fem::exec::Exec::Modeled { table: &table };
         let b = harbor::workload::run_poisson_app(
             harbor::platform::Platform::Native,
@@ -123,4 +219,21 @@ fn main() {
         .unwrap();
         std::hint::black_box(b.total());
     });
+    time_rec(
+        &mut rec,
+        "fig3_cell_96_per_rank",
+        "fig3 cell: 96-rank modeled app run (per-rank)",
+        || {
+            let mut exec = harbor::fem::exec::Exec::Modeled { table: &table };
+            let b = harbor::workload::run_poisson_app(
+                harbor::platform::Platform::Native,
+                &mut exec,
+                &harbor::workload::AppConfig::cpp(96, 1).per_rank(),
+            )
+            .unwrap();
+            std::hint::black_box(b.total());
+        },
+    );
+
+    record_bench(&rec);
 }

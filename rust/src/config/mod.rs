@@ -24,7 +24,15 @@ pub struct ExperimentConfig {
     pub ranks: Vec<usize>,
     /// HPGMG problem-size indices (Fig 5 sweep; see `fem::gmg::LADDER`).
     pub sizes: Vec<usize>,
+    /// Rank-class batched engine for the modeled workloads (the default;
+    /// `false` forces the O(ranks) per-rank reference path).
+    pub batched: bool,
 }
+
+/// The Fig 3/4 scale points beyond the paper's sweep (§4.2's ">30 min at
+/// ~1000 ranks" regime; Edison had 5576 × 24 cores): 64, 512, and 4096
+/// full nodes. Only reachable in reasonable time on the batched engine.
+pub const SCALE_RANKS: [usize; 3] = [1536, 12288, 98304];
 
 impl ExperimentConfig {
     /// The paper's setup for each figure.
@@ -36,6 +44,7 @@ impl ExperimentConfig {
                 seed: 42,
                 ranks: vec![1],
                 sizes: vec![],
+                batched: true,
             },
             "fig3" => ExperimentConfig {
                 figure: "fig3".into(),
@@ -43,6 +52,7 @@ impl ExperimentConfig {
                 seed: 42,
                 ranks: vec![24, 48, 96, 192],
                 sizes: vec![],
+                batched: true,
             },
             "fig4" => ExperimentConfig {
                 figure: "fig4".into(),
@@ -50,6 +60,7 @@ impl ExperimentConfig {
                 seed: 42,
                 ranks: vec![24, 48, 96],
                 sizes: vec![],
+                batched: true,
             },
             "fig5a" => ExperimentConfig {
                 figure: "fig5a".into(),
@@ -57,6 +68,7 @@ impl ExperimentConfig {
                 seed: 42,
                 ranks: vec![16],
                 sizes: vec![2, 1, 0],
+                batched: true,
             },
             "fig5b" => ExperimentConfig {
                 figure: "fig5b".into(),
@@ -64,9 +76,25 @@ impl ExperimentConfig {
                 seed: 42,
                 ranks: vec![192],
                 sizes: vec![2, 1, 0],
+                batched: true,
             },
             other => anyhow::bail!("unknown figure `{other}` (fig2|fig3|fig4|fig5a|fig5b)"),
         };
+        Ok(cfg)
+    }
+
+    /// The paper-scale extension of a figure: same setup, rank counts
+    /// from [`SCALE_RANKS`], one rep (each cell is a full Edison-scale
+    /// job). Only Figs 3 and 4 sweep ranks.
+    pub fn paper_scale(figure: &str) -> Result<Self> {
+        let mut cfg = Self::paper_default(figure)?;
+        match figure {
+            "fig3" | "fig4" => {
+                cfg.ranks = SCALE_RANKS.to_vec();
+                cfg.reps = 1;
+            }
+            other => anyhow::bail!("scale points are defined for fig3|fig4 (got `{other}`)"),
+        }
         Ok(cfg)
     }
 
@@ -83,6 +111,7 @@ impl ExperimentConfig {
                 "sizes",
                 Value::Arr(self.sizes.iter().map(|&s| Value::num(s as f64)).collect()),
             ),
+            ("batched", Value::Bool(self.batched)),
         ])
     }
 
@@ -110,6 +139,9 @@ impl ExperimentConfig {
                 .iter()
                 .map(|x| x.as_u64().map(|u| u as usize).context("bad size"))
                 .collect::<Result<_>>()?;
+        }
+        if let Some(b) = v.get("batched").as_bool() {
+            cfg.batched = b;
         }
         Ok(cfg)
     }
@@ -142,9 +174,22 @@ mod tests {
 
     #[test]
     fn json_round_trip() {
-        let cfg = ExperimentConfig::paper_default("fig4").unwrap();
+        let mut cfg = ExperimentConfig::paper_default("fig4").unwrap();
+        cfg.batched = false;
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn scale_points_extend_fig34_only() {
+        let f3 = ExperimentConfig::paper_scale("fig3").unwrap();
+        assert_eq!(f3.ranks, SCALE_RANKS.to_vec());
+        assert_eq!(f3.reps, 1);
+        assert!(f3.batched);
+        let f4 = ExperimentConfig::paper_scale("fig4").unwrap();
+        assert_eq!(f4.ranks, vec![1536, 12288, 98304]);
+        assert!(ExperimentConfig::paper_scale("fig2").is_err());
+        assert!(ExperimentConfig::paper_scale("fig5a").is_err());
     }
 
     #[test]

@@ -188,12 +188,9 @@ impl Coordinator {
                 let mut breakdown_acc: Vec<(String, f64)> = Vec::new();
                 let stats = repeat(cfg.reps, |rep| {
                     let mut exec = self.exec();
-                    let b = run_poisson_app(
-                        platform,
-                        &mut exec,
-                        &AppConfig::cpp(ranks, cfg.seed + rep as u64),
-                    )
-                    .expect("fig3 run");
+                    let mut app = AppConfig::cpp(ranks, cfg.seed + rep as u64);
+                    app.batched = cfg.batched;
+                    let b = run_poisson_app(platform, &mut exec, &app).expect("fig3 run");
                     if rep == 0 {
                         breakdown_acc = b
                             .phase_names()
@@ -225,12 +222,9 @@ impl Coordinator {
                 let mut breakdown_acc: Vec<(String, f64)> = Vec::new();
                 let stats = repeat(cfg.reps, |rep| {
                     let mut exec = self.exec();
-                    let b = run_poisson_app(
-                        platform,
-                        &mut exec,
-                        &AppConfig::python(ranks, cfg.seed + rep as u64),
-                    )
-                    .expect("fig4 run");
+                    let mut app = AppConfig::python(ranks, cfg.seed + rep as u64);
+                    app.batched = cfg.batched;
+                    let b = run_poisson_app(platform, &mut exec, &app).expect("fig4 run");
                     if rep == 0 {
                         breakdown_acc = b
                             .phase_names()
@@ -276,6 +270,7 @@ impl Coordinator {
                         HpgmgConfig::edison(size, cfg.seed + rep as u64)
                     };
                     hc.ranks = ranks;
+                    hc.batched = cfg.batched;
                     run_hpgmg(platform, &mut exec, &hc)
                         .expect("hpgmg run")
                         .dofs_per_second

@@ -102,26 +102,28 @@ pub fn distributed_cg(
     // ---- modeled mode: charge the phase structure, no data -------------
     if let Exec::Modeled { table } = exec {
         // PERF: hoist the per-entry calibration lookups and the halo
-        // message list out of the iteration loop (they are loop-invariant;
+        // pattern out of the iteration loop (they are loop-invariant;
         // doing them per call made the BTreeMap the hot path of large
-        // simulations — see EXPERIMENTS.md §Perf).
+        // simulations — see EXPERIMENTS.md §Perf). On a class-batched
+        // communicator every phase below runs in O(classes): the loop
+        // enters each halo phase from a synchronised state (allreduce on
+        // the previous iteration), so `exchange_uniform` never has to
+        // fall back, and the uniform kernel charges advance whole
+        // classes. On a plain communicator the identical calls replay
+        // the per-rank message list and advance every rank — the two
+        // paths are VirtualTime-identical by construction (see
+        // tests/batched_equivalence.rs).
         let apdot_cost = table.cost(apdot_entry);
         let update_cost = table.cost(update_entry);
         let pupdate_cost = table.cost(pupdate_entry);
-        let msgs = decomp.halo_messages(decomp.face_bytes() * ncomp as u64);
+        let pattern = decomp.halo_pattern_for(comm, decomp.face_bytes() * ncomp as u64);
         for _ in 0..cfg.modeled_iters {
-            comm.exchange(&msgs);
-            for r in 0..ranks {
-                exec.charge(comm, scale, r, apdot_cost);
-            }
+            comm.exchange_uniform(&pattern);
+            comm.advance_uniform(scale.apply_pub(apdot_cost));
             comm.allreduce(8);
-            for r in 0..ranks {
-                exec.charge(comm, scale, r, update_cost);
-            }
+            comm.advance_uniform(scale.apply_pub(update_cost));
             comm.allreduce(8);
-            for r in 0..ranks {
-                exec.charge(comm, scale, r, pupdate_cost);
-            }
+            comm.advance_uniform(scale.apply_pub(pupdate_cost));
         }
         return Ok(CgOutcome {
             iters: cfg.modeled_iters,
@@ -457,6 +459,44 @@ mod tests {
         let aries = run(FabricKind::Aries);
         let tcp = run(FabricKind::TcpEthernet);
         assert!(tcp > 3.0 * aries, "aries {aries}, tcp {tcp}");
+    }
+
+    #[test]
+    fn modeled_cg_batched_is_bit_identical_to_per_rank() {
+        let table = CalibrationTable::builtin_fallback();
+        let m = MachineSpec::edison();
+        for ranks in [1usize, 8, 48, 192] {
+            let decomp = Decomp::new(ranks, 16);
+            let cfg = CgConfig {
+                modeled_iters: 7,
+                ..CgConfig::default()
+            };
+            let run = |batched: bool| {
+                let mut comm =
+                    Comm::new(launch(&m, ranks).unwrap(), Fabric::by_kind(FabricKind::Aries));
+                if batched {
+                    comm.set_classes(decomp.rank_classes(comm.allocation()));
+                }
+                // jitter ON: the single-draw-per-phase semantics must
+                // make the paths identical even with noise
+                let mut scale = ComputeScale::new(1.0, 1.0, 11, 0.02);
+                distributed_cg(
+                    &mut Exec::Modeled { table: &table },
+                    &mut comm,
+                    &mut scale,
+                    &decomp,
+                    &[],
+                    &cfg,
+                )
+                .unwrap();
+                let clocks: Vec<_> = (0..ranks).map(|r| comm.clock(r)).collect();
+                (clocks, comm.stats().p2p_messages, comm.stats().p2p_bytes)
+            };
+            let (bc, bm, bb) = run(true);
+            let (pc, pm, pb) = run(false);
+            assert_eq!(bc, pc, "ranks {ranks}: clocks diverged");
+            assert_eq!((bm, bb), (pm, pb), "ranks {ranks}: stats diverged");
+        }
     }
 
     #[test]

@@ -101,6 +101,38 @@ impl<'a> Exec<'a> {
         comm.advance(rank, scale.apply(d));
     }
 
+    /// Charge a whole rank class at once: O(1) on a class-batched
+    /// communicator instead of one `charge` per member. One jitter draw
+    /// covers the class — in a modeled phase the members execute the
+    /// same kernel on identically-shaped blocks, so they share the
+    /// run-level perturbation.
+    pub fn charge_class(
+        &mut self,
+        comm: &mut Comm,
+        scale: &mut ComputeScale,
+        class: usize,
+        d: Duration,
+    ) {
+        comm.advance_class(class, scale.apply(d));
+    }
+
+    /// Charge every rank the same compute segment (the modeled solvers'
+    /// per-iteration kernels): O(classes) on a batched communicator,
+    /// O(ranks) otherwise, with a single jitter draw either way — which
+    /// is what keeps the two paths `VirtualTime`-identical.
+    pub fn charge_uniform(&mut self, comm: &mut Comm, scale: &mut ComputeScale, d: Duration) {
+        comm.advance_uniform(scale.apply(d));
+    }
+
+    /// The calibrated cost of `entry` in `Modeled` mode (`None` when
+    /// running real PJRT — costs are measured, not looked up).
+    pub fn modeled_cost(&self, entry: &str) -> Option<Duration> {
+        match self {
+            Exec::Real { .. } => None,
+            Exec::Modeled { table } => Some(table.cost(entry)),
+        }
+    }
+
     pub fn is_real(&self) -> bool {
         matches!(self, Exec::Real { .. })
     }
@@ -168,6 +200,41 @@ mod tests {
         let total = c.clock(0).as_secs_f64();
         assert!((total - 50.0 * base).abs() < 50.0 * base * 0.05);
         assert!(total != 50.0 * base, "jitter should not be exactly zero");
+    }
+
+    #[test]
+    fn charge_uniform_single_draw_matches_everywhere() {
+        let table = CalibrationTable::builtin_fallback();
+        let mut exec = Exec::Modeled { table: &table };
+        let cost = table.cost("dot_L4096");
+        // jittered: both ranks must still receive the identical charge
+        let mut scale = ComputeScale::new(1.0, 1.0, 3, 0.05);
+        let mut c = comm(2);
+        exec.charge_uniform(&mut c, &mut scale, cost);
+        assert_eq!(c.clock(0), c.clock(1));
+        assert!(c.clock(0).as_secs_f64() > 0.0);
+        assert_eq!(exec.modeled_cost("dot_L4096"), Some(cost));
+    }
+
+    #[test]
+    fn charge_class_targets_members() {
+        use crate::fem::grid::Decomp;
+        let table = CalibrationTable::builtin_fallback();
+        let mut exec = Exec::Modeled { table: &table };
+        let mut scale = ComputeScale::none();
+        let decomp = Decomp::new(8, 16);
+        let mut c = Comm::new(
+            crate::cluster::launch(&crate::cluster::MachineSpec::edison(), 8).unwrap(),
+            Fabric::by_kind(FabricKind::Aries),
+        );
+        let classes = decomp.rank_classes(c.allocation());
+        let target = classes.class_of(0) as usize;
+        c.set_classes(classes.clone());
+        exec.charge_class(&mut c, &mut scale, target, Duration::from_millis(1));
+        for r in 0..8 {
+            let expect = if classes.class_of(r) as usize == target { 0.001 } else { 0.0 };
+            assert_eq!(c.clock(r).as_secs_f64(), expect, "rank {r}");
+        }
     }
 
     #[test]

@@ -131,8 +131,14 @@ fn level_decomp(decomp: &Decomp, level: usize) -> Decomp {
 /// Timing-only V-cycle at `level`.
 ///
 /// PERF: entry names are formatted and cost-looked-up once per level
-/// invocation (not per rank/sweep), and the halo message lists are
-/// built once — the modeled ladder is pure arithmetic after that.
+/// invocation (not per rank/sweep), and the halo patterns are built
+/// once — the modeled ladder is pure arithmetic after that. Kernel
+/// charges advance whole rank classes (one jitter draw per phase), and
+/// the first halo phase after every synchronising collective runs in
+/// O(classes); later sweeps in a cycle start from class-divergent
+/// clocks, where `exchange_uniform` transparently falls back to the
+/// per-rank message replay — so a batched and a plain communicator
+/// produce bit-identical clocks (tests/batched_equivalence.rs).
 fn modeled_vcycle(
     exec: &mut Exec,
     comm: &mut Comm,
@@ -143,19 +149,16 @@ fn modeled_vcycle(
 ) -> Result<()> {
     let n = LADDER[level];
     let d = level_decomp(decomp, level);
-    let ranks = decomp.ranks();
     let Exec::Modeled { table } = exec else {
         unreachable!("modeled_vcycle is only called in modeled mode");
     };
     let smooth_cost = table.cost(&format!("smooth3d_n{n}"));
-    let msgs = d.halo_messages((n * n * 4) as u64);
+    let pattern = d.halo_pattern_for(comm, (n * n * 4) as u64);
 
     let smooth_phase =
         |comm: &mut Comm, scale: &mut ComputeScale| {
-            comm.exchange(&msgs);
-            for r in 0..ranks {
-                comm.advance(r, scale_apply(scale, smooth_cost));
-            }
+            comm.exchange_uniform(&pattern);
+            comm.advance_uniform(scale.apply_pub(smooth_cost));
         };
 
     if level == LADDER.len() - 1 {
@@ -170,35 +173,24 @@ fn modeled_vcycle(
     }
     let resid_cost = table.cost(&format!("resid3d_n{n}"));
     let restrict_cost = table.cost(&format!("restrict3d_n{n}"));
-    comm.exchange(&msgs);
-    for r in 0..ranks {
-        comm.advance(r, scale_apply(scale, resid_cost));
-    }
+    comm.exchange_uniform(&pattern);
+    comm.advance_uniform(scale.apply_pub(resid_cost));
     // residual halo exchange feeds the variational (P^T) restriction
-    comm.exchange(&msgs);
-    for r in 0..ranks {
-        comm.advance(r, scale_apply(scale, restrict_cost));
-    }
+    comm.exchange_uniform(&pattern);
+    comm.advance_uniform(scale.apply_pub(restrict_cost));
     modeled_vcycle(exec, comm, scale, decomp, level + 1, nu)?;
     // coarse-correction halo exchange feeds the trilinear prolongation
     let nc = LADDER[level + 1];
     let Exec::Modeled { table } = exec else { unreachable!() };
     let prolong_cost = table.cost(&format!("prolong_add3d_n{nc}"));
-    let coarse_msgs = level_decomp(decomp, level + 1).halo_messages((nc * nc * 4) as u64);
-    comm.exchange(&coarse_msgs);
-    for r in 0..ranks {
-        comm.advance(r, scale_apply(scale, prolong_cost));
-    }
+    let coarse_pattern =
+        level_decomp(decomp, level + 1).halo_pattern_for(comm, (nc * nc * 4) as u64);
+    comm.exchange_uniform(&coarse_pattern);
+    comm.advance_uniform(scale.apply_pub(prolong_cost));
     for _ in 0..nu {
         smooth_phase(comm, scale);
     }
     Ok(())
-}
-
-/// Apply the platform/jitter scaling outside `Exec::call` (modeled fast
-/// path; mirrors `ComputeScale::apply`).
-fn scale_apply(scale: &mut ComputeScale, d: crate::des::Duration) -> crate::des::Duration {
-    scale.apply_pub(d)
 }
 
 /// Real-data V-cycle at `level` over `lev` state.
@@ -378,6 +370,36 @@ mod tests {
         assert!(comm.max_clock().as_secs_f64() > 0.0);
         assert!(comm.stats().p2p_messages > 0);
         assert_eq!(comm.stats().allreduces, 3);
+    }
+
+    #[test]
+    fn modeled_vcycles_batched_bit_identical_to_per_rank() {
+        // GMG stresses the fallback: only the first halo phase after a
+        // sync is class-uniform; the rest must transparently materialise
+        let table = CalibrationTable::builtin_fallback();
+        let m = MachineSpec::edison();
+        for ranks in [8usize, 48, 96] {
+            let decomp = Decomp::new(ranks, 32);
+            let run = |batched: bool| {
+                let mut comm =
+                    Comm::new(launch(&m, ranks).unwrap(), Fabric::by_kind(FabricKind::Aries));
+                if batched {
+                    comm.set_classes(decomp.rank_classes(comm.allocation()));
+                }
+                let mut scale = crate::fem::exec::ComputeScale::new(1.0, 1.0, 5, 0.015);
+                vcycles(
+                    &mut Exec::Modeled { table: &table },
+                    &mut comm,
+                    &mut scale,
+                    &decomp,
+                    &[],
+                    &GmgConfig { nu: 2, cycles: 2, ..Default::default() },
+                )
+                .unwrap();
+                (0..ranks).map(|r| comm.clock(r)).collect::<Vec<_>>()
+            };
+            assert_eq!(run(true), run(false), "ranks {ranks}");
+        }
     }
 
     #[test]

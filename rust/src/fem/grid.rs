@@ -6,21 +6,46 @@
 //! halos at physical (Dirichlet) boundaries and neighbour data after an
 //! exchange.
 
-use crate::mpi::Comm;
+use std::collections::HashMap;
+
+use crate::cluster::Allocation;
+use crate::mpi::{Comm, HaloPattern, RankClasses};
+
+/// Ascending divisors of `p`, found by trial division up to √p.
+fn divisors(p: usize) -> Vec<usize> {
+    let mut low = Vec::new();
+    let mut high = Vec::new();
+    let mut a = 1;
+    while a * a <= p {
+        if p % a == 0 {
+            low.push(a);
+            if a != p / a {
+                high.push(p / a);
+            }
+        }
+        a += 1;
+    }
+    low.extend(high.into_iter().rev());
+    low
+}
 
 /// Near-cubic factorisation of `p` into three factors (descending
 /// products keep slabs compact): used to build the process grid.
+///
+/// PERF: iterates only the divisors of `p` (O(√p + d(p)²)) instead of
+/// scanning `1..=p` per level — at the 98304-rank scale points the old
+/// scan was ~3000× more candidate pairs (EXPERIMENTS.md §Perf). The
+/// ascending iteration order matches the old scan, so ties resolve to
+/// the same factorisation.
 pub fn factor3(p: usize) -> [usize; 3] {
     assert!(p > 0);
     let mut best = [p, 1, 1];
     let mut best_score = usize::MAX;
-    for a in 1..=p {
-        if p % a != 0 {
-            continue;
-        }
+    let divs = divisors(p);
+    for &a in &divs {
         let q = p / a;
-        for b in 1..=q {
-            if q % b != 0 {
+        for &b in &divs {
+            if b > q || q % b != 0 {
                 continue;
             }
             let c = q / b;
@@ -138,6 +163,106 @@ impl Decomp {
     /// Face payload in bytes for a scalar f32 field at this block size.
     pub fn face_bytes(&self) -> u64 {
         (self.n_local * self.n_local * 4) as u64
+    }
+
+    /// Off-node halo message count per node under `alloc` (the quantity
+    /// that sizes each node's NIC serialisation in a uniform phase).
+    fn offnode_msgs(&self, alloc: &Allocation) -> Vec<u32> {
+        let mut off = vec![0u32; alloc.nodes_used];
+        for r in 0..self.ranks() {
+            for nb in self.neighbors(r).into_iter().flatten() {
+                if !alloc.same_node(r, nb) {
+                    off[alloc.node_of[r]] += 1;
+                }
+            }
+        }
+        off
+    }
+
+    /// The one-hop halo signature of `rank`: per direction, `None` at a
+    /// physical boundary, else `(same_node, neighbour_node_offnode_msgs)`.
+    fn halo_key(
+        &self,
+        alloc: &Allocation,
+        off: &[u32],
+        rank: usize,
+    ) -> [Option<(bool, u32)>; DIRS] {
+        self.neighbors(rank)
+            .map(|nb| nb.map(|nb| (alloc.same_node(rank, nb), off[alloc.node_of[nb]])))
+    }
+
+    /// Group ranks into equivalence classes by halo-neighbour signature:
+    /// which faces are shared (interior / face / edge / corner of the
+    /// process grid), whether each neighbour sits on the same node, and
+    /// how many off-node messages the neighbour's node injects. Two
+    /// ranks in one class advance identically through any uniform halo
+    /// phase entered from a globally uniform clock state — the invariant
+    /// `Comm::exchange_uniform` batches on. Class counts stay small
+    /// (~dozens to a few hundred) even at 98304 ranks, where the rank
+    /// count is ~300× larger (EXPERIMENTS.md §Perf).
+    pub fn rank_classes(&self, alloc: &Allocation) -> RankClasses {
+        assert_eq!(
+            alloc.ranks(),
+            self.ranks(),
+            "allocation has {} ranks, decomposition {}",
+            alloc.ranks(),
+            self.ranks()
+        );
+        let off = self.offnode_msgs(alloc);
+        let mut ids: HashMap<[Option<(bool, u32)>; DIRS], u32> = HashMap::new();
+        let mut class_of = Vec::with_capacity(self.ranks());
+        for r in 0..self.ranks() {
+            let key = self.halo_key(alloc, &off, r);
+            let next = ids.len() as u32;
+            class_of.push(*ids.entry(key).or_insert(next));
+        }
+        RankClasses::new(class_of)
+    }
+
+    /// Pre-compile the uniform halo phase of `bytes_per_face` against a
+    /// rank partition: per-class incoming edges for the O(classes)
+    /// batched update plus the flat message list for the per-rank
+    /// fallback. The partition must come from `rank_classes` on this
+    /// decomposition (same topology; `n_local` may differ, as on the
+    /// multigrid ladder).
+    pub fn halo_pattern(
+        &self,
+        alloc: &Allocation,
+        classes: &RankClasses,
+        bytes_per_face: u64,
+    ) -> HaloPattern {
+        assert_eq!(classes.ranks(), self.ranks());
+        let off = self.offnode_msgs(alloc);
+        let class_edges = (0..classes.len())
+            .map(|c| {
+                let rep = classes.representative(c);
+                self.halo_key(alloc, &off, rep)
+                    .into_iter()
+                    .flatten()
+                    .collect()
+            })
+            .collect();
+        HaloPattern {
+            bytes: bytes_per_face,
+            class_edges,
+            messages: self.halo_messages(bytes_per_face),
+        }
+    }
+
+    /// As [`halo_pattern`](Self::halo_pattern), taking the partition from
+    /// `comm` (empty batched side when none is installed, so the pattern
+    /// degenerates to its per-rank message list).
+    pub fn halo_pattern_for(&self, comm: &Comm, bytes_per_face: u64) -> HaloPattern {
+        match comm.classes() {
+            Some(classes) if classes.ranks() == self.ranks() => {
+                self.halo_pattern(comm.allocation(), classes, bytes_per_face)
+            }
+            _ => HaloPattern {
+                bytes: bytes_per_face,
+                class_edges: Vec::new(),
+                messages: self.halo_messages(bytes_per_face),
+            },
+        }
     }
 }
 
@@ -365,9 +490,15 @@ pub fn exchange_halos(decomp: &Decomp, fields: &mut [LocalField], comm: &mut Com
     comm.exchange(&decomp.halo_messages(decomp.face_bytes()));
 }
 
-/// Timing-only halo exchange (Modeled execution).
+/// Timing-only halo exchange (Modeled execution): class-batched when the
+/// communicator carries a partition, per-rank messages otherwise.
 pub fn exchange_halos_modeled(decomp: &Decomp, comm: &mut Comm, bytes_per_face: u64) {
-    comm.exchange(&decomp.halo_messages(bytes_per_face));
+    if comm.is_batched() {
+        let pattern = decomp.halo_pattern_for(comm, bytes_per_face);
+        comm.exchange_uniform(&pattern);
+    } else {
+        comm.exchange(&decomp.halo_messages(bytes_per_face));
+    }
 }
 
 #[cfg(test)]
@@ -504,5 +635,68 @@ mod tests {
         let msgs = d.halo_messages(64);
         assert_eq!(msgs.len(), 24);
         assert!(msgs.iter().all(|&(_, _, b)| b == 64));
+    }
+
+    #[test]
+    fn factor3_fast_at_scale_points() {
+        // the divisor-only iteration must stay exact at the Fig 3/4
+        // scale points (and be fast enough to call in a test at all)
+        assert_eq!(factor3(1536), [8, 12, 16]);
+        assert_eq!(factor3(12288), [16, 24, 32]);
+        assert_eq!(factor3(98304), [32, 48, 64]);
+        assert_eq!(factor3(97), [1, 1, 97]); // prime
+        for p in 1..=256 {
+            assert_eq!(factor3(p).iter().product::<usize>(), p);
+        }
+    }
+
+    #[test]
+    fn rank_classes_partition_is_consistent() {
+        let m = MachineSpec::edison();
+        for ranks in [1usize, 2, 24, 96, 192] {
+            let d = Decomp::new(ranks, 8);
+            let alloc = launch(&m, ranks).unwrap();
+            let classes = d.rank_classes(&alloc);
+            assert_eq!(classes.ranks(), ranks);
+            let total: u32 = (0..classes.len()).map(|c| classes.count(c)).sum();
+            assert_eq!(total as usize, ranks);
+            for c in 0..classes.len() {
+                let rep = classes.representative(c);
+                assert_eq!(classes.class_of(rep) as usize, c);
+            }
+            assert!(classes.len() <= ranks);
+        }
+    }
+
+    #[test]
+    fn rank_classes_collapse_at_scale() {
+        // the whole point: class counts stay ~constant while rank counts
+        // explode (measured in EXPERIMENTS.md §Perf)
+        let m = MachineSpec::edison();
+        let d = Decomp::new(1536, 8);
+        let alloc = launch(&m, 1536).unwrap();
+        let classes = d.rank_classes(&alloc);
+        assert!(
+            classes.len() < 1536 / 4,
+            "expected heavy collapse, got {} classes",
+            classes.len()
+        );
+    }
+
+    #[test]
+    fn halo_pattern_edges_match_representatives() {
+        let m = MachineSpec::edison();
+        let d = Decomp::new(48, 8);
+        let alloc = launch(&m, 48).unwrap();
+        let classes = d.rank_classes(&alloc);
+        let pat = d.halo_pattern(&alloc, &classes, d.face_bytes());
+        assert_eq!(pat.class_edges.len(), classes.len());
+        assert_eq!(pat.messages, d.halo_messages(d.face_bytes()));
+        for c in 0..classes.len() {
+            let rep = classes.representative(c);
+            let shared = d.neighbors(rep).iter().flatten().count();
+            assert_eq!(pat.class_edges[c].len(), shared, "class {c}");
+        }
+        assert_eq!(pat.total_bytes(), pat.messages.len() as u64 * d.face_bytes());
     }
 }

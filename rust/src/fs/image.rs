@@ -67,21 +67,38 @@ impl ImageFs {
 }
 
 impl FileSystem for ImageFs {
-    fn submit_meta_batch(&mut self, at: VirtualTime, node: usize, count: u32) -> VirtualTime {
-        let ready = self.warm(at, node);
-        ready + Duration::from_nanos(self.cached_meta.as_nanos() * count as u64)
-    }
-
     fn submit(&mut self, at: VirtualTime, node: usize, op: FsOp) -> VirtualTime {
         let ready = self.warm(at, node);
         match op {
             FsOp::Open | FsOp::Stat => ready + self.cached_meta,
+            FsOp::MetaBatch { ops } => {
+                ready + Duration::from_nanos(self.cached_meta.as_nanos() * ops as u64)
+            }
             FsOp::Read { bytes } => {
                 ready + Duration::from_secs_f64(bytes as f64 / self.cached_bytes_per_sec)
             }
             // writes go to a host-visible scratch path, not the read-only
             // image: charge backing-store cost (Shifter images are RO)
             FsOp::Write { bytes } => self.backing.submit(ready, node, FsOp::Write { bytes }),
+        }
+    }
+
+    /// Class-batched burst: page-cache hits do not queue, so all `count`
+    /// clients of the node complete at the identical instant — the
+    /// batched view is **exact** here (this is the containerised case
+    /// behind Fig 4). Writes fall through to the backing store's burst.
+    fn submit_batch(&mut self, at: VirtualTime, node: usize, count: u32, op: FsOp) -> VirtualTime {
+        if count == 0 {
+            return at;
+        }
+        match op {
+            FsOp::Open | FsOp::Stat | FsOp::MetaBatch { .. } | FsOp::Read { .. } => {
+                self.submit(at, node, op)
+            }
+            FsOp::Write { .. } => {
+                let ready = self.warm(at, node);
+                self.backing.submit_batch(ready, node, count, op)
+            }
         }
     }
 }

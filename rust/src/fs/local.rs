@@ -41,9 +41,32 @@ impl FileSystem for LocalFs {
     fn submit(&mut self, at: VirtualTime, _node: usize, op: FsOp) -> VirtualTime {
         match op {
             FsOp::Open | FsOp::Stat => at + self.meta,
+            FsOp::MetaBatch { ops } => {
+                at + Duration::from_nanos(self.meta.as_nanos() * ops as u64)
+            }
             FsOp::Read { bytes } | FsOp::Write { bytes } => {
                 let service = Duration::from_secs_f64(bytes as f64 / self.bytes_per_sec);
                 self.device.submit(at, service)
+            }
+        }
+    }
+
+    /// Class-batched burst: metadata is an unqueued cache hit (every
+    /// client completes identically — exact), data serialises the whole
+    /// burst through the single device queue (`submit_many` is exactly
+    /// `count` sequential submissions).
+    fn submit_batch(&mut self, at: VirtualTime, node: usize, count: u32, op: FsOp) -> VirtualTime {
+        match op {
+            FsOp::Open | FsOp::Stat | FsOp::MetaBatch { .. } => {
+                if count == 0 {
+                    at
+                } else {
+                    self.submit(at, node, op)
+                }
+            }
+            FsOp::Read { bytes } | FsOp::Write { bytes } => {
+                let service = Duration::from_secs_f64(bytes as f64 / self.bytes_per_sec);
+                self.device.submit_many(at, service, count)
             }
         }
     }

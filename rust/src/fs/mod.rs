@@ -33,6 +33,11 @@ pub enum FsOp {
     Open,
     /// `stat()` (pure metadata).
     Stat,
+    /// `ops` back-to-back metadata operations from one client (what a
+    /// module import issues: path-entry stats, `.py`/`.pyc` lookups).
+    /// One queue entry of `ops × service` — same client total and
+    /// server busy time as `ops` sequential [`FsOp::Open`]s.
+    MetaBatch { ops: u32 },
     /// Read `bytes` of data (metadata already done).
     Read { bytes: u64 },
     /// Write `bytes` of data.
@@ -43,15 +48,27 @@ pub enum FsOp {
 pub trait FileSystem {
     fn submit(&mut self, at: VirtualTime, node: usize, op: FsOp) -> VirtualTime;
 
-    /// `count` back-to-back metadata ops from one client. The default
-    /// loops over [`FsOp::Open`]; models with a queueing fast path
-    /// (ParallelFs) override it to enqueue one batched entry.
+    /// `count` back-to-back metadata ops from one client (one
+    /// [`FsOp::MetaBatch`] queue entry).
     fn submit_meta_batch(&mut self, at: VirtualTime, node: usize, count: u32) -> VirtualTime {
-        let mut t = at;
+        self.submit(at, node, FsOp::MetaBatch { ops: count })
+    }
+
+    /// `count` clients on `node`, all submitting `op` at `at`; returns
+    /// the completion instant of the *last* client — the rank-class view
+    /// of a symmetric per-node access burst (every MPI rank of a node
+    /// importing the same module, writing the same-sized chunk, ...).
+    ///
+    /// The default replays `count` independent submissions, which is
+    /// exact but O(count); models specialise it with a closed form or a
+    /// single service-time draw per batch (see each model's notes on
+    /// where that is exact vs an approximation).
+    fn submit_batch(&mut self, at: VirtualTime, node: usize, count: u32, op: FsOp) -> VirtualTime {
+        let mut last = at;
         for _ in 0..count {
-            t = self.submit(t, node, FsOp::Open);
+            last = last.max(self.submit(at, node, op));
         }
-        t
+        last
     }
 
     /// Convenience: open + read in sequence.
@@ -81,5 +98,29 @@ mod tests {
         let t_both = fs2.open_read(t0, 0, 4096);
         assert!(t_both > t_open);
         assert!(t_both - t0 < Duration::from_millis(10));
+    }
+
+    #[test]
+    fn meta_batch_matches_sequential_opens_on_localfs() {
+        let mut a = LocalFs::default();
+        let mut b = LocalFs::default();
+        let t0 = VirtualTime::ZERO;
+        let batched = a.submit_meta_batch(t0, 0, 7);
+        let mut seq = t0;
+        for _ in 0..7 {
+            seq = b.submit(seq, 0, FsOp::Open);
+        }
+        assert_eq!(batched, seq);
+    }
+
+    #[test]
+    fn default_submit_batch_returns_last_of_count_clients() {
+        // LocalFs reads serialise on one device: last of 3 = 3x one
+        let mut fs = LocalFs::default();
+        let one = LocalFs::default().submit(VirtualTime::ZERO, 0, FsOp::Read { bytes: 50_000_000 });
+        let last = fs.submit_batch(VirtualTime::ZERO, 0, 3, FsOp::Read { bytes: 50_000_000 });
+        let one_s = (one - VirtualTime::ZERO).as_secs_f64();
+        let last_s = (last - VirtualTime::ZERO).as_secs_f64();
+        assert!((last_s - 3.0 * one_s).abs() < 1e-9, "{last_s} vs 3x{one_s}");
     }
 }

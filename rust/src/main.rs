@@ -150,16 +150,20 @@ fn cmd_run(raw: &[String]) -> anyhow::Result<()> {
         )
         .opt("ranks", "MPI ranks", Some("24"))
         .opt("seed", "simulation seed", Some("42"))
-        .switch("python", "Python driver (adds the import phase)");
+        .switch("python", "Python driver (adds the import phase)")
+        .switch("per-rank", "force the O(ranks) per-rank engine (default: class-batched)");
     let p = args.parse(raw)?;
     let platform: Platform = p.req("platform").parse().map_err(anyhow::Error::msg)?;
     let ranks: usize = p.parse_num("ranks")?;
     let seed: u64 = p.parse_num("seed")?;
-    let cfg = if p.flag("python") {
+    let mut cfg = if p.flag("python") {
         AppConfig::python(ranks, seed)
     } else {
         AppConfig::cpp(ranks, seed)
     };
+    if p.flag("per-rank") {
+        cfg = cfg.per_rank();
+    }
     let table = CalibrationTable::load_or_default(None);
     let breakdown = run_poisson_app(platform, &mut Exec::Modeled { table: &table }, &cfg)?;
     println!(
@@ -180,9 +184,16 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
         .opt("seed", "base simulation seed", None)
         .opt("config", "experiment config JSON (overrides defaults)", None)
         .opt("out", "also write a JSON report to this path", None)
-        .switch("json", "print JSON instead of ASCII bars");
+        .switch("json", "print JSON instead of ASCII bars")
+        .switch("scale", "paper-scale rank counts (fig3/fig4: 1536, 12288, 98304)")
+        .switch("per-rank", "force the O(ranks) per-rank engine (default: class-batched)");
     let p = args.parse(raw)?;
+    if p.flag("scale") && p.get("config").is_some() {
+        anyhow::bail!("--scale conflicts with --config (set the scale ranks in the config file)");
+    }
     let figures: Vec<String> = match p.pos(0) {
+        // --scale only exists for the rank-sweeping figures
+        "all" if p.flag("scale") => vec!["fig3".into(), "fig4".into()],
         "all" => ["fig2", "fig3", "fig4", "fig5a", "fig5b"]
             .iter()
             .map(|s| s.to_string())
@@ -194,9 +205,13 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
     for figure in &figures {
         let mut cfg = match p.get("config") {
             Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
+            None if p.flag("scale") => ExperimentConfig::paper_scale(figure)?,
             None => ExperimentConfig::paper_default(figure)?,
         };
         cfg.figure = figure.clone();
+        if p.flag("per-rank") {
+            cfg.batched = false;
+        }
         if let Some(reps) = p.get("reps") {
             cfg.reps = reps.parse()?;
         }

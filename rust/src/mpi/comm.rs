@@ -1,8 +1,24 @@
-//! The communicator: per-rank virtual clocks + costed collectives.
+//! The communicator: per-rank virtual clocks + costed collectives,
+//! with an optional class-batched representation for symmetric jobs.
+//!
+//! When a [`RankClasses`] partition is installed (`set_classes`), the
+//! communicator keeps **one clock per class** instead of one per rank,
+//! and the phase operations run in O(classes).  The representation is
+//! exact — `clock(rank)` reads identically in either mode — and it
+//! *falls back transparently*: any operation whose result would not be
+//! uniform within a class (a per-rank `advance`, an arbitrary message
+//! list, a batched exchange from non-uniform entry clocks) first
+//! materialises the per-rank clocks and proceeds on them.  Synchronising
+//! collectives re-enter batched mode, since they leave every clock
+//! equal.  This is what lets the modeled solvers run at paper-scale rank
+//! counts (see EXPERIMENTS.md §Perf) without changing a single
+//! `VirtualTime` on the sizes the per-rank path can still reach.
 
 use crate::cluster::Allocation;
 use crate::des::{Duration, VirtualTime};
 use crate::net::Fabric;
+
+use super::{HaloPattern, RankClasses};
 
 /// Cumulative communication statistics (for reports and tests).
 #[derive(Debug, Clone, Copy, Default)]
@@ -23,7 +39,14 @@ pub struct CommStats {
 pub struct Comm {
     alloc: Allocation,
     fabric: Fabric,
+    /// Per-rank clocks; authoritative when `!batched`.
     clocks: Vec<VirtualTime>,
+    /// Installed partition (kept even while running per-rank, so
+    /// synchronising collectives can re-enter batched mode).
+    classes: Option<RankClasses>,
+    /// Per-class clocks; authoritative when `batched`.
+    class_clocks: Vec<VirtualTime>,
+    batched: bool,
     stats: CommStats,
     // reusable scratch (see `exchange`)
     entry_scratch: Vec<VirtualTime>,
@@ -37,6 +60,9 @@ impl Comm {
             alloc,
             fabric,
             clocks: vec![VirtualTime::ZERO; n],
+            classes: None,
+            class_clocks: Vec::new(),
+            batched: false,
             stats: CommStats::default(),
             entry_scratch: Vec::with_capacity(n),
             node_bytes_scratch: Vec::new(),
@@ -55,28 +81,123 @@ impl Comm {
         &self.alloc
     }
 
+    /// Install a rank partition and enter class-batched mode if the
+    /// current clocks are uniform within every class. Returns whether
+    /// batched mode is engaged now (if not, it engages at the next
+    /// synchronising collective).
+    pub fn set_classes(&mut self, classes: RankClasses) -> bool {
+        assert_eq!(
+            classes.ranks(),
+            self.size(),
+            "partition covers {} ranks, communicator has {}",
+            classes.ranks(),
+            self.size()
+        );
+        self.materialize();
+        self.class_clocks.clear();
+        self.class_clocks
+            .extend((0..classes.len()).map(|c| self.clocks[classes.representative(c)]));
+        let uniform = (0..self.size())
+            .all(|r| self.clocks[r] == self.class_clocks[classes.class_of(r) as usize]);
+        self.batched = uniform;
+        self.classes = Some(classes);
+        self.batched
+    }
+
+    /// The installed partition, if any.
+    pub fn classes(&self) -> Option<&RankClasses> {
+        self.classes.as_ref()
+    }
+
+    /// Whether phase operations currently run on class clocks.
+    pub fn is_batched(&self) -> bool {
+        self.batched
+    }
+
+    /// Leave batched mode: write each class clock through to its member
+    /// ranks. Idempotent; the partition stays installed.
+    fn materialize(&mut self) {
+        if !self.batched {
+            return;
+        }
+        let classes = self.classes.as_ref().expect("batched implies classes");
+        for (r, c) in self.clocks.iter_mut().zip(classes.map()) {
+            *r = self.class_clocks[*c as usize];
+        }
+        self.batched = false;
+    }
+
+    /// Set every clock to exactly `t` (synchronising collectives); if a
+    /// partition is installed this re-enters batched mode, since a
+    /// globally uniform state is trivially class-uniform.
+    fn sync_all_to(&mut self, t: VirtualTime) {
+        if let Some(classes) = &self.classes {
+            self.class_clocks.clear();
+            self.class_clocks.resize(classes.len(), t);
+            self.batched = true;
+        } else {
+            for c in &mut self.clocks {
+                *c = t;
+            }
+        }
+    }
+
     pub fn clock(&self, rank: usize) -> VirtualTime {
-        self.clocks[rank]
+        if self.batched {
+            let classes = self.classes.as_ref().expect("batched implies classes");
+            self.class_clocks[classes.class_of(rank) as usize]
+        } else {
+            self.clocks[rank]
+        }
     }
 
     /// The job's wall clock: the furthest-ahead rank.
     pub fn max_clock(&self) -> VirtualTime {
-        self.clocks.iter().copied().max().unwrap_or(VirtualTime::ZERO)
+        let clocks = if self.batched { &self.class_clocks } else { &self.clocks };
+        clocks.iter().copied().max().unwrap_or(VirtualTime::ZERO)
     }
 
     pub fn stats(&self) -> CommStats {
         self.stats
     }
 
-    /// Advance one rank's clock by local (compute / IO) work.
+    /// Advance one rank's clock by local (compute / IO) work. Breaks
+    /// class uniformity, so batched mode falls back to per-rank clocks.
     pub fn advance(&mut self, rank: usize, d: Duration) {
+        self.materialize();
         self.clocks[rank] += d;
+    }
+
+    /// Advance every member of class `c` by `d` (O(1) when batched).
+    pub fn advance_class(&mut self, c: usize, d: Duration) {
+        if self.batched {
+            self.class_clocks[c] += d;
+            return;
+        }
+        let Some(classes) = &self.classes else {
+            panic!("advance_class needs a partition (set_classes)");
+        };
+        for (r, &cls) in classes.map().iter().enumerate() {
+            if cls as usize == c {
+                self.clocks[r] += d;
+            }
+        }
+    }
+
+    /// Advance every rank by the same `d` (uniform compute phase):
+    /// O(classes) when batched, O(ranks) otherwise.
+    pub fn advance_uniform(&mut self, d: Duration) {
+        let clocks = if self.batched { &mut self.class_clocks } else { &mut self.clocks };
+        for c in clocks {
+            *c += d;
+        }
     }
 
     /// Set every clock to at least `t` (e.g. after a containerised
     /// process start completes at different times per rank).
     pub fn advance_all_to(&mut self, t: VirtualTime) {
-        for c in &mut self.clocks {
+        let clocks = if self.batched { &mut self.class_clocks } else { &mut self.clocks };
+        for c in clocks {
             *c = (*c).max(t);
         }
     }
@@ -88,6 +209,7 @@ impl Comm {
     /// completes when its last incoming message lands (and not before
     /// its own phase-entry clock).
     pub fn exchange(&mut self, msgs: &[(usize, usize, u64)]) {
+        self.materialize();
         // PERF: `entry` snapshot and the per-node byte tally are flat
         // vectors (a HashMap here was ~15% of large modeled runs; see
         // EXPERIMENTS.md §Perf). The scratch buffers live on self so a
@@ -148,6 +270,50 @@ impl Comm {
         self.stats.p2p_bytes += msgs.iter().map(|&(_, _, b)| b).sum::<u64>();
     }
 
+    /// A uniform-payload halo phase, class-batched when exact.
+    ///
+    /// The O(classes) path runs when (a) a partition matching the
+    /// pattern is installed and (b) all clocks currently stand at one
+    /// instant — the state every synchronising collective leaves behind,
+    /// and the state the bulk-synchronous solvers are in at every halo
+    /// phase. From a uniform entry `t`, the per-rank exchange advances
+    /// each rank to a value that depends only on its one-hop signature
+    /// (shared faces, same-node flags, sender-node NIC load), which is
+    /// exactly what [`HaloPattern`] records per class — so the batched
+    /// update is bit-identical to replaying `pattern.messages`. From any
+    /// other state it simply replays the messages per rank.
+    pub fn exchange_uniform(&mut self, pattern: &HaloPattern) {
+        if self.batched && pattern.class_edges.len() == self.class_clocks.len() {
+            let t0 = self.class_clocks.first().copied().unwrap_or(VirtualTime::ZERO);
+            if self.class_clocks.iter().all(|&c| c == t0) {
+                let t_same = self.fabric.p2p(pattern.bytes, true);
+                let t_diff = self.fabric.p2p(pattern.bytes, false);
+                let o_same = self.fabric.p2p(0, true);
+                let o_diff = self.fabric.p2p(0, false);
+                for (c, edges) in pattern.class_edges.iter().enumerate() {
+                    let mut new = t0;
+                    for &(same, src_node_msgs) in edges {
+                        // outgoing: the sender-side library overhead
+                        new = new.max(t0 + if same { o_same } else { o_diff });
+                        // incoming: transfer + the sender's NIC backlog
+                        let mut arrive = t0 + if same { t_same } else { t_diff };
+                        if !same {
+                            arrive += self
+                                .fabric
+                                .nic_serialisation(pattern.bytes * src_node_msgs as u64);
+                        }
+                        new = new.max(arrive);
+                    }
+                    self.class_clocks[c] = new;
+                }
+                self.stats.p2p_messages += pattern.messages.len() as u64;
+                self.stats.p2p_bytes += pattern.total_bytes();
+                return;
+            }
+        }
+        self.exchange(&pattern.messages);
+    }
+
     /// Allreduce of `bytes` per rank (recursive-doubling model):
     /// a synchronising collective costing `2 ceil(log2 p) (α + s/β)` on
     /// the worst path in the allocation.
@@ -161,10 +327,7 @@ impl Comm {
         let multi_node = self.alloc.nodes_used > 1;
         let per_round = self.fabric.p2p(bytes, !multi_node);
         let cost = per_round * (2 * rounds);
-        let done = start + cost;
-        for c in &mut self.clocks {
-            *c = done;
-        }
+        self.sync_all_to(start + cost);
         self.stats.allreduces += 1;
     }
 
@@ -174,10 +337,7 @@ impl Comm {
         let start = self.max_clock();
         let rounds = if p <= 1 { 0 } else { 64 - (p - 1).leading_zeros() as u64 };
         let multi_node = self.alloc.nodes_used > 1;
-        let done = start + self.fabric.p2p(0, !multi_node) * rounds;
-        for c in &mut self.clocks {
-            *c = done;
-        }
+        self.sync_all_to(start + self.fabric.p2p(0, !multi_node) * rounds);
         self.stats.barriers += 1;
     }
 }
@@ -186,6 +346,7 @@ impl Comm {
 mod tests {
     use super::*;
     use crate::cluster::{launch, MachineSpec};
+    use crate::fem::grid::Decomp;
     use crate::net::FabricKind;
 
     fn comm(ranks: usize, fabric: FabricKind) -> Comm {
@@ -312,5 +473,98 @@ mod tests {
         c.exchange(&[(0, 1, 100), (2, 3, 200)]);
         assert_eq!(c.stats().p2p_messages, 2);
         assert_eq!(c.stats().p2p_bytes, 300);
+    }
+
+    // ---- class-batched mode -------------------------------------------
+
+    fn classed_pair(ranks: usize, kind: FabricKind) -> (Comm, Comm, Decomp) {
+        let decomp = Decomp::new(ranks, 16);
+        let mut batched = comm(ranks, kind);
+        let per_rank = comm(ranks, kind);
+        assert!(batched.set_classes(decomp.rank_classes(batched.allocation())));
+        (batched, per_rank, decomp)
+    }
+
+    #[test]
+    fn batched_exchange_matches_per_rank_bit_for_bit() {
+        for ranks in [1usize, 2, 8, 24, 48, 96, 192] {
+            for kind in [FabricKind::Aries, FabricKind::TcpEthernet] {
+                let (mut b, mut p, decomp) = classed_pair(ranks, kind);
+                let pat = decomp.halo_pattern_for(&b, decomp.face_bytes());
+                b.exchange_uniform(&pat);
+                p.exchange(&decomp.halo_messages(decomp.face_bytes()));
+                for r in 0..ranks {
+                    assert_eq!(b.clock(r), p.clock(r), "ranks {ranks} {kind:?} rank {r}");
+                }
+                assert_eq!(b.stats().p2p_messages, p.stats().p2p_messages);
+                assert_eq!(b.stats().p2p_bytes, p.stats().p2p_bytes);
+                assert!(b.is_batched(), "exchange from uniform entry stays batched");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_collectives_match_per_rank() {
+        let (mut b, mut p, _) = classed_pair(96, FabricKind::Aries);
+        b.advance_uniform(Duration::from_millis(2));
+        p.advance_uniform(Duration::from_millis(2));
+        b.allreduce(8);
+        p.allreduce(8);
+        b.barrier();
+        p.barrier();
+        for r in 0..96 {
+            assert_eq!(b.clock(r), p.clock(r));
+        }
+        assert!(b.is_batched());
+    }
+
+    #[test]
+    fn per_rank_advance_falls_back_and_collective_recovers() {
+        let (mut b, _, _) = classed_pair(48, FabricKind::Aries);
+        assert!(b.is_batched());
+        b.advance(7, Duration::from_millis(1));
+        assert!(!b.is_batched(), "per-rank advance must leave batched mode");
+        assert_eq!(b.clock(7).as_secs_f64(), 0.001);
+        assert_eq!(b.clock(6), VirtualTime::ZERO);
+        b.barrier();
+        assert!(b.is_batched(), "barrier re-enters batched mode");
+    }
+
+    #[test]
+    fn batched_exchange_from_nonuniform_entry_falls_back() {
+        let (mut b, mut p, decomp) = classed_pair(48, FabricKind::Aries);
+        b.advance(0, Duration::from_millis(5));
+        p.advance(0, Duration::from_millis(5));
+        let pat = decomp.halo_pattern_for(&b, decomp.face_bytes());
+        b.exchange_uniform(&pat);
+        p.exchange(&decomp.halo_messages(decomp.face_bytes()));
+        assert!(!b.is_batched());
+        for r in 0..48 {
+            assert_eq!(b.clock(r), p.clock(r), "rank {r}");
+        }
+    }
+
+    #[test]
+    fn advance_class_moves_whole_class_only() {
+        let (mut b, _, decomp) = classed_pair(27, FabricKind::Aries);
+        let classes = decomp.rank_classes(b.allocation());
+        let c = classes.class_of(13) as usize; // an interior-ish rank
+        b.advance_class(c, Duration::from_millis(3));
+        for r in 0..27 {
+            let expect = if classes.class_of(r) as usize == c { 0.003 } else { 0.0 };
+            assert_eq!(b.clock(r).as_secs_f64(), expect, "rank {r}");
+        }
+        assert!(b.is_batched());
+    }
+
+    #[test]
+    fn set_classes_on_divergent_clocks_defers_batching() {
+        let decomp = Decomp::new(8, 16);
+        let mut c = comm(8, FabricKind::Aries);
+        c.advance(3, Duration::from_millis(1)); // breaks class uniformity
+        assert!(!c.set_classes(decomp.rank_classes(c.allocation())));
+        assert!(!c.is_batched());
+        c.allreduce(8);
+        assert!(c.is_batched(), "sync re-engages the partition");
     }
 }

@@ -6,13 +6,21 @@
 //! per-node NIC serialisation — enough to reproduce the communication
 //! behaviour behind Figs 3–5 without packet-level simulation.
 //!
+//! [`RankClasses`] collapses symmetric ranks into equivalence classes
+//! and [`HaloPattern`] pre-compiles a uniform halo phase against them,
+//! so the bulk-synchronous hot loops run in O(classes) instead of
+//! O(ranks) — the refactor that makes paper-scale (1k–100k rank)
+//! figure regeneration tractable (EXPERIMENTS.md §Perf).
+//!
 //! [`AbiResolver`] models the paper's central deployment trick (§4.2):
 //! swapping the container's MPICH for the ABI-compatible Cray library at
 //! load time via `LD_LIBRARY_PATH`, which is what decides whether a job
 //! gets the Aries fabric or the TCP fallback.
 
 mod abi;
+mod classes;
 mod comm;
 
 pub use abi::{AbiResolver, McaResolution};
+pub use classes::{HaloPattern, RankClasses};
 pub use comm::{Comm, CommStats};

@@ -28,6 +28,9 @@ pub struct HpgmgConfig {
     pub seed: u64,
     /// Whether the image was built with `ARCH_OPT`.
     pub arch_optimized_image: bool,
+    /// Rank-class batched engine for modeled runs (`false` forces the
+    /// O(ranks) per-rank reference path; VirtualTime-identical).
+    pub batched: bool,
 }
 
 impl HpgmgConfig {
@@ -39,6 +42,7 @@ impl HpgmgConfig {
             cycles: 8,
             seed,
             arch_optimized_image: false,
+            batched: true,
         }
     }
 
@@ -50,6 +54,7 @@ impl HpgmgConfig {
             cycles: 8,
             seed,
             arch_optimized_image: false,
+            batched: true,
         }
     }
 }
@@ -71,6 +76,11 @@ pub fn run_hpgmg(platform: Platform, exec: &mut Exec, cfg: &HpgmgConfig) -> Resu
     }
     let decomp = Decomp::new(cfg.ranks, LADDER[cfg.fine_level]);
     let mut comm = setup.comm();
+    if cfg.batched && !exec.is_real() {
+        // class-batch the modeled ladder (bit-identical; see
+        // tests/batched_equivalence.rs and fem::gmg's equivalence test)
+        comm.set_classes(decomp.rank_classes(comm.allocation()));
+    }
     // tuned = true: HPGMG is the workload where arch flags matter
     let mut scale = setup.scale(true);
 

@@ -1,0 +1,197 @@
+//! Property tests: the rank-class batched engine is `VirtualTime`-
+//! identical to the per-rank reference path on randomized
+//! decompositions (the tentpole invariant of the batching refactor).
+//!
+//! Three layers are exercised:
+//!   * `Comm::exchange_uniform` vs `Comm::exchange` on the same halo
+//!     phase from a uniform entry state;
+//!   * modeled `distributed_cg` / `vcycles` on a batched vs a plain
+//!     communicator (jitter on — the single-draw-per-phase semantics
+//!     must keep the paths in lockstep, and GMG additionally exercises
+//!     the transparent fallback mid-cycle);
+//!   * `replay` vs `replay_batched` on the image-mounted filesystem,
+//!     where the per-node burst is exact, and on the contended parallel
+//!     filesystem, where it must stay inside the per-burst noise band
+//!     while conserving MDS accounting.
+
+use harbor::cluster::{launch, MachineSpec};
+use harbor::des::{Duration, VirtualTime};
+use harbor::fem::cg::{distributed_cg, CgConfig};
+use harbor::fem::exec::{ComputeScale, Exec};
+use harbor::fem::gmg::{vcycles, GmgConfig};
+use harbor::fem::grid::Decomp;
+use harbor::fs::{ImageFs, ParallelFs};
+use harbor::mpi::Comm;
+use harbor::net::{Fabric, FabricKind};
+use harbor::pyimport::{replay, replay_batched, ModuleGraph};
+use harbor::runtime::CalibrationTable;
+use harbor::util::proptest::{run, Gen};
+
+fn comm_pair(ranks: usize, kind: FabricKind, decomp: &Decomp) -> (Comm, Comm) {
+    let m = MachineSpec::edison();
+    let mut batched = Comm::new(launch(&m, ranks).unwrap(), Fabric::by_kind(kind));
+    let per_rank = Comm::new(launch(&m, ranks).unwrap(), Fabric::by_kind(kind));
+    assert!(batched.set_classes(decomp.rank_classes(batched.allocation())));
+    (batched, per_rank)
+}
+
+fn pick_fabric(g: &mut Gen) -> FabricKind {
+    *g.choose(&[FabricKind::Aries, FabricKind::TcpEthernet, FabricKind::SharedMem])
+}
+
+#[test]
+fn prop_exchange_uniform_bit_identical_from_uniform_entry() {
+    run("exchange-uniform-equivalence", 150, |g: &mut Gen| {
+        let ranks = g.usize_in(1, 220);
+        let kind = pick_fabric(g);
+        let bytes = g.u64_in(0, 1 << 20);
+        let head_start = Duration::from_nanos(g.u64_in(0, 1_000_000_000));
+        let decomp = Decomp::new(ranks, 8);
+        let (mut b, mut p) = comm_pair(ranks, kind, &decomp);
+        b.advance_uniform(head_start);
+        p.advance_uniform(head_start);
+        let pattern = decomp.halo_pattern_for(&b, bytes);
+        b.exchange_uniform(&pattern);
+        p.exchange(&decomp.halo_messages(bytes));
+        for r in 0..ranks {
+            if b.clock(r) != p.clock(r) {
+                return Err(format!(
+                    "ranks {ranks} {kind:?} bytes {bytes}: rank {r} {:?} != {:?}",
+                    b.clock(r),
+                    p.clock(r)
+                ));
+            }
+        }
+        if !b.is_batched() {
+            return Err("uniform-entry exchange should not fall back".into());
+        }
+        let (bs, ps) = (b.stats(), p.stats());
+        if bs.p2p_messages != ps.p2p_messages || bs.p2p_bytes != ps.p2p_bytes {
+            return Err("stats diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_modeled_cg_bit_identical_with_jitter() {
+    run("modeled-cg-equivalence", 40, |g: &mut Gen| {
+        let ranks = g.usize_in(1, 200);
+        let kind = *g.choose(&[FabricKind::Aries, FabricKind::TcpEthernet]);
+        let seed = g.u64_in(0, 1 << 20);
+        let iters = g.usize_in(1, 12);
+        let decomp = Decomp::new(ranks, 16);
+        let cfg = CgConfig {
+            modeled_iters: iters,
+            ..CgConfig::default()
+        };
+        let table = CalibrationTable::builtin_fallback();
+        let go = |batched: bool| {
+            let m = MachineSpec::edison();
+            let mut comm = Comm::new(launch(&m, ranks).unwrap(), Fabric::by_kind(kind));
+            if batched {
+                comm.set_classes(decomp.rank_classes(comm.allocation()));
+            }
+            let mut scale = ComputeScale::new(1.0, 1.0, seed, 0.015);
+            distributed_cg(
+                &mut Exec::Modeled { table: &table },
+                &mut comm,
+                &mut scale,
+                &decomp,
+                &[],
+                &cfg,
+            )
+            .unwrap();
+            (0..ranks).map(|r| comm.clock(r)).collect::<Vec<_>>()
+        };
+        if go(true) != go(false) {
+            return Err(format!("ranks {ranks} {kind:?} seed {seed}: clocks diverged"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_modeled_gmg_bit_identical_through_fallback() {
+    run("modeled-gmg-equivalence", 15, |g: &mut Gen| {
+        let ranks = *g.choose(&[2usize, 8, 27, 48, 96]);
+        let seed = g.u64_in(0, 1 << 20);
+        let nu = g.usize_in(1, 3);
+        let decomp = Decomp::new(ranks, 32);
+        let table = CalibrationTable::builtin_fallback();
+        let go = |batched: bool| {
+            let m = MachineSpec::edison();
+            let mut comm =
+                Comm::new(launch(&m, ranks).unwrap(), Fabric::by_kind(FabricKind::Aries));
+            if batched {
+                comm.set_classes(decomp.rank_classes(comm.allocation()));
+            }
+            let mut scale = ComputeScale::new(1.0, 1.0, seed, 0.015);
+            vcycles(
+                &mut Exec::Modeled { table: &table },
+                &mut comm,
+                &mut scale,
+                &decomp,
+                &[],
+                &GmgConfig { nu, cycles: 2, ..Default::default() },
+            )
+            .unwrap();
+            (0..ranks).map(|r| comm.clock(r)).collect::<Vec<_>>()
+        };
+        if go(true) != go(false) {
+            return Err(format!("ranks {ranks} nu {nu} seed {seed}: clocks diverged"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_replay_batched_exact_on_image_fs() {
+    run("replay-imagefs-equivalence", 25, |g: &mut Gen| {
+        let ranks = g.usize_in(1, 120);
+        let modules = g.usize_in(1, 60);
+        let seed = g.u64_in(0, 1000);
+        let start = VirtualTime::ZERO + Duration::from_nanos(g.u64_in(0, 1_000_000));
+        let m = MachineSpec::edison();
+        let alloc = launch(&m, ranks).unwrap();
+        let graph = ModuleGraph::small(modules);
+        let mut a = ImageFs::new(1_200_000_000, ParallelFs::edison(seed));
+        let mut b = ImageFs::new(1_200_000_000, ParallelFs::edison(seed));
+        let per_rank = replay(&graph, &alloc, &mut a, start);
+        let batched = replay_batched(&graph, &alloc, &mut b, start);
+        if per_rank.rank_done != batched.rank_done {
+            return Err(format!("ranks {ranks} modules {modules}: rank_done diverged"));
+        }
+        if per_rank.wall != batched.wall {
+            return Err("wall diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_replay_batched_tracks_parallel_fs() {
+    run("replay-parallelfs-band", 10, |g: &mut Gen| {
+        let ranks = *g.choose(&[24usize, 48, 96]);
+        let modules = g.usize_in(20, 80);
+        let seed = g.u64_in(0, 1000);
+        let m = MachineSpec::edison();
+        let alloc = launch(&m, ranks).unwrap();
+        let graph = ModuleGraph::small(modules);
+        let mut a = ParallelFs::edison(seed);
+        let mut b = ParallelFs::edison(seed);
+        let per_rank = replay(&graph, &alloc, &mut a, VirtualTime::ZERO);
+        let batched = replay_batched(&graph, &alloc, &mut b, VirtualTime::ZERO);
+        // the burst occupies identical MDS handler time
+        if a.mds_served() != b.mds_served() {
+            return Err(format!("served {} vs {}", a.mds_served(), b.mds_served()));
+        }
+        let ratio = batched.wall.as_secs_f64() / per_rank.wall.as_secs_f64();
+        if !(0.3..3.0).contains(&ratio) {
+            return Err(format!(
+                "ranks {ranks} modules {modules} seed {seed}: wall ratio {ratio:.3}"
+            ));
+        }
+        Ok(())
+    });
+}
