@@ -1,0 +1,62 @@
+//! Fleet-scale deployment bench: pull-makespan vs node count for the
+//! `fig1-scale` sweep (64 → 16384 nodes), cold and warm, recorded into
+//! `BENCH_micro.json`.
+//!
+//! Two kinds of numbers are recorded per fleet size `N`:
+//!
+//! * `fig1_cold_{N}_virt_s` / `fig1_warm_{N}_virt_s` — the *virtual*
+//!   pull makespan the distribution model predicts (deterministic);
+//! * `fig1_deploy_{N}_wall_s` — the wall time the simulator needs to
+//!   compute the cold+warm pair (the simulator's own performance, the
+//!   §Perf trajectory).
+//!
+//! The warm/cold ratio is also recorded as `fig1_warm_cold_ratio`; the
+//! acceptance bar is < 0.10.
+
+mod common;
+
+use std::time::Instant;
+
+use harbor::config::SCALE_NODES;
+use harbor::container::{Fleet, FleetConfig};
+use harbor::coordinator::fleet_registry;
+
+use common::record_bench;
+
+fn main() {
+    let reference = "quay.io/fenicsproject/stable:2016.1.0r1";
+    let mut rec: Vec<(String, f64)> = Vec::new();
+    let mut worst_ratio = 0.0f64;
+
+    println!("== fig 1 at fleet scale: pull makespan vs node count ==");
+    for &nodes in &SCALE_NODES {
+        let t0 = Instant::now();
+        let mut sharded = fleet_registry(reference).expect("fleet registry");
+        let mut fleet = Fleet::new(FleetConfig::hpc(nodes));
+        let cold = fleet.deploy(&mut sharded, reference).expect("cold deploy");
+        let warm = fleet.deploy(&mut sharded, reference).expect("warm deploy");
+        let wall = t0.elapsed().as_secs_f64();
+
+        let ratio = warm.makespan.as_secs_f64() / cold.makespan.as_secs_f64();
+        worst_ratio = worst_ratio.max(ratio);
+        println!(
+            "  {nodes:>6} nodes: cold {:>9} (WAN {:>6.1} MB, intra {:>9.1} MB), \
+             warm {:>9}, ratio {ratio:.5}, computed in {wall:.3} s",
+            cold.makespan,
+            cold.wan_bytes as f64 / 1e6,
+            cold.intra_bytes as f64 / 1e6,
+            warm.makespan,
+        );
+        rec.push((format!("fig1_cold_{nodes}_virt_s"), cold.makespan.as_secs_f64()));
+        rec.push((format!("fig1_warm_{nodes}_virt_s"), warm.makespan.as_secs_f64()));
+        rec.push((format!("fig1_deploy_{nodes}_wall_s"), wall));
+    }
+
+    println!("  worst warm/cold ratio: {worst_ratio:.5} (bar: < 0.10)");
+    rec.push(("fig1_warm_cold_ratio".into(), worst_ratio));
+    if worst_ratio >= 0.10 {
+        eprintln!("  WARNING: warm-cache makespan above the 10% acceptance bar");
+    }
+
+    record_bench(&rec);
+}

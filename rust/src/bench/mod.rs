@@ -18,13 +18,16 @@ pub fn repeat(reps: usize, mut f: impl FnMut(usize) -> f64) -> Stats {
 /// One bar of a figure.
 #[derive(Debug, Clone)]
 pub struct Row {
+    /// Bar label (platform or configuration name).
     pub label: String,
+    /// Aggregated samples behind the bar.
     pub stats: Stats,
     /// Optional per-phase means (stacked-bar figures: Figs 3 and 4).
     pub breakdown: Vec<(String, f64)>,
 }
 
 impl Row {
+    /// A bar with no phase breakdown.
     pub fn new(label: impl Into<String>, stats: Stats) -> Self {
         Row {
             label: label.into(),
@@ -33,6 +36,7 @@ impl Row {
         }
     }
 
+    /// Attach per-phase means (stacked-bar figures).
     pub fn with_breakdown(mut self, phases: Vec<(String, f64)>) -> Self {
         self.breakdown = phases;
         self
@@ -42,15 +46,20 @@ impl Row {
 /// A renderable figure.
 #[derive(Debug, Clone)]
 pub struct Figure {
+    /// Figure title (paper-style caption).
     pub title: String,
+    /// Unit of the bar values (e.g. "run time [s]").
     pub unit: String,
     /// `true` for throughput plots (Fig 5): longer bars are better.
     pub higher_better: bool,
+    /// Bars, in display order.
     pub rows: Vec<Row>,
+    /// Caption footnotes.
     pub notes: Vec<String>,
 }
 
 impl Figure {
+    /// An empty figure with the given caption and unit.
     pub fn new(title: impl Into<String>, unit: impl Into<String>, higher_better: bool) -> Self {
         Figure {
             title: title.into(),
@@ -61,10 +70,12 @@ impl Figure {
         }
     }
 
+    /// Append a bar.
     pub fn push(&mut self, row: Row) {
         self.rows.push(row);
     }
 
+    /// Append a caption footnote.
     pub fn note(&mut self, s: impl Into<String>) {
         self.notes.push(s.into());
     }

@@ -13,8 +13,11 @@ use crate::net::FabricKind;
 /// Static description of a machine (the "testbed").
 #[derive(Debug, Clone)]
 pub struct MachineSpec {
+    /// Machine name ("workstation", "edison").
     pub name: String,
+    /// Physical cores per node (= max ranks per node).
     pub cores_per_node: usize,
+    /// Node count of the whole machine (a job uses a slice).
     pub num_nodes: usize,
     /// The fabric the *system* MPI library drives.
     pub host_fabric: FabricKind,
@@ -31,9 +34,13 @@ pub struct MachineSpec {
 
 /// Serde-friendly milliseconds wrapper.
 #[derive(Debug, Clone, Copy)]
-pub struct DurationMs(pub f64);
+pub struct DurationMs(
+    /// Milliseconds.
+    pub f64,
+);
 
 impl DurationMs {
+    /// Convert to a virtual-time span.
     pub fn duration(self) -> Duration {
         Duration::from_secs_f64(self.0 / 1e3)
     }
@@ -70,6 +77,7 @@ impl MachineSpec {
         }
     }
 
+    /// Cores across the whole machine.
     pub fn total_cores(&self) -> usize {
         self.cores_per_node * self.num_nodes
     }
@@ -78,17 +86,22 @@ impl MachineSpec {
 /// A job's rank → node placement.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Allocation {
+    /// Identity of the machine the job landed on.
     pub machine: MachineSpec_,
     /// `node_of[rank]` = node index.
     pub node_of: Vec<usize>,
+    /// Number of nodes the block placement touched.
     pub nodes_used: usize,
 }
 
 // The allocation embeds a trimmed copy of the machine identity to avoid
 // dragging lifetimes through every simulation structure.
 #[derive(Debug, Clone, PartialEq, Eq)]
+/// Trimmed machine identity embedded in an [`Allocation`].
 pub struct MachineSpec_ {
+    /// Machine name.
     pub name: String,
+    /// Cores per node (decides same-node placement).
     pub cores_per_node: usize,
 }
 
@@ -96,11 +109,16 @@ pub struct MachineSpec_ {
 /// its dependency set small rather than pulling in `thiserror`).
 #[derive(Debug)]
 pub enum LaunchError {
+    /// More cores requested than the machine has.
     TooLarge {
+        /// Cores the job asked for.
         requested: usize,
+        /// Cores the machine has.
         available: usize,
+        /// Machine that refused.
         machine: String,
     },
+    /// A job of zero ranks makes no sense.
     ZeroRanks,
 }
 
@@ -146,10 +164,12 @@ pub fn launch(machine: &MachineSpec, ranks: usize) -> Result<Allocation, LaunchE
 }
 
 impl Allocation {
+    /// Number of ranks in the job.
     pub fn ranks(&self) -> usize {
         self.node_of.len()
     }
 
+    /// Whether ranks `a` and `b` share a node.
     pub fn same_node(&self, a: usize, b: usize) -> bool {
         self.node_of[a] == self.node_of[b]
     }

@@ -14,7 +14,8 @@ use crate::util::json::{self, Value};
 /// Configuration of one figure regeneration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
-    /// Which figure: "fig2", "fig3", "fig4", "fig5a", "fig5b".
+    /// Which figure: "fig2", "fig3", "fig4", "fig5a", "fig5b",
+    /// "fig1-scale".
     pub figure: String,
     /// Repetitions per bar (the paper: 5 on the workstation, 3 on Edison).
     pub reps: usize,
@@ -27,12 +28,19 @@ pub struct ExperimentConfig {
     /// Rank-class batched engine for the modeled workloads (the default;
     /// `false` forces the O(ranks) per-rank reference path).
     pub batched: bool,
+    /// Fleet node counts (the `fig1-scale` deployment sweep).
+    pub nodes: Vec<usize>,
 }
 
 /// The Fig 3/4 scale points beyond the paper's sweep (§4.2's ">30 min at
 /// ~1000 ranks" regime; Edison had 5576 × 24 cores): 64, 512, and 4096
 /// full nodes. Only reachable in reasonable time on the batched engine.
 pub const SCALE_RANKS: [usize; 3] = [1536, 12288, 98304];
+
+/// The `fig1-scale` fleet sizes: pull one image onto this many nodes at
+/// once (the paper's Fig 1 "pull everywhere" step, grown to the scale
+/// PR 1 unlocked for the compute phase).
+pub const SCALE_NODES: [usize; 4] = [64, 512, 4096, 16384];
 
 impl ExperimentConfig {
     /// The paper's setup for each figure.
@@ -45,6 +53,7 @@ impl ExperimentConfig {
                 ranks: vec![1],
                 sizes: vec![],
                 batched: true,
+                nodes: vec![],
             },
             "fig3" => ExperimentConfig {
                 figure: "fig3".into(),
@@ -53,6 +62,7 @@ impl ExperimentConfig {
                 ranks: vec![24, 48, 96, 192],
                 sizes: vec![],
                 batched: true,
+                nodes: vec![],
             },
             "fig4" => ExperimentConfig {
                 figure: "fig4".into(),
@@ -61,6 +71,7 @@ impl ExperimentConfig {
                 ranks: vec![24, 48, 96],
                 sizes: vec![],
                 batched: true,
+                nodes: vec![],
             },
             "fig5a" => ExperimentConfig {
                 figure: "fig5a".into(),
@@ -69,6 +80,7 @@ impl ExperimentConfig {
                 ranks: vec![16],
                 sizes: vec![2, 1, 0],
                 batched: true,
+                nodes: vec![],
             },
             "fig5b" => ExperimentConfig {
                 figure: "fig5b".into(),
@@ -77,8 +89,20 @@ impl ExperimentConfig {
                 ranks: vec![192],
                 sizes: vec![2, 1, 0],
                 batched: true,
+                nodes: vec![],
             },
-            other => anyhow::bail!("unknown figure `{other}` (fig2|fig3|fig4|fig5a|fig5b)"),
+            "fig1-scale" => ExperimentConfig {
+                figure: "fig1-scale".into(),
+                reps: 1,
+                seed: 42,
+                ranks: vec![],
+                sizes: vec![],
+                batched: true,
+                nodes: SCALE_NODES.to_vec(),
+            },
+            other => {
+                anyhow::bail!("unknown figure `{other}` (fig1-scale|fig2|fig3|fig4|fig5a|fig5b)")
+            }
         };
         Ok(cfg)
     }
@@ -98,6 +122,7 @@ impl ExperimentConfig {
         Ok(cfg)
     }
 
+    /// Serialise to the report-embedded JSON form.
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("figure", Value::str(self.figure.clone())),
@@ -112,9 +137,15 @@ impl ExperimentConfig {
                 Value::Arr(self.sizes.iter().map(|&s| Value::num(s as f64)).collect()),
             ),
             ("batched", Value::Bool(self.batched)),
+            (
+                "nodes",
+                Value::Arr(self.nodes.iter().map(|&n| Value::num(n as f64)).collect()),
+            ),
         ])
     }
 
+    /// Parse a config: `figure` selects the paper defaults, any other
+    /// present key overrides them.
     pub fn from_json(v: &Value) -> Result<Self> {
         let figure = v
             .get("figure")
@@ -143,15 +174,23 @@ impl ExperimentConfig {
         if let Some(b) = v.get("batched").as_bool() {
             cfg.batched = b;
         }
+        if let Some(arr) = v.get("nodes").as_arr() {
+            cfg.nodes = arr
+                .iter()
+                .map(|x| x.as_u64().map(|u| u as usize).context("bad node count"))
+                .collect::<Result<_>>()?;
+        }
         Ok(cfg)
     }
 
+    /// Load a config from a JSON file.
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
         Self::from_json(&json::parse(&text)?)
     }
 
+    /// Write the JSON form to `path`.
     pub fn save(&self, path: &Path) -> Result<()> {
         std::fs::write(path, self.to_json().to_pretty())
             .with_context(|| format!("writing {}", path.display()))
@@ -176,6 +215,17 @@ mod tests {
     fn json_round_trip() {
         let mut cfg = ExperimentConfig::paper_default("fig4").unwrap();
         cfg.batched = false;
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn fig1_scale_sweeps_fleet_sizes() {
+        let cfg = ExperimentConfig::paper_default("fig1-scale").unwrap();
+        assert_eq!(cfg.nodes, SCALE_NODES.to_vec());
+        assert_eq!(*cfg.nodes.last().unwrap(), 16384);
+        assert!(cfg.nodes.len() >= 4);
+        assert!(cfg.ranks.is_empty());
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);
     }

@@ -25,9 +25,11 @@ use crate::des::Duration;
 /// Result of a build: the image plus provenance/caching info.
 #[derive(Debug, Clone)]
 pub struct BuildReport {
+    /// The built image.
     pub image: Image,
     /// Layers that were produced by this build (vs. cache hits).
     pub layers_built: usize,
+    /// Directives answered from the layer cache.
     pub layers_cached: usize,
     /// Modelled wall time of the build (package installs dominate).
     pub build_time: Duration,
@@ -41,6 +43,7 @@ pub struct Builder {
 }
 
 impl Builder {
+    /// A builder with an empty layer cache.
     pub fn new() -> Self {
         Self::default()
     }
@@ -113,7 +116,10 @@ impl Builder {
 
 /// Unknown base image reference.
 #[derive(Debug)]
-pub struct UnknownBase(pub String);
+pub struct UnknownBase(
+    /// The reference that is not in the catalogue.
+    pub String,
+);
 
 impl std::fmt::Display for UnknownBase {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {

@@ -13,14 +13,37 @@
 /// A parsed build directive.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Directive {
+    /// Base image to start from.
     From(String),
+    /// Shell command whose filesystem effect becomes a layer.
     Run(String),
-    Env { key: String, value: String },
+    /// Environment variable for the image config (no layer).
+    Env {
+        /// Variable name.
+        key: String,
+        /// Variable value.
+        value: String,
+    },
+    /// User subsequent directives (and the entrypoint) run as.
     User(String),
+    /// Working directory for the entrypoint.
     Workdir(String),
-    Copy { src: String, dst: String },
+    /// Copy project files into the image.
+    Copy {
+        /// Host-side source path.
+        src: String,
+        /// Destination path inside the image.
+        dst: String,
+    },
+    /// Command the container runs by default.
     Entrypoint(String),
-    Label { key: String, value: String },
+    /// Image metadata label (no layer).
+    Label {
+        /// Label name.
+        key: String,
+        /// Label value.
+        value: String,
+    },
     /// Build performance-critical binaries for the host architecture.
     ArchOpt,
 }
@@ -45,13 +68,16 @@ impl Directive {
 /// A parsed buildfile.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Buildfile {
+    /// Parsed directives, in file order.
     pub directives: Vec<Directive>,
 }
 
 /// Parse failure with line context.
 #[derive(Debug)]
 pub struct ParseError {
+    /// 1-based line of the offending directive.
     pub line: usize,
+    /// What was wrong with it.
     pub message: String,
 }
 

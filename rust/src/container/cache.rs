@@ -1,0 +1,299 @@
+//! Node-local, content-addressed layer cache — the tier between the
+//! registry and the runtime.
+//!
+//! Every compute node in a fleet keeps a [`LayerCache`]: a bounded
+//! [`LayerStore`] with least-recently-used eviction and hit/miss/eviction
+//! accounting.  A fleet deployment (see [`distribute`]) consults each
+//! node's cache before any transfer is scheduled, which is what turns a
+//! warm re-deploy into a metadata-only operation — the mechanism behind
+//! Shifter's node-local image cache and the `squashfs` per-node loopback
+//! mounts the paper's HPC side relies on.
+//!
+//! [`distribute`]: super::distribute
+
+use std::collections::HashMap;
+
+use super::image::{Layer, LayerId};
+use super::store::LayerStore;
+
+/// Hit/miss/eviction counters for one cache (or, merged, for a fleet).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that required a transfer.
+    pub misses: u64,
+    /// Layers evicted to stay under the byte capacity.
+    pub evictions: u64,
+    /// Bytes served from the cache (transfers avoided).
+    pub bytes_hit: u64,
+    /// Bytes admitted into the cache.
+    pub bytes_inserted: u64,
+    /// Bytes evicted from the cache.
+    pub bytes_evicted: u64,
+}
+
+impl CacheStats {
+    /// hits / (hits + misses); 0.0 for an untouched cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Accumulate another cache's counters into this one (fleet totals).
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.bytes_hit += other.bytes_hit;
+        self.bytes_inserted += other.bytes_inserted;
+        self.bytes_evicted += other.bytes_evicted;
+    }
+
+    /// Counter delta since an `earlier` snapshot of the same cache set
+    /// (all fields are monotone, so plain subtraction is exact).
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            evictions: self.evictions - earlier.evictions,
+            bytes_hit: self.bytes_hit - earlier.bytes_hit,
+            bytes_inserted: self.bytes_inserted - earlier.bytes_inserted,
+            bytes_evicted: self.bytes_evicted - earlier.bytes_evicted,
+        }
+    }
+}
+
+/// A bounded, LRU-evicting, content-addressed layer cache.
+///
+/// Wraps a [`LayerStore`] with a byte capacity, a recency order, and
+/// [`CacheStats`] accounting.  `u64::MAX` capacity (the
+/// [`unbounded`](LayerCache::unbounded) constructor) disables eviction.
+#[derive(Debug, Clone)]
+pub struct LayerCache {
+    store: LayerStore,
+    capacity_bytes: u64,
+    /// Logical access clock; higher = more recently used.
+    tick: u64,
+    /// Last-access tick per resident layer.
+    recency: HashMap<LayerId, u64>,
+    stats: CacheStats,
+}
+
+impl LayerCache {
+    /// A cache holding at most `capacity_bytes` of layer data.
+    pub fn new(capacity_bytes: u64) -> Self {
+        LayerCache {
+            store: LayerStore::new(),
+            capacity_bytes,
+            tick: 0,
+            recency: HashMap::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// A cache that never evicts (fleet nodes with ample local disk).
+    pub fn unbounded() -> Self {
+        Self::new(u64::MAX)
+    }
+
+    /// Look `id` up, recording a hit or a miss and touching recency on
+    /// a hit.  This is the accounting entry point a deployment uses;
+    /// [`contains`](Self::contains) peeks without accounting.
+    pub fn lookup(&mut self, id: &LayerId) -> Option<&Layer> {
+        self.tick += 1;
+        match self.store.get(id) {
+            Some(layer) => {
+                self.stats.hits += 1;
+                self.stats.bytes_hit += layer.bytes;
+                self.recency.insert(id.clone(), self.tick);
+                Some(layer)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Whether `id` is resident (no accounting, no recency touch).
+    pub fn contains(&self, id: &LayerId) -> bool {
+        self.store.contains(id)
+    }
+
+    /// Admit a layer, evicting least-recently-used layers until the
+    /// cache fits its capacity.  The just-admitted layer is never the
+    /// eviction victim (it is the most recent by construction), but a
+    /// single layer larger than the whole capacity is admitted and then
+    /// becomes the only resident — the cache degrades to pass-through
+    /// rather than refusing work.
+    pub fn admit(&mut self, layer: Layer) {
+        self.tick += 1;
+        if self.store.contains(&layer.id) {
+            // refresh recency only; re-admitting resident content is free
+            self.recency.insert(layer.id.clone(), self.tick);
+            return;
+        }
+        self.stats.bytes_inserted += layer.bytes;
+        self.recency.insert(layer.id.clone(), self.tick);
+        self.store.insert(layer);
+        while self.store.physical_bytes() > self.capacity_bytes && self.store.len() > 1 {
+            let victim = self
+                .recency
+                .iter()
+                .min_by_key(|&(id, &t)| (t, id))
+                .map(|(id, _)| id.clone())
+                .expect("non-empty cache has a victim");
+            self.recency.remove(&victim);
+            if let Some(evicted) = self.store.remove(&victim) {
+                self.stats.evictions += 1;
+                self.stats.bytes_evicted += evicted.bytes;
+            }
+        }
+    }
+
+    /// Which of `wanted` a transfer must supply (no accounting).
+    pub fn missing<'a>(&self, wanted: &'a [LayerId]) -> Vec<&'a LayerId> {
+        self.store.missing(wanted)
+    }
+
+    /// Accumulated hit/miss/eviction counters.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Bytes currently resident.
+    pub fn used_bytes(&self) -> u64 {
+        self.store.physical_bytes()
+    }
+
+    /// Configured byte capacity (`u64::MAX` = unbounded).
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    /// Number of resident layers.
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    /// Whether the cache holds no layers.
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    /// Read-only view of the backing store (for runtime mounting).
+    pub fn store(&self) -> &LayerStore {
+        &self.store
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::image::FileEntry;
+
+    fn layer(tag: &str, bytes: u64) -> Layer {
+        Layer::derive(
+            None,
+            tag,
+            vec![FileEntry {
+                path: format!("/{tag}"),
+                bytes,
+            }],
+        )
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut c = LayerCache::unbounded();
+        let a = layer("a", 100);
+        assert!(c.lookup(&a.id).is_none());
+        c.admit(a.clone());
+        assert_eq!(c.lookup(&a.id).unwrap().bytes, 100);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.bytes_hit, 100);
+        assert_eq!(s.bytes_inserted, 100);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = LayerCache::new(250);
+        let (a, b, d) = (layer("a", 100), layer("b", 100), layer("d", 100));
+        c.admit(a.clone());
+        c.admit(b.clone());
+        // touch `a` so `b` becomes the LRU victim
+        assert!(c.lookup(&a.id).is_some());
+        c.admit(d.clone());
+        assert!(c.contains(&a.id));
+        assert!(!c.contains(&b.id), "LRU layer evicted");
+        assert!(c.contains(&d.id));
+        assert_eq!(c.stats().evictions, 1);
+        assert_eq!(c.stats().bytes_evicted, 100);
+        assert!(c.used_bytes() <= 250);
+    }
+
+    #[test]
+    fn oversized_layer_degrades_to_pass_through() {
+        let mut c = LayerCache::new(50);
+        c.admit(layer("big", 500));
+        assert_eq!(c.len(), 1, "oversized layer still admitted");
+        c.admit(layer("big2", 600));
+        assert_eq!(c.len(), 1, "previous oversized layer evicted");
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn readmit_is_free_and_refreshes_recency() {
+        let mut c = LayerCache::new(250);
+        let (a, b, d) = (layer("a", 100), layer("b", 100), layer("d", 100));
+        c.admit(a.clone());
+        c.admit(b.clone());
+        c.admit(a.clone()); // refresh, not a second insert
+        assert_eq!(c.stats().bytes_inserted, 200);
+        c.admit(d.clone());
+        assert!(!c.contains(&b.id), "b was LRU after a's refresh");
+        assert!(c.contains(&a.id));
+    }
+
+    #[test]
+    fn unbounded_never_evicts() {
+        let mut c = LayerCache::unbounded();
+        for i in 0..100 {
+            c.admit(layer(&format!("l{i}"), 1 << 20));
+        }
+        assert_eq!(c.len(), 100);
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn missing_delegates_to_store() {
+        let mut c = LayerCache::unbounded();
+        let a = layer("a", 1);
+        let b = layer("b", 1);
+        c.admit(a.clone());
+        let wanted = vec![a.id.clone(), b.id.clone()];
+        let miss = c.missing(&wanted);
+        assert_eq!(miss, vec![&b.id]);
+    }
+
+    #[test]
+    fn merged_stats_accumulate() {
+        let mut total = CacheStats::default();
+        let mut c1 = LayerCache::unbounded();
+        let mut c2 = LayerCache::unbounded();
+        c1.admit(layer("a", 10));
+        c1.lookup(&layer("a", 10).id);
+        c2.lookup(&layer("b", 20).id);
+        total.merge(&c1.stats());
+        total.merge(&c2.stats());
+        assert_eq!((total.hits, total.misses), (1, 1));
+        assert_eq!(total.bytes_inserted, 10);
+    }
+}

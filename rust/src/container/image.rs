@@ -12,11 +12,17 @@ use sha2::{Digest, Sha256};
 
 /// Content hash of a layer (hex sha256).
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct LayerId(pub String);
+pub struct LayerId(
+    /// Hex sha256 of the layer's build inputs.
+    pub String,
+);
 
 /// Content hash of an image config (hex sha256).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
-pub struct ImageId(pub String);
+pub struct ImageId(
+    /// Hex sha256 of the image config.
+    pub String,
+);
 
 impl std::fmt::Display for LayerId {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -33,13 +39,16 @@ impl std::fmt::Display for ImageId {
 /// One file recorded in a layer's manifest.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FileEntry {
+    /// Absolute path inside the image.
     pub path: String,
+    /// File size in bytes.
     pub bytes: u64,
 }
 
 /// An immutable filesystem delta.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Layer {
+    /// Content hash (commits to parent, directive, and manifest).
     pub id: LayerId,
     /// The build directive that produced this layer (provenance).
     pub directive: String,
@@ -71,6 +80,7 @@ impl Layer {
         }
     }
 
+    /// Number of files this layer adds or changes.
     pub fn file_count(&self) -> usize {
         self.files.len()
     }
@@ -79,12 +89,17 @@ impl Layer {
 /// An immutable image: layer stack + runtime config.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Image {
+    /// Content hash of the image config.
     pub id: ImageId,
     /// `repository:tag`, e.g. `quay.io/fenicsproject/stable:2016.1.0r1`.
     pub reference: String,
+    /// Layer stack, base first.
     pub layers: Vec<LayerId>,
+    /// Environment variables (`ENV` directives).
     pub env: Vec<(String, String)>,
+    /// Entrypoint command, if set.
     pub entrypoint: Option<String>,
+    /// Image labels (`LABEL` directives).
     pub labels: Vec<(String, String)>,
     /// Whether the image was built with host-architecture optimisation
     /// (`ARCH_OPT` directive): controls the Fig 5a AVX penalty.

@@ -11,19 +11,31 @@ use super::image::ImageId;
 /// Lifecycle states.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ContainerState {
+    /// Instantiated but not started.
     Created,
+    /// Entrypoint running.
     Running,
-    Exited { code: i32 },
+    /// Finished with an exit code.
+    Exited {
+        /// Process exit code (0 = success).
+        code: i32,
+    },
 }
 
 /// A runtime instantiation of an image.
 #[derive(Debug, Clone)]
 pub struct Container {
+    /// Runtime-assigned container id.
     pub id: u64,
+    /// Image this container instantiates.
     pub image: ImageId,
+    /// Current lifecycle state.
     pub state: ContainerState,
+    /// When the container was created.
     pub created_at: VirtualTime,
+    /// When it entered `Running`, if ever.
     pub started_at: Option<VirtualTime>,
+    /// When it exited, if finished.
     pub exited_at: Option<VirtualTime>,
     /// Bytes written to the container's writable layer.
     pub scratch_bytes: u64,
@@ -34,7 +46,9 @@ pub struct Container {
 /// Invalid state transition.
 #[derive(Debug, PartialEq, Eq)]
 pub struct StateError {
+    /// State the container was in.
     pub from: &'static str,
+    /// Action that was attempted.
     pub action: &'static str,
 }
 impl std::fmt::Display for StateError {
@@ -45,6 +59,7 @@ impl std::fmt::Display for StateError {
 impl std::error::Error for StateError {}
 
 impl Container {
+    /// A new container in the `Created` state.
     pub fn create(id: u64, image: ImageId, at: VirtualTime) -> Self {
         Container {
             id,
@@ -58,6 +73,7 @@ impl Container {
         }
     }
 
+    /// Created → Running.
     pub fn start(&mut self, at: VirtualTime) -> Result<(), StateError> {
         match self.state {
             ContainerState::Created => {
@@ -76,6 +92,7 @@ impl Container {
         }
     }
 
+    /// Record a command exec'd inside a running container.
     pub fn exec(&mut self, cmd: &str) -> Result<(), StateError> {
         if self.state != ContainerState::Running {
             return Err(StateError {
@@ -87,6 +104,7 @@ impl Container {
         Ok(())
     }
 
+    /// Running → Exited with `code`.
     pub fn exit(&mut self, code: i32, at: VirtualTime) -> Result<(), StateError> {
         if self.state != ContainerState::Running {
             return Err(StateError {
@@ -99,6 +117,7 @@ impl Container {
         Ok(())
     }
 
+    /// Account bytes written to the writable layer.
     pub fn write_scratch(&mut self, bytes: u64) {
         self.scratch_bytes += bytes;
     }

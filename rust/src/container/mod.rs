@@ -20,6 +20,13 @@
 //!   layers the other side is missing, with transfer times from a
 //!   bandwidth model (pull times show up in the deployment pipeline
 //!   example and coordinator traces).
+//! * [`cache`] — the node-local tier between registry and runtime: a
+//!   bounded, LRU-evicting [`LayerCache`] per compute node with
+//!   hit/miss/eviction accounting.
+//! * [`distribute`] — fleet-scale layer distribution: the registry
+//!   sharded behind per-shard FIFO frontends, DES-scheduled concurrent
+//!   pulls, and Trow-style peer fan-out so a layer crosses the WAN once
+//!   and rides the cluster fabric to thousands of nodes.
 //! * [`lifecycle`] — the container state machine (Created → Running →
 //!   Exited) a runtime drives.
 //! * [`session`] — the `fenicsproject` wrapper script (§3.2): notebook /
@@ -31,6 +38,8 @@
 
 pub mod buildfile;
 pub mod builder;
+pub mod cache;
+pub mod distribute;
 pub mod image;
 pub mod lifecycle;
 pub mod registry;
@@ -40,6 +49,8 @@ pub mod store;
 
 pub use buildfile::{Buildfile, Directive};
 pub use builder::Builder;
+pub use cache::{CacheStats, LayerCache};
+pub use distribute::{FanOut, Fleet, FleetConfig, FleetReport, ShardedRegistry};
 pub use image::{Image, ImageId, Layer, LayerId};
 pub use lifecycle::{Container, ContainerState};
 pub use registry::{PullReport, Registry};

@@ -16,10 +16,15 @@ use super::store::LayerStore;
 /// What a pull did (for traces/README tables).
 #[derive(Debug, Clone)]
 pub struct PullReport {
+    /// Image reference pulled.
     pub reference: String,
+    /// Layers that crossed the wire.
     pub layers_transferred: usize,
+    /// Layers already present at the destination.
     pub layers_reused: usize,
+    /// Compressed bytes moved.
     pub bytes_transferred: u64,
+    /// Modelled transfer time.
     pub time: Duration,
 }
 
@@ -27,6 +32,7 @@ pub struct PullReport {
 #[derive(Debug, Default)]
 pub struct Registry {
     images: HashMap<String, Image>,
+    /// Blob store backing every served image.
     pub layers: LayerStore,
     /// Download bandwidth clients see (bytes/s).
     pub bytes_per_sec: f64,
@@ -35,6 +41,7 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// An empty registry with the default WAN bandwidth model.
     pub fn new() -> Self {
         Registry {
             images: HashMap::new(),
@@ -57,6 +64,39 @@ impl Registry {
     }
 
     /// Pull `reference` into `dest`, transferring only missing layers.
+    ///
+    /// This is the *flat* bandwidth model: one shared link, transfer
+    /// time `layers × rtt + bytes / bandwidth`, no queueing.  It is
+    /// what single-machine workflows (the Fig 1 pipeline's workstation
+    /// and Edison pulls) use.  Fleet-scale concurrent pulls go through
+    /// [`distribute::ShardedRegistry::pull_at`], which schedules the
+    /// same byte movement through per-shard queues in virtual time.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use harbor::container::{Builder, Buildfile, LayerStore, Registry};
+    ///
+    /// // build an image and push it
+    /// let bf = Buildfile::parse("FROM ubuntu:16.04\nRUN echo hi").unwrap();
+    /// let mut ci_store = LayerStore::new();
+    /// let image = Builder::new().build(&bf, "app:1", &mut ci_store).unwrap().image;
+    /// let mut registry = Registry::new();
+    /// registry.push(&image, &ci_store).unwrap();
+    ///
+    /// // a fresh machine pulls everything ...
+    /// let mut machine = LayerStore::new();
+    /// let (_, first) = registry.pull("app:1", &mut machine).unwrap();
+    /// assert_eq!(first.layers_transferred, 2);
+    ///
+    /// // ... and a second pull of the same image moves nothing
+    /// let (_, again) = registry.pull("app:1", &mut machine).unwrap();
+    /// assert_eq!(again.layers_transferred, 0);
+    /// assert_eq!(again.layers_reused, 2);
+    /// assert_eq!(again.bytes_transferred, 0);
+    /// ```
+    ///
+    /// [`distribute::ShardedRegistry::pull_at`]: super::distribute::ShardedRegistry::pull_at
     pub fn pull(&self, reference: &str, dest: &mut LayerStore) -> Result<(Image, PullReport), PullError> {
         let image = self
             .images
@@ -90,18 +130,29 @@ impl Registry {
         ))
     }
 
+    /// All image references the registry serves.
     pub fn tags(&self) -> impl Iterator<Item = &str> {
         self.images.keys().map(|s| s.as_str())
     }
 
+    /// Whether `reference` is served.
     pub fn contains(&self, reference: &str) -> bool {
         self.images.contains_key(reference)
+    }
+
+    /// The image tagged `reference`, if served (manifest lookup — the
+    /// control-plane half of a pull; blob movement is separate).
+    pub fn image(&self, reference: &str) -> Option<&Image> {
+        self.images.get(reference)
     }
 }
 
 /// Push failed: the source store lacks a layer the image references.
 #[derive(Debug)]
-pub struct MissingLayer(pub LayerId);
+pub struct MissingLayer(
+    /// Id of the layer the source store lacks.
+    pub LayerId,
+);
 impl std::fmt::Display for MissingLayer {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "source store is missing layer {}", self.0)
@@ -112,7 +163,9 @@ impl std::error::Error for MissingLayer {}
 /// Pull failures.
 #[derive(Debug)]
 pub enum PullError {
+    /// No image tagged with the requested reference.
     UnknownReference(String),
+    /// The catalogue references a blob the store lost.
     CorruptRegistry(LayerId),
 }
 impl std::fmt::Display for PullError {
@@ -216,5 +269,14 @@ mod tests {
         reg.push(&image, &store).unwrap();
         assert!(reg.contains("repo/app:2.0"));
         assert_eq!(reg.tags().collect::<Vec<_>>(), vec!["repo/app:2.0"]);
+    }
+
+    #[test]
+    fn image_lookup() {
+        let (image, store) = built("repo/app:2.0", "FROM alpine:3.4");
+        let mut reg = Registry::new();
+        reg.push(&image, &store).unwrap();
+        assert_eq!(reg.image("repo/app:2.0").unwrap().id, image.id);
+        assert!(reg.image("ghost:1").is_none());
     }
 }

@@ -26,10 +26,15 @@ use super::image::Image;
 /// Which runtime instantiates the container.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum RuntimeKind {
+    /// No container at all (bare metal).
     Native,
+    /// Docker daemon (the workstation default).
     Docker,
+    /// CoreOS rkt.
     Rkt,
+    /// NERSC's Shifter (the HPC runtime).
     Shifter,
+    /// Docker inside a VirtualBox-style VM.
     Vm,
 }
 
@@ -62,6 +67,7 @@ pub enum FsPolicy {
 
 /// A container runtime adapter.
 pub trait ContainerRuntime {
+    /// Which runtime this adapter models.
     fn kind(&self) -> RuntimeKind;
 
     /// Time from `run` to the entrypoint executing (excludes pull).

@@ -29,8 +29,11 @@ pub enum SessionKind {
 /// One named project session.
 #[derive(Debug)]
 pub struct Session {
+    /// Session name (the `fenicsproject <cmd> <name>` argument).
     pub name: String,
+    /// Notebook or plain session.
     pub kind: SessionKind,
+    /// The backing container (holds the writable layer).
     pub container: Container,
     /// Host port mapped to the container's 8888 (notebooks only).
     pub port: Option<u16>,
@@ -43,10 +46,15 @@ pub struct Session {
 /// Errors the wrapper reports to users.
 #[derive(Debug, PartialEq, Eq)]
 pub enum SessionError {
+    /// A session of that name already exists.
     AlreadyExists(String),
+    /// No session of that name.
     NoSuchSession(String),
+    /// The session is not running.
     NotRunning(String),
+    /// The session is already running.
     AlreadyRunning(String),
+    /// All notebook ports are taken.
     NoFreePorts,
 }
 
@@ -76,6 +84,7 @@ pub struct SessionManager {
 }
 
 impl SessionManager {
+    /// A manager running sessions of `image` under `runtime`.
     pub fn new(image: Image, runtime: RuntimeKind) -> Self {
         SessionManager {
             image,
@@ -88,6 +97,7 @@ impl SessionManager {
         }
     }
 
+    /// The manager's virtual clock.
     pub fn now(&self) -> VirtualTime {
         self.clock
     }
@@ -202,6 +212,7 @@ impl SessionManager {
         s.port.map(|p| format!("http://127.0.0.1:{p}/?token=fenics"))
     }
 
+    /// `(name, state)` pairs, sorted by name (the `list` command).
     pub fn list(&self) -> Vec<(&str, &'static str)> {
         let mut out: Vec<_> = self
             .sessions
@@ -219,6 +230,7 @@ impl SessionManager {
         out
     }
 
+    /// Look a session up by name.
     pub fn get(&self, name: &str) -> Option<&Session> {
         self.sessions.get(name)
     }

@@ -10,15 +10,42 @@ use std::collections::HashMap;
 use super::image::{Layer, LayerId};
 
 /// Content-addressed store of layers.
+///
+/// # Example
+///
+/// Two inserts of identical content store one physical copy; the
+/// logical/physical ratio quantifies the sharing:
+///
+/// ```
+/// use harbor::container::image::{FileEntry, Layer};
+/// use harbor::container::LayerStore;
+///
+/// let base = Layer::derive(
+///     None,
+///     "FROM ubuntu:16.04",
+///     vec![FileEntry { path: "/bin/sh".into(), bytes: 100 }],
+/// );
+/// let mut store = LayerStore::new();
+/// assert!(store.insert(base.clone()));   // new content
+/// assert!(!store.insert(base.clone()));  // dedup: same hash, no new copy
+/// assert_eq!(store.len(), 1);
+/// assert_eq!(store.physical_bytes(), 100);
+/// assert_eq!(store.logical_bytes(), 200);
+/// assert!(store.dedup_ratio() > 1.9);
+/// ```
 #[derive(Debug, Clone, Default)]
 pub struct LayerStore {
     layers: HashMap<LayerId, Layer>,
     /// Total logical bytes ever inserted (including duplicates).
     logical_bytes: u64,
+    /// Bytes currently resident (kept in sync by insert/remove so
+    /// `physical_bytes` is O(1) — cache eviction loops poll it).
+    resident_bytes: u64,
     inserts: u64,
 }
 
 impl LayerStore {
+    /// An empty store.
     pub fn new() -> Self {
         Self::default()
     }
@@ -27,20 +54,30 @@ impl LayerStore {
     pub fn insert(&mut self, layer: Layer) -> bool {
         self.logical_bytes += layer.bytes;
         self.inserts += 1;
-        self.layers.insert(layer.id.clone(), layer).is_none()
+        let bytes = layer.bytes;
+        match self.layers.insert(layer.id.clone(), layer) {
+            None => {
+                self.resident_bytes += bytes;
+                true
+            }
+            // same content hash ⇒ same bytes; resident total unchanged
+            Some(_) => false,
+        }
     }
 
+    /// The layer stored under `id`, if present.
     pub fn get(&self, id: &LayerId) -> Option<&Layer> {
         self.layers.get(id)
     }
 
+    /// Whether `id` is resident.
     pub fn contains(&self, id: &LayerId) -> bool {
         self.layers.contains_key(id)
     }
 
-    /// Physical bytes actually stored (deduplicated).
+    /// Physical bytes actually stored (deduplicated). O(1).
     pub fn physical_bytes(&self) -> u64 {
-        self.layers.values().map(|l| l.bytes).sum()
+        self.resident_bytes
     }
 
     /// Logical bytes inserted over the store's lifetime.
@@ -58,10 +95,12 @@ impl LayerStore {
         }
     }
 
+    /// Number of resident layers.
     pub fn len(&self) -> usize {
         self.layers.len()
     }
 
+    /// Whether the store holds no layers.
     pub fn is_empty(&self) -> bool {
         self.layers.is_empty()
     }
@@ -69,6 +108,22 @@ impl LayerStore {
     /// Which of `wanted` are *not* present (what a pull must transfer).
     pub fn missing<'a>(&self, wanted: &'a [LayerId]) -> Vec<&'a LayerId> {
         wanted.iter().filter(|id| !self.contains(id)).collect()
+    }
+
+    /// Remove a layer (cache eviction); returns it if it was present.
+    /// Lifetime counters (`logical_bytes`, insert count) are monotone
+    /// and unaffected — only the resident set shrinks.
+    pub fn remove(&mut self, id: &LayerId) -> Option<Layer> {
+        let removed = self.layers.remove(id);
+        if let Some(layer) = &removed {
+            self.resident_bytes -= layer.bytes;
+        }
+        removed
+    }
+
+    /// Ids of all resident layers (unspecified order).
+    pub fn ids(&self) -> impl Iterator<Item = &LayerId> {
+        self.layers.keys()
     }
 }
 
@@ -118,6 +173,36 @@ mod tests {
         assert!(s.is_empty());
         assert_eq!(s.dedup_ratio(), 1.0);
         assert_eq!(s.physical_bytes(), 0);
+    }
+
+    #[test]
+    fn physical_bytes_counter_stays_consistent() {
+        let mut s = LayerStore::new();
+        let a = layer("a", 100);
+        let b = layer("b", 50);
+        s.insert(a.clone());
+        s.insert(a.clone()); // duplicate content: resident unchanged
+        s.insert(b);
+        assert_eq!(s.physical_bytes(), 150);
+        s.remove(&a.id);
+        assert_eq!(s.physical_bytes(), 50);
+        s.remove(&a.id); // double-remove is a no-op
+        assert_eq!(s.physical_bytes(), 50);
+        s.insert(a);
+        assert_eq!(s.physical_bytes(), 150);
+    }
+
+    #[test]
+    fn remove_and_ids() {
+        let mut s = LayerStore::new();
+        let a = layer("a", 5);
+        s.insert(a.clone());
+        assert_eq!(s.ids().collect::<Vec<_>>(), vec![&a.id]);
+        let back = s.remove(&a.id).unwrap();
+        assert_eq!(back.bytes, 5);
+        assert!(s.is_empty());
+        assert_eq!(s.logical_bytes(), 5); // lifetime counter is monotone
+        assert!(s.remove(&a.id).is_none());
     }
 
     #[test]

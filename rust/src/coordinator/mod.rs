@@ -17,7 +17,10 @@ use anyhow::Result;
 
 use crate::bench::{repeat, Figure, Row};
 use crate::config::ExperimentConfig;
-use crate::container::{Builder, Buildfile, LayerStore, PullReport, Registry};
+use crate::container::{
+    Builder, Buildfile, Fleet, FleetConfig, FleetReport, LayerStore, PullReport, Registry,
+    ShardedRegistry,
+};
 use crate::des::Duration;
 use crate::fem::exec::Exec;
 use crate::metrics::Stats;
@@ -45,23 +48,33 @@ ENTRYPOINT /bin/bash
 /// One machine's pull in the deployment trace.
 #[derive(Debug, Clone)]
 pub struct DeployTarget {
+    /// Which machine pulled.
     pub machine: String,
+    /// The pull's transfer report.
     pub pull: PullReport,
 }
 
 /// The full §3.4 pipeline record.
 #[derive(Debug, Clone)]
 pub struct DeploymentTrace {
+    /// Content hash of the deployed image.
     pub image_id: String,
+    /// Layers built fresh by the CI build.
     pub layers_built: usize,
+    /// Layers answered from the build cache.
     pub layers_cached: usize,
+    /// Modelled build wall time.
     pub build_time: Duration,
+    /// Compressed image size in bytes.
     pub image_bytes: u64,
+    /// Files across all layers.
     pub image_files: usize,
+    /// Per-machine pulls, in deployment order.
     pub targets: Vec<DeployTarget>,
 }
 
 impl DeploymentTrace {
+    /// Human-readable trace (the Fig 1 pipeline table).
     pub fn render(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
@@ -119,8 +132,20 @@ pub fn deploy_pipeline() -> Result<DeploymentTrace> {
     })
 }
 
+/// Build the paper's FEniCS image and publish it behind four shard
+/// frontends — the registry side of a fleet deployment campaign.
+pub fn fleet_registry(reference: &str) -> Result<ShardedRegistry> {
+    let bf = Buildfile::parse(FENICS_BUILDFILE)?;
+    let mut store = LayerStore::new();
+    let report = Builder::new().build(&bf, reference, &mut store)?;
+    let mut registry = Registry::new();
+    registry.push(&report.image, &store)?;
+    Ok(ShardedRegistry::new(registry, 4))
+}
+
 /// Figure runner over the modeled (calibrated) execution mode.
 pub struct Coordinator {
+    /// Calibration table driving modeled execution times.
     pub table: CalibrationTable,
 }
 
@@ -133,6 +158,7 @@ impl Coordinator {
         }
     }
 
+    /// A coordinator over an explicit calibration table.
     pub fn with_table(table: CalibrationTable) -> Self {
         Coordinator { table }
     }
@@ -140,6 +166,7 @@ impl Coordinator {
     /// Regenerate the figures selected by `cfg`.
     pub fn run(&self, cfg: &ExperimentConfig) -> Result<Vec<Figure>> {
         match cfg.figure.as_str() {
+            "fig1-scale" => self.fig1_scale(cfg),
             "fig2" => self.fig2(cfg),
             "fig3" => self.fig3(cfg),
             "fig4" => self.fig4(cfg),
@@ -147,6 +174,108 @@ impl Coordinator {
             "fig5b" => self.fig5(cfg, false),
             other => anyhow::bail!("unknown figure `{other}`"),
         }
+    }
+
+    /// Deploy `reference` onto every node of `fleet` concurrently
+    /// through `registry`'s shard frontends, in virtual time.  This is
+    /// the fleet-scale version of the Fig 1 "pull everywhere" step:
+    /// node caches are consulted first, cache-missing layers cross the
+    /// WAN once each (peer fan-out) or once per node (direct), and the
+    /// report records makespan, WAN/intra-cluster bytes, and cache
+    /// accounting.
+    ///
+    /// # Example
+    ///
+    /// A cold deploy moves the image once over the WAN; the warm
+    /// re-deploy that follows moves nothing:
+    ///
+    /// ```
+    /// use harbor::container::{Builder, Buildfile, LayerStore, Registry};
+    /// use harbor::container::{Fleet, FleetConfig, ShardedRegistry};
+    /// use harbor::coordinator::Coordinator;
+    ///
+    /// let bf = Buildfile::parse("FROM ubuntu:16.04\nRUN echo x").unwrap();
+    /// let mut store = LayerStore::new();
+    /// let image = Builder::new().build(&bf, "app:1", &mut store).unwrap().image;
+    /// let mut registry = Registry::new();
+    /// registry.push(&image, &store).unwrap();
+    ///
+    /// let mut sharded = ShardedRegistry::new(registry, 4);
+    /// let mut fleet = Fleet::new(FleetConfig::hpc(64));
+    /// let coordinator = Coordinator::new();
+    ///
+    /// let cold = coordinator.deploy_fleet(&mut sharded, &mut fleet, "app:1").unwrap();
+    /// let warm = coordinator.deploy_fleet(&mut sharded, &mut fleet, "app:1").unwrap();
+    /// assert!(cold.wan_bytes > 0);
+    /// assert_eq!(warm.wan_bytes + warm.intra_bytes, 0);
+    /// assert!(warm.makespan < cold.makespan);
+    /// ```
+    pub fn deploy_fleet(
+        &self,
+        registry: &mut ShardedRegistry,
+        fleet: &mut Fleet,
+        reference: &str,
+    ) -> Result<FleetReport> {
+        Ok(fleet.deploy(registry, reference)?)
+    }
+
+    /// The `fig1-scale` figure pair: cold pull makespan and warm
+    /// re-deploy makespan for each fleet size in `cfg.nodes`.
+    fn fig1_scale(&self, cfg: &ExperimentConfig) -> Result<Vec<Figure>> {
+        anyhow::ensure!(
+            !cfg.nodes.is_empty(),
+            "fig1-scale needs at least one fleet size in `nodes`"
+        );
+        anyhow::ensure!(
+            cfg.nodes.iter().all(|&n| n >= 1),
+            "fig1-scale fleet sizes must be >= 1 (got {:?})",
+            cfg.nodes
+        );
+        let reference = "quay.io/fenicsproject/stable:2016.1.0r1";
+        let mut cold_fig = Figure::new(
+            "Fig 1 at fleet scale — cold pull makespan",
+            "makespan [s]",
+            false,
+        );
+        let mut warm_fig = Figure::new(
+            "Fig 1 at fleet scale — warm re-deploy makespan",
+            "makespan [s]",
+            false,
+        );
+        let mut worst_ratio = 0.0f64;
+        for &n in &cfg.nodes {
+            let mut sharded = fleet_registry(reference)?;
+            let mut fleet = Fleet::new(FleetConfig::hpc(n));
+            let cold = self.deploy_fleet(&mut sharded, &mut fleet, reference)?;
+            let warm = self.deploy_fleet(&mut sharded, &mut fleet, reference)?;
+            worst_ratio =
+                worst_ratio.max(warm.makespan.as_secs_f64() / cold.makespan.as_secs_f64());
+            cold_fig.push(
+                Row::new(
+                    format!("{n} nodes"),
+                    Stats::from_samples(vec![cold.makespan.as_secs_f64()]),
+                )
+                .with_breakdown(vec![
+                    ("wan MB".into(), cold.wan_bytes as f64 / 1e6),
+                    ("intra MB".into(), cold.intra_bytes as f64 / 1e6),
+                ]),
+            );
+            warm_fig.push(
+                Row::new(
+                    format!("{n} nodes"),
+                    Stats::from_samples(vec![warm.makespan.as_secs_f64()]),
+                )
+                .with_breakdown(vec![("cache hit rate".into(), warm.cache.hit_rate())]),
+            );
+        }
+        cold_fig.note(
+            "each unique layer crosses the WAN once (4 shards), then peer fan-out \
+             (arity 2) over the Aries fabric",
+        );
+        warm_fig.note(format!(
+            "warm/cold makespan ratio {worst_ratio:.5} (acceptance bar: < 0.10)"
+        ));
+        Ok(vec![cold_fig, warm_fig])
     }
 
     fn exec(&self) -> Exec<'_> {
@@ -323,6 +452,28 @@ mod tests {
         let text = trace.render();
         assert!(text.contains("edison"));
         assert!(text.contains("layers built"));
+    }
+
+    #[test]
+    fn fig1_scale_reports_cold_and_warm() {
+        let cfg = ExperimentConfig {
+            nodes: vec![4, 16],
+            ..ExperimentConfig::paper_default("fig1-scale").unwrap()
+        };
+        let figs = Coordinator::new().run(&cfg).unwrap();
+        assert_eq!(figs.len(), 2, "cold + warm figures");
+        for f in &figs {
+            assert_eq!(f.rows.len(), 2, "one row per fleet size");
+        }
+        for (cold, warm) in figs[0].rows.iter().zip(&figs[1].rows) {
+            assert!(
+                warm.stats.mean() < 0.1 * cold.stats.mean(),
+                "warm {} !< 10% of cold {}",
+                warm.stats.mean(),
+                cold.stats.mean()
+            );
+        }
+        assert!(figs[1].notes[0].contains("acceptance bar"));
     }
 
     #[test]

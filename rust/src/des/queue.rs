@@ -25,6 +25,7 @@ impl<T> Default for EventQueue<T> {
 }
 
 impl<T> EventQueue<T> {
+    /// An empty queue.
     pub fn new() -> Self {
         EventQueue {
             heap: BinaryHeap::new(),
@@ -82,10 +83,12 @@ impl<T> EventQueue<T> {
         self.heap.peek().map(|Reverse((t, _, _))| *t)
     }
 
+    /// Number of queued events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// Whether no events are queued.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }

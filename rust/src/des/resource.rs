@@ -86,6 +86,24 @@ impl FifoResource {
         self.busy
     }
 
+    /// Fraction of `horizon` this station's servers spent busy beyond
+    /// the `busy_before` snapshot of [`busy_time`](Self::busy_time),
+    /// summed over servers and clamped to \[0, 1\] (a 4-server station
+    /// serving 2×`horizon` of work is 50% utilised).  Zero horizon ⇒
+    /// 0.0; pass `Duration::ZERO` as the snapshot for lifetime
+    /// utilisation.
+    pub fn utilisation(&self, busy_before: Duration, horizon: Duration) -> f64 {
+        let h = horizon.as_secs_f64() * self.free_at.len() as f64;
+        if h <= 0.0 {
+            0.0
+        } else {
+            // saturate: a snapshot taken before a reset() would underflow
+            let delta =
+                Duration::from_nanos(self.busy.as_nanos().saturating_sub(busy_before.as_nanos()));
+            (delta.as_secs_f64() / h).clamp(0.0, 1.0)
+        }
+    }
+
     /// Number of requests served.
     pub fn served(&self) -> u64 {
         self.served
@@ -105,6 +123,7 @@ impl FifoResource {
         self.served = 0;
     }
 
+    /// Number of parallel servers.
     pub fn servers(&self) -> usize {
         self.free_at.len()
     }
@@ -162,6 +181,20 @@ mod tests {
         r.reset();
         assert_eq!(r.served(), 0);
         assert_eq!(r.next_free(), VirtualTime::ZERO);
+    }
+
+    #[test]
+    fn utilisation_fraction() {
+        let mut r = FifoResource::new(2);
+        r.submit(t(0), Duration::from_millis(10));
+        let horizon = Duration::from_millis(10);
+        assert!((r.utilisation(Duration::ZERO, horizon) - 0.5).abs() < 1e-9);
+        assert_eq!(r.utilisation(Duration::ZERO, Duration::ZERO), 0.0);
+        // only service beyond the snapshot counts
+        let snapshot = r.busy_time();
+        r.submit(t(0), Duration::from_millis(100));
+        assert!((r.utilisation(snapshot, Duration::from_millis(100)) - 0.5).abs() < 1e-9);
+        assert_eq!(r.utilisation(snapshot, Duration::from_millis(1)), 1.0, "clamped");
     }
 
     #[test]

@@ -54,10 +54,12 @@ impl SimRng {
         1.0 + n.abs() * sigma
     }
 
+    /// Uniform draw in `[lo, hi)`.
     pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
         self.rng.range_f64(lo, hi)
     }
 
+    /// Uniform index in `0..n`.
     pub fn index(&mut self, n: usize) -> usize {
         self.rng.below(n)
     }

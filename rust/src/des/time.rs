@@ -11,17 +11,24 @@ use std::ops::{Add, AddAssign, Mul, Sub};
 
 /// A span of virtual time, in nanoseconds.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
-pub struct Duration(pub u64);
+pub struct Duration(
+    /// Nanoseconds.
+    pub u64,
+);
 
 impl Duration {
+    /// The zero-length span.
     pub const ZERO: Duration = Duration(0);
 
+    /// A span of `ns` nanoseconds.
     pub fn from_nanos(ns: u64) -> Self {
         Duration(ns)
     }
+    /// A span of `us` microseconds.
     pub fn from_micros(us: u64) -> Self {
         Duration(us * 1_000)
     }
+    /// A span of `ms` milliseconds.
     pub fn from_millis(ms: u64) -> Self {
         Duration(ms * 1_000_000)
     }
@@ -29,9 +36,11 @@ impl Duration {
     pub fn from_secs_f64(s: f64) -> Self {
         Duration((s.max(0.0) * 1e9).round() as u64)
     }
+    /// Whole nanoseconds in the span.
     pub fn as_nanos(self) -> u64 {
         self.0
     }
+    /// The span in (fractional) seconds.
     pub fn as_secs_f64(self) -> f64 {
         self.0 as f64 / 1e9
     }
@@ -39,6 +48,7 @@ impl Duration {
     pub fn scale(self, factor: f64) -> Self {
         Duration::from_secs_f64(self.as_secs_f64() * factor)
     }
+    /// The longer of two spans.
     pub fn max(self, other: Self) -> Self {
         Duration(self.0.max(other.0))
     }
@@ -91,14 +101,20 @@ impl fmt::Display for Duration {
 
 /// An instant in virtual time (nanoseconds since simulation start).
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
-pub struct VirtualTime(pub u64);
+pub struct VirtualTime(
+    /// Nanoseconds since simulation start.
+    pub u64,
+);
 
 impl VirtualTime {
+    /// Simulation start.
     pub const ZERO: VirtualTime = VirtualTime(0);
 
+    /// Seconds since simulation start.
     pub fn as_secs_f64(self) -> f64 {
         self.0 as f64 / 1e9
     }
+    /// The later of two instants.
     pub fn max(self, other: Self) -> Self {
         VirtualTime(self.0.max(other.0))
     }

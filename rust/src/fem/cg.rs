@@ -24,6 +24,7 @@ use super::grid::{exchange_halos, Decomp, LocalField};
 pub struct CgConfig {
     /// Relative-residual tolerance (‖r‖ / ‖b‖).
     pub tol: f64,
+    /// Iteration cap before declaring non-convergence.
     pub max_iters: usize,
     /// Iteration count to simulate in `Modeled` mode (no residual is
     /// available without data; use [`estimate_cg_iters`]).
@@ -47,6 +48,7 @@ impl Default for CgConfig {
 /// Solver result.
 #[derive(Debug, Clone)]
 pub struct CgOutcome {
+    /// Iterations performed.
     pub iters: usize,
     /// Final relative residual (`None` in modeled mode).
     pub rel_residual: Option<f64>,

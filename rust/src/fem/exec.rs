@@ -19,9 +19,15 @@ use crate::runtime::{CalibrationTable, Engine, TensorBuf};
 /// How compute segments execute.
 pub enum Exec<'a> {
     /// Run PJRT for real; charge measured time.
-    Real { engine: &'a mut Engine },
+    Real {
+        /// The PJRT engine executing AOT artifacts.
+        engine: &'a mut Engine,
+    },
     /// Charge calibrated cost; no data produced.
-    Modeled { table: &'a CalibrationTable },
+    Modeled {
+        /// Measured (or fallback) per-artifact costs.
+        table: &'a CalibrationTable,
+    },
 }
 
 /// Per-run scaling applied to every compute segment.
@@ -39,6 +45,8 @@ pub struct ComputeScale {
 }
 
 impl ComputeScale {
+    /// Scaling with the given platform factor, arch factor, and
+    /// seeded multiplicative jitter.
     pub fn new(factor: f64, arch_factor: f64, seed: u64, jitter_eps: f64) -> Self {
         ComputeScale {
             factor,
@@ -133,6 +141,7 @@ impl<'a> Exec<'a> {
         }
     }
 
+    /// Whether this is the real (PJRT-executing) mode.
     pub fn is_real(&self) -> bool {
         matches!(self, Exec::Real { .. })
     }

@@ -47,6 +47,7 @@ impl Default for GmgConfig {
 /// Outcome of a multigrid run.
 #[derive(Debug, Clone)]
 pub struct GmgOutcome {
+    /// V-cycles performed.
     pub cycles: usize,
     /// ‖r‖₂ after each cycle (real mode; empty in modeled mode).
     pub residual_history: Vec<f64>,

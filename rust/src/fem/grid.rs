@@ -68,6 +68,7 @@ pub const DIRS: usize = 6;
 /// 3D Cartesian decomposition of `ranks` blocks of `n_local`³ cells.
 #[derive(Debug, Clone)]
 pub struct Decomp {
+    /// Per-rank block edge (each rank owns `n_local`³ cells).
     pub n_local: usize,
     /// Process-grid extents `[pz, py, px]`.
     pub dims: [usize; 3],
@@ -76,6 +77,8 @@ pub struct Decomp {
 }
 
 impl Decomp {
+    /// Decompose `ranks` blocks of `n_local`³ cells onto the most
+    /// cubic process grid `factor3` finds.
     pub fn new(ranks: usize, n_local: usize) -> Self {
         let dims = factor3(ranks);
         let coords = (0..ranks)
@@ -93,6 +96,7 @@ impl Decomp {
         }
     }
 
+    /// Number of ranks in the decomposition.
     pub fn ranks(&self) -> usize {
         self.coords.len()
     }
@@ -270,11 +274,14 @@ impl Decomp {
 /// `(z, y, x)`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LocalField {
+    /// Interior edge length (storage adds a one-cell halo shell).
     pub n: usize,
+    /// `(n+2)`³ values in z-major order.
     pub data: Vec<f32>,
 }
 
 impl LocalField {
+    /// A zero field with halo storage for an `n`³ interior.
     pub fn zeros(n: usize) -> Self {
         LocalField {
             n,
@@ -297,6 +304,7 @@ impl LocalField {
     }
 
     #[inline]
+    /// Flat index of `(z, y, x)` in halo-padded storage.
     pub fn idx(&self, z: usize, y: usize, x: usize) -> usize {
         let np = self.n + 2;
         (z * np + y) * np + x

@@ -30,6 +30,7 @@ pub struct ImageFs {
 }
 
 impl ImageFs {
+    /// A loop-mounted image of `blob_bytes` served from `backing`.
     pub fn new(blob_bytes: u64, backing: ParallelFs) -> Self {
         ImageFs {
             blob_bytes,
@@ -61,6 +62,7 @@ impl ImageFs {
         done
     }
 
+    /// Nodes that have already paid the one-time mount cost.
     pub fn nodes_warm(&self) -> usize {
         self.warm_nodes.len()
     }

@@ -28,6 +28,8 @@ impl Default for LocalFs {
 }
 
 impl LocalFs {
+    /// A local filesystem with the given metadata latency and
+    /// streaming bandwidth.
     pub fn new(meta: Duration, bytes_per_sec: f64) -> Self {
         LocalFs {
             meta,

@@ -37,15 +37,26 @@ pub enum FsOp {
     /// module import issues: path-entry stats, `.py`/`.pyc` lookups).
     /// One queue entry of `ops × service` — same client total and
     /// server busy time as `ops` sequential [`FsOp::Open`]s.
-    MetaBatch { ops: u32 },
+    MetaBatch {
+        /// Number of metadata operations in the batch.
+        ops: u32,
+    },
     /// Read `bytes` of data (metadata already done).
-    Read { bytes: u64 },
+    Read {
+        /// Payload size.
+        bytes: u64,
+    },
     /// Write `bytes` of data.
-    Write { bytes: u64 },
+    Write {
+        /// Payload size.
+        bytes: u64,
+    },
 }
 
 /// Common interface: submit an op from a node, get the completion instant.
 pub trait FileSystem {
+    /// Submit `op` from a client on `node` at `at`; returns the
+    /// completion instant.
     fn submit(&mut self, at: VirtualTime, node: usize, op: FsOp) -> VirtualTime;
 
     /// `count` back-to-back metadata ops from one client (one

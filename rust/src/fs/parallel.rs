@@ -30,6 +30,8 @@ pub struct ParallelFs {
 }
 
 impl ParallelFs {
+    /// A parallel filesystem with `mds_handlers` metadata RPC slots
+    /// and the given per-op costs.
     pub fn new(
         mds_handlers: usize,
         meta_service: Duration,

@@ -22,16 +22,17 @@
 //!   artifacts through PJRT, and the benchmark harness that regenerates
 //!   every figure in the paper's evaluation (Figs 2–5).
 //!
-//! See `DESIGN.md` for the substitution table (what the paper ran on real
-//! hardware → what is simulated here and why the mechanism is preserved)
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `docs/ARCHITECTURE.md` for the module map with per-layer
+//! diagrams, `DESIGN.md` for the substitution table (what the paper ran
+//! on real hardware → what is simulated here and why the mechanism is
+//! preserved), and `EXPERIMENTS.md` for paper-vs-measured results.
 //!
 //! ## Crate layout
 //!
 //! | module | role |
 //! |---|---|
 //! | [`des`] | virtual clock, event queue, FIFO resources — the simulation substrate |
-//! | [`container`] | images, layer store, buildfile parser/builder, registry, runtimes |
+//! | [`container`] | images, layer store, buildfile parser/builder, registry, runtimes, and the fleet distribution tier (sharded registry, node-local caches, peer fan-out) |
 //! | [`cluster`] | machine specs (workstation / Edison), nodes, job launcher |
 //! | [`net`] | interconnect fabrics: shared-memory, Aries, TCP (α-β + contention) |
 //! | [`fs`] | filesystems: local disk, Lustre-like parallel FS, loop-mounted image FS |
@@ -45,6 +46,8 @@
 //! | [`config`] | TOML-backed experiment and machine configuration |
 //! | [`coordinator`] | experiment orchestration: provision → pull → launch → collect |
 //! | [`metrics`] | phase timers and per-phase breakdowns |
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod cluster;

@@ -6,7 +6,8 @@
 //! * `pipeline`  — the Fig 1 pipeline: build → push → pull everywhere
 //! * `resolve`   — show the MPI ABI resolution for a platform (§4.2)
 //! * `run`       — run the Edison test program once, print the breakdown
-//! * `bench`     — regenerate a figure (fig2 | fig3 | fig4 | fig5a | fig5b)
+//! * `bench`     — regenerate a figure (fig1-scale | fig2 | fig3 | fig4 |
+//!   fig5a | fig5b), each mapped to its paper section in `ABOUT`
 //! * `calibrate` — measure per-artifact PJRT costs into calibration.json
 //! * `artifacts` — list the AOT artifacts the runtime can execute
 
@@ -28,18 +29,39 @@ const ABOUT: &str = "\
 harbor — reproduction of 'Containers for portable, productive and
 performant scientific computing' (Hale, Li, Richardson, Wells; 2016)
 
+A container-deployment simulator in virtual time: layered images, a
+sharded registry with node-local caches, four container runtimes, an
+Edison-like HPC cluster model, and the paper's FEM workloads driven
+through AOT-compiled kernels.
+
 USAGE:  harbor <COMMAND> [ARGS]
 
 COMMANDS:
-  build      build an image from a Buildfile
+  build      build an image from a Buildfile (the paper's §2.2 docker build)
   pipeline   run the Fig 1 deployment pipeline (build -> push -> pull)
-  resolve    show MPI ABI resolution for a machine/platform
+  resolve    show MPI ABI resolution for a machine/platform (the §4.2 trick)
   run        run the Edison test program once, print phase breakdown
-  bench      regenerate a figure: fig2 | fig3 | fig4 | fig5a | fig5b | all
+  bench      regenerate a figure (see FIGURES below)
   calibrate  measure per-artifact PJRT costs (writes calibration.json)
   ablate     sensitivity sweeps: mds | nic | nu | layers | all
   fenicsproject  demo the §3.2 wrapper workflows (notebook/start/stop)
   artifacts  list AOT artifacts
+
+FIGURES (harbor bench <figure>; the same table lives in EXPERIMENTS.md):
+  fig1-scale  the Fig 1 workflow's deployment phase (§3.4: build ->
+              push -> pull everywhere) at fleet scale: one image pulled
+              onto 64..16384 nodes through 4 registry shards, with
+              node-local layer caches and Trow-style peer fan-out;
+              reports cold-pull vs warm re-deploy makespan
+  fig2        Fig 2 (§4) — workstation benchmarks (Poisson LU/AMG, I/O,
+              elasticity) across native / Docker / rkt / VirtualBox
+  fig3        Fig 3 (§4) — C++ Poisson solver on Edison, 24..192 ranks:
+              native vs Shifter+host-MPI vs container MPI (TCP fallback)
+  fig4        Fig 4 (§4) — Python Poisson on Edison: the import
+              problem; containers beat native via fewer metadata RPCs
+  fig5a       Fig 5a (§4) — HPGMG-FE throughput, 16-core workstation
+  fig5b       Fig 5b (§4) — HPGMG-FE throughput, Edison at 192 cores
+  all         every figure above
 
 Run `harbor <COMMAND> --help` for details.";
 
@@ -179,11 +201,15 @@ fn cmd_run(raw: &[String]) -> anyhow::Result<()> {
 
 fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
     let args = Args::new("bench", "regenerate a figure from the paper")
-        .positional("figure", "fig2 | fig3 | fig4 | fig5a | fig5b | all")
+        .positional(
+            "figure",
+            "fig1-scale | fig2 | fig3 | fig4 | fig5a | fig5b | all (see `harbor --help`)",
+        )
         .opt("reps", "repetitions per bar (paper: 5 ws / 3 hpc)", None)
         .opt("seed", "base simulation seed", None)
         .opt("config", "experiment config JSON (overrides defaults)", None)
         .opt("out", "also write a JSON report to this path", None)
+        .opt("nodes", "comma-separated fleet sizes (fig1-scale; default 64,512,4096,16384)", None)
         .switch("json", "print JSON instead of ASCII bars")
         .switch("scale", "paper-scale rank counts (fig3/fig4: 1536, 12288, 98304)")
         .switch("per-rank", "force the O(ranks) per-rank engine (default: class-batched)");
@@ -194,12 +220,15 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
     let figures: Vec<String> = match p.pos(0) {
         // --scale only exists for the rank-sweeping figures
         "all" if p.flag("scale") => vec!["fig3".into(), "fig4".into()],
-        "all" => ["fig2", "fig3", "fig4", "fig5a", "fig5b"]
+        "all" => ["fig1-scale", "fig2", "fig3", "fig4", "fig5a", "fig5b"]
             .iter()
             .map(|s| s.to_string())
             .collect(),
         one => vec![one.to_string()],
     };
+    if p.get("nodes").is_some() && !figures.iter().any(|f| f == "fig1-scale") {
+        anyhow::bail!("--nodes only applies to fig1-scale");
+    }
     let coordinator = Coordinator::new();
     let mut all_json = Vec::new();
     for figure in &figures {
@@ -217,6 +246,14 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
         }
         if let Some(seed) = p.get("seed") {
             cfg.seed = seed.parse()?;
+        }
+        if let Some(nodes) = p.get("nodes") {
+            if figure == "fig1-scale" {
+                cfg.nodes = nodes
+                    .split(',')
+                    .map(|s| s.trim().parse::<usize>())
+                    .collect::<Result<_, _>>()?;
+            }
         }
         let figs = coordinator.run(&cfg)?;
         for f in &figs {

@@ -35,12 +35,14 @@ impl From<Duration> for Duration2 {
 }
 
 impl Duration2 {
+    /// The span in (fractional) seconds.
     pub fn as_secs_f64(self) -> f64 {
         self.secs
     }
 }
 
 impl PhaseBreakdown {
+    /// An empty breakdown.
     pub fn new() -> Self {
         Self::default()
     }
@@ -69,6 +71,7 @@ impl PhaseBreakdown {
         &self.order
     }
 
+    /// Whether no phase has been recorded.
     pub fn is_empty(&self) -> bool {
         self.phases.is_empty()
     }
@@ -88,15 +91,18 @@ impl PhaseBreakdown {
 /// Aggregate of repeated scalar measurements (seconds, DOF/s, ...).
 #[derive(Debug, Clone)]
 pub struct Stats {
+    /// The raw samples, in measurement order.
     pub samples: Vec<f64>,
 }
 
 impl Stats {
+    /// Wrap samples (must be non-empty).
     pub fn from_samples(samples: Vec<f64>) -> Self {
         assert!(!samples.is_empty(), "stats over zero samples");
         Stats { samples }
     }
 
+    /// Arithmetic mean.
     pub fn mean(&self) -> f64 {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
@@ -111,14 +117,17 @@ impl Stats {
         (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (n - 1) as f64).sqrt()
     }
 
+    /// Smallest sample.
     pub fn min(&self) -> f64 {
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample.
     pub fn max(&self) -> f64 {
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
+    /// Number of samples.
     pub fn n(&self) -> usize {
         self.samples.len()
     }

@@ -26,13 +26,17 @@ pub struct McaResolution {
 
 /// Models the dynamic-linker search for the MPI library.
 pub struct AbiResolver<'m> {
+    /// Machine whose system MPI is (maybe) visible.
     pub machine: &'m MachineSpec,
+    /// Runtime the application runs under.
     pub runtime: RuntimeKind,
     /// `LD_LIBRARY_PATH` injection of the host MPI (the Bahls trick).
     pub inject_host_mpi: bool,
 }
 
 impl<'m> AbiResolver<'m> {
+    /// Walk the linker search order and report every step plus the
+    /// resulting library and fabric.
     pub fn resolve(&self) -> McaResolution {
         let mut steps = Vec::new();
 

@@ -62,6 +62,7 @@ impl RankClasses {
         self.counts.len()
     }
 
+    /// Whether the partition holds no classes.
     pub fn is_empty(&self) -> bool {
         self.counts.is_empty()
     }

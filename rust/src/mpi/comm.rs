@@ -23,9 +23,13 @@ use super::{HaloPattern, RankClasses};
 /// Cumulative communication statistics (for reports and tests).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CommStats {
+    /// Point-to-point messages sent.
     pub p2p_messages: u64,
+    /// Point-to-point payload bytes.
     pub p2p_bytes: u64,
+    /// All-reduce collectives performed.
     pub allreduces: u64,
+    /// Barriers performed.
     pub barriers: u64,
 }
 
@@ -54,6 +58,7 @@ pub struct Comm {
 }
 
 impl Comm {
+    /// A communicator over `alloc` using `fabric` costs.
     pub fn new(alloc: Allocation, fabric: Fabric) -> Self {
         let n = alloc.ranks();
         Comm {
@@ -69,14 +74,17 @@ impl Comm {
         }
     }
 
+    /// Number of ranks.
     pub fn size(&self) -> usize {
         self.clocks.len()
     }
 
+    /// The fabric this communicator resolves to.
     pub fn fabric(&self) -> &Fabric {
         &self.fabric
     }
 
+    /// The job allocation (rank → node placement).
     pub fn allocation(&self) -> &Allocation {
         &self.alloc
     }
@@ -142,6 +150,7 @@ impl Comm {
         }
     }
 
+    /// The virtual clock of `rank`.
     pub fn clock(&self, rank: usize) -> VirtualTime {
         if self.batched {
             let classes = self.classes.as_ref().expect("batched implies classes");
@@ -157,6 +166,7 @@ impl Comm {
         clocks.iter().copied().max().unwrap_or(VirtualTime::ZERO)
     }
 
+    /// Cumulative communication statistics.
     pub fn stats(&self) -> CommStats {
         self.stats
     }

@@ -26,6 +26,7 @@ pub enum FabricKind {
 /// on one node talk off-node at once.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Fabric {
+    /// Which transport this fabric models.
     pub kind: FabricKind,
     /// Cost of a path between two ranks on the same node.
     pub intra_node: PathCost,
@@ -92,6 +93,7 @@ impl Fabric {
         }
     }
 
+    /// The canonical fabric parameters for `kind`.
     pub fn by_kind(kind: FabricKind) -> Self {
         match kind {
             FabricKind::SharedMem => Self::shared_mem(),

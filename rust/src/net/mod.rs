@@ -28,6 +28,20 @@ impl PathCost {
     pub fn transfer(&self, bytes: u64) -> Duration {
         self.alpha + Duration::from_secs_f64(bytes as f64 / self.beta_bytes_per_sec)
     }
+
+    /// One registry shard's WAN link, as a cluster sees it: the
+    /// quay.io-class ~30 MB/s download bandwidth and ~120 ms per-request
+    /// latency the flat [`Registry`] model used, now expressed as a path
+    /// so sharded pulls contend per-shard instead of sharing one number
+    /// (see `container::distribute`).
+    ///
+    /// [`Registry`]: crate::container::Registry
+    pub fn registry_wan() -> Self {
+        PathCost {
+            alpha: Duration::from_millis(120),
+            beta_bytes_per_sec: 30.0e6,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -42,6 +56,14 @@ mod tests {
         };
         let t = p.transfer(1_000_000); // 1 MB at 1 GB/s = 1 ms
         assert_eq!(t, Duration::from_micros(10) + Duration::from_millis(1));
+    }
+
+    #[test]
+    fn registry_wan_matches_flat_registry_numbers() {
+        let w = PathCost::registry_wan();
+        // 30 MB at 30 MB/s + 120 ms request latency ≈ 1.12 s
+        let t = w.transfer(30_000_000);
+        assert!((t.as_secs_f64() - 1.12).abs() < 0.01);
     }
 
     #[test]

@@ -21,6 +21,7 @@ use crate::fs::{FileSystem, FsOp};
 /// One module to import.
 #[derive(Debug, Clone)]
 pub struct Module {
+    /// Dotted module name.
     pub name: String,
     /// Metadata operations the interpreter issues to locate it
     /// (path-entry stats, `.py`/`.pyc` lookups).
@@ -32,6 +33,7 @@ pub struct Module {
 /// A package's worth of modules.
 #[derive(Debug, Clone)]
 pub struct ModuleGraph {
+    /// Modules in import order.
     pub modules: Vec<Module>,
 }
 
@@ -79,10 +81,12 @@ impl ModuleGraph {
         }
     }
 
+    /// Number of module files the import touches.
     pub fn total_files(&self) -> usize {
         self.modules.len()
     }
 
+    /// Total metadata operations the import issues.
     pub fn total_meta_ops(&self) -> u64 {
         self.modules.iter().map(|m| m.meta_ops as u64).sum()
     }

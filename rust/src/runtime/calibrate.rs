@@ -47,20 +47,24 @@ impl CalibrationTable {
         Duration::from_secs_f64(sibling)
     }
 
+    /// Whether a measured cost exists for `entry`.
     pub fn contains(&self, entry: &str) -> bool {
         self.costs.contains_key(entry)
     }
 
+    /// Number of calibrated entries.
     pub fn len(&self) -> usize {
         self.costs.len()
     }
 
+    /// Whether the table is empty.
     pub fn is_empty(&self) -> bool {
         self.costs.is_empty()
     }
 
     // ---- persistence -----------------------------------------------------
 
+    /// Serialise to the calibration.json form.
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("source", Value::str(self.source.clone())),
@@ -76,11 +80,13 @@ impl CalibrationTable {
         ])
     }
 
+    /// Write the JSON form to `path`.
     pub fn save(&self, path: &Path) -> Result<()> {
         std::fs::write(path, self.to_json().to_pretty())
             .with_context(|| format!("writing {}", path.display()))
     }
 
+    /// Load a table from `path`.
     pub fn load(path: &Path) -> Result<CalibrationTable> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;

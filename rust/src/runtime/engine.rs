@@ -17,16 +17,20 @@ use super::manifest::{EntryMeta, Manifest};
 /// A host-side f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorBuf {
+    /// Dimension extents (empty = scalar).
     pub shape: Vec<usize>,
+    /// Row-major element data.
     pub data: Vec<f32>,
 }
 
 impl TensorBuf {
+    /// A tensor from parts (length must match the shape).
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len());
         TensorBuf { shape, data }
     }
 
+    /// A zero tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product::<usize>().max(1);
         TensorBuf {
@@ -35,6 +39,7 @@ impl TensorBuf {
         }
     }
 
+    /// A rank-1 tensor holding one value.
     pub fn scalar1(v: f32) -> Self {
         TensorBuf {
             shape: vec![1],
@@ -42,10 +47,12 @@ impl TensorBuf {
         }
     }
 
+    /// Number of elements.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -80,6 +87,7 @@ impl Engine {
         Engine::open(super::artifacts_dir())
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

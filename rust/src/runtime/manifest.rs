@@ -9,11 +9,14 @@ use crate::util::json;
 /// Input/output tensor description.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorMeta {
+    /// Dimension extents (empty = scalar).
     pub shape: Vec<usize>,
+    /// Element type name (always "f32" in this artifact set).
     pub dtype: String,
 }
 
 impl TensorMeta {
+    /// Number of elements a tensor of this shape holds.
     pub fn element_count(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
@@ -38,21 +41,29 @@ impl TensorMeta {
 /// One AOT-exported entry point.
 #[derive(Debug, Clone)]
 pub struct EntryMeta {
+    /// Entry-point name (what `Engine::execute` looks up).
     pub name: String,
+    /// HLO text file relative to the artifact directory.
     pub file: String,
+    /// Content hash of the HLO text.
     pub sha256: String,
+    /// Input tensor descriptions, in call order.
     pub inputs: Vec<TensorMeta>,
+    /// Output tensor descriptions.
     pub outputs: Vec<TensorMeta>,
 }
 
 /// The parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Manifest format version string.
     pub format: String,
+    /// Exported entry points.
     pub entries: Vec<EntryMeta>,
 }
 
 impl Manifest {
+    /// Load `manifest.json` from `dir`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -60,6 +71,7 @@ impl Manifest {
         Self::parse(&text)
     }
 
+    /// Parse manifest JSON text.
     pub fn parse(text: &str) -> Result<Manifest> {
         let v = json::parse(text).context("parsing manifest.json")?;
         let format = v
@@ -100,10 +112,12 @@ impl Manifest {
         Ok(Manifest { format, entries })
     }
 
+    /// Look an entry point up by name.
     pub fn entry(&self, name: &str) -> Option<&EntryMeta> {
         self.entries.iter().find(|e| e.name == name)
     }
 
+    /// All entry-point names.
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.entries.iter().map(|e| e.name.as_str())
     }

@@ -34,7 +34,10 @@ pub struct Parsed {
 
 /// CLI usage error (message already formatted for the user).
 #[derive(Debug)]
-pub struct UsageError(pub String);
+pub struct UsageError(
+    /// The usage message to print.
+    pub String,
+);
 impl std::fmt::Display for UsageError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "{}", self.0)
@@ -43,6 +46,7 @@ impl std::fmt::Display for UsageError {
 impl std::error::Error for UsageError {}
 
 impl Args {
+    /// A spec for `command` with a one-line description.
     pub fn new(command: &'static str, about: &'static str) -> Self {
         Args {
             command,
@@ -80,6 +84,7 @@ impl Args {
         self
     }
 
+    /// The generated `--help` text.
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\nUSAGE:\n  harbor {}", self.command, self.about, self.command);
         for (p, _) in &self.positional {
@@ -175,6 +180,7 @@ impl Args {
 }
 
 impl Parsed {
+    /// The value of option `--name`, if given or defaulted.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
@@ -186,14 +192,17 @@ impl Parsed {
             .unwrap_or_else(|| panic!("flag --{name} has no value or default"))
     }
 
+    /// Whether switch `--name` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.bools.get(name).copied().unwrap_or(false)
     }
 
+    /// The `idx`-th positional argument.
     pub fn pos(&self, idx: usize) -> &str {
         &self.positional[idx]
     }
 
+    /// Parse the value of `--name` into `T`.
     pub fn parse_num<T: std::str::FromStr>(&self, name: &str) -> Result<T, UsageError> {
         let raw = self
             .get(name)

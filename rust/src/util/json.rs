@@ -11,17 +11,24 @@ use std::fmt::Write as _;
 /// A JSON value. Objects use `BTreeMap` for deterministic serialization.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (always stored as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Value>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
     // ---- typed accessors -------------------------------------------------
 
+    /// The number, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
@@ -29,10 +36,12 @@ impl Value {
         }
     }
 
+    /// The number as an exact unsigned integer, if it is one.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as u64)
     }
 
+    /// The string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -40,6 +49,7 @@ impl Value {
         }
     }
 
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -47,6 +57,7 @@ impl Value {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(a) => Some(a),
@@ -54,6 +65,7 @@ impl Value {
         }
     }
 
+    /// The key→value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
         match self {
             Value::Obj(o) => Some(o),
@@ -69,14 +81,17 @@ impl Value {
 
     // ---- constructors ----------------------------------------------------
 
+    /// An object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
         Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// A number value.
     pub fn num(n: f64) -> Value {
         Value::Num(n)
     }
 
+    /// A string value.
     pub fn str(s: impl Into<String>) -> Value {
         Value::Str(s.into())
     }
@@ -183,7 +198,9 @@ fn write_escaped(out: &mut String, s: &str) {
 /// Parse error with byte offset.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset of the error.
     pub offset: usize,
+    /// What went wrong.
     pub message: String,
 }
 impl std::fmt::Display for JsonError {

@@ -13,18 +13,22 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// Uniform `usize` in `lo..=hi`.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         lo + self.rng.below(hi - lo + 1)
     }
 
+    /// Uniform `u64` in `lo..=hi`.
     pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
         lo + (self.rng.next_u64() % (hi - lo + 1))
     }
 
+    /// Uniform `f64` in `[lo, hi)`.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         self.rng.range_f64(lo, hi)
     }
 
+    /// A fair coin.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }

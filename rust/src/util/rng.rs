@@ -26,6 +26,7 @@ impl Xoshiro256 {
         }
     }
 
+    /// Next 64 random bits.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)

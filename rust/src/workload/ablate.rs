@@ -21,20 +21,27 @@ use crate::runtime::CalibrationTable;
 /// One ablation row: parameter value -> observed statistic(s).
 #[derive(Debug, Clone)]
 pub struct AblationRow {
+    /// The swept parameter value.
     pub param: f64,
+    /// Named statistics observed at this value.
     pub values: Vec<(String, f64)>,
 }
 
 /// A completed study.
 #[derive(Debug, Clone)]
 pub struct Ablation {
+    /// Study name (CLI argument).
     pub name: String,
+    /// Name of the swept parameter.
     pub param_name: String,
+    /// One row per parameter value.
     pub rows: Vec<AblationRow>,
+    /// What the sweep shows (printed under the table).
     pub conclusion: String,
 }
 
 impl Ablation {
+    /// ASCII table rendering.
     pub fn render(&self) -> String {
         let mut s = format!("== ablation: {} ==\n", self.name);
         if let Some(first) = self.rows.first() {
@@ -273,6 +280,7 @@ pub fn by_name(name: &str) -> Option<Ablation> {
     }
 }
 
+/// Every ablation study name, in CLI order.
 pub const STUDIES: [&str; 4] = ["mds", "nic", "nu", "layers"];
 
 #[cfg(test)]

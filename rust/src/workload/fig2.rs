@@ -23,13 +23,18 @@ use crate::cluster::MachineSpec;
 /// The four workstation tests, in the paper's order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Fig2Test {
+    /// Poisson problem, direct LU solver.
     PoissonLu,
+    /// Poisson problem, algebraic-multigrid-preconditioned CG.
     PoissonAmg,
+    /// Mesh + function I/O to disk.
     Io,
+    /// 3D linear-elasticity assembly + solve.
     Elasticity,
 }
 
 impl Fig2Test {
+    /// The four workstation tests, in figure order.
     pub const ALL: [Fig2Test; 4] = [
         Fig2Test::PoissonLu,
         Fig2Test::PoissonAmg,
@@ -37,6 +42,7 @@ impl Fig2Test {
         Fig2Test::Elasticity,
     ];
 
+    /// Row label used in Fig 2.
     pub fn label(self) -> &'static str {
         match self {
             Fig2Test::PoissonLu => "Poisson LU",

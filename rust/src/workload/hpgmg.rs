@@ -20,11 +20,15 @@ use crate::workload::RunSetup;
 /// One HPGMG run.
 #[derive(Debug, Clone)]
 pub struct HpgmgConfig {
+    /// Machine the run is placed on.
     pub machine: MachineSpec,
+    /// MPI ranks.
     pub ranks: usize,
     /// Problem-size index: 0 = 32³ blocks (largest), 1 = 16³, 2 = 8³.
     pub fine_level: usize,
+    /// V-cycles per run.
     pub cycles: usize,
+    /// Simulation seed.
     pub seed: u64,
     /// Whether the image was built with `ARCH_OPT`.
     pub arch_optimized_image: bool,
@@ -34,6 +38,7 @@ pub struct HpgmgConfig {
 }
 
 impl HpgmgConfig {
+    /// The Fig 5a setup (16-core workstation).
     pub fn workstation(fine_level: usize, seed: u64) -> Self {
         HpgmgConfig {
             machine: MachineSpec::workstation(),
@@ -46,6 +51,7 @@ impl HpgmgConfig {
         }
     }
 
+    /// The Fig 5b setup (Edison, 192 cores).
     pub fn edison(fine_level: usize, seed: u64) -> Self {
         HpgmgConfig {
             machine: MachineSpec::edison(),
@@ -62,8 +68,11 @@ impl HpgmgConfig {
 /// Result: the figure's y-axis.
 #[derive(Debug, Clone)]
 pub struct HpgmgResult {
+    /// Degrees of freedom solved.
     pub dofs: u64,
+    /// Virtual wall time of the solve.
     pub wall_seconds: f64,
+    /// The figure's y-axis: DOF/s.
     pub dofs_per_second: f64,
 }
 

@@ -61,14 +61,20 @@ pub fn fenics_image_opt(arch_opt: bool) -> (Image, LayerStore) {
 /// Everything needed to execute one (machine, platform, ranks) cell of
 /// the experiment matrix.
 pub struct RunSetup {
+    /// Machine the cell runs on.
     pub machine: MachineSpec,
+    /// Execution platform (native / container runtime).
     pub platform: Platform,
+    /// MPI ranks.
     pub ranks: usize,
+    /// Simulation seed.
     pub seed: u64,
+    /// Image the platform deploys.
     pub image: Image,
 }
 
 impl RunSetup {
+    /// A setup cell over the standard FEniCS image.
     pub fn new(machine: MachineSpec, platform: Platform, ranks: usize, seed: u64) -> Self {
         let (image, _) = fenics_image();
         RunSetup {

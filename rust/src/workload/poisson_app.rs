@@ -32,12 +32,15 @@ use crate::workload::RunSetup;
 /// Configuration of one app run.
 #[derive(Debug, Clone)]
 pub struct AppConfig {
+    /// MPI ranks.
     pub ranks: usize,
     /// Per-rank block edge (16 or 32; the exported shapes).
     pub n_local: usize,
     /// Python driver (adds the import phase) vs C++ driver.
     pub python: bool,
+    /// CG relative-residual tolerance.
     pub tol: f64,
+    /// Simulation seed.
     pub seed: u64,
     /// Run the modeled phases on the rank-class batched engine
     /// (O(classes) hot paths; `false` forces the per-rank reference
@@ -47,6 +50,7 @@ pub struct AppConfig {
 }
 
 impl AppConfig {
+    /// The Fig 3 cell: C++ driver, no import phase.
     pub fn cpp(ranks: usize, seed: u64) -> Self {
         AppConfig {
             ranks,
@@ -58,6 +62,7 @@ impl AppConfig {
         }
     }
 
+    /// The Fig 4 cell: Python driver with the import phase.
     pub fn python(ranks: usize, seed: u64) -> Self {
         AppConfig {
             python: true,

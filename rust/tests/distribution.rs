@@ -1,0 +1,213 @@
+//! Property tests for the fleet distribution tier (sharded registry +
+//! node-local caches + DES-scheduled concurrent pulls).
+//!
+//! The load-bearing invariants:
+//!
+//! * **Byte conservation under peer fan-out** — a cold fleet pull moves
+//!   each unique layer across the WAN exactly once (through its owning
+//!   shard) and fans it out intra-cluster to the remaining `N - 1`
+//!   nodes, so `total = unique_bytes + unique_bytes × (N - 1)`.
+//! * **Warm re-deploys are free** — with every layer cached on every
+//!   node, a re-deploy transfers zero registry bytes and zero
+//!   intra-cluster bytes.
+//! * **Direct mode pays per node** — the no-dedup baseline moves
+//!   `unique_bytes × N` over the WAN and nothing intra-cluster.
+//! * **Sharding changes timing, not accounting** — a DES-scheduled
+//!   sharded pull reports the same layers/bytes as the flat model.
+//! * **Bounded caches respect capacity** — after any deploy, every node
+//!   cache fits its capacity unless a single oversized layer is the
+//!   sole resident.
+
+use harbor::container::{
+    Builder, Buildfile, FanOut, Fleet, FleetConfig, LayerStore, Registry, ShardedRegistry,
+};
+use harbor::des::VirtualTime;
+use harbor::util::proptest::{run, Gen};
+
+/// Build a randomized image (random base, 1–4 RUN layers, a mix of
+/// package installs and zero-byte shell layers) and publish it.
+/// Returns the loaded registry plus the image's byte and layer counts.
+fn random_registry(g: &mut Gen, tag: &str) -> (Registry, u64, usize) {
+    let bases = ["ubuntu:16.04", "alpine:3.4", "phusion/baseimage:0.9.19"];
+    let mut text = format!("FROM {}\n", g.choose(&bases));
+    for _ in 0..g.usize_in(1, 4) {
+        if g.bool() {
+            text.push_str(&format!("RUN apt-get -y install {}\n", g.ident(8)));
+        } else {
+            text.push_str(&format!("RUN echo {}\n", g.ident(8)));
+        }
+    }
+    let mut store = LayerStore::new();
+    let image = Builder::new()
+        .build(&Buildfile::parse(&text).unwrap(), tag, &mut store)
+        .unwrap()
+        .image;
+    let bytes = image.size_bytes(&store);
+    let layers = image.layers.len();
+    let mut reg = Registry::new();
+    reg.push(&image, &store).unwrap();
+    (reg, bytes, layers)
+}
+
+#[test]
+fn prop_peer_fleet_bytes_conserved_and_warm_is_free() {
+    run("peer-bytes-conservation", 60, |g: &mut Gen| {
+        let (reg, bytes, layers) = random_registry(g, "p:1");
+        let n = g.usize_in(1, 48);
+        let shards = g.usize_in(1, 8);
+        let arity = g.usize_in(1, 4);
+        let mut sharded = ShardedRegistry::new(reg, shards);
+        let mut cfg = FleetConfig::hpc(n);
+        cfg.fan_out = FanOut::Peer { arity };
+        let mut fleet = Fleet::new(cfg);
+
+        let cold = fleet.deploy(&mut sharded, "p:1").map_err(|e| e.to_string())?;
+        if cold.wan_transfers != layers {
+            return Err(format!(
+                "each unique layer must cross the WAN once: {} != {layers}",
+                cold.wan_transfers
+            ));
+        }
+        if cold.wan_bytes != bytes {
+            return Err(format!("WAN bytes {} != image bytes {bytes}", cold.wan_bytes));
+        }
+        let expect_intra = bytes * (n as u64 - 1);
+        if cold.intra_bytes != expect_intra {
+            return Err(format!(
+                "intra-cluster fan-out bytes {} != {expect_intra} (n={n})",
+                cold.intra_bytes
+            ));
+        }
+        if cold.total_bytes() != bytes * n as u64 {
+            return Err("total moved bytes must equal image bytes × nodes".into());
+        }
+        if cold.cache.misses != (n * layers) as u64 || cold.cache.hits != 0 {
+            return Err(format!(
+                "cold wave accounting: {} misses, {} hits",
+                cold.cache.misses, cold.cache.hits
+            ));
+        }
+
+        let warm = fleet.deploy(&mut sharded, "p:1").map_err(|e| e.to_string())?;
+        if warm.wan_bytes != 0 || warm.intra_bytes != 0 || warm.wan_transfers != 0 {
+            return Err(format!(
+                "warm re-deploy must transfer zero registry bytes: wan {} intra {}",
+                warm.wan_bytes, warm.intra_bytes
+            ));
+        }
+        if warm.cache.hits != (n * layers) as u64 || warm.cache.misses != 0 {
+            return Err("warm wave must be all cache hits".into());
+        }
+        if warm.makespan >= cold.makespan {
+            return Err(format!(
+                "warm makespan {} must be under cold {}",
+                warm.makespan, cold.makespan
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_direct_fleet_pays_wan_per_node() {
+    run("direct-bytes", 40, |g: &mut Gen| {
+        let (reg, bytes, layers) = random_registry(g, "d:1");
+        let n = g.usize_in(1, 24);
+        let shards = g.usize_in(1, 8);
+        let mut sharded = ShardedRegistry::new(reg, shards);
+        let mut cfg = FleetConfig::hpc(n);
+        cfg.fan_out = FanOut::Direct;
+        let mut fleet = Fleet::new(cfg);
+        let cold = fleet.deploy(&mut sharded, "d:1").map_err(|e| e.to_string())?;
+        if cold.wan_bytes != bytes * n as u64 {
+            return Err(format!(
+                "direct mode moves the image once per node: {} != {}",
+                cold.wan_bytes,
+                bytes * n as u64
+            ));
+        }
+        if cold.wan_transfers != layers * n || cold.intra_bytes != 0 {
+            return Err("direct mode has no intra-cluster traffic".into());
+        }
+        // and a second deploy is still free: the caches don't care how
+        // the bytes arrived
+        let warm = fleet.deploy(&mut sharded, "d:1").map_err(|e| e.to_string())?;
+        if warm.total_bytes() != 0 {
+            return Err("warm re-deploy after direct pull must be free".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_pull_keeps_flat_accounting() {
+    run("sharded-pull-accounting", 60, |g: &mut Gen| {
+        let (reg, bytes, layers) = random_registry(g, "s:1");
+        // flat model first
+        let (_, flat) = reg.pull("s:1", &mut LayerStore::new()).map_err(|e| e.to_string())?;
+        // same catalogue behind shard frontends
+        let mut sharded = ShardedRegistry::new(reg, g.usize_in(1, 8));
+        let mut dest = LayerStore::new();
+        let (_, des) = sharded
+            .pull_at(VirtualTime::ZERO, "s:1", &mut dest)
+            .map_err(|e| e.to_string())?;
+        if des.bytes_transferred != flat.bytes_transferred || des.bytes_transferred != bytes {
+            return Err(format!(
+                "sharded pull moved {} bytes, flat moved {} (image {bytes})",
+                des.bytes_transferred, flat.bytes_transferred
+            ));
+        }
+        if des.layers_transferred != flat.layers_transferred || des.layers_transferred != layers {
+            return Err("sharded pull must transfer the same layer set".into());
+        }
+        if dest.len() != layers {
+            return Err("destination store must hold the full image".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bounded_caches_respect_capacity() {
+    run("cache-capacity", 40, |g: &mut Gen| {
+        let (reg, bytes, _) = random_registry(g, "c:1");
+        let n = g.usize_in(1, 16);
+        // capacity strictly under the image size, so something must evict
+        let capacity = g.u64_in(1, bytes.max(2) - 1);
+        let mut sharded = ShardedRegistry::new(reg, 4);
+        let mut cfg = FleetConfig::hpc(n);
+        cfg.cache_capacity_bytes = capacity;
+        let mut fleet = Fleet::new(cfg);
+        fleet.deploy(&mut sharded, "c:1").map_err(|e| e.to_string())?;
+        for (node, cache) in fleet.caches().iter().enumerate() {
+            if cache.used_bytes() > capacity && cache.len() > 1 {
+                return Err(format!(
+                    "node {node} cache holds {} bytes > capacity {capacity} with {} layers",
+                    cache.used_bytes(),
+                    cache.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shard_assignment_is_stable_and_total() {
+    run("shard-stability", 40, |g: &mut Gen| {
+        let (reg, _, _) = random_registry(g, "h:1");
+        let shards = g.usize_in(1, 8);
+        let sharded = ShardedRegistry::new(reg, shards);
+        let ids: Vec<_> = sharded.registry().layers.ids().cloned().collect();
+        for id in &ids {
+            let s = sharded.shard_of(id);
+            if s >= shards {
+                return Err(format!("layer mapped to shard {s} of {shards}"));
+            }
+            if s != sharded.shard_of(id) {
+                return Err("shard assignment must be deterministic".into());
+            }
+        }
+        Ok(())
+    });
+}
