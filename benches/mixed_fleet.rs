@@ -1,0 +1,84 @@
+//! Mixed-fleet bench: the co-tenant interference matrix through the
+//! scenario registry, recording the checkpoint-slowdown trajectory and
+//! the runner's parallel speedup into `BENCH_micro.json`.
+//!
+//! Recorded per rank count `R`:
+//!
+//! * `mixed_slowdown_{R}x` — C++ checkpoint write time next to a native
+//!   Python tenant, relative to solo (virtual time; the model's claim);
+//! * `mixed_cell_{R}_wall_s` — wall time of one native co-scheduled
+//!   cell (the simulator's own performance).
+//!
+//! Plus `matrix_jobs_speedup_x`: fig2 regenerated serially vs with
+//! available parallelism — same figures bit-for-bit, less wall clock.
+
+mod common;
+
+use std::time::Instant;
+
+use harbor::config::ExperimentConfig;
+use harbor::coordinator::Coordinator;
+use harbor::platform::Platform;
+use harbor::runtime::CalibrationTable;
+use harbor::scenario::MatrixRunner;
+use harbor::workload::{run_mixed_fleet, MixedConfig};
+
+use common::record_bench;
+
+fn main() {
+    let mut rec: Vec<(String, f64)> = Vec::new();
+
+    println!("== mixed-fleet: co-tenant interference on the shared Lustre ==");
+    for ranks in [24usize, 96] {
+        let t0 = Instant::now();
+        let report = run_mixed_fleet(&MixedConfig::new(ranks, 42, Some(Platform::Native)))
+            .expect("mixed cell");
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "  {ranks:>3}+{ranks:<3} ranks: checkpoint {:.4}s vs solo {:.4}s \
+             ({:.1}x), import {:.2}s, {} MDS RPCs, computed in {wall:.3}s",
+            report.cpp_io,
+            report.cpp_io_solo,
+            report.slowdown(),
+            report.import_wall,
+            report.mds_served,
+        );
+        rec.push((format!("mixed_slowdown_{ranks}x"), report.slowdown()));
+        rec.push((format!("mixed_cell_{ranks}_wall_s"), wall));
+    }
+
+    // full scenario through the registry (figures to stdout), then the
+    // matrix runner's own speedup on an embarrassingly parallel figure
+    let cfg = ExperimentConfig::paper_default("mixed-fleet").expect("known scenario");
+    let figs = Coordinator::with_table(CalibrationTable::builtin_fallback())
+        .with_jobs(MatrixRunner::available_jobs())
+        .run(&cfg)
+        .expect("mixed-fleet scenario");
+    for f in &figs {
+        println!("{}", f.render());
+    }
+
+    let fig2 = ExperimentConfig::paper_default("fig2").expect("fig2");
+    let serial_coord = Coordinator::with_table(CalibrationTable::builtin_fallback());
+    let t0 = Instant::now();
+    let serial = serial_coord.run(&fig2).expect("fig2 serial");
+    let serial_wall = t0.elapsed().as_secs_f64();
+    let jobs = MatrixRunner::available_jobs();
+    let par_coord = Coordinator::with_table(CalibrationTable::builtin_fallback()).with_jobs(jobs);
+    let t1 = Instant::now();
+    let parallel = par_coord.run(&fig2).expect("fig2 parallel");
+    let par_wall = t1.elapsed().as_secs_f64();
+    assert_eq!(
+        serial.iter().map(|f| f.render()).collect::<String>(),
+        parallel.iter().map(|f| f.render()).collect::<String>(),
+        "--jobs must not change the figures"
+    );
+    let speedup = if par_wall > 0.0 { serial_wall / par_wall } else { 1.0 };
+    println!(
+        "[bench:mixed_fleet] fig2 matrix: serial {serial_wall:.3}s, \
+         {jobs} jobs {par_wall:.3}s ({speedup:.2}x, bit-identical)"
+    );
+    rec.push(("matrix_jobs_speedup_x".into(), speedup));
+
+    record_bench(&rec);
+}

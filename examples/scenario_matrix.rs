@@ -1,0 +1,146 @@
+//! Plugging a custom scenario into the registry.
+//!
+//! The scenario engine makes "a new experiment" a registry entry: an
+//! implementation of `Scenario` (expand → run one cell → assemble),
+//! registered on a `Coordinator`, run through the same deterministic
+//! parallel matrix runner as the paper's figures.  This example adds a
+//! *startup-overhead sweep* — container cold-start cost per runtime
+//! across repetitions, a number the built-in figures fold into other
+//! phases — and runs it next to a built-in scenario with `--jobs`-style
+//! parallelism.
+//!
+//! Run with: `cargo run --release --example scenario_matrix`
+
+use anyhow::Result;
+
+use harbor::bench::{Figure, RowSet};
+use harbor::cluster::MachineSpec;
+use harbor::config::ExperimentConfig;
+use harbor::coordinator::Coordinator;
+use harbor::platform::Platform;
+use harbor::runtime::CalibrationTable;
+use harbor::scenario::{Cell, CellResult, Scenario, SimContext};
+use harbor::workload::RunSetup;
+
+/// Container start-up overhead per platform — the walkthrough scenario
+/// from docs/ARCHITECTURE.md §5.
+struct StartupSweep;
+
+#[derive(Debug, Clone, Copy)]
+struct StartupCell {
+    platform_idx: usize,
+    platform: Platform,
+    rep: usize,
+}
+
+const PLATFORMS: [Platform; 4] = [
+    Platform::Native,
+    Platform::Docker,
+    Platform::Rkt,
+    Platform::Vm,
+];
+
+impl Scenario for StartupSweep {
+    fn name(&self) -> &'static str {
+        "startup-sweep"
+    }
+
+    fn describe(&self) -> &'static str {
+        "container cold-start overhead per runtime (workstation image)"
+    }
+
+    fn default_config(&self) -> Result<ExperimentConfig> {
+        ExperimentConfig::paper_default("fig2")
+    }
+
+    // 1. expand: one cell per (platform, rep) — cells must be
+    //    independent; anything mutable is built inside run_cell
+    fn cells(&self, cfg: &ExperimentConfig) -> Result<Vec<Cell>> {
+        let mut cells = Vec::new();
+        for (platform_idx, &platform) in PLATFORMS.iter().enumerate() {
+            for rep in 0..cfg.reps {
+                cells.push(Cell::new(
+                    format!("startup {} / rep {rep}", platform.label()),
+                    StartupCell {
+                        platform_idx,
+                        platform,
+                        rep,
+                    },
+                ));
+            }
+        }
+        Ok(cells)
+    }
+
+    // 2. run one cell: the runner hands back our payload plus a stable
+    //    per-cell seed derived from the (scenario, cell-index) hash
+    fn run_cell(&self, ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult> {
+        let c: &StartupCell = cell.payload()?;
+        let seed = cell.id.seed(ctx.cfg.seed);
+        let setup = RunSetup::new(MachineSpec::workstation(), c.platform, 1, seed);
+        Ok(CellResult::value(setup.startup().as_secs_f64()))
+    }
+
+    // 3. assemble: the runner hands back the executed cells and their
+    //    results, aligned in cell-id order (never completion order);
+    //    RowSet keeps the rows order-independent
+    fn assemble(
+        &self,
+        _ctx: &SimContext<'_>,
+        cells: &[Cell],
+        rows: Vec<CellResult>,
+    ) -> Result<Vec<Figure>> {
+        let mut set = RowSet::new();
+        for (cell, r) in cells.iter().zip(&rows) {
+            let c: &StartupCell = cell.payload()?;
+            set.add_sample(
+                c.platform_idx as u64,
+                c.platform.label(),
+                c.rep as u64,
+                r.primary(),
+            );
+        }
+        let mut fig = Figure::new(
+            "Startup sweep — container cold-start overhead",
+            "start time [s]",
+            false,
+        );
+        for row in set.into_rows() {
+            fig.push(row);
+        }
+        fig.note("native starts free; the VM pays boot + hypervisor setup");
+        Ok(vec![fig])
+    }
+}
+
+fn main() -> Result<()> {
+    let mut coordinator =
+        Coordinator::with_table(CalibrationTable::builtin_fallback()).with_jobs(4);
+    coordinator.registry_mut().register(Box::new(StartupSweep));
+
+    println!("registered scenarios:");
+    for (name, describe) in coordinator.registry().table() {
+        println!("  {name:14} {describe}");
+    }
+    println!();
+
+    // the custom scenario, through the same runner as the figures
+    let cfg = ExperimentConfig {
+        figure: "startup-sweep".into(),
+        reps: 5,
+        ..ExperimentConfig::paper_default("fig2")?
+    };
+    for fig in coordinator.run(&cfg)? {
+        println!("{}", fig.render());
+    }
+
+    // and a built-in one, to show both share the machinery
+    let fig2 = ExperimentConfig {
+        reps: 2,
+        ..ExperimentConfig::paper_default("fig2")?
+    };
+    for fig in coordinator.run(&fig2)? {
+        println!("{}", fig.render());
+    }
+    Ok(())
+}

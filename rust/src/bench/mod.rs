@@ -6,6 +6,8 @@
 //! optionally stacked by phase — as ASCII (the terminal version of the
 //! paper's Figs 2–5) and as JSON for machine consumption.
 
+use std::collections::BTreeMap;
+
 use crate::metrics::Stats;
 use crate::util::json::Value;
 
@@ -40,6 +42,82 @@ impl Row {
     pub fn with_breakdown(mut self, phases: Vec<(String, f64)>) -> Self {
         self.breakdown = phases;
         self
+    }
+}
+
+/// Order-independent row assembly: samples accumulate under an
+/// explicit `(row key, sample order)` addressing scheme instead of
+/// push order, so figures come out identical however the cells that
+/// produced the samples were scheduled (the scenario runner's
+/// `--jobs` invariance rests on this).
+///
+/// `row` keys decide row order within the figure; `order` keys decide
+/// sample order within a row's [`Stats`] (repetition index, so error
+/// bars match a serial run sample-for-sample).
+#[derive(Debug, Clone, Default)]
+pub struct RowSet {
+    rows: BTreeMap<u64, KeyedRow>,
+}
+
+#[derive(Debug, Clone)]
+struct KeyedRow {
+    label: String,
+    samples: Vec<(u64, f64)>,
+    breakdown: Vec<(String, f64)>,
+}
+
+impl RowSet {
+    /// An empty row set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample for the row keyed `row` (created with `label`
+    /// on first touch), slotted at `order` within the row.
+    pub fn add_sample(&mut self, row: u64, label: &str, order: u64, value: f64) {
+        self.rows
+            .entry(row)
+            .or_insert_with(|| KeyedRow {
+                label: label.to_string(),
+                samples: Vec::new(),
+                breakdown: Vec::new(),
+            })
+            .samples
+            .push((order, value));
+    }
+
+    /// Attach the phase breakdown for row `row` (last write wins; the
+    /// scenarios record it from repetition 0 only).
+    pub fn set_breakdown(&mut self, row: u64, breakdown: Vec<(String, f64)>) {
+        if let Some(r) = self.rows.get_mut(&row) {
+            r.breakdown = breakdown;
+        }
+    }
+
+    /// Resolve into figure rows: rows in key order, each row's samples
+    /// in `order` order.
+    pub fn into_rows(self) -> Vec<Row> {
+        self.rows
+            .into_values()
+            .map(|mut r| {
+                r.samples.sort_by_key(|&(order, _)| order);
+                Row::new(
+                    r.label,
+                    Stats::from_samples(r.samples.into_iter().map(|(_, v)| v).collect()),
+                )
+                .with_breakdown(r.breakdown)
+            })
+            .collect()
+    }
+
+    /// Number of rows accumulated so far.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Whether no sample has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
     }
 }
 
@@ -218,6 +296,43 @@ mod tests {
         let text = fig.render();
         assert!(text.contains("solve 2.000"));
         assert!(text.contains("io 1.000"));
+    }
+
+    #[test]
+    fn rowset_is_insertion_order_independent() {
+        // scrambled arrival (worker completion order) vs serial arrival
+        let mut scrambled = RowSet::new();
+        scrambled.add_sample(1, "docker", 1, 2.1);
+        scrambled.add_sample(0, "native", 1, 1.1);
+        scrambled.add_sample(1, "docker", 0, 2.0);
+        scrambled.add_sample(0, "native", 0, 1.0);
+        scrambled.set_breakdown(0, vec![("solve".into(), 0.5)]);
+
+        let mut serial = RowSet::new();
+        serial.add_sample(0, "native", 0, 1.0);
+        serial.add_sample(0, "native", 1, 1.1);
+        serial.add_sample(1, "docker", 0, 2.0);
+        serial.add_sample(1, "docker", 1, 2.1);
+        serial.set_breakdown(0, vec![("solve".into(), 0.5)]);
+
+        let (a, b) = (scrambled.into_rows(), serial.into_rows());
+        assert_eq!(a.len(), 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.stats.samples, y.stats.samples);
+            assert_eq!(x.breakdown, y.breakdown);
+        }
+        assert_eq!(a[0].label, "native");
+        assert_eq!(a[0].stats.samples, vec![1.0, 1.1]);
+    }
+
+    #[test]
+    fn rowset_len_and_empty() {
+        let mut rs = RowSet::new();
+        assert!(rs.is_empty());
+        rs.add_sample(3, "x", 0, 1.0);
+        assert_eq!(rs.len(), 1);
+        assert!(!rs.is_empty());
     }
 
     #[test]

@@ -9,6 +9,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::platform::Platform;
 use crate::util::json::{self, Value};
 
 /// Configuration of one figure regeneration.
@@ -100,8 +101,26 @@ impl ExperimentConfig {
                 batched: true,
                 nodes: SCALE_NODES.to_vec(),
             },
+            // co-scheduled tenants on the shared Lustre (the §4
+            // discussion case the paper never measures): one figure per
+            // rank count, rows per co-tenancy configuration
+            "mixed-fleet" => ExperimentConfig {
+                figure: "mixed-fleet".into(),
+                reps: 3,
+                seed: 42,
+                ranks: vec![24, 96],
+                sizes: vec![],
+                batched: true,
+                nodes: vec![],
+            },
+            // no name enumeration here: the live list belongs to the
+            // scenario registry (`harbor bench --list`), and a second
+            // hard-coded copy would go stale
             other => {
-                anyhow::bail!("unknown figure `{other}` (fig1-scale|fig2|fig3|fig4|fig5a|fig5b)")
+                anyhow::bail!(
+                    "no paper default for figure `{other}` \
+                     (`harbor bench --list` shows the registered scenarios)"
+                )
             }
         };
         Ok(cfg)
@@ -195,6 +214,75 @@ impl ExperimentConfig {
         std::fs::write(path, self.to_json().to_pretty())
             .with_context(|| format!("writing {}", path.display()))
     }
+
+    /// Expand the evaluation matrix: the cross product
+    /// `ranks × sizes × platforms × reps` in deterministic row-major
+    /// order (ranks outermost, reps innermost — outer dimensions group
+    /// figures, inner dimensions group rows and samples, matching the
+    /// paper's figure layout).  Scenarios pass the dimension slices they
+    /// actually sweep; an empty `ranks`/`sizes` slice contributes a
+    /// single placeholder point (`ranks = 0` / `size = 0`) so
+    /// non-sweeping figures still expand.
+    ///
+    /// `seed` is the historical per-repetition workload seed
+    /// (`self.seed + rep`), which keeps the migrated figures
+    /// bit-identical to the pre-scenario coordinator; scenarios that
+    /// want collision-free per-cell streams use
+    /// [`CellId::seed`](crate::scenario::CellId::seed) instead.
+    pub fn expand(
+        &self,
+        platforms: &[Platform],
+        ranks: &[usize],
+        sizes: &[usize],
+    ) -> Vec<MatrixPoint> {
+        let ranks_dim: &[usize] = if ranks.is_empty() { &[0] } else { ranks };
+        let sizes_dim: &[usize] = if sizes.is_empty() { &[0] } else { sizes };
+        let mut points =
+            Vec::with_capacity(ranks_dim.len() * sizes_dim.len() * platforms.len() * self.reps);
+        for (ranks_idx, &ranks) in ranks_dim.iter().enumerate() {
+            for (size_idx, &size) in sizes_dim.iter().enumerate() {
+                for (platform_idx, &platform) in platforms.iter().enumerate() {
+                    for rep in 0..self.reps {
+                        points.push(MatrixPoint {
+                            ranks,
+                            ranks_idx,
+                            size,
+                            size_idx,
+                            platform,
+                            platform_idx,
+                            rep,
+                            seed: self.seed + rep as u64,
+                        });
+                    }
+                }
+            }
+        }
+        points
+    }
+}
+
+/// One cell of the `(ranks × sizes × platforms × reps)` evaluation
+/// matrix, produced by [`ExperimentConfig::expand`].  Carries both the
+/// dimension values and their indices so scenarios can group rows and
+/// figures without re-deriving positions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MatrixPoint {
+    /// MPI rank count (0 when the scenario does not sweep ranks).
+    pub ranks: usize,
+    /// Index of `ranks` in the swept slice.
+    pub ranks_idx: usize,
+    /// Problem-size index (0 when the scenario does not sweep sizes).
+    pub size: usize,
+    /// Index of `size` in the swept slice.
+    pub size_idx: usize,
+    /// Execution platform.
+    pub platform: Platform,
+    /// Index of `platform` in the swept slice.
+    pub platform_idx: usize,
+    /// Repetition index.
+    pub rep: usize,
+    /// Workload seed for this repetition (`cfg.seed + rep`).
+    pub seed: u64,
 }
 
 #[cfg(test)]
@@ -249,6 +337,41 @@ mod tests {
         assert_eq!(cfg.reps, 7);
         assert_eq!(cfg.ranks, vec![24]);
         assert_eq!(cfg.seed, 42); // default survives
+    }
+
+    #[test]
+    fn mixed_fleet_defaults() {
+        let cfg = ExperimentConfig::paper_default("mixed-fleet").unwrap();
+        assert_eq!(cfg.ranks, vec![24, 96]);
+        assert_eq!(cfg.reps, 3);
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn expand_orders_ranks_sizes_platforms_reps() {
+        let cfg = ExperimentConfig {
+            reps: 2,
+            seed: 7,
+            ..ExperimentConfig::paper_default("fig3").unwrap()
+        };
+        let platforms = [Platform::Native, Platform::Docker];
+        let pts = cfg.expand(&platforms, &[24, 48], &[]);
+        assert_eq!(pts.len(), 8); // 2 ranks x 1 size x 2 platforms x 2 reps
+        // innermost dimension: reps
+        assert_eq!((pts[0].rep, pts[1].rep), (0, 1));
+        assert_eq!(pts[0].platform, Platform::Native);
+        assert_eq!(pts[2].platform, Platform::Docker);
+        // outermost dimension: ranks
+        assert_eq!(pts[0].ranks, 24);
+        assert_eq!(pts[4].ranks, 48);
+        assert_eq!(pts[4].ranks_idx, 1);
+        // per-rep workload seeds are the historical `seed + rep`
+        assert_eq!((pts[0].seed, pts[1].seed), (7, 8));
+        // empty dims collapse to one placeholder point
+        let no_dims = cfg.expand(&platforms, &[], &[]);
+        assert_eq!(no_dims.len(), 4); // 2 platforms x 2 reps
+        assert_eq!((no_dims[0].ranks, no_dims[0].size), (0, 0));
     }
 
     #[test]

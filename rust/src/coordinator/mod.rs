@@ -1,5 +1,5 @@
 //! Experiment orchestration — the paper's Fig 1 pipeline plus the
-//! evaluation matrix.
+//! dispatch layer over the scenario engine.
 //!
 //! [`deploy_pipeline`] walks the full image lifecycle the paper
 //! describes (§3.4): parse the Dockerfile → build (layer cache, content
@@ -7,28 +7,24 @@
 //! Edison (Shifter's `shifterimg pull`), reporting layer reuse and
 //! transfer times.
 //!
-//! [`Coordinator`] regenerates the evaluation figures: each
-//! `ExperimentConfig` expands into the (platform × ranks × size × rep)
-//! matrix, every cell runs the corresponding workload through the
-//! simulated deployment, and the results aggregate into paper-style
-//! [`Figure`]s.
+//! [`Coordinator`] is now a thin shell: it resolves
+//! `ExperimentConfig::figure` through a [`ScenarioRegistry`] and hands
+//! the matched [`Scenario`](crate::scenario::Scenario) to the
+//! deterministic [`MatrixRunner`] — every figure implementation lives
+//! in `crate::scenario`, and new experiments register there instead of
+//! editing this module.
 
 use anyhow::Result;
 
-use crate::bench::{repeat, Figure, Row};
+use crate::bench::Figure;
 use crate::config::ExperimentConfig;
 use crate::container::{
-    Builder, Buildfile, Fleet, FleetConfig, FleetReport, LayerStore, PullReport, Registry,
-    ShardedRegistry,
+    Builder, Buildfile, Fleet, FleetReport, LayerStore, PullReport, Registry, ShardedRegistry,
 };
 use crate::des::Duration;
-use crate::fem::exec::Exec;
 use crate::metrics::Stats;
-use crate::platform::Platform;
 use crate::runtime::CalibrationTable;
-use crate::workload::{
-    run_fig2, run_hpgmg, run_poisson_app, AppConfig, Fig2Test, HpgmgConfig,
-};
+use crate::scenario::{MatrixRunner, ScenarioRegistry};
 
 /// The FEniCS-stack buildfile the pipeline builds (the project's real
 /// Dockerfile collapsed to our DSL).
@@ -143,37 +139,66 @@ pub fn fleet_registry(reference: &str) -> Result<ShardedRegistry> {
     Ok(ShardedRegistry::new(registry, 4))
 }
 
-/// Figure runner over the modeled (calibrated) execution mode.
+/// Figure runner over the modeled (calibrated) execution mode:
+/// scenario registry + deterministic matrix runner.
 pub struct Coordinator {
     /// Calibration table driving modeled execution times.
     pub table: CalibrationTable,
+    /// The scenario catalogue `run` dispatches through.
+    registry: ScenarioRegistry,
+    /// Worker threads for the cell matrix (1 = serial; any value
+    /// produces bit-identical figures).
+    jobs: usize,
 }
 
 impl Coordinator {
     /// Load the measured calibration table if available (else the
-    /// built-in fallback — reports record which).
+    /// built-in fallback — reports record which), over the built-in
+    /// scenario registry, serial execution.
     pub fn new() -> Self {
-        Coordinator {
-            table: CalibrationTable::load_or_default(None),
-        }
+        Self::with_table(CalibrationTable::load_or_default(None))
     }
 
     /// A coordinator over an explicit calibration table.
     pub fn with_table(table: CalibrationTable) -> Self {
-        Coordinator { table }
+        Coordinator {
+            table,
+            registry: ScenarioRegistry::builtin(),
+            jobs: 1,
+        }
     }
 
-    /// Regenerate the figures selected by `cfg`.
+    /// Set the matrix worker count (builder-style).  Figures are
+    /// bit-identical for every value; >1 only changes wall-clock time.
+    pub fn with_jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs.max(1);
+        self
+    }
+
+    /// The scenario catalogue.
+    pub fn registry(&self) -> &ScenarioRegistry {
+        &self.registry
+    }
+
+    /// Mutable access to the catalogue — the plug-in point for custom
+    /// scenarios (see `examples/scenario_matrix.rs`).
+    pub fn registry_mut(&mut self) -> &mut ScenarioRegistry {
+        &mut self.registry
+    }
+
+    /// Regenerate the figures selected by `cfg`: resolve the scenario
+    /// by name and run its cell matrix.  An unknown name lists every
+    /// registered scenario — the list comes from the registry, so it
+    /// can never go stale.
     pub fn run(&self, cfg: &ExperimentConfig) -> Result<Vec<Figure>> {
-        match cfg.figure.as_str() {
-            "fig1-scale" => self.fig1_scale(cfg),
-            "fig2" => self.fig2(cfg),
-            "fig3" => self.fig3(cfg),
-            "fig4" => self.fig4(cfg),
-            "fig5a" => self.fig5(cfg, true),
-            "fig5b" => self.fig5(cfg, false),
-            other => anyhow::bail!("unknown figure `{other}`"),
-        }
+        let scenario = self.registry.get(&cfg.figure).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown figure `{}` (registered scenarios: {})",
+                cfg.figure,
+                self.registry.names().join(", ")
+            )
+        })?;
+        MatrixRunner::new(self.jobs).run(scenario, cfg, &self.table)
     }
 
     /// Deploy `reference` onto every node of `fleet` concurrently
@@ -218,198 +243,6 @@ impl Coordinator {
     ) -> Result<FleetReport> {
         Ok(fleet.deploy(registry, reference)?)
     }
-
-    /// The `fig1-scale` figure pair: cold pull makespan and warm
-    /// re-deploy makespan for each fleet size in `cfg.nodes`.
-    fn fig1_scale(&self, cfg: &ExperimentConfig) -> Result<Vec<Figure>> {
-        anyhow::ensure!(
-            !cfg.nodes.is_empty(),
-            "fig1-scale needs at least one fleet size in `nodes`"
-        );
-        anyhow::ensure!(
-            cfg.nodes.iter().all(|&n| n >= 1),
-            "fig1-scale fleet sizes must be >= 1 (got {:?})",
-            cfg.nodes
-        );
-        let reference = "quay.io/fenicsproject/stable:2016.1.0r1";
-        let mut cold_fig = Figure::new(
-            "Fig 1 at fleet scale — cold pull makespan",
-            "makespan [s]",
-            false,
-        );
-        let mut warm_fig = Figure::new(
-            "Fig 1 at fleet scale — warm re-deploy makespan",
-            "makespan [s]",
-            false,
-        );
-        let mut worst_ratio = 0.0f64;
-        for &n in &cfg.nodes {
-            let mut sharded = fleet_registry(reference)?;
-            let mut fleet = Fleet::new(FleetConfig::hpc(n));
-            let cold = self.deploy_fleet(&mut sharded, &mut fleet, reference)?;
-            let warm = self.deploy_fleet(&mut sharded, &mut fleet, reference)?;
-            worst_ratio =
-                worst_ratio.max(warm.makespan.as_secs_f64() / cold.makespan.as_secs_f64());
-            cold_fig.push(
-                Row::new(
-                    format!("{n} nodes"),
-                    Stats::from_samples(vec![cold.makespan.as_secs_f64()]),
-                )
-                .with_breakdown(vec![
-                    ("wan MB".into(), cold.wan_bytes as f64 / 1e6),
-                    ("intra MB".into(), cold.intra_bytes as f64 / 1e6),
-                ]),
-            );
-            warm_fig.push(
-                Row::new(
-                    format!("{n} nodes"),
-                    Stats::from_samples(vec![warm.makespan.as_secs_f64()]),
-                )
-                .with_breakdown(vec![("cache hit rate".into(), warm.cache.hit_rate())]),
-            );
-        }
-        cold_fig.note(
-            "each unique layer crosses the WAN once (4 shards), then peer fan-out \
-             (arity 2) over the Aries fabric",
-        );
-        warm_fig.note(format!(
-            "warm/cold makespan ratio {worst_ratio:.5} (acceptance bar: < 0.10)"
-        ));
-        Ok(vec![cold_fig, warm_fig])
-    }
-
-    fn exec(&self) -> Exec<'_> {
-        Exec::Modeled { table: &self.table }
-    }
-
-    fn fig2(&self, cfg: &ExperimentConfig) -> Result<Vec<Figure>> {
-        let mut figures = Vec::new();
-        for test in Fig2Test::ALL {
-            let mut fig = Figure::new(
-                format!("Fig 2 — {} (workstation)", test.label()),
-                "run time [s]",
-                false,
-            );
-            for platform in Platform::workstation_set() {
-                let stats = repeat(cfg.reps, |rep| {
-                    let mut exec = self.exec();
-                    run_fig2(test, platform, &mut exec, cfg.seed + rep as u64)
-                        .expect("fig2 run")
-                        .as_secs_f64()
-                });
-                fig.push(Row::new(platform.label(), stats));
-            }
-            fig.note(format!("calibration: {}", self.table.source));
-            figures.push(fig);
-        }
-        Ok(figures)
-    }
-
-    fn fig3(&self, cfg: &ExperimentConfig) -> Result<Vec<Figure>> {
-        let mut figures = Vec::new();
-        for &ranks in &cfg.ranks {
-            let mut fig = Figure::new(
-                format!("Fig 3 — C++ benchmark, Edison, {ranks} MPI processes"),
-                "run time [s]",
-                false,
-            );
-            for platform in Platform::edison_cpp_set() {
-                let mut breakdown_acc: Vec<(String, f64)> = Vec::new();
-                let stats = repeat(cfg.reps, |rep| {
-                    let mut exec = self.exec();
-                    let mut app = AppConfig::cpp(ranks, cfg.seed + rep as u64);
-                    app.batched = cfg.batched;
-                    let b = run_poisson_app(platform, &mut exec, &app).expect("fig3 run");
-                    if rep == 0 {
-                        breakdown_acc = b
-                            .phase_names()
-                            .iter()
-                            .map(|p| (p.clone(), b.get(p)))
-                            .collect();
-                    }
-                    b.total()
-                });
-                fig.push(Row::new(platform.label(), stats).with_breakdown(breakdown_acc));
-            }
-            if ranks > 96 {
-                fig.note("container-MPI bar is off-scale in the paper (truncated x-axis)");
-            }
-            figures.push(fig);
-        }
-        Ok(figures)
-    }
-
-    fn fig4(&self, cfg: &ExperimentConfig) -> Result<Vec<Figure>> {
-        let mut figures = Vec::new();
-        for &ranks in &cfg.ranks {
-            let mut fig = Figure::new(
-                format!("Fig 4 — Python benchmark, Edison, {ranks} MPI processes"),
-                "run time [s]",
-                false,
-            );
-            for platform in Platform::edison_python_set() {
-                let mut breakdown_acc: Vec<(String, f64)> = Vec::new();
-                let stats = repeat(cfg.reps, |rep| {
-                    let mut exec = self.exec();
-                    let mut app = AppConfig::python(ranks, cfg.seed + rep as u64);
-                    app.batched = cfg.batched;
-                    let b = run_poisson_app(platform, &mut exec, &app).expect("fig4 run");
-                    if rep == 0 {
-                        breakdown_acc = b
-                            .phase_names()
-                            .iter()
-                            .map(|p| (p.clone(), b.get(p)))
-                            .collect();
-                    }
-                    b.total()
-                });
-                fig.push(Row::new(platform.label(), stats).with_breakdown(breakdown_acc));
-            }
-            fig.note("native total dominated by the Python import phase (MDS contention)");
-            figures.push(fig);
-        }
-        Ok(figures)
-    }
-
-    fn fig5(&self, cfg: &ExperimentConfig, workstation: bool) -> Result<Vec<Figure>> {
-        let platforms: Vec<Platform> = if workstation {
-            vec![Platform::Docker, Platform::Rkt, Platform::Native]
-        } else {
-            vec![Platform::Native, Platform::ShifterSystemMpi]
-        };
-        let mut figures = Vec::new();
-        for &size in &cfg.sizes {
-            let (which, ranks) = if workstation {
-                ("5a — 16-core workstation", cfg.ranks[0])
-            } else {
-                ("5b — Edison, 192 cores", cfg.ranks[0])
-            };
-            let dofs_per_rank = crate::fem::gmg::LADDER[size].pow(3);
-            let mut fig = Figure::new(
-                format!("Fig {which}: HPGMG-FE, {dofs_per_rank} DOF/rank"),
-                "DOF/s",
-                true,
-            );
-            for &platform in &platforms {
-                let stats = repeat(cfg.reps, |rep| {
-                    let mut exec = self.exec();
-                    let mut hc = if workstation {
-                        HpgmgConfig::workstation(size, cfg.seed + rep as u64)
-                    } else {
-                        HpgmgConfig::edison(size, cfg.seed + rep as u64)
-                    };
-                    hc.ranks = ranks;
-                    hc.batched = cfg.batched;
-                    run_hpgmg(platform, &mut exec, &hc)
-                        .expect("hpgmg run")
-                        .dofs_per_second
-                });
-                fig.push(Row::new(platform.label(), stats));
-            }
-            figures.push(fig);
-        }
-        Ok(figures)
-    }
 }
 
 impl Default for Coordinator {
@@ -437,6 +270,7 @@ pub fn column_summary(figures: &[Figure], label: &str) -> Option<Stats> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ExperimentConfig;
 
     #[test]
     fn deploy_pipeline_round_trips() {
@@ -452,6 +286,21 @@ mod tests {
         let text = trace.render();
         assert!(text.contains("edison"));
         assert!(text.contains("layers built"));
+    }
+
+    #[test]
+    fn unknown_figure_error_lists_the_registry() {
+        let cfg = ExperimentConfig {
+            figure: "fig9".into(),
+            ..ExperimentConfig::paper_default("fig2").unwrap()
+        };
+        let err = Coordinator::new().run(&cfg).unwrap_err().to_string();
+        assert!(err.contains("unknown figure `fig9`"), "{err}");
+        // the list is generated from the registry — every scenario,
+        // including ones added after this test was written
+        for name in ScenarioRegistry::builtin().names() {
+            assert!(err.contains(name), "error must list `{name}`: {err}");
+        }
     }
 
     #[test]
@@ -528,5 +377,56 @@ mod tests {
         let native = column_summary(&figs, "native").unwrap();
         assert_eq!(native.n(), 8); // 4 tests x 2 reps
         assert!(column_summary(&figs, "slurm").is_none());
+    }
+
+    #[test]
+    fn custom_scenarios_plug_in_through_the_registry() {
+        use crate::bench::Row;
+        use crate::scenario::{Cell, CellResult, Scenario, SimContext};
+
+        struct Constant;
+        impl Scenario for Constant {
+            fn name(&self) -> &'static str {
+                "constant"
+            }
+            fn describe(&self) -> &'static str {
+                "one cell, one bar"
+            }
+            fn default_config(&self) -> Result<ExperimentConfig> {
+                ExperimentConfig::paper_default("fig2")
+            }
+            fn cells(&self, _cfg: &ExperimentConfig) -> Result<Vec<Cell>> {
+                Ok(vec![Cell::new("the cell", ())])
+            }
+            fn run_cell(&self, _ctx: &SimContext<'_>, _cell: &Cell) -> Result<CellResult> {
+                Ok(CellResult::value(1.0))
+            }
+            fn assemble(
+                &self,
+                _ctx: &SimContext<'_>,
+                _cells: &[Cell],
+                rows: Vec<CellResult>,
+            ) -> Result<Vec<Figure>> {
+                let mut fig = Figure::new("constant", "x", false);
+                fig.push(Row::new("bar", Stats::from_samples(vec![rows[0].primary()])));
+                Ok(vec![fig])
+            }
+        }
+
+        let mut c = Coordinator::new();
+        c.registry_mut().register(Box::new(Constant));
+        let cfg = ExperimentConfig {
+            figure: "constant".into(),
+            ..ExperimentConfig::paper_default("fig2").unwrap()
+        };
+        let figs = c.run(&cfg).unwrap();
+        assert_eq!(figs.len(), 1);
+        assert_eq!(figs[0].rows[0].stats.mean(), 1.0);
+        // and the unknown-figure error now mentions it
+        let bad = ExperimentConfig {
+            figure: "nope".into(),
+            ..cfg
+        };
+        assert!(c.run(&bad).unwrap_err().to_string().contains("constant"));
     }
 }

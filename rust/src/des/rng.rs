@@ -5,7 +5,7 @@
 //! from a `SimRng` seeded from the experiment seed + a stream label, so
 //! results are reproducible and independent streams don't alias.
 
-use crate::util::rng::Xoshiro256;
+use crate::util::rng::{fnv1a, Xoshiro256};
 
 /// Deterministic RNG stream for one simulation component.
 #[derive(Debug, Clone)]
@@ -21,13 +21,8 @@ impl SimRng {
     /// Derive a stream from an experiment seed and a component label.
     pub fn new(seed: u64, stream: &str) -> Self {
         // fold the label into the seed with FNV-1a so streams differ
-        let mut h: u64 = 0xcbf29ce484222325;
-        for b in stream.bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
         SimRng {
-            rng: Xoshiro256::seed_from_u64(seed ^ h),
+            rng: Xoshiro256::seed_from_u64(seed ^ fnv1a(stream.bytes())),
             spare_normal: None,
         }
     }

@@ -43,8 +43,9 @@
 //! | [`workload`] | the paper's benchmark programs (Figs 2, 3, 4, 5) |
 //! | [`platform`] | execution-platform profiles (native / docker / rkt / VM / Shifter) |
 //! | [`bench`] | repetition harness, statistics, paper-style report rendering |
-//! | [`config`] | TOML-backed experiment and machine configuration |
-//! | [`coordinator`] | experiment orchestration: provision → pull → launch → collect |
+//! | [`config`] | experiment configuration and evaluation-matrix expansion |
+//! | [`scenario`] | pluggable `Scenario` trait, registry, and the deterministic parallel matrix runner |
+//! | [`coordinator`] | Fig 1 pipeline + dispatch into the scenario registry |
 //! | [`metrics`] | phase timers and per-phase breakdowns |
 
 #![warn(missing_docs)]
@@ -63,6 +64,7 @@ pub mod net;
 pub mod platform;
 pub mod pyimport;
 pub mod runtime;
+pub mod scenario;
 pub mod util;
 pub mod workload;
 

@@ -6,8 +6,9 @@
 //! * `pipeline`  — the Fig 1 pipeline: build → push → pull everywhere
 //! * `resolve`   — show the MPI ABI resolution for a platform (§4.2)
 //! * `run`       — run the Edison test program once, print the breakdown
-//! * `bench`     — regenerate a figure (fig1-scale | fig2 | fig3 | fig4 |
-//!   fig5a | fig5b), each mapped to its paper section in `ABOUT`
+//! * `bench`     — regenerate a scenario's figures (`--list` shows the
+//!   registry; `--jobs N` runs the cell matrix in parallel,
+//!   bit-identically)
 //! * `calibrate` — measure per-artifact PJRT costs into calibration.json
 //! * `artifacts` — list the AOT artifacts the runtime can execute
 
@@ -47,7 +48,8 @@ COMMANDS:
   fenicsproject  demo the §3.2 wrapper workflows (notebook/start/stop)
   artifacts  list AOT artifacts
 
-FIGURES (harbor bench <figure>; the same table lives in EXPERIMENTS.md):
+SCENARIOS (harbor bench <scenario>; `harbor bench --list` prints the
+live registry — the same table lives in EXPERIMENTS.md):
   fig1-scale  the Fig 1 workflow's deployment phase (§3.4: build ->
               push -> pull everywhere) at fleet scale: one image pulled
               onto 64..16384 nodes through 4 registry shards, with
@@ -61,7 +63,15 @@ FIGURES (harbor bench <figure>; the same table lives in EXPERIMENTS.md):
               problem; containers beat native via fewer metadata RPCs
   fig5a       Fig 5a (§4) — HPGMG-FE throughput, 16-core workstation
   fig5b       Fig 5b (§4) — HPGMG-FE throughput, Edison at 192 cores
-  all         every figure above
+  mixed-fleet co-scheduled C++ checkpoint writer and Python import
+              storm on the shared Lustre (§4 discussion, unmeasured in
+              the paper); containerising the Python tenant returns the
+              writer to solo time
+  all         every registered scenario
+
+Scenarios expand into independent cells run across `--jobs N` worker
+threads; output is bit-identical for every N.  Custom scenarios plug in
+through harbor::scenario::ScenarioRegistry (docs/ARCHITECTURE.md §5).
 
 Run `harbor <COMMAND> --help` for details.";
 
@@ -200,27 +210,57 @@ fn cmd_run(raw: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
-    let args = Args::new("bench", "regenerate a figure from the paper")
-        .positional(
-            "figure",
-            "fig1-scale | fig2 | fig3 | fig4 | fig5a | fig5b | all (see `harbor --help`)",
+    let args = Args::new("bench", "regenerate a scenario's figures")
+        .positional_opt(
+            "scenario",
+            "a registered scenario name or `all` (see `harbor bench --list`)",
         )
         .opt("reps", "repetitions per bar (paper: 5 ws / 3 hpc)", None)
         .opt("seed", "base simulation seed", None)
         .opt("config", "experiment config JSON (overrides defaults)", None)
         .opt("out", "also write a JSON report to this path", None)
         .opt("nodes", "comma-separated fleet sizes (fig1-scale; default 64,512,4096,16384)", None)
+        .opt("jobs", "matrix workers; 0 = available parallelism (bit-identical)", Some("0"))
+        .switch("list", "list the registered scenarios and exit")
         .switch("json", "print JSON instead of ASCII bars")
         .switch("scale", "paper-scale rank counts (fig3/fig4: 1536, 12288, 98304)")
         .switch("per-rank", "force the O(ranks) per-rank engine (default: class-batched)");
     let p = args.parse(raw)?;
+    let jobs = match p.parse_num::<usize>("jobs")? {
+        0 => harbor::scenario::MatrixRunner::available_jobs(),
+        n => n,
+    };
+    let coordinator = Coordinator::new().with_jobs(jobs);
+    if p.flag("list") {
+        println!("SCENARIOS (harbor bench <scenario>):");
+        for (name, describe) in coordinator.registry().table() {
+            println!("  {name:12} {describe}");
+        }
+        println!("\nThe same table lives in EXPERIMENTS.md's figure index.");
+        return Ok(());
+    }
+    let Some(selected) = p.pos_opt(0) else {
+        anyhow::bail!(
+            "missing <scenario> (one of: {}, or `all`; `harbor bench --list` describes them)",
+            coordinator.registry().names().join(", ")
+        );
+    };
     if p.flag("scale") && p.get("config").is_some() {
         anyhow::bail!("--scale conflicts with --config (set the scale ranks in the config file)");
     }
-    let figures: Vec<String> = match p.pos(0) {
-        // --scale only exists for the rank-sweeping figures
-        "all" if p.flag("scale") => vec!["fig3".into(), "fig4".into()],
-        "all" => ["fig1-scale", "fig2", "fig3", "fig4", "fig5a", "fig5b"]
+    let figures: Vec<String> = match selected {
+        // `all` comes from the registry, so it can never go stale;
+        // --scale keeps only the scenarios that define scale points
+        "all" if p.flag("scale") => coordinator
+            .registry()
+            .names()
+            .into_iter()
+            .filter(|n| ExperimentConfig::paper_scale(n).is_ok())
+            .map(|s| s.to_string())
+            .collect(),
+        "all" => coordinator
+            .registry()
+            .names()
             .iter()
             .map(|s| s.to_string())
             .collect(),
@@ -229,13 +269,23 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
     if p.get("nodes").is_some() && !figures.iter().any(|f| f == "fig1-scale") {
         anyhow::bail!("--nodes only applies to fig1-scale");
     }
-    let coordinator = Coordinator::new();
     let mut all_json = Vec::new();
     for figure in &figures {
         let mut cfg = match p.get("config") {
             Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
             None if p.flag("scale") => ExperimentConfig::paper_scale(figure)?,
-            None => ExperimentConfig::paper_default(figure)?,
+            // defaults come from the scenario itself, so plug-ins that
+            // override Scenario::default_config work through the CLI
+            None => coordinator
+                .registry()
+                .get(figure)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown scenario `{figure}` (registered: {})",
+                        coordinator.registry().names().join(", ")
+                    )
+                })?
+                .default_config()?,
         };
         cfg.figure = figure.clone();
         if p.flag("per-rank") {

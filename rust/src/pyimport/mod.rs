@@ -167,12 +167,7 @@ pub fn replay_batched(
     // module k arrives before any node's burst for module k+1
     for module in &graph.modules {
         for (node, clock) in node_clock.iter_mut().enumerate() {
-            let mut t = *clock;
-            t = fs.submit_batch(t, node, count[node], FsOp::MetaBatch { ops: module.meta_ops });
-            t = fs.submit_batch(t, node, count[node], FsOp::Read { bytes: module.bytes });
-            // parse/compile cost (CPU, not FS): ~2 us per KB of source
-            t += Duration::from_nanos(module.bytes * 2);
-            *clock = t;
+            *clock = module_burst(fs, node, count[node], module, *clock);
         }
     }
     let rank_done: Vec<VirtualTime> = alloc.node_of.iter().map(|&n| node_clock[n]).collect();
@@ -181,6 +176,25 @@ pub fn replay_batched(
         rank_done,
         wall: done - start,
     }
+}
+
+/// One module's node-burst: the metadata batch, the source read, and
+/// the parse/compile cost (~2 µs per KB of source; CPU, not FS), for
+/// `count` symmetric ranks of `node` starting at `t`.  The single
+/// definition of the import-storm step — [`replay_batched`] and the
+/// mixed-fleet co-scheduling replay
+/// ([`crate::workload::mixed`]) both charge exactly this, so the two
+/// import models cannot drift apart.
+pub fn module_burst(
+    fs: &mut dyn FileSystem,
+    node: usize,
+    count: u32,
+    module: &Module,
+    t: VirtualTime,
+) -> VirtualTime {
+    let t = fs.submit_batch(t, node, count, FsOp::MetaBatch { ops: module.meta_ops });
+    let t = fs.submit_batch(t, node, count, FsOp::Read { bytes: module.bytes });
+    t + Duration::from_nanos(module.bytes * 2)
 }
 
 #[cfg(test)]

@@ -1,0 +1,98 @@
+//! Fig 2 as a scenario: the four single-process workstation tests
+//! across native / Docker / rkt / VM.
+//!
+//! Cell = (test, platform, rep); one figure per test, one row per
+//! platform, `reps` samples per row.  Output is bit-identical to the
+//! pre-scenario coordinator (same per-rep seeds, same nested order).
+
+use anyhow::Result;
+
+use crate::bench::{Figure, RowSet};
+use crate::config::{ExperimentConfig, MatrixPoint};
+use crate::platform::Platform;
+use crate::workload::{run_fig2, Fig2Test};
+
+use super::{Cell, CellResult, Scenario, SimContext};
+
+/// The Fig 2 scenario.
+pub struct Fig2;
+
+/// One Fig 2 cell: which test, on which platform, which repetition.
+#[derive(Debug, Clone, Copy)]
+struct Fig2Cell {
+    test_idx: usize,
+    test: Fig2Test,
+    point: MatrixPoint,
+}
+
+impl Scenario for Fig2 {
+    fn name(&self) -> &'static str {
+        "fig2"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Fig 2 (§4) — workstation benchmarks (Poisson LU/AMG, I/O, elasticity) \
+         across native / Docker / rkt / VirtualBox"
+    }
+
+    fn cells(&self, cfg: &ExperimentConfig) -> Result<Vec<Cell>> {
+        let mut cells = Vec::new();
+        for (test_idx, &test) in Fig2Test::ALL.iter().enumerate() {
+            for point in cfg.expand(&Platform::workstation_set(), &[], &[]) {
+                cells.push(Cell::new(
+                    format!(
+                        "fig2 {} / {} / rep {}",
+                        test.label(),
+                        point.platform.label(),
+                        point.rep
+                    ),
+                    Fig2Cell {
+                        test_idx,
+                        test,
+                        point,
+                    },
+                ));
+            }
+        }
+        Ok(cells)
+    }
+
+    fn run_cell(&self, ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult> {
+        let c: &Fig2Cell = cell.payload()?;
+        let mut exec = ctx.exec();
+        let t = run_fig2(c.test, c.point.platform, &mut exec, c.point.seed)?;
+        Ok(CellResult::value(t.as_secs_f64()))
+    }
+
+    fn assemble(
+        &self,
+        ctx: &SimContext<'_>,
+        cells: &[Cell],
+        rows: Vec<CellResult>,
+    ) -> Result<Vec<Figure>> {
+        let mut sets: Vec<RowSet> = (0..Fig2Test::ALL.len()).map(|_| RowSet::new()).collect();
+        for (cell, r) in cells.iter().zip(&rows) {
+            let c: &Fig2Cell = cell.payload()?;
+            sets[c.test_idx].add_sample(
+                c.point.platform_idx as u64,
+                c.point.platform.label(),
+                c.point.rep as u64,
+                r.primary(),
+            );
+        }
+        let mut figures = Vec::new();
+        for (test, set) in Fig2Test::ALL.iter().zip(sets) {
+            let mut fig = Figure::new(
+                format!("Fig 2 — {} (workstation)", test.label()),
+                "run time [s]",
+                false,
+            );
+            for row in set.into_rows() {
+                fig.push(row);
+            }
+            fig.note(format!("calibration: {}", ctx.table.source));
+            figures.push(fig);
+        }
+        Ok(figures)
+    }
+}

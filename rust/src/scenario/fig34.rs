@@ -1,0 +1,183 @@
+//! Figs 3 and 4 as scenarios: the Edison Poisson app (C++ and Python
+//! drivers) swept over MPI rank counts.
+//!
+//! Cell = (ranks, platform, rep); one figure per rank count, one row
+//! per platform with the repetition-0 phase breakdown attached —
+//! exactly the pre-scenario coordinator's shape, bit for bit.
+
+use anyhow::Result;
+
+use crate::bench::{Figure, RowSet};
+use crate::config::{ExperimentConfig, MatrixPoint};
+use crate::platform::Platform;
+use crate::workload::{run_poisson_app, AppConfig};
+
+use super::{Cell, CellResult, Scenario, SimContext};
+
+/// Fig 3: the C++ driver (no import phase).
+pub struct Fig3;
+
+/// Fig 4: the Python driver (the import problem).
+pub struct Fig4;
+
+/// One poisson-app cell.
+#[derive(Debug, Clone, Copy)]
+struct AppCell {
+    python: bool,
+    point: MatrixPoint,
+}
+
+fn app_cells(cfg: &ExperimentConfig, python: bool, platforms: &[Platform]) -> Result<Vec<Cell>> {
+    anyhow::ensure!(
+        !cfg.ranks.is_empty(),
+        "fig{} needs at least one rank count in `ranks`",
+        if python { 4 } else { 3 }
+    );
+    Ok(cfg
+        .expand(platforms, &cfg.ranks, &[])
+        .into_iter()
+        .map(|point| {
+            Cell::new(
+                format!(
+                    "fig{} ranks {} / {} / rep {}",
+                    if python { 4 } else { 3 },
+                    point.ranks,
+                    point.platform.label(),
+                    point.rep
+                ),
+                AppCell { python, point },
+            )
+        })
+        .collect())
+}
+
+fn run_app_cell(ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult> {
+    let c: &AppCell = cell.payload()?;
+    let mut exec = ctx.exec();
+    let mut app = if c.python {
+        AppConfig::python(c.point.ranks, c.point.seed)
+    } else {
+        AppConfig::cpp(c.point.ranks, c.point.seed)
+    };
+    app.batched = ctx.cfg.batched;
+    let b = run_poisson_app(c.point.platform, &mut exec, &app)?;
+    let breakdown = b
+        .phase_names()
+        .iter()
+        .map(|p| (p.clone(), b.get(p)))
+        .collect();
+    Ok(CellResult::value(b.total()).with_breakdown(breakdown))
+}
+
+fn assemble_app(
+    ctx: &SimContext<'_>,
+    cells: &[Cell],
+    rows: Vec<CellResult>,
+    title: impl Fn(usize) -> String,
+    note: impl Fn(usize) -> Option<String>,
+) -> Result<Vec<Figure>> {
+    let mut sets: Vec<RowSet> = (0..ctx.cfg.ranks.len()).map(|_| RowSet::new()).collect();
+    for (cell, r) in cells.iter().zip(&rows) {
+        let c: &AppCell = cell.payload()?;
+        let set = &mut sets[c.point.ranks_idx];
+        set.add_sample(
+            c.point.platform_idx as u64,
+            c.point.platform.label(),
+            c.point.rep as u64,
+            r.primary(),
+        );
+        if c.point.rep == 0 {
+            set.set_breakdown(c.point.platform_idx as u64, r.breakdown.clone());
+        }
+    }
+    let mut figures = Vec::new();
+    for (ranks_idx, set) in sets.into_iter().enumerate() {
+        let ranks = ctx.cfg.ranks[ranks_idx];
+        let mut fig = Figure::new(title(ranks), "run time [s]", false);
+        for row in set.into_rows() {
+            fig.push(row);
+        }
+        if let Some(n) = note(ranks) {
+            fig.note(n);
+        }
+        figures.push(fig);
+    }
+    Ok(figures)
+}
+
+impl Scenario for Fig3 {
+    fn name(&self) -> &'static str {
+        "fig3"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Fig 3 (§4) — C++ Poisson solver on Edison at 24-192 ranks: native vs \
+         Shifter+host-MPI vs container MPI (TCP fallback blow-up)"
+    }
+
+    fn cells(&self, cfg: &ExperimentConfig) -> Result<Vec<Cell>> {
+        app_cells(cfg, false, &Platform::edison_cpp_set())
+    }
+
+    fn run_cell(&self, ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult> {
+        run_app_cell(ctx, cell)
+    }
+
+    fn assemble(
+        &self,
+        ctx: &SimContext<'_>,
+        cells: &[Cell],
+        rows: Vec<CellResult>,
+    ) -> Result<Vec<Figure>> {
+        assemble_app(
+            ctx,
+            cells,
+            rows,
+            |ranks| format!("Fig 3 — C++ benchmark, Edison, {ranks} MPI processes"),
+            |ranks| {
+                (ranks > 96).then(|| {
+                    "container-MPI bar is off-scale in the paper (truncated x-axis)".to_string()
+                })
+            },
+        )
+    }
+}
+
+impl Scenario for Fig4 {
+    fn name(&self) -> &'static str {
+        "fig4"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Fig 4 (§4) — Python Poisson on Edison: the import problem; containers \
+         beat native via fewer metadata RPCs"
+    }
+
+    fn cells(&self, cfg: &ExperimentConfig) -> Result<Vec<Cell>> {
+        app_cells(cfg, true, &Platform::edison_python_set())
+    }
+
+    fn run_cell(&self, ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult> {
+        run_app_cell(ctx, cell)
+    }
+
+    fn assemble(
+        &self,
+        ctx: &SimContext<'_>,
+        cells: &[Cell],
+        rows: Vec<CellResult>,
+    ) -> Result<Vec<Figure>> {
+        assemble_app(
+            ctx,
+            cells,
+            rows,
+            |ranks| format!("Fig 4 — Python benchmark, Edison, {ranks} MPI processes"),
+            |_| {
+                Some(
+                    "native total dominated by the Python import phase (MDS contention)"
+                        .to_string(),
+                )
+            },
+        )
+    }
+}

@@ -1,0 +1,143 @@
+//! Fig 5 as scenarios: HPGMG-FE throughput on the workstation (5a) and
+//! on Edison (5b), swept over problem sizes.
+//!
+//! Cell = (size, platform, rep); one figure per problem size, one row
+//! per platform, DOF/s on the y-axis (higher is better) — bit-identical
+//! to the pre-scenario coordinator.
+
+use anyhow::Result;
+
+use crate::bench::{Figure, RowSet};
+use crate::config::{ExperimentConfig, MatrixPoint};
+use crate::platform::Platform;
+use crate::workload::{run_hpgmg, HpgmgConfig};
+
+use super::{Cell, CellResult, Scenario, SimContext};
+
+/// The Fig 5 scenario pair: `workstation == true` is 5a, else 5b.
+pub struct Fig5 {
+    /// 16-core workstation (5a) vs Edison at 192 cores (5b).
+    pub workstation: bool,
+}
+
+/// One HPGMG cell.
+#[derive(Debug, Clone, Copy)]
+struct HpgmgCell {
+    workstation: bool,
+    ranks: usize,
+    point: MatrixPoint,
+}
+
+impl Fig5 {
+    fn platforms(&self) -> Vec<Platform> {
+        if self.workstation {
+            vec![Platform::Docker, Platform::Rkt, Platform::Native]
+        } else {
+            vec![Platform::Native, Platform::ShifterSystemMpi]
+        }
+    }
+}
+
+impl Scenario for Fig5 {
+    fn name(&self) -> &'static str {
+        if self.workstation {
+            "fig5a"
+        } else {
+            "fig5b"
+        }
+    }
+
+    fn describe(&self) -> &'static str {
+        if self.workstation {
+            "Fig 5a (§4) — HPGMG-FE throughput on the 16-core workstation"
+        } else {
+            "Fig 5b (§4) — HPGMG-FE throughput on Edison at 192 cores"
+        }
+    }
+
+    fn cells(&self, cfg: &ExperimentConfig) -> Result<Vec<Cell>> {
+        anyhow::ensure!(
+            !cfg.ranks.is_empty(),
+            "{} needs a rank count in `ranks`",
+            self.name()
+        );
+        anyhow::ensure!(
+            !cfg.sizes.is_empty(),
+            "{} needs at least one problem-size index in `sizes`",
+            self.name()
+        );
+        let ranks = cfg.ranks[0];
+        Ok(cfg
+            .expand(&self.platforms(), &[], &cfg.sizes)
+            .into_iter()
+            .map(|point| {
+                Cell::new(
+                    format!(
+                        "{} size {} / {} / rep {}",
+                        self.name(),
+                        point.size,
+                        point.platform.label(),
+                        point.rep
+                    ),
+                    HpgmgCell {
+                        workstation: self.workstation,
+                        ranks,
+                        point,
+                    },
+                )
+            })
+            .collect())
+    }
+
+    fn run_cell(&self, ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult> {
+        let c: &HpgmgCell = cell.payload()?;
+        let mut exec = ctx.exec();
+        let mut hc = if c.workstation {
+            HpgmgConfig::workstation(c.point.size, c.point.seed)
+        } else {
+            HpgmgConfig::edison(c.point.size, c.point.seed)
+        };
+        hc.ranks = c.ranks;
+        hc.batched = ctx.cfg.batched;
+        let result = run_hpgmg(c.point.platform, &mut exec, &hc)?;
+        Ok(CellResult::value(result.dofs_per_second))
+    }
+
+    fn assemble(
+        &self,
+        ctx: &SimContext<'_>,
+        cells: &[Cell],
+        rows: Vec<CellResult>,
+    ) -> Result<Vec<Figure>> {
+        let mut sets: Vec<RowSet> = (0..ctx.cfg.sizes.len()).map(|_| RowSet::new()).collect();
+        for (cell, r) in cells.iter().zip(&rows) {
+            let c: &HpgmgCell = cell.payload()?;
+            sets[c.point.size_idx].add_sample(
+                c.point.platform_idx as u64,
+                c.point.platform.label(),
+                c.point.rep as u64,
+                r.primary(),
+            );
+        }
+        let which = if self.workstation {
+            "5a — 16-core workstation"
+        } else {
+            "5b — Edison, 192 cores"
+        };
+        let mut figures = Vec::new();
+        for (size_idx, set) in sets.into_iter().enumerate() {
+            let size = ctx.cfg.sizes[size_idx];
+            let dofs_per_rank = crate::fem::gmg::LADDER[size].pow(3);
+            let mut fig = Figure::new(
+                format!("Fig {which}: HPGMG-FE, {dofs_per_rank} DOF/rank"),
+                "DOF/s",
+                true,
+            );
+            for row in set.into_rows() {
+                fig.push(row);
+            }
+            figures.push(fig);
+        }
+        Ok(figures)
+    }
+}

@@ -1,0 +1,144 @@
+//! `mixed-fleet` as a scenario: co-scheduled C++ and Python tenants
+//! contending for the shared Lustre (the §4 discussion case the paper
+//! never measures; see [`crate::workload::mixed`]).
+//!
+//! Cell = (ranks, co-tenancy configuration, rep); one figure per rank
+//! count, one row per configuration, the C++ tenant's checkpoint-write
+//! time on the y-axis.  This scenario post-dates the pre-refactor
+//! coordinator, so its cells draw their seeds from the stable
+//! [`cell_seed`](super::cell_seed) hash rather than the historical
+//! `seed + rep` — keyed by `(ranks, rep)` and *shared across the three
+//! co-tenancy rows*, so the rows of one repetition run against
+//! identically-seeded filesystems and the containerised co-tenant's
+//! checkpoint is bit-identical to the solo row's.
+
+use anyhow::Result;
+
+use crate::bench::{Figure, RowSet};
+use crate::config::ExperimentConfig;
+use crate::platform::Platform;
+use crate::workload::mixed::{run_mixed_fleet, MixedConfig};
+
+use super::{Cell, CellResult, Scenario, SimContext};
+
+/// The co-scheduled-tenants scenario.
+pub struct MixedFleet;
+
+/// The co-tenancy configurations, in row order.
+const COMBOS: [(&str, Option<Platform>); 3] = [
+    ("C++ checkpoint, no co-tenant", None),
+    ("∥ python tenant (native, shared Lustre)", Some(Platform::Native)),
+    ("∥ python tenant (shifter, image-mounted)", Some(Platform::ShifterSystemMpi)),
+];
+
+/// One mixed-fleet cell.
+#[derive(Debug, Clone, Copy)]
+struct MixedCell {
+    ranks_idx: usize,
+    ranks: usize,
+    combo: usize,
+    rep: usize,
+    /// Combo-independent stream seed: the three co-tenancy rows of one
+    /// `(ranks, rep)` point share it, so the solo baseline and the
+    /// containerised co-tenant run the identical op sequence on
+    /// identically-seeded filesystems (the bit-identity the figure
+    /// note claims).
+    seed: u64,
+}
+
+impl Scenario for MixedFleet {
+    fn name(&self) -> &'static str {
+        "mixed-fleet"
+    }
+
+    fn describe(&self) -> &'static str {
+        "co-scheduled C++ checkpoint writer and Python import storm contending \
+         for the shared Lustre MDS (§4 discussion, unmeasured in the paper); \
+         containerising the Python tenant returns the writer to solo time"
+    }
+
+    fn cells(&self, cfg: &ExperimentConfig) -> Result<Vec<Cell>> {
+        anyhow::ensure!(
+            !cfg.ranks.is_empty(),
+            "mixed-fleet needs at least one rank count in `ranks`"
+        );
+        let mut cells = Vec::new();
+        for (ranks_idx, &ranks) in cfg.ranks.iter().enumerate() {
+            for (combo, (label, _)) in COMBOS.iter().enumerate() {
+                for rep in 0..cfg.reps {
+                    // seed keyed by (ranks, rep) only — NOT the cell
+                    // index — so the three co-tenancy rows of one
+                    // repetition are run-for-run comparable
+                    let stream = ranks_idx * cfg.reps + rep;
+                    let seed = super::cell_seed(cfg.seed, "mixed-fleet", stream);
+                    cells.push(Cell::new(
+                        format!("mixed-fleet {ranks} ranks / {label} / rep {rep}"),
+                        MixedCell {
+                            ranks_idx,
+                            ranks,
+                            combo,
+                            rep,
+                            seed,
+                        },
+                    ));
+                }
+            }
+        }
+        Ok(cells)
+    }
+
+    fn run_cell(&self, _ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult> {
+        let c: &MixedCell = cell.payload()?;
+        let (_, python) = COMBOS[c.combo];
+        let mixed = MixedConfig::new(c.ranks, c.seed, python);
+        let r = run_mixed_fleet(&mixed)?;
+        Ok(CellResult::value(r.cpp_io).with_breakdown(vec![
+            ("io solo [s]".into(), r.cpp_io_solo),
+            ("python import [s]".into(), r.import_wall),
+            ("slowdown ×".into(), r.slowdown()),
+            ("mds rpcs".into(), r.mds_served as f64),
+        ]))
+    }
+
+    fn assemble(
+        &self,
+        ctx: &SimContext<'_>,
+        cells: &[Cell],
+        rows: Vec<CellResult>,
+    ) -> Result<Vec<Figure>> {
+        let mut sets: Vec<RowSet> = (0..ctx.cfg.ranks.len()).map(|_| RowSet::new()).collect();
+        for (cell, r) in cells.iter().zip(&rows) {
+            let c: &MixedCell = cell.payload()?;
+            let set = &mut sets[c.ranks_idx];
+            set.add_sample(c.combo as u64, COMBOS[c.combo].0, c.rep as u64, r.primary());
+            if c.rep == 0 {
+                set.set_breakdown(c.combo as u64, r.breakdown.clone());
+            }
+        }
+        let mut figures = Vec::new();
+        for (ranks_idx, set) in sets.into_iter().enumerate() {
+            let ranks = ctx.cfg.ranks[ranks_idx];
+            let mut fig = Figure::new(
+                format!("Mixed fleet — co-tenant interference, {ranks}+{ranks} ranks on Edison"),
+                "checkpoint write time [s]",
+                false,
+            );
+            let rows = set.into_rows();
+            let slowdown = match (rows.first(), rows.get(1)) {
+                (Some(solo), Some(native)) if solo.stats.mean() > 0.0 => {
+                    native.stats.mean() / solo.stats.mean()
+                }
+                _ => 1.0,
+            };
+            for row in rows {
+                fig.push(row);
+            }
+            fig.note(format!(
+                "native python co-tenant slows the checkpoint {slowdown:.1}× via shared-MDS \
+                 backlog; the image-mounted co-tenant leaves it bit-identical to solo"
+            ));
+            figures.push(fig);
+        }
+        Ok(figures)
+    }
+}

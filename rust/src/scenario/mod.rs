@@ -1,0 +1,362 @@
+//! The pluggable scenario engine.
+//!
+//! A [`Scenario`] is one entry of the evaluation matrix: it expands an
+//! [`ExperimentConfig`] into independent [`Cell`]s (the unit of
+//! execution — one platform × ranks × size × rep point), runs a single
+//! cell in isolation, and assembles the per-cell results back into
+//! paper-style [`Figure`]s.  The split is what makes the matrix
+//! parallelisable: cells share nothing, so the
+//! [`MatrixRunner`](runner::MatrixRunner) can execute them across
+//! worker threads and still produce bit-identical figures — assembly is
+//! keyed on cell ids, never on completion order.
+//!
+//! All of the paper's figures (`fig1-scale`, `fig2`, `fig3`, `fig4`,
+//! `fig5a`, `fig5b`) live here as scenario modules, next to scenarios
+//! the paper discusses but never measures (`mixed-fleet`).  Adding a
+//! new experiment is a [`ScenarioRegistry::register`] call away — the
+//! walkthrough lives in `docs/ARCHITECTURE.md` §5.
+
+pub mod fig1_scale;
+pub mod fig2;
+pub mod fig34;
+pub mod fig5;
+pub mod mixed_fleet;
+pub mod runner;
+
+pub use runner::MatrixRunner;
+
+use std::any::Any;
+
+use anyhow::Result;
+
+use crate::bench::Figure;
+use crate::config::ExperimentConfig;
+use crate::fem::exec::Exec;
+use crate::runtime::CalibrationTable;
+
+/// Stable identity of one cell: which scenario expanded it and its
+/// index in that expansion.  The identity — not the execution order —
+/// is what seeds the cell's RNG streams and keys row assembly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CellId {
+    /// Name of the scenario that expanded the cell.
+    pub scenario: &'static str,
+    /// Position in the scenario's cell expansion.
+    pub index: usize,
+}
+
+impl CellId {
+    /// Derive the cell's deterministic RNG seed from the experiment's
+    /// base seed: FNV-1a over the scenario name and the little-endian
+    /// cell index, folded with `base`.  Stable across runs, platforms,
+    /// and `--jobs` settings; pinned by `tests/scenario_matrix.rs`.
+    ///
+    /// The five migrated paper figures keep their historical per-rep
+    /// seeds (`cfg.seed + rep`, recorded in each cell's payload at
+    /// expansion time) so their output stays bit-identical to the
+    /// pre-refactor coordinator; new scenarios should draw from this
+    /// hash instead — independent streams that cannot collide across
+    /// scenarios or cells.
+    pub fn seed(&self, base: u64) -> u64 {
+        cell_seed(base, self.scenario, self.index)
+    }
+}
+
+/// The FNV-1a `(scenario, cell-index)` seed derivation behind
+/// [`CellId::seed`], usable before a [`Cell`] exists: the hash of the
+/// scenario name and the little-endian index, folded with `base`.
+pub fn cell_seed(base: u64, scenario: &str, index: usize) -> u64 {
+    crate::util::rng::fnv1a(scenario.bytes().chain((index as u64).to_le_bytes())) ^ base
+}
+
+/// One independent point of a scenario's evaluation matrix.
+///
+/// The payload is scenario-private (each scenario downcasts its own
+/// type back out in `run_cell`), so new scenarios plug in without
+/// touching any shared enum.
+pub struct Cell {
+    /// Identity within the expansion (assigned by the runner).
+    pub id: CellId,
+    /// Human-readable cell description (diagnostics, error messages).
+    pub label: String,
+    payload: Box<dyn Any + Send + Sync>,
+}
+
+impl std::fmt::Debug for Cell {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Cell")
+            .field("id", &self.id)
+            .field("label", &self.label)
+            .finish_non_exhaustive()
+    }
+}
+
+impl Cell {
+    /// A cell carrying a scenario-private `payload`.  The id is filled
+    /// in by the runner when the expansion is enumerated.
+    pub fn new<T: Any + Send + Sync>(label: impl Into<String>, payload: T) -> Self {
+        Cell {
+            id: CellId {
+                scenario: "",
+                index: 0,
+            },
+            label: label.into(),
+            payload: Box::new(payload),
+        }
+    }
+
+    /// Borrow the payload back as `T` (the type the owning scenario
+    /// stored); errors if a foreign cell is handed to the wrong
+    /// scenario.
+    pub fn payload<T: Any>(&self) -> Result<&T> {
+        self.payload.downcast_ref::<T>().ok_or_else(|| {
+            anyhow::anyhow!(
+                "cell `{}` carries a foreign payload (expected {})",
+                self.label,
+                std::any::type_name::<T>()
+            )
+        })
+    }
+}
+
+/// Everything a cell needs to execute: the experiment config and the
+/// calibration table driving modeled execution.  Shared read-only
+/// across runner workers.
+#[derive(Debug, Clone, Copy)]
+pub struct SimContext<'a> {
+    /// The experiment configuration being expanded.
+    pub cfg: &'a ExperimentConfig,
+    /// Calibration table for modeled execution costs.
+    pub table: &'a CalibrationTable,
+}
+
+impl<'a> SimContext<'a> {
+    /// A fresh modeled executor over the context's calibration table
+    /// (one per cell — `Exec::Modeled` is stateless, so per-cell
+    /// construction is free and keeps cells independent).
+    pub fn exec(&self) -> Exec<'a> {
+        Exec::Modeled { table: self.table }
+    }
+}
+
+/// One cell's measured output, keyed by cell id for assembly.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    /// Index of the cell that produced this result (assigned by the
+    /// runner; assembly keys on this, never on completion order).
+    pub cell: usize,
+    /// Measured values; the meaning and count are scenario-specific
+    /// (one run time, a cold/warm makespan pair, ...).
+    pub values: Vec<f64>,
+    /// Labelled secondary numbers (phase breakdowns, byte counts).
+    pub breakdown: Vec<(String, f64)>,
+}
+
+impl CellResult {
+    /// A single-value result.
+    pub fn value(v: f64) -> Self {
+        Self::values(vec![v])
+    }
+
+    /// A multi-value result.
+    pub fn values(values: Vec<f64>) -> Self {
+        CellResult {
+            cell: 0,
+            values,
+            breakdown: Vec::new(),
+        }
+    }
+
+    /// Attach a labelled breakdown.
+    pub fn with_breakdown(mut self, breakdown: Vec<(String, f64)>) -> Self {
+        self.breakdown = breakdown;
+        self
+    }
+
+    /// The first (usually only) measured value.
+    pub fn primary(&self) -> f64 {
+        self.values.first().copied().unwrap_or(f64::NAN)
+    }
+}
+
+/// One experiment family: a named expansion of the evaluation matrix.
+///
+/// Implementations must be stateless (`&self` everywhere) and `Sync` —
+/// `run_cell` is called concurrently from runner workers.  Every
+/// mutable thing a cell needs (RNG streams, filesystems, communicators)
+/// is constructed inside `run_cell` from the context and the cell's
+/// payload, which is what makes the matrix embarrassingly parallel and
+/// the output independent of `--jobs`.
+pub trait Scenario: Sync {
+    /// Registry key and CLI name (`harbor bench <name>`).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `harbor bench --list` and the docs.
+    fn describe(&self) -> &'static str;
+
+    /// The scenario's default configuration (the paper's setup).
+    fn default_config(&self) -> Result<ExperimentConfig> {
+        ExperimentConfig::paper_default(self.name())
+    }
+
+    /// Expand `cfg` into independent cells, in deterministic order.
+    /// Configuration validation belongs here — a bad config should fail
+    /// before any cell runs.
+    fn cells(&self, cfg: &ExperimentConfig) -> Result<Vec<Cell>>;
+
+    /// Run one cell in isolation.  Must not depend on any other cell
+    /// having run (no shared mutable state, no ordering assumptions).
+    fn run_cell(&self, ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult>;
+
+    /// Assemble per-cell results into rendered figures.  `cells` is the
+    /// exact expansion the runner executed and `rows` its results, both
+    /// in cell-id order (`cells[i]` produced `rows[i]`) — zip them to
+    /// recover each result's coordinates; never re-expand.
+    fn assemble(
+        &self,
+        ctx: &SimContext<'_>,
+        cells: &[Cell],
+        rows: Vec<CellResult>,
+    ) -> Result<Vec<Figure>>;
+}
+
+/// The scenario catalogue: name → implementation, in registration
+/// order.  The coordinator resolves `ExperimentConfig::figure` through
+/// this, so the set of runnable experiments — and the names listed in
+/// the "unknown figure" error — can never go stale.
+pub struct ScenarioRegistry {
+    entries: Vec<Box<dyn Scenario + Send + Sync>>,
+}
+
+impl ScenarioRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        ScenarioRegistry {
+            entries: Vec::new(),
+        }
+    }
+
+    /// Every built-in scenario: the paper's five figures plus the
+    /// scenarios the paper discusses but never measures.
+    pub fn builtin() -> Self {
+        let mut r = Self::new();
+        r.register(Box::new(fig1_scale::Fig1Scale));
+        r.register(Box::new(fig2::Fig2));
+        r.register(Box::new(fig34::Fig3));
+        r.register(Box::new(fig34::Fig4));
+        r.register(Box::new(fig5::Fig5 { workstation: true }));
+        r.register(Box::new(fig5::Fig5 { workstation: false }));
+        r.register(Box::new(mixed_fleet::MixedFleet));
+        r
+    }
+
+    /// Add a scenario.  Panics on a duplicate name — two scenarios
+    /// answering to one CLI name is a programming error.
+    pub fn register(&mut self, scenario: Box<dyn Scenario + Send + Sync>) {
+        assert!(
+            self.get(scenario.name()).is_none(),
+            "scenario `{}` registered twice",
+            scenario.name()
+        );
+        self.entries.push(scenario);
+    }
+
+    /// Look a scenario up by name.
+    pub fn get(&self, name: &str) -> Option<&dyn Scenario> {
+        self.entries
+            .iter()
+            .find(|s| s.name() == name)
+            .map(|s| s.as_ref() as &dyn Scenario)
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|s| s.name()).collect()
+    }
+
+    /// `(name, description)` rows for `harbor bench --list` and the
+    /// EXPERIMENTS.md figure index.
+    pub fn table(&self) -> Vec<(&'static str, &'static str)> {
+        self.entries.iter().map(|s| (s.name(), s.describe())).collect()
+    }
+
+    /// Iterate the registered scenarios in registration order.
+    pub fn iter(&self) -> impl Iterator<Item = &dyn Scenario> {
+        self.entries.iter().map(|s| s.as_ref() as &dyn Scenario)
+    }
+
+    /// Number of registered scenarios.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the registry is empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl Default for ScenarioRegistry {
+    fn default() -> Self {
+        Self::builtin()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_registry_has_all_figures_and_mixed_fleet() {
+        let r = ScenarioRegistry::builtin();
+        assert_eq!(
+            r.names(),
+            vec!["fig1-scale", "fig2", "fig3", "fig4", "fig5a", "fig5b", "mixed-fleet"]
+        );
+        assert!(r.get("fig2").is_some());
+        assert!(r.get("fig9").is_none());
+        assert_eq!(r.len(), 7);
+        assert!(!r.is_empty());
+    }
+
+    #[test]
+    fn every_builtin_has_a_default_config_and_description() {
+        for s in ScenarioRegistry::builtin().iter() {
+            let cfg = s.default_config().expect("default config");
+            assert_eq!(cfg.figure, s.name());
+            assert!(!s.describe().is_empty());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "registered twice")]
+    fn duplicate_registration_panics() {
+        let mut r = ScenarioRegistry::builtin();
+        r.register(Box::new(fig2::Fig2));
+    }
+
+    #[test]
+    fn cell_payload_round_trips_and_rejects_foreign_types() {
+        let cell = Cell::new("c", 42usize);
+        assert_eq!(*cell.payload::<usize>().unwrap(), 42);
+        assert!(cell.payload::<String>().is_err());
+    }
+
+    #[test]
+    fn cell_seed_differs_by_scenario_and_index() {
+        let a = cell_seed(42, "fig2", 0);
+        let b = cell_seed(42, "fig2", 1);
+        let c = cell_seed(42, "fig3", 0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        // base folds in last, so the same cell under different base
+        // seeds differs too
+        assert_ne!(a, cell_seed(43, "fig2", 0));
+        // and CellId::seed agrees with the free function
+        let id = CellId {
+            scenario: "fig2",
+            index: 1,
+        };
+        assert_eq!(id.seed(42), b);
+    }
+}

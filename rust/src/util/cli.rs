@@ -21,7 +21,7 @@ pub struct Args {
     command: &'static str,
     about: &'static str,
     flags: Vec<FlagSpec>,
-    positional: Vec<(&'static str, &'static str)>,
+    positional: Vec<(&'static str, &'static str, bool)>,
 }
 
 /// Parsed results.
@@ -80,23 +80,38 @@ impl Args {
 
     /// Required positional argument.
     pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
-        self.positional.push((name, help));
+        self.positional.push((name, help, true));
+        self
+    }
+
+    /// Optional positional argument (must come after all required
+    /// ones; rendered as `[name]` in the usage text).
+    pub fn positional_opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional.push((name, help, false));
         self
     }
 
     /// The generated `--help` text.
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\nUSAGE:\n  harbor {}", self.command, self.about, self.command);
-        for (p, _) in &self.positional {
-            s.push_str(&format!(" <{p}>"));
+        for (p, _, required) in &self.positional {
+            if *required {
+                s.push_str(&format!(" <{p}>"));
+            } else {
+                s.push_str(&format!(" [{p}]"));
+            }
         }
         if !self.flags.is_empty() {
             s.push_str(" [OPTIONS]");
         }
         if !self.positional.is_empty() {
             s.push_str("\n\nARGS:\n");
-            for (p, h) in &self.positional {
-                s.push_str(&format!("  <{p}>  {h}\n"));
+            for (p, h, required) in &self.positional {
+                if *required {
+                    s.push_str(&format!("  <{p}>  {h}\n"));
+                } else {
+                    s.push_str(&format!("  [{p}]  {h}\n"));
+                }
             }
         }
         s.push_str("\n\nOPTIONS:\n");
@@ -164,7 +179,8 @@ impl Args {
             }
             i += 1;
         }
-        if positional.len() < self.positional.len() {
+        let required = self.positional.iter().filter(|(_, _, r)| *r).count();
+        if positional.len() < required {
             return Err(UsageError(format!(
                 "missing required argument <{}>\n\n{}",
                 self.positional[positional.len()].0,
@@ -200,6 +216,11 @@ impl Parsed {
     /// The `idx`-th positional argument.
     pub fn pos(&self, idx: usize) -> &str {
         &self.positional[idx]
+    }
+
+    /// The `idx`-th positional argument, if given (optional positionals).
+    pub fn pos_opt(&self, idx: usize) -> Option<&str> {
+        self.positional.get(idx).map(|s| s.as_str())
     }
 
     /// Parse the value of `--name` into `T`.
@@ -270,6 +291,19 @@ mod tests {
     fn bad_number_is_an_error() {
         let p = args().parse(&raw(&["fig2", "--reps", "many"])).unwrap();
         assert!(p.parse_num::<usize>("reps").is_err());
+    }
+
+    #[test]
+    fn optional_positional_may_be_absent() {
+        let spec = Args::new("bench", "run a figure benchmark")
+            .switch("list", "list scenarios")
+            .positional_opt("figure", "which figure");
+        let without = spec.parse(&raw(&["--list"])).unwrap();
+        assert!(without.flag("list"));
+        assert_eq!(without.pos_opt(0), None);
+        let with = spec.parse(&raw(&["fig2"])).unwrap();
+        assert_eq!(with.pos_opt(0), Some("fig2"));
+        assert!(spec.usage().contains("[figure]"));
     }
 
     #[test]

@@ -4,6 +4,19 @@
 //! Vigna 2018).  Seeded through SplitMix64 so even adjacent integer
 //! seeds give uncorrelated streams.
 
+/// FNV-1a 64-bit fold over `bytes`, from the standard offset basis —
+/// the crate's one definition of the hash (stream-label folding in
+/// [`SimRng`](crate::des::SimRng), `(scenario, cell)` seed derivation
+/// in [`cell_seed`](crate::scenario::cell_seed)).
+pub fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 /// xoshiro256** PRNG.
 #[derive(Debug, Clone)]
 pub struct Xoshiro256 {

@@ -1,0 +1,263 @@
+//! Co-scheduled tenants on the shared parallel filesystem — the §4
+//! discussion case the paper raises but never measures.
+//!
+//! Two jobs run side by side on Edison:
+//!
+//! * **the Python tenant** — `import fenics` on every rank, the Fig 4
+//!   metadata storm.  Natively its lookups hammer the shared Lustre
+//!   MDS; containerised (Shifter) they hit the node-local image mount
+//!   and the shared MDS never sees them.
+//! * **the C++ tenant** — a solver that computes for a fixed span and
+//!   then checkpoints: one open + write per rank through the *same*
+//!   Lustre.  Its checkpoint opens queue at the same
+//!   [`FifoResource`](crate::des::FifoResource) MDS handlers the
+//!   Python tenant is saturating.
+//!
+//! The measurement is the C++ tenant's checkpoint-write time: solo,
+//! next to a native Python tenant, and next to a containerised one.
+//! Containerising the *co-tenant* returns the writer to solo time —
+//! bit-identical, because the image-mounted import never touches the
+//! shared filesystem (the per-node squashfs fetch is charged to the
+//! image's backing store, not the scratch OSTs — the one
+//! simplification, noted where it is made).
+
+use anyhow::Result;
+
+use crate::cluster::{launch, Allocation, MachineSpec};
+use crate::des::{Duration, VirtualTime};
+use crate::fs::{FileSystem, ImageFs, ParallelFs};
+use crate::platform::Platform;
+use crate::pyimport::{module_burst, replay_batched, ModuleGraph};
+
+/// Configuration of one co-scheduling experiment.
+#[derive(Debug, Clone)]
+pub struct MixedConfig {
+    /// MPI ranks per tenant (both jobs are sized equally).
+    pub ranks: usize,
+    /// Simulation seed (drives the shared filesystem's noise streams).
+    pub seed: u64,
+    /// The co-scheduled Python tenant's platform; `None` runs the C++
+    /// tenant alone (the interference baseline).
+    pub python: Option<Platform>,
+    /// C++ tenant compute span before its checkpoint write.
+    pub compute: Duration,
+    /// Checkpoint bytes per C++ rank.
+    pub chunk_bytes: u64,
+}
+
+impl MixedConfig {
+    /// The standard cell: 2 s of compute, ~1 MB checkpoint per rank.
+    pub fn new(ranks: usize, seed: u64, python: Option<Platform>) -> Self {
+        MixedConfig {
+            ranks,
+            seed,
+            python,
+            compute: Duration::from_secs_f64(2.0),
+            chunk_bytes: 32 * 32 * 32 * 4 * 8,
+        }
+    }
+}
+
+/// Outcome of one co-scheduling run (all spans in virtual seconds).
+#[derive(Debug, Clone)]
+pub struct MixedReport {
+    /// The C++ tenant's checkpoint-write span, co-scheduled.
+    pub cpp_io: f64,
+    /// The same write with no co-tenant (identical filesystem seed).
+    pub cpp_io_solo: f64,
+    /// The C++ tenant's total run (compute + checkpoint).
+    pub cpp_total: f64,
+    /// The Python tenant's import wall time (0 when absent).
+    pub import_wall: f64,
+    /// Metadata RPCs the shared MDS served.
+    pub mds_served: u64,
+}
+
+impl MixedReport {
+    /// Checkpoint slowdown relative to solo (1.0 = unperturbed).
+    pub fn slowdown(&self) -> f64 {
+        if self.cpp_io_solo > 0.0 {
+            self.cpp_io / self.cpp_io_solo
+        } else {
+            1.0
+        }
+    }
+}
+
+/// The C++ tenant's checkpoint: one open + write per rank, all arriving
+/// together at `at` (the bulk-synchronous solver finishes its compute
+/// phase everywhere at once).  Returns the last rank's completion.
+fn checkpoint(
+    fs: &mut dyn FileSystem,
+    alloc: &Allocation,
+    at: VirtualTime,
+    chunk: u64,
+) -> VirtualTime {
+    let mut done = at;
+    for &node in &alloc.node_of {
+        done = done.max(fs.open_write(at, node, chunk));
+    }
+    done
+}
+
+/// The Python tenant's node-batched import replay with the C++
+/// tenant's checkpoint injected once every node's import frontier has
+/// passed `t_io`.  The interleave is approximate at burst granularity:
+/// [`FifoResource`](crate::des::FifoResource) is FIFO by *submission*
+/// (arrival only lower-bounds the start), so bursts a faster node
+/// already submitted with arrivals just past `t_io` stay queued ahead
+/// of the checkpoint — an overstatement of interference bounded by the
+/// inter-node clock skew, which is small because every node runs the
+/// same module list with the same rank count.  (If the import drains
+/// before `t_io`, the checkpoint meets an idle MDS; only the noise
+/// stream, already advanced by the storm, still differs from solo.)
+fn co_replay(
+    graph: &ModuleGraph,
+    alloc_py: &Allocation,
+    alloc_cpp: &Allocation,
+    fs: &mut ParallelFs,
+    t_io: VirtualTime,
+    chunk: u64,
+) -> (VirtualTime, VirtualTime) {
+    let nodes = alloc_py.nodes_used;
+    let mut count = vec![0u32; nodes];
+    for &n in &alloc_py.node_of {
+        count[n] += 1;
+    }
+    let mut node_clock = vec![VirtualTime::ZERO; nodes];
+    let mut io_done: Option<VirtualTime> = None;
+    for module in &graph.modules {
+        if io_done.is_none() {
+            let frontier = node_clock.iter().copied().min().unwrap_or(VirtualTime::ZERO);
+            if frontier >= t_io {
+                io_done = Some(checkpoint(fs, alloc_cpp, t_io, chunk));
+            }
+        }
+        for (node, clock) in node_clock.iter_mut().enumerate() {
+            *clock = module_burst(fs, node, count[node], module, *clock);
+        }
+    }
+    let io_done =
+        io_done.unwrap_or_else(|| checkpoint(fs, alloc_cpp, t_io, chunk));
+    let import_done = node_clock.iter().copied().max().unwrap_or(VirtualTime::ZERO);
+    (import_done, io_done)
+}
+
+/// Run one co-scheduling cell.  Deterministic for a fixed config: the
+/// shared and solo filesystems are seeded identically, so with a
+/// containerised (or absent) Python tenant the co-scheduled checkpoint
+/// is *bit-identical* to solo.
+pub fn run_mixed_fleet(cfg: &MixedConfig) -> Result<MixedReport> {
+    let machine = MachineSpec::edison();
+    let alloc_cpp = launch(&machine, cfg.ranks)?;
+    let t_io = VirtualTime::ZERO + cfg.compute;
+
+    // solo baseline: the identical checkpoint against an identically
+    // seeded, otherwise idle Lustre
+    let mut solo_fs = ParallelFs::edison(cfg.seed);
+    let solo_done = checkpoint(&mut solo_fs, &alloc_cpp, t_io, cfg.chunk_bytes);
+    let cpp_io_solo = (solo_done - t_io).as_secs_f64();
+
+    let mut shared = ParallelFs::edison(cfg.seed);
+    let (import_wall, cpp_done) = match cfg.python {
+        None => (
+            Duration::ZERO,
+            checkpoint(&mut shared, &alloc_cpp, t_io, cfg.chunk_bytes),
+        ),
+        Some(platform) => {
+            let alloc_py = launch(&machine, cfg.ranks)?;
+            let graph = ModuleGraph::fenics_stack();
+            if platform.containerised() {
+                // image-mounted import: the metadata storm stays on the
+                // node-local mount; its backing store (the image blob
+                // fetch) is modelled separately from the scratch Lustre
+                let mut image_fs =
+                    ImageFs::new(1_200_000_000, ParallelFs::edison(cfg.seed.wrapping_add(1)));
+                let report =
+                    replay_batched(&graph, &alloc_py, &mut image_fs, VirtualTime::ZERO);
+                let done = checkpoint(&mut shared, &alloc_cpp, t_io, cfg.chunk_bytes);
+                (report.wall, done)
+            } else {
+                // native import: both tenants meet at the shared MDS
+                let (import_done, io_done) = co_replay(
+                    &graph,
+                    &alloc_py,
+                    &alloc_cpp,
+                    &mut shared,
+                    t_io,
+                    cfg.chunk_bytes,
+                );
+                (import_done - VirtualTime::ZERO, io_done)
+            }
+        }
+    };
+
+    Ok(MixedReport {
+        cpp_io: (cpp_done - t_io).as_secs_f64(),
+        cpp_io_solo,
+        cpp_total: cpp_done.as_secs_f64(),
+        import_wall: import_wall.as_secs_f64(),
+        mds_served: shared.mds_served(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_co_tenant_slows_the_checkpoint() {
+        let r = run_mixed_fleet(&MixedConfig::new(96, 1, Some(Platform::Native))).unwrap();
+        assert!(r.cpp_io > 0.0 && r.cpp_io_solo > 0.0);
+        assert!(
+            r.slowdown() > 1.5,
+            "native import storm should delay the co-tenant: {:.3}x",
+            r.slowdown()
+        );
+        assert!(r.import_wall > 0.0);
+    }
+
+    #[test]
+    fn containerised_co_tenant_is_bit_identical_to_solo() {
+        let co = run_mixed_fleet(&MixedConfig::new(48, 2, Some(Platform::ShifterSystemMpi)))
+            .unwrap();
+        assert_eq!(
+            co.cpp_io.to_bits(),
+            co.cpp_io_solo.to_bits(),
+            "image-mounted import must leave the shared Lustre untouched"
+        );
+        assert!(co.import_wall > 0.0);
+        let solo = run_mixed_fleet(&MixedConfig::new(48, 2, None)).unwrap();
+        assert_eq!(solo.cpp_io.to_bits(), solo.cpp_io_solo.to_bits());
+        assert_eq!(co.cpp_io.to_bits(), solo.cpp_io.to_bits());
+    }
+
+    #[test]
+    fn interference_grows_with_co_tenant_ranks() {
+        let small = run_mixed_fleet(&MixedConfig::new(24, 3, Some(Platform::Native))).unwrap();
+        let large = run_mixed_fleet(&MixedConfig::new(96, 3, Some(Platform::Native))).unwrap();
+        assert!(
+            large.cpp_io > small.cpp_io,
+            "more importing ranks, deeper MDS backlog: {} vs {}",
+            small.cpp_io,
+            large.cpp_io
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = MixedConfig::new(48, 7, Some(Platform::Native));
+        let a = run_mixed_fleet(&cfg).unwrap();
+        let b = run_mixed_fleet(&cfg).unwrap();
+        assert_eq!(a.cpp_io.to_bits(), b.cpp_io.to_bits());
+        assert_eq!(a.import_wall.to_bits(), b.import_wall.to_bits());
+        assert_eq!(a.mds_served, b.mds_served);
+    }
+
+    #[test]
+    fn mds_accounting_reflects_the_storm() {
+        let solo = run_mixed_fleet(&MixedConfig::new(24, 4, None)).unwrap();
+        let co = run_mixed_fleet(&MixedConfig::new(24, 4, Some(Platform::Native))).unwrap();
+        assert!(co.mds_served > 10 * solo.mds_served.max(1));
+    }
+}

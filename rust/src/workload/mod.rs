@@ -6,6 +6,8 @@
 //!   (assemble → refine → solve → IO, plus the Python import phase),
 //!   distributed over 24–192 ranks.
 //! * [`hpgmg`] — the HPGMG-FE throughput benchmark of Fig 5.
+//! * [`mixed`] — co-scheduled C++/Python tenants contending for the
+//!   shared Lustre (the `mixed-fleet` scenario).
 //! * [`ablate`] — sensitivity sweeps over the modelling choices behind
 //!   each figure (MDS pool, fallback NIC, smoothing depth, layering).
 //!
@@ -16,11 +18,13 @@
 pub mod ablate;
 pub mod fig2;
 pub mod hpgmg;
+pub mod mixed;
 pub mod poisson_app;
 
 pub use ablate::{Ablation, AblationRow};
 pub use fig2::{run_fig2, Fig2Test};
 pub use hpgmg::{run_hpgmg, HpgmgConfig, HpgmgResult};
+pub use mixed::{run_mixed_fleet, MixedConfig, MixedReport};
 pub use poisson_app::{run_poisson_app, AppConfig};
 
 use crate::cluster::{launch, MachineSpec};
