@@ -1,0 +1,161 @@
+//! Heap-vs-calendar event-queue comparison (the §Perf queue row).
+//!
+//! Drives the calendar `EventQueue` and the retained `HeapEventQueue`
+//! reference through the same deterministic workload — batch-fill with
+//! LCG-spaced timestamps, a *hold* phase (pop one, push one just past
+//! the moving horizon: the steady state of a DES), then a full drain —
+//! at 1e3 / 1e6 / 1e7 events, and records ns per event operation into
+//! `BENCH_micro.json` as `queue_{heap,cal}_{n}_ns_per_iter`, plus the
+//! large-size ratio `queue_speedup_1e7_x`.  CI fails if any of these
+//! stays null (or goes missing) after the bench step.
+
+mod common;
+
+use std::time::Instant;
+
+use harbor::des::{Duration, EventQueue, HeapEventQueue, VirtualTime};
+
+use common::record_bench;
+
+/// Deterministic 64-bit LCG (Knuth MMIX constants) so both queues see
+/// byte-identical workloads without pulling an RNG into the bench.
+struct Lcg(u64);
+
+impl Lcg {
+    fn draw(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 11
+    }
+}
+
+/// The two queues expose identical inherent APIs; this local trait lets
+/// one workload drive both.
+trait Queue {
+    fn push(&mut self, t: VirtualTime, v: u64);
+    fn push_batch(&mut self, batch: Vec<(VirtualTime, u64)>);
+    fn pop(&mut self) -> Option<(VirtualTime, u64)>;
+}
+
+impl Queue for EventQueue<u64> {
+    fn push(&mut self, t: VirtualTime, v: u64) {
+        EventQueue::push(self, t, v);
+    }
+    fn push_batch(&mut self, batch: Vec<(VirtualTime, u64)>) {
+        EventQueue::push_batch(self, batch);
+    }
+    fn pop(&mut self) -> Option<(VirtualTime, u64)> {
+        EventQueue::pop(self)
+    }
+}
+
+impl Queue for HeapEventQueue<u64> {
+    fn push(&mut self, t: VirtualTime, v: u64) {
+        HeapEventQueue::push(self, t, v);
+    }
+    fn push_batch(&mut self, batch: Vec<(VirtualTime, u64)>) {
+        HeapEventQueue::push_batch(self, batch);
+    }
+    fn pop(&mut self) -> Option<(VirtualTime, u64)> {
+        HeapEventQueue::pop(self)
+    }
+}
+
+/// Fill + hold + drain; returns the number of event operations.
+fn workload<Q: Queue>(q: &mut Q, n: u64, spacing: u64) -> u64 {
+    let mut rng = Lcg(0x5eed ^ n);
+    let mut ops = 0u64;
+    // fill in 64-event batches (the fan-out-wave shape)
+    let mut filled = 0u64;
+    while filled < n {
+        let k = 64.min(n - filled);
+        let batch: Vec<(VirtualTime, u64)> = (0..k)
+            .map(|i| {
+                let t = VirtualTime::ZERO + Duration::from_nanos(rng.draw() % (n * spacing));
+                (t, filled + i)
+            })
+            .collect();
+        q.push_batch(batch);
+        filled += k;
+        ops += k;
+    }
+    // hold: steady-state pop/push around the advancing horizon
+    for _ in 0..n {
+        let (t, v) = q.pop().expect("hold phase pops a full queue");
+        q.push(t + Duration::from_nanos(rng.draw() % spacing + 1), v);
+        ops += 2;
+    }
+    // drain, asserting the determinism contract on the way out
+    let mut last = VirtualTime::ZERO;
+    while let Some((t, _)) = q.pop() {
+        assert!(t >= last, "pop order regressed");
+        last = t;
+        ops += 1;
+    }
+    ops
+}
+
+/// Time `run_once` (repeating small workloads until ~0.2 s) and record
+/// ns per event operation under `<key>_ns_per_iter`.
+fn measure(
+    rec: &mut Vec<(String, f64)>,
+    key: &str,
+    label: &str,
+    mut run_once: impl FnMut() -> u64,
+) -> f64 {
+    let t0 = Instant::now();
+    let mut ops = run_once();
+    while t0.elapsed().as_secs_f64() < 0.2 && ops < 10_000_000 {
+        ops += run_once();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / ops as f64;
+    println!("  {label:44} {ns:>9.1} ns/op  ({ops} ops)");
+    rec.push((format!("{key}_ns_per_iter"), ns));
+    ns
+}
+
+fn main() {
+    let mut rec: Vec<(String, f64)> = Vec::new();
+    println!("== des_queue: calendar EventQueue vs HeapEventQueue reference ==");
+
+    let sizes: [(u64, &str); 3] = [(1_000, "1e3"), (1_000_000, "1e6"), (10_000_000, "1e7")];
+    let mut speedup_1e7 = 0.0f64;
+    for (n, tag) in sizes {
+        let heap_ns = measure(
+            &mut rec,
+            &format!("queue_heap_{tag}"),
+            &format!("heap  fill+hold+drain, {tag} events"),
+            || {
+                let mut q: HeapEventQueue<u64> = HeapEventQueue::with_capacity(n as usize);
+                workload(&mut q, n, 1_000)
+            },
+        );
+        let cal_ns = measure(
+            &mut rec,
+            &format!("queue_cal_{tag}"),
+            &format!("calendar fill+hold+drain, {tag} events"),
+            || {
+                let mut q: EventQueue<u64> = EventQueue::with_capacity(n as usize);
+                workload(&mut q, n, 1_000)
+            },
+        );
+        println!("    heap/calendar at {tag}: {:.2}x", heap_ns / cal_ns);
+        if n == 10_000_000 {
+            speedup_1e7 = heap_ns / cal_ns;
+        }
+    }
+    rec.push(("queue_speedup_1e7_x".into(), speedup_1e7));
+
+    // one geometry snapshot, so "how to read des::stats" (docs/DES.md)
+    // has a live example in every CI log
+    let mut q: EventQueue<u64> = EventQueue::new();
+    let mut rng = Lcg(7);
+    for i in 0..65_536u64 {
+        q.push(VirtualTime::ZERO + Duration::from_nanos(rng.draw() % 1_000_000_000), i);
+    }
+    println!("  calendar stats @64k events: {}", q.stats().render());
+
+    record_bench(&rec);
+}

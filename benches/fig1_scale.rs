@@ -47,9 +47,11 @@ fn main() {
             cold.intra_bytes as f64 / 1e6,
             warm.makespan,
         );
+        println!("           scheduler: {}", cold.queue.render());
         rec.push((format!("fig1_cold_{nodes}_virt_s"), cold.makespan.as_secs_f64()));
         rec.push((format!("fig1_warm_{nodes}_virt_s"), warm.makespan.as_secs_f64()));
         rec.push((format!("fig1_deploy_{nodes}_wall_s"), wall));
+        rec.push((format!("fig1_queue_hwm_{nodes}"), cold.queue.depth_hwm as f64));
     }
 
     println!("  worst warm/cold ratio: {worst_ratio:.5} (bar: < 0.10)");

@@ -43,6 +43,20 @@ fn main() {
             while q.pop().is_some() {}
         },
     );
+    time_rec(
+        &mut rec,
+        "event_queue_1k_batch",
+        "event queue push_batch+pop (1k events)",
+        || {
+            let mut q = EventQueue::with_capacity(1000);
+            q.push_batch(
+                (0..1000u64)
+                    .map(|i| (VirtualTime::ZERO + Duration::from_nanos(i % 97), i))
+                    .collect(),
+            );
+            while q.pop().is_some() {}
+        },
+    );
     time_rec(&mut rec, "fifo_1k", "fifo resource 1k submissions", || {
         let mut r = FifoResource::new(16);
         for i in 0..1000u64 {

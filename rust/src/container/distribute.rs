@@ -35,7 +35,7 @@
 //! [`FifoResource`]: crate::des::FifoResource
 //! [`PathCost::registry_wan`]: crate::net::PathCost::registry_wan
 
-use crate::des::{Duration, FifoResource, VirtualTime};
+use crate::des::{Duration, EventQueue, FifoResource, QueueStats, VirtualTime};
 use crate::net::{Fabric, PathCost};
 
 use super::cache::{CacheStats, LayerCache};
@@ -292,6 +292,10 @@ pub struct FleetReport {
     pub shard_utilisation: Vec<f64>,
     /// Containers created and started on the fleet after the pull.
     pub containers_started: usize,
+    /// Calendar-queue counters of the wave's transfer scheduler (one
+    /// ready event per node per transferred layer; a fully warm
+    /// re-deploy schedules none).  See `des::stats`.
+    pub queue: QueueStats,
 }
 
 impl FleetReport {
@@ -304,7 +308,8 @@ impl FleetReport {
     pub fn render(&self) -> String {
         format!(
             "deploy {} -> {} nodes: makespan {}, WAN {:.1} MB in {} transfer(s), \
-             intra-cluster {:.1} MB, cache hit rate {:.0}%, shard util {}",
+             intra-cluster {:.1} MB, cache hit rate {:.0}%, shard util {}, \
+             {} ready events (queue depth hwm {})",
             self.reference,
             self.nodes,
             self.makespan,
@@ -317,6 +322,8 @@ impl FleetReport {
                 .map(|u| format!("{:.0}%", u * 100.0))
                 .collect::<Vec<_>>()
                 .join("/"),
+            self.queue.pushes,
+            self.queue.depth_hwm,
         )
     }
 }
@@ -421,6 +428,12 @@ impl Fleet {
         let mut wan_transfers = 0usize;
         // instant each node has all its layers (before local checks)
         let mut node_ready = vec![t0; n];
+        // every transfer-completion instant is scheduled through one
+        // calendar queue (fan-out waves enter as batches) and drained
+        // in time order at the end of its layer, so the depth
+        // high-water mark in the report is the peak of concurrently
+        // in-flight completions, not a lifetime push count
+        let mut sched: EventQueue<usize> = EventQueue::with_capacity(n);
 
         for &id in &unique {
             let mut needers: Vec<usize> = Vec::new();
@@ -449,13 +462,15 @@ impl Fleet {
 
             match self.config.fan_out {
                 FanOut::Direct => {
+                    let mut arrivals = Vec::with_capacity(needers.len());
                     for &node in &needers {
                         let done = registry.submit_transfer(t0, id, blob.bytes);
                         wan_bytes += blob.bytes;
                         wan_transfers += 1;
-                        node_ready[node] = node_ready[node].max(done);
+                        arrivals.push((done, node));
                         self.caches[node].admit(blob.clone());
                     }
+                    sched.push_batch(arrivals);
                 }
                 FanOut::Peer { arity } => {
                     let holders = n - needers.len();
@@ -465,7 +480,7 @@ impl Fleet {
                         wan_bytes += blob.bytes;
                         wan_transfers += 1;
                         let seeder = needers[0];
-                        node_ready[seeder] = node_ready[seeder].max(done);
+                        sched.push(done, seeder);
                         self.caches[seeder].admit(blob.clone());
                         (done, 1usize, &needers[1..])
                     } else {
@@ -478,16 +493,25 @@ impl Fleet {
                     while served < rest.len() {
                         let wave = (have * arity).min(rest.len() - served);
                         t += hop;
+                        let mut arrivals = Vec::with_capacity(wave);
                         for &node in &rest[served..served + wave] {
-                            node_ready[node] = node_ready[node].max(t);
+                            arrivals.push((t, node));
                             self.caches[node].admit(blob.clone());
                         }
+                        sched.push_batch(arrivals);
                         served += wave;
                         have += wave;
                     }
                 }
             }
+
+            // drain this layer's completions in time order; a node's
+            // readiness is its last event across all layers
+            while let Some((ready, node)) = sched.pop() {
+                node_ready[node] = node_ready[node].max(ready);
+            }
         }
+        let queue = sched.stats();
 
         // local per-layer verify/mount, then create + start a container
         let check = self.config.per_layer_check * image.layers.len() as u64;
@@ -519,6 +543,7 @@ impl Fleet {
             cache: self.cache_totals().since(&stats_before),
             shard_utilisation,
             containers_started: n,
+            queue,
         })
     }
 }
@@ -727,6 +752,25 @@ mod tests {
         assert!(text.contains("32 nodes"));
         assert!(text.contains("WAN"));
         assert!(text.contains("hit rate"));
+        assert!(text.contains("ready events"));
+    }
+
+    #[test]
+    fn deploy_schedules_one_ready_event_per_node_per_layer() {
+        let (mut sharded, _, layers) = registry_with("a:1", "FROM ubuntu:16.04\nRUN echo x");
+        let n = 64;
+        let mut fleet = Fleet::new(FleetConfig::hpc(n));
+        let cold = fleet.deploy(&mut sharded, "a:1").unwrap();
+        assert_eq!(cold.queue.pushes, (n * layers) as u64);
+        assert_eq!(cold.queue.pops, cold.queue.pushes, "drained to empty");
+        assert_eq!(cold.queue.depth, 0);
+        // drained per layer: the high-water mark is one layer's worth
+        // of in-flight completions, not the lifetime push count
+        assert_eq!(cold.queue.depth_hwm, n);
+        // a fully warm wave schedules nothing at all
+        let warm = fleet.deploy(&mut sharded, "a:1").unwrap();
+        assert_eq!(warm.queue.pushes, 0);
+        assert_eq!(warm.queue.depth_hwm, 0);
     }
 
     #[test]

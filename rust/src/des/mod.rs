@@ -4,23 +4,31 @@
 //! **virtual time**: container start-up, metadata requests against the
 //! parallel filesystem, MPI messages, and the (really-executed) compute
 //! segments whose durations come from the PJRT calibration table.  This
-//! module provides the three primitives the rest of the crate builds on:
+//! module provides the primitives the rest of the crate builds on:
 //!
 //! * [`VirtualTime`] / [`Duration`] — nanosecond-resolution virtual clock
 //!   arithmetic (plain newtypes over `u64`/`i64`-free math, `Ord`, cheap).
-//! * [`EventQueue`] — a deterministic priority queue of timed events with
-//!   FIFO tie-breaking (two events at the same timestamp pop in push
-//!   order; simulations are bit-reproducible for a fixed seed).
+//! * [`EventQueue`] — a deterministic **calendar queue** of timed events
+//!   with FIFO tie-breaking (two events at the same timestamp pop in
+//!   push order; simulations are bit-reproducible for a fixed seed) and
+//!   O(1) amortised push/pop at paper scale.  `HeapEventQueue` is the
+//!   retained `BinaryHeap` reference implementation it is diff-tested
+//!   and benchmarked against (doc-hidden: diff-test/bench use only);
+//!   [`stats`] holds the scheduler's observability counters.  The
+//!   internals guide is docs/DES.md.
 //! * [`FifoResource`] — a `c`-server queueing station with deterministic
 //!   service times; models the Lustre metadata server, NICs under
-//!   contention, and the registry's upload slots.
+//!   contention, and the registry's upload slots.  Its servers are
+//!   tokens in an [`EventQueue`].
 
 mod queue;
 mod resource;
 mod rng;
+pub mod stats;
 mod time;
 
-pub use queue::EventQueue;
+pub use queue::{EventQueue, HeapEventQueue};
 pub use resource::FifoResource;
 pub use rng::SimRng;
+pub use stats::QueueStats;
 pub use time::{Duration, VirtualTime};

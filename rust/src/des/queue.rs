@@ -1,21 +1,103 @@
-//! Deterministic timed event queue.
+//! Deterministic timed event queue — a calendar queue.
 //!
-//! A `BinaryHeap` keyed on `(time, sequence)`: events scheduled for the
-//! same instant pop in the order they were pushed, so a simulation's
-//! event interleaving is a pure function of its inputs and seed.
+//! [`EventQueue`] is the shared hot path of every scenario: each
+//! simulated transfer completion, metadata RPC, and fan-out wave passes
+//! through it, and the paper-scale cells (98 304-rank halo exchanges,
+//! 16 384-node pull storms) push millions of events per figure.  The
+//! original `BinaryHeap` implementation paid an `O(log n)` sift per
+//! event; this one is a **calendar queue** (a bucketed timing wheel,
+//! Brown 1988): events hash into `buckets.len()` day-buckets of
+//! `width` nanoseconds each, so insert and extract are O(1) amortised
+//! while the queue stays within one calendar "year".  The bucket count
+//! and width resize automatically from the observed inter-event
+//! spacing, so dense phases (halo storms) and sparse phases (WAN
+//! transfers) both keep near-empty buckets.
+//!
+//! The determinism contract is unchanged and load-bearing: events pop
+//! in `(time, sequence)` order, where the sequence counter makes two
+//! events at the same instant pop in push order (FIFO tie-break).
+//! Simulations therefore remain a pure function of their inputs and
+//! seed — `tests/queue_equivalence.rs` diff-tests the pop stream
+//! against `HeapEventQueue`, the retained reference implementation
+//! (`#[doc(hidden)]`: it exists for the diff tests and
+//! `benches/des_queue.rs`, not for simulation code).
+//!
+//! Events themselves live out-of-line in an arena slab (`slots` +
+//! `free` list), so `T` needs no `Ord` and bucket entries are three
+//! words: `(time, sequence, slot)`.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use super::stats::QueueStats;
 use super::VirtualTime;
 
-/// A priority queue of `(VirtualTime, T)` events with FIFO tie-breaking.
+/// Scheduling key: `(time, sequence, slab slot)`.  The sequence makes
+/// keys unique and orders equal timestamps FIFO; the slot index is
+/// never compared (keys differ in the sequence first).
+type Key = (VirtualTime, u64, usize);
+
+/// Fewest buckets the calendar ever uses (a power of two).
+const MIN_BUCKETS: usize = 8;
+
+/// Events per bucket the geometry aims for after a rebuild.  A few
+/// events per day keeps the table (and its per-bucket allocations) 4×
+/// smaller than one-bucket-per-event at the 10⁷-event scale while the
+/// bucket heaps stay effectively O(1).
+const TARGET_LOAD: usize = 4;
+
+/// Load factor that triggers a growth rebuild.
+const GROW_LOAD: usize = 8;
+
+/// Bucket width (ns) before the first rebuild derives one from the
+/// actually observed event spacing.
+const INITIAL_WIDTH: u64 = 1 << 10;
+
+/// Full-cycle scans tolerated between rebuilds before the calendar
+/// re-derives its width: repeated empty years mean events are sparser
+/// than the current geometry assumes.
+const SPARSE_JUMP_LIMIT: u64 = 4;
+
+/// A calendar-queue scheduler of `(VirtualTime, T)` events with FIFO
+/// tie-breaking and O(1) amortised push/pop.
+///
+/// Drop-in for the previous heap-backed queue: `push`/`pop`/
+/// `peek_time`/`len`/`is_empty`/`with_capacity` keep their exact
+/// semantics.  New in the calendar era: [`push_batch`] (bulk insert
+/// that pre-sorts into buckets) and [`stats`] (scheduler
+/// observability, see [`crate::des::stats`]).
+///
+/// [`push_batch`]: Self::push_batch
+/// [`stats`]: Self::stats
+#[derive(Clone, Debug)]
 pub struct EventQueue<T> {
-    heap: BinaryHeap<Reverse<(VirtualTime, u64, usize)>>,
-    // Events are stored out-of-line so `T` needs no `Ord`.
+    /// `buckets[i]` holds every queued key whose day index
+    /// (`time / width`) is congruent to `i` modulo the bucket count.
+    /// Each bucket is heap-ordered so its minimum is O(1) to see even
+    /// when a workload piles ties into one bucket — the worst case
+    /// degrades to the old `O(log n)` heap, never to a linear scan.
+    buckets: Vec<BinaryHeap<Reverse<Key>>>,
+    /// Bucket width in nanoseconds of virtual time (>= 1).
+    width: u64,
+    /// Bucket the scan is currently parked on.
+    cursor: usize,
+    /// Exclusive upper time bound (ns) of the cursor bucket's current
+    /// day.  `u128`: scanning past late-u64 event times must not
+    /// overflow.
+    bucket_top: u128,
+    /// Queued event count (bucket sizes summed).
+    len: usize,
+    /// Next sequence number (total pushes so far).
+    seq: u64,
+    // Arena slab: events are stored out-of-line so `T` needs no `Ord`.
     slots: Vec<Option<T>>,
     free: Vec<usize>,
-    seq: u64,
+    // Observability counters, snapshotted by `stats()`.
+    depth_hwm: usize,
+    pops: u64,
+    resizes: u64,
+    sparse_jumps: u64,
+    jumps_since_rebuild: u64,
 }
 
 impl<T> Default for EventQueue<T> {
@@ -27,7 +109,309 @@ impl<T> Default for EventQueue<T> {
 impl<T> EventQueue<T> {
     /// An empty queue.
     pub fn new() -> Self {
+        Self::with_geometry(MIN_BUCKETS, 0)
+    }
+
+    /// A queue pre-sized for `cap` in-flight events: the event slab is
+    /// reserved and the calendar starts at its target load for `cap`
+    /// events, so a simulation that never exceeds `cap` pending events
+    /// performs no slab regrowth and at most the width-adaptation
+    /// rebuilds (regrowth churn showed up in the event-queue micro
+    /// bench; see EXPERIMENTS.md §Perf).
+    pub fn with_capacity(cap: usize) -> Self {
+        Self::with_geometry((cap / TARGET_LOAD).next_power_of_two().max(MIN_BUCKETS), cap)
+    }
+
+    fn with_geometry(buckets: usize, cap: usize) -> Self {
         EventQueue {
+            buckets: (0..buckets).map(|_| BinaryHeap::new()).collect(),
+            width: INITIAL_WIDTH,
+            cursor: 0,
+            bucket_top: u128::from(INITIAL_WIDTH),
+            len: 0,
+            seq: 0,
+            slots: Vec::with_capacity(cap),
+            free: Vec::with_capacity(cap),
+            depth_hwm: 0,
+            pops: 0,
+            resizes: 0,
+            sparse_jumps: 0,
+            jumps_since_rebuild: 0,
+        }
+    }
+
+    /// Events the slab can hold before reallocating.  (The bucket
+    /// table is not counted: it resizes as part of normal width
+    /// adaptation.)
+    pub fn capacity(&self) -> usize {
+        self.slots.capacity().min(self.free.capacity())
+    }
+
+    /// Bucket owning instant `t` under the current geometry.
+    fn bucket_of(&self, t: VirtualTime) -> usize {
+        ((t.0 / self.width) % self.buckets.len() as u64) as usize
+    }
+
+    /// Exclusive upper bound of the day containing instant `t`.
+    fn day_top(&self, t: VirtualTime) -> u128 {
+        (u128::from(t.0) / u128::from(self.width) + 1) * u128::from(self.width)
+    }
+
+    /// Schedule `event` at `time`.
+    pub fn push(&mut self, time: VirtualTime, event: T) {
+        self.insert(time, event);
+        if self.len > GROW_LOAD * self.buckets.len() {
+            self.rebuild();
+        }
+    }
+
+    /// Schedule a whole batch of events in one call.
+    ///
+    /// The batch is pre-sorted by timestamp into the buckets (a stable
+    /// sort, so events earlier in the batch keep FIFO priority among
+    /// equal timestamps) — ascending keys land at bucket-heap leaves
+    /// without sifting, and the geometry is re-derived at most once
+    /// for the whole batch instead of once per growth step.  This is
+    /// the entry point the batch-shaped consumers use: fan-out waves
+    /// in `container::Fleet::deploy` and the server-token reinserts in
+    /// [`FifoResource::submit_many`](super::FifoResource::submit_many).
+    ///
+    /// ```
+    /// use harbor::des::{Duration, EventQueue, VirtualTime};
+    ///
+    /// let t = |ms| VirtualTime::ZERO + Duration::from_millis(ms);
+    /// let mut q = EventQueue::new();
+    /// q.push_batch(vec![(t(30), "pull"), (t(10), "seed"), (t(10), "check")]);
+    /// // time order, FIFO among the two t=10 events:
+    /// assert_eq!(q.pop(), Some((t(10), "seed")));
+    /// assert_eq!(q.pop(), Some((t(10), "check")));
+    /// assert_eq!(q.pop(), Some((t(30), "pull")));
+    /// assert_eq!(q.pop(), None);
+    /// ```
+    pub fn push_batch(&mut self, mut batch: Vec<(VirtualTime, T)>) {
+        if batch.is_empty() {
+            return;
+        }
+        batch.sort_by_key(|e| e.0);
+        self.slots.reserve(batch.len());
+        for (time, event) in batch {
+            self.insert(time, event);
+        }
+        if self.len > GROW_LOAD * self.buckets.len() {
+            self.rebuild();
+        }
+    }
+
+    /// Insert without the growth check (`push`/`push_batch` apply it
+    /// once after their insertions).
+    fn insert(&mut self, time: VirtualTime, event: T) {
+        let slot = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = Some(event);
+                i
+            }
+            None => {
+                self.slots.push(Some(event));
+                self.slots.len() - 1
+            }
+        };
+        // Park the scan on the new event when it precedes everything
+        // queued (first event, or a push into the scanned-past past) —
+        // the pop scan must never stand ahead of the minimum.
+        let day_start = self.bucket_top - u128::from(self.width);
+        if self.len == 0 || u128::from(time.0) < day_start {
+            self.cursor = self.bucket_of(time);
+            self.bucket_top = self.day_top(time);
+        }
+        let bucket = self.bucket_of(time);
+        self.buckets[bucket].push(Reverse((time, self.seq, slot)));
+        self.seq += 1;
+        self.len += 1;
+        self.depth_hwm = self.depth_hwm.max(self.len);
+    }
+
+    /// Pop the earliest event (FIFO among equal timestamps).
+    pub fn pop(&mut self) -> Option<(VirtualTime, T)> {
+        if self.len == 0 {
+            return None;
+        }
+        let mut scanned = 0usize;
+        loop {
+            // Every instant inside the cursor's current day hashes to
+            // the cursor bucket, so a due bucket minimum is the global
+            // minimum (ties share a bucket: FIFO is exact).
+            if let Some(&Reverse((t, _, _))) = self.buckets[self.cursor].peek() {
+                if u128::from(t.0) < self.bucket_top {
+                    let Reverse((time, _, slot)) =
+                        self.buckets[self.cursor].pop().expect("peeked entry");
+                    self.len -= 1;
+                    self.pops += 1;
+                    let event = self.slots[slot].take().expect("event slot occupied");
+                    self.free.push(slot);
+                    return Some((time, event));
+                }
+            }
+            self.cursor = (self.cursor + 1) % self.buckets.len();
+            self.bucket_top += u128::from(self.width);
+            scanned += 1;
+            if scanned >= self.buckets.len() {
+                // A whole year of empty days: jump the scan straight
+                // to the earliest queued event instead of walking the
+                // gap day by day.
+                self.jump_to_min();
+                scanned = 0;
+            }
+        }
+    }
+
+    /// Minimum `(time, seq)` over the bucket heaps, with its bucket
+    /// index — O(buckets), the shared scan behind [`peek_time`] and
+    /// the sparse jump.
+    ///
+    /// [`peek_time`]: Self::peek_time
+    fn min_entry(&self) -> Option<(VirtualTime, u64, usize)> {
+        let mut best: Option<(VirtualTime, u64, usize)> = None;
+        for (i, bucket) in self.buckets.iter().enumerate() {
+            if let Some(&Reverse((t, s, _))) = bucket.peek() {
+                let better = match best {
+                    None => true,
+                    Some((bt, bs, _)) => (t, s) < (bt, bs),
+                };
+                if better {
+                    best = Some((t, s, i));
+                }
+            }
+        }
+        best
+    }
+
+    /// Move the scan directly onto the bucket and day of the earliest
+    /// queued event; after enough of these the geometry is rebuilt so
+    /// the calendar widens to the sparser spacing.
+    fn jump_to_min(&mut self) {
+        debug_assert!(self.len > 0, "jump on a non-empty queue only");
+        let (t, _, i) = self.min_entry().expect("non-empty queue has a minimum");
+        self.cursor = i;
+        self.bucket_top = self.day_top(t);
+        self.sparse_jumps += 1;
+        self.jumps_since_rebuild += 1;
+        if self.jumps_since_rebuild >= SPARSE_JUMP_LIMIT {
+            self.rebuild();
+        }
+    }
+
+    /// Re-derive the calendar geometry from the queued events:
+    /// [`TARGET_LOAD`] events per bucket, width such that one calendar
+    /// year spans the queued range — i.e. a day is ~`TARGET_LOAD`
+    /// mean inter-event spacings wide (all-ties spans degrade to a
+    /// single heap bucket, which is exactly right) — and the scan
+    /// parked on the minimum.
+    fn rebuild(&mut self) {
+        self.resizes += 1;
+        self.jumps_since_rebuild = 0;
+        let mut keys: Vec<Key> = Vec::with_capacity(self.len);
+        for bucket in &mut self.buckets {
+            keys.extend(bucket.drain().map(|Reverse(k)| k));
+        }
+        let n_buckets = (self.len / TARGET_LOAD).next_power_of_two().max(MIN_BUCKETS);
+        if self.buckets.len() != n_buckets {
+            self.buckets = (0..n_buckets).map(|_| BinaryHeap::new()).collect();
+        }
+        let (mut lo, mut hi) = (u64::MAX, 0u64);
+        for &(t, _, _) in &keys {
+            lo = lo.min(t.0);
+            hi = hi.max(t.0);
+        }
+        self.width = if keys.is_empty() || hi == lo {
+            INITIAL_WIDTH
+        } else {
+            ((hi - lo) / n_buckets as u64).max(1)
+        };
+        if keys.is_empty() {
+            self.cursor = 0;
+            self.bucket_top = u128::from(self.width);
+        } else {
+            let min = VirtualTime(lo);
+            self.cursor = self.bucket_of(min);
+            self.bucket_top = self.day_top(min);
+            for key in keys {
+                let bucket = self.bucket_of(key.0);
+                self.buckets[bucket].push(Reverse(key));
+            }
+        }
+    }
+
+    /// Timestamp of the next event without removing it.
+    ///
+    /// O(buckets): scans the bucket minima.  This is on a warm path —
+    /// [`FifoResource::next_free`](super::FifoResource::next_free)
+    /// rides it once per metadata submission — which stays cheap only
+    /// because a station's token queue (depth = server count ≤ a few
+    /// dozen) never grows past the minimum bucket table; keep that in
+    /// mind before making this scan heavier, and prefer `pop` over
+    /// polling for large simulation queues.
+    pub fn peek_time(&self) -> Option<VirtualTime> {
+        self.min_entry().map(|(t, _, _)| t)
+    }
+
+    /// Number of queued events.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether no events are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Snapshot of the scheduler's observability counters (see
+    /// [`crate::des::stats`] for how to read them).
+    pub fn stats(&self) -> QueueStats {
+        QueueStats {
+            depth: self.len,
+            depth_hwm: self.depth_hwm,
+            pushes: self.seq,
+            pops: self.pops,
+            buckets: self.buckets.len(),
+            occupied_buckets: self.buckets.iter().filter(|b| !b.is_empty()).count(),
+            bucket_width_ns: self.width,
+            resizes: self.resizes,
+            sparse_jumps: self.sparse_jumps,
+        }
+    }
+}
+
+/// The original `BinaryHeap`-backed event queue, retained as the
+/// reference implementation.
+///
+/// Same contract as [`EventQueue`] — pop in `(time, sequence)` order,
+/// FIFO among equal timestamps — with an `O(log n)` sift per event.
+/// It exists so the calendar queue stays honest: the property suite
+/// (`tests/queue_equivalence.rs`) diff-tests pop order against it on
+/// randomized workloads, and `benches/des_queue.rs` records the
+/// heap-vs-calendar ns/op comparison into `BENCH_micro.json`.  New
+/// simulation code should use [`EventQueue`] — this type is kept out
+/// of the documented API (`#[doc(hidden)]`) because benches and
+/// integration tests are external to the crate and `#[cfg(test)]`
+/// would not reach them.
+#[doc(hidden)]
+pub struct HeapEventQueue<T> {
+    heap: BinaryHeap<Reverse<Key>>,
+    slots: Vec<Option<T>>,
+    free: Vec<usize>,
+    seq: u64,
+}
+
+impl<T> Default for HeapEventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> HeapEventQueue<T> {
+    /// An empty queue.
+    pub fn new() -> Self {
+        HeapEventQueue {
             heap: BinaryHeap::new(),
             slots: Vec::new(),
             free: Vec::new(),
@@ -35,23 +419,14 @@ impl<T> EventQueue<T> {
         }
     }
 
-    /// A queue pre-sized for `cap` in-flight events: the heap and the
-    /// out-of-line slot store are reserved up front, so a long
-    /// simulation that never exceeds `cap` pending events performs no
-    /// mid-run regrowth (regrowth churn showed up in the event-queue
-    /// micro bench; see EXPERIMENTS.md §Perf).
+    /// A queue pre-sized for `cap` in-flight events.
     pub fn with_capacity(cap: usize) -> Self {
-        EventQueue {
+        HeapEventQueue {
             heap: BinaryHeap::with_capacity(cap),
             slots: Vec::with_capacity(cap),
             free: Vec::with_capacity(cap),
             seq: 0,
         }
-    }
-
-    /// Events the queue can hold before any of its stores reallocates.
-    pub fn capacity(&self) -> usize {
-        self.heap.capacity().min(self.slots.capacity()).min(self.free.capacity())
     }
 
     /// Schedule `event` at `time`.
@@ -68,6 +443,14 @@ impl<T> EventQueue<T> {
         };
         self.heap.push(Reverse((time, self.seq, slot)));
         self.seq += 1;
+    }
+
+    /// Schedule a batch (sequentially; the heap has no bucket layout
+    /// to exploit — that asymmetry is the point of the comparison).
+    pub fn push_batch(&mut self, batch: Vec<(VirtualTime, T)>) {
+        for (time, event) in batch {
+            self.push(time, event);
+        }
     }
 
     /// Pop the earliest event (FIFO among equal timestamps).
@@ -103,6 +486,10 @@ mod tests {
         VirtualTime::ZERO + Duration::from_millis(ms)
     }
 
+    fn tn(ns: u64) -> VirtualTime {
+        VirtualTime::ZERO + Duration::from_nanos(ns)
+    }
+
     #[test]
     fn pops_in_time_order() {
         let mut q = EventQueue::new();
@@ -121,6 +508,30 @@ mod tests {
         }
         let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
         assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_events_at_one_timestamp_pop_in_push_order() {
+        // degenerate calendar: a thousand events in one bucket-day,
+        // half pushed singly, half in batches — the bucket heap must
+        // keep exact FIFO order across both paths
+        let mut q = EventQueue::new();
+        let mut expect = Vec::new();
+        let mut next = 0u64;
+        while next < 1000 {
+            if next % 100 < 50 {
+                q.push(t(7), next);
+                expect.push(next);
+                next += 1;
+            } else {
+                let batch: Vec<_> = (next..next + 50).map(|i| (t(7), i)).collect();
+                expect.extend(next..next + 50);
+                q.push_batch(batch);
+                next += 50;
+            }
+        }
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, expect);
     }
 
     #[test]
@@ -146,7 +557,7 @@ mod tests {
     }
 
     #[test]
-    fn with_capacity_is_honoured_without_regrowth() {
+    fn with_capacity_is_honoured_without_slab_regrowth() {
         let mut q: EventQueue<u64> = EventQueue::with_capacity(1000);
         assert!(q.capacity() >= 1000);
         let cap_before = q.capacity();
@@ -160,9 +571,21 @@ mod tests {
         assert_eq!(
             q.capacity(),
             cap_before,
-            "staying within capacity must not regrow any store"
+            "staying within capacity must not regrow the event slab"
         );
         assert_eq!(EventQueue::<u8>::new().capacity(), 0);
+    }
+
+    #[test]
+    fn zero_capacity_construction_works() {
+        let mut q: EventQueue<u8> = EventQueue::with_capacity(0);
+        assert_eq!(q.capacity(), 0);
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.peek_time(), None);
+        q.push(t(5), 1);
+        assert_eq!(q.pop(), Some((t(5), 1)));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]
@@ -174,5 +597,120 @@ mod tests {
         q.push(t(1), 1);
         assert_eq!(q.pop().unwrap(), (t(1), 1));
         assert_eq!(q.pop().unwrap(), (t(10), 10));
+    }
+
+    #[test]
+    fn interleaved_push_during_drain_stays_sorted() {
+        // new work scheduled mid-drain (ahead of the queue minimum but
+        // behind everything already popped) must slot into order
+        let mut q = EventQueue::new();
+        q.push_batch((0..100u64).map(|i| (tn(i * 1000), i)).collect());
+        let mut popped = 0usize;
+        let mut last = VirtualTime::ZERO;
+        while let Some((time, i)) = q.pop() {
+            assert!(time >= last, "pop order regressed at event {i}");
+            last = time;
+            popped += 1;
+            if i % 7 == 0 && i < 100 {
+                q.push(time + Duration::from_nanos(1), 1000 + i);
+            }
+        }
+        assert_eq!(popped, 100 + 15, "every rescheduled event drained");
+    }
+
+    #[test]
+    fn far_future_outlier_forces_bucket_resize() {
+        let mut q = EventQueue::new();
+        // dense phase: nanosecond spacing, geometry adapts tight
+        for i in 0..100u64 {
+            q.push(tn(i), i);
+        }
+        let dense = q.stats();
+        assert!(dense.resizes >= 1, "growth past the load factor rebuilds");
+        // far-future outliers: seconds apart, forcing the next rebuild
+        // to widen the buckets by orders of magnitude
+        for k in 0..80u64 {
+            q.push(t(10 + k * 1000), 1000 + k);
+        }
+        let sparse = q.stats();
+        assert!(
+            sparse.resizes > dense.resizes,
+            "outliers past the dense span must force a resize"
+        );
+        assert!(
+            sparse.bucket_width_ns > dense.bucket_width_ns,
+            "width must widen to the sparse spacing: {} -> {}",
+            dense.bucket_width_ns,
+            sparse.bucket_width_ns
+        );
+        // and the pop order survives the geometry changes
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        let expect: Vec<u64> = (0..100).chain(1000..1080).collect();
+        assert_eq!(order, expect);
+    }
+
+    #[test]
+    fn sparse_gap_jumps_straight_to_the_next_event() {
+        let mut q = EventQueue::new();
+        q.push(tn(0), 0);
+        q.push(tn(10), 1);
+        // far beyond the initial 8-bucket calendar year
+        q.push(t(1), 2);
+        assert_eq!(q.pop().unwrap().1, 0);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert!(
+            q.stats().sparse_jumps >= 1,
+            "the millisecond gap must be jumped, not walked"
+        );
+    }
+
+    #[test]
+    fn stats_track_depth_and_resizes() {
+        let mut q = EventQueue::new();
+        for i in 0..100u64 {
+            q.push(tn(i * 50), i);
+        }
+        let s = q.stats();
+        assert_eq!(s.depth, 100);
+        assert_eq!(s.depth_hwm, 100);
+        assert_eq!(s.pushes, 100);
+        assert_eq!(s.pops, 0);
+        assert!(s.resizes >= 1);
+        assert!(s.buckets >= 16, "grown toward the target load factor");
+        assert!(s.occupied_buckets <= s.buckets);
+        assert!(s.bucket_width_ns >= 1);
+        while q.pop().is_some() {}
+        let end = q.stats();
+        assert_eq!(end.depth, 0);
+        assert_eq!(end.pops, 100);
+        assert_eq!(end.depth_hwm, 100, "high-water mark survives the drain");
+    }
+
+    #[test]
+    fn push_batch_empty_is_a_noop() {
+        let mut q: EventQueue<u8> = EventQueue::new();
+        q.push_batch(Vec::new());
+        assert!(q.is_empty());
+        assert_eq!(q.stats().pushes, 0);
+    }
+
+    #[test]
+    fn heap_reference_agrees_on_a_smoke_sequence() {
+        let mut cal = EventQueue::new();
+        let mut heap = HeapEventQueue::new();
+        let times = [30u64, 10, 10, 50, 0, 10, 40, 0];
+        for (i, &ms) in times.iter().enumerate() {
+            cal.push(t(ms), i);
+            heap.push(t(ms), i);
+        }
+        assert_eq!(cal.peek_time(), heap.peek_time());
+        loop {
+            let (a, b) = (cal.pop(), heap.pop());
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
     }
 }

@@ -6,17 +6,35 @@
 //! submitted as `(arrival, service)` pairs; the station returns the
 //! completion instant under FIFO discipline, which is all the callers
 //! need to advance their own virtual clocks.
+//!
+//! Each server is a *token* in an [`EventQueue`] timestamped with the
+//! instant that server next becomes free, so taking the earliest-free
+//! server is a queue pop and releasing it is a push — the same
+//! calendar-queue hot path the rest of the simulation schedules
+//! through.  [`submit_many`](FifoResource::submit_many) drains the
+//! tokens once, runs the whole burst on the scratch copy, and
+//! batch-reinserts them via
+//! [`EventQueue::push_batch`](super::EventQueue::push_batch).
 
-use super::{Duration, VirtualTime};
+use super::stats::QueueStats;
+use super::{Duration, EventQueue, VirtualTime};
 
 /// A `c`-server FIFO queue with deterministic service times.
 #[derive(Debug, Clone)]
 pub struct FifoResource {
-    /// Next instant each server becomes free, kept as a min-"heap" by
-    /// linear scan (c is small: MDS handlers ~4–32, NIC = 1).
-    free_at: Vec<VirtualTime>,
+    /// One token per server: the token's timestamp is the instant that
+    /// server next becomes free; the payload is the server id.
+    free_at: EventQueue<usize>,
+    servers: usize,
     busy: Duration,
     served: u64,
+}
+
+/// A token queue with every server idle at the simulation start.
+fn idle_tokens(servers: usize) -> EventQueue<usize> {
+    let mut q = EventQueue::with_capacity(servers);
+    q.push_batch((0..servers).map(|s| (VirtualTime::ZERO, s)).collect());
+    q
 }
 
 impl FifoResource {
@@ -24,7 +42,8 @@ impl FifoResource {
     pub fn new(servers: usize) -> Self {
         assert!(servers >= 1, "resource needs at least one server");
         FifoResource {
-            free_at: vec![VirtualTime::ZERO; servers],
+            free_at: idle_tokens(servers),
+            servers,
             busy: Duration::ZERO,
             served: 0,
         }
@@ -34,16 +53,10 @@ impl FifoResource {
     /// Returns the completion instant. FIFO: the request takes the
     /// earliest-free server, starting no earlier than `arrival`.
     pub fn submit(&mut self, arrival: VirtualTime, service: Duration) -> VirtualTime {
-        let (idx, earliest) = self
-            .free_at
-            .iter()
-            .copied()
-            .enumerate()
-            .min_by_key(|&(i, t)| (t, i))
-            .expect("at least one server");
+        let (earliest, server) = self.free_at.pop().expect("one token per server");
         let start = earliest.max(arrival);
         let done = start + service;
-        self.free_at[idx] = done;
+        self.free_at.push(done, server);
         self.busy += service;
         self.served += 1;
         done
@@ -54,7 +67,8 @@ impl FifoResource {
     /// last one. Exactly equivalent to `count` sequential [`submit`]
     /// calls (greedy earliest-free placement is monotone, so the last
     /// submission is also the latest completion), with a single-server
-    /// closed form for the NIC/device case.
+    /// closed form for the NIC/device case and one batched token
+    /// reinsert for the multi-server case.
     ///
     /// [`submit`]: Self::submit
     pub fn submit_many(
@@ -66,18 +80,37 @@ impl FifoResource {
         if count == 0 {
             return arrival;
         }
-        if self.free_at.len() == 1 {
-            let start = self.free_at[0].max(arrival);
-            let done = start + service * count as u64;
-            self.free_at[0] = done;
-            self.busy += service * count as u64;
-            self.served += count as u64;
+        if self.servers == 1 {
+            let (earliest, server) = self.free_at.pop().expect("one token per server");
+            let start = earliest.max(arrival);
+            let done = start + service * u64::from(count);
+            self.free_at.push(done, server);
+            self.busy += service * u64::from(count);
+            self.served += u64::from(count);
             return done;
+        }
+        // drain every token, run the burst greedily on the scratch
+        // copy, and batch-reinsert the updated tokens in one call
+        let mut tokens: Vec<(VirtualTime, usize)> = Vec::with_capacity(self.servers);
+        while let Some(token) = self.free_at.pop() {
+            tokens.push(token);
         }
         let mut last = arrival;
         for _ in 0..count {
-            last = last.max(self.submit(arrival, service));
+            let idx = tokens
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, &(free, _))| (free, i))
+                .map(|(i, _)| i)
+                .expect("at least one server");
+            let start = tokens[idx].0.max(arrival);
+            let done = start + service;
+            tokens[idx].0 = done;
+            last = last.max(done);
         }
+        self.busy += service * u64::from(count);
+        self.served += u64::from(count);
+        self.free_at.push_batch(tokens);
         last
     }
 
@@ -93,7 +126,7 @@ impl FifoResource {
     /// 0.0; pass `Duration::ZERO` as the snapshot for lifetime
     /// utilisation.
     pub fn utilisation(&self, busy_before: Duration, horizon: Duration) -> f64 {
-        let h = horizon.as_secs_f64() * self.free_at.len() as f64;
+        let h = horizon.as_secs_f64() * self.servers as f64;
         if h <= 0.0 {
             0.0
         } else {
@@ -111,21 +144,27 @@ impl FifoResource {
 
     /// Earliest instant any server is free.
     pub fn next_free(&self) -> VirtualTime {
-        self.free_at.iter().copied().min().unwrap_or(VirtualTime::ZERO)
+        self.free_at.peek_time().unwrap_or(VirtualTime::ZERO)
     }
 
     /// Forget all queued state (new simulation phase).
     pub fn reset(&mut self) {
-        for t in &mut self.free_at {
-            *t = VirtualTime::ZERO;
-        }
+        self.free_at = idle_tokens(self.servers);
         self.busy = Duration::ZERO;
         self.served = 0;
     }
 
     /// Number of parallel servers.
     pub fn servers(&self) -> usize {
-        self.free_at.len()
+        self.servers
+    }
+
+    /// Scheduler counters of the server-token queue (depth is always
+    /// the server count — one token per server by construction; the
+    /// push/pop totals count how often work moved through the
+    /// station's calendar).
+    pub fn scheduler_stats(&self) -> QueueStats {
+        self.free_at.stats()
     }
 }
 
@@ -236,5 +275,17 @@ mod tests {
         let mut r = FifoResource::new(2);
         assert_eq!(r.submit_many(t(5), Duration::from_millis(1), 0), t(5));
         assert_eq!(r.served(), 0);
+    }
+
+    #[test]
+    fn scheduler_stats_expose_token_traffic() {
+        let mut r = FifoResource::new(4);
+        for _ in 0..10 {
+            r.submit(t(0), Duration::from_millis(1));
+        }
+        let s = r.scheduler_stats();
+        assert_eq!(s.depth, 4, "one token per server");
+        assert_eq!(s.pushes - s.pops, 4);
+        assert!(s.pushes >= 14, "4 idle tokens + 10 reinserts");
     }
 }

@@ -1,0 +1,113 @@
+//! Scheduler observability counters.
+//!
+//! The calendar queue is the shared hot path of every scenario, so its
+//! behaviour should be *observable*, not asserted: [`QueueStats`] is
+//! the snapshot [`EventQueue::stats`](super::EventQueue::stats)
+//! returns, surfaced through
+//! [`FleetReport`](crate::container::FleetReport) (one queue per
+//! deployment wave) and printed by the bench harness
+//! (`benches/des_queue.rs`, `benches/fig1_scale.rs`).
+//!
+//! How to read a snapshot (docs/DES.md walks a full example):
+//!
+//! * `depth` / `depth_hwm` — pending events now / at the worst moment.
+//!   The high-water mark bounds the memory the run needed and tells
+//!   you how bursty the workload was.
+//! * `buckets`, `occupied_buckets`, `bucket_width_ns` — the calendar
+//!   geometry.  A healthy dense phase keeps occupancy
+//!   (`occupied_buckets / buckets`) well under 1 with small widths;
+//!   sparse phases widen the buckets instead of leaving the scan to
+//!   walk empty days.
+//! * `resizes` — geometry rebuilds (growth past the load factor, or
+//!   width re-derivation after sparse jumps).  Each is O(depth); a hot
+//!   loop resizing every few events means the spacing keeps shifting.
+//! * `sparse_jumps` — full calendar years scanned without finding a
+//!   due event, answered by jumping straight to the minimum.  Large
+//!   counts mean the width is (or was) too narrow for the workload.
+//! * `pushes` / `pops` — lifetime totals; `pushes - pops == depth`.
+
+/// Counters describing one [`EventQueue`](super::EventQueue)'s
+/// lifetime and current calendar geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct QueueStats {
+    /// Events currently queued.
+    pub depth: usize,
+    /// Most events ever queued at once (high-water mark).
+    pub depth_hwm: usize,
+    /// Lifetime number of events pushed.
+    pub pushes: u64,
+    /// Lifetime number of events popped.
+    pub pops: u64,
+    /// Buckets in the current calendar (a power of two).
+    pub buckets: usize,
+    /// Buckets currently holding at least one event.
+    pub occupied_buckets: usize,
+    /// Current bucket width in nanoseconds of virtual time.
+    pub bucket_width_ns: u64,
+    /// Geometry rebuilds performed (growth or width adaptation).
+    pub resizes: u64,
+    /// Empty calendar years answered by jumping to the minimum.
+    pub sparse_jumps: u64,
+}
+
+impl QueueStats {
+    /// Fraction of buckets holding at least one event, in `[0, 1]`.
+    pub fn occupancy(&self) -> f64 {
+        if self.buckets == 0 {
+            0.0
+        } else {
+            self.occupied_buckets as f64 / self.buckets as f64
+        }
+    }
+
+    /// One-line summary for reports and bench output.
+    pub fn render(&self) -> String {
+        format!(
+            "events {}/{} (depth hwm {}), {}/{} buckets x {} ns, \
+             {} resize(s), {} sparse jump(s)",
+            self.pops,
+            self.pushes,
+            self.depth_hwm,
+            self.occupied_buckets,
+            self.buckets,
+            self.bucket_width_ns,
+            self.resizes,
+            self.sparse_jumps,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_is_a_fraction() {
+        let s = QueueStats {
+            buckets: 8,
+            occupied_buckets: 2,
+            ..QueueStats::default()
+        };
+        assert!((s.occupancy() - 0.25).abs() < 1e-12);
+        assert_eq!(QueueStats::default().occupancy(), 0.0);
+    }
+
+    #[test]
+    fn render_names_the_key_numbers() {
+        let s = QueueStats {
+            depth: 3,
+            depth_hwm: 40,
+            pushes: 100,
+            pops: 97,
+            buckets: 64,
+            occupied_buckets: 3,
+            bucket_width_ns: 250,
+            resizes: 2,
+            sparse_jumps: 1,
+        };
+        let text = s.render();
+        assert!(text.contains("depth hwm 40"));
+        assert!(text.contains("3/64 buckets"));
+        assert!(text.contains("2 resize(s)"));
+    }
+}

@@ -11,7 +11,7 @@
 //! "30 minutes to import at 1000 ranks" anecdote.
 
 use super::{FileSystem, FsOp};
-use crate::des::{Duration, FifoResource, SimRng, VirtualTime};
+use crate::des::{Duration, FifoResource, QueueStats, SimRng, VirtualTime};
 
 /// Parallel filesystem model. `edison()` gives Lustre-on-Edison-like
 /// parameters; all knobs are public for experiment configuration.
@@ -76,6 +76,14 @@ impl ParallelFs {
     /// Utilisation counters (for reports/tests).
     pub fn mds_served(&self) -> u64 {
         self.mds.served()
+    }
+
+    /// Calendar-queue counters of the MDS handler tokens (see
+    /// `des::stats`): every metadata burst a rank class submits moves
+    /// through this scheduler, so the push/pop totals count the RPC
+    /// traffic the import storm actually generated.
+    pub fn mds_scheduler_stats(&self) -> QueueStats {
+        self.mds.scheduler_stats()
     }
 }
 
@@ -218,6 +226,15 @@ mod tests {
         let done = fs.submit_batch(VirtualTime::ZERO, 0, 24, FsOp::Read { bytes: 200_000_000 });
         let s = done.as_secs_f64();
         assert!(s > 0.02, "expected OST serialisation, got {s}");
+    }
+
+    #[test]
+    fn scheduler_stats_count_the_metadata_traffic() {
+        let mut fs = quiet_fs();
+        fs.submit_batch(VirtualTime::ZERO, 0, 24, FsOp::Open);
+        let s = fs.mds_scheduler_stats();
+        assert_eq!(s.depth, 4, "one token per MDS handler");
+        assert!(s.pushes > 4, "the burst moved tokens through the calendar");
     }
 
     #[test]

@@ -31,7 +31,7 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`des`] | virtual clock, event queue, FIFO resources — the simulation substrate |
+//! | [`des`] | virtual clock, calendar-queue event scheduler, FIFO resources — the simulation substrate (docs/DES.md) |
 //! | [`container`] | images, layer store, buildfile parser/builder, registry, runtimes, and the fleet distribution tier (sharded registry, node-local caches, peer fan-out) |
 //! | [`cluster`] | machine specs (workstation / Edison), nodes, job launcher |
 //! | [`net`] | interconnect fabrics: shared-memory, Aries, TCP (α-β + contention) |

@@ -1,0 +1,214 @@
+//! Differential properties for the calendar-queue scheduler.
+//!
+//! The calendar `EventQueue` replaced the `BinaryHeap` queue under
+//! every scenario, and the golden figure tests only catch divergence
+//! the figures happen to exercise — so this suite drives the calendar
+//! and the retained [`HeapEventQueue`] reference through *identical*
+//! randomized workloads (dense bursts, heavy timestamp ties, sparse
+//! far-future outliers, batch pushes, interleaved push/pop drains) and
+//! requires the pop streams to match event for event.  A `FifoResource`
+//! property pins the reworked server-token station to a linear-scan
+//! model of the original implementation.
+
+use harbor::des::{Duration, EventQueue, FifoResource, HeapEventQueue, VirtualTime};
+use harbor::util::proptest::{run, Gen};
+
+fn t(ns: u64) -> VirtualTime {
+    VirtualTime::ZERO + Duration::from_nanos(ns)
+}
+
+/// Timestamps drawn from regimes the calendar geometry must survive:
+/// heavy ties, dense ns-scale spacing, sparse second-scale spacing,
+/// and far-future outliers whole years past everything else.
+fn random_time(g: &mut Gen) -> VirtualTime {
+    match g.usize_in(0, 3) {
+        0 => t(g.u64_in(0, 3)),
+        1 => t(g.u64_in(0, 10_000)),
+        2 => t(g.u64_in(0, 1_000_000_000)),
+        _ => t(g.u64_in(1_000_000_000_000, 2_000_000_000_000)),
+    }
+}
+
+#[test]
+fn prop_calendar_pop_order_equals_heap_reference() {
+    run("calendar-vs-heap", 300, |g: &mut Gen| {
+        let mut cal = EventQueue::new();
+        let mut heap = HeapEventQueue::new();
+        let ops = g.usize_in(1, 120);
+        let mut next_id = 0usize;
+        for _ in 0..ops {
+            match g.usize_in(0, 3) {
+                0 | 1 => {
+                    let time = random_time(g);
+                    cal.push(time, next_id);
+                    heap.push(time, next_id);
+                    next_id += 1;
+                }
+                2 => {
+                    let k = g.usize_in(0, 40);
+                    let batch: Vec<(VirtualTime, usize)> =
+                        (0..k).map(|i| (random_time(g), next_id + i)).collect();
+                    next_id += k;
+                    cal.push_batch(batch.clone());
+                    heap.push_batch(batch);
+                }
+                _ => {
+                    let (a, b) = (cal.pop(), heap.pop());
+                    if a != b {
+                        return Err(format!("pop diverged: calendar {a:?} vs heap {b:?}"));
+                    }
+                }
+            }
+            if cal.len() != heap.len() {
+                return Err(format!("len diverged: {} vs {}", cal.len(), heap.len()));
+            }
+            if cal.peek_time() != heap.peek_time() {
+                return Err(format!(
+                    "peek diverged: {:?} vs {:?}",
+                    cal.peek_time(),
+                    heap.peek_time()
+                ));
+            }
+        }
+        // full drain must agree to the very last event
+        loop {
+            let (a, b) = (cal.pop(), heap.pop());
+            if a != b {
+                return Err(format!("drain diverged: {a:?} vs {b:?}"));
+            }
+            if a.is_none() {
+                return Ok(());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_heavy_ties_keep_fifo_order_across_push_paths() {
+    // all events share a handful of timestamps; FIFO order must hold
+    // exactly whether events arrived singly or in batches
+    run("calendar-ties", 200, |g: &mut Gen| {
+        let mut cal = EventQueue::new();
+        let mut heap = HeapEventQueue::new();
+        let mut next_id = 0usize;
+        for _ in 0..g.usize_in(1, 8) {
+            let stamp = t(g.u64_in(0, 2));
+            if g.bool() {
+                let k = g.usize_in(1, 64);
+                let batch: Vec<(VirtualTime, usize)> =
+                    (0..k).map(|i| (stamp, next_id + i)).collect();
+                next_id += k;
+                cal.push_batch(batch.clone());
+                heap.push_batch(batch);
+            } else {
+                cal.push(stamp, next_id);
+                heap.push(stamp, next_id);
+                next_id += 1;
+            }
+        }
+        loop {
+            let (a, b) = (cal.pop(), heap.pop());
+            if a != b {
+                return Err(format!("tie order diverged: {a:?} vs {b:?}"));
+            }
+            if a.is_none() {
+                return Ok(());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_stats_conserve_counts() {
+    run("queue-stats", 150, |g: &mut Gen| {
+        let mut q = EventQueue::new();
+        let (mut pushed, mut popped) = (0u64, 0u64);
+        for _ in 0..g.usize_in(1, 100) {
+            if g.bool() {
+                q.push(random_time(g), ());
+                pushed += 1;
+            } else if q.pop().is_some() {
+                popped += 1;
+            }
+        }
+        let s = q.stats();
+        if s.pushes != pushed || s.pops != popped {
+            return Err(format!(
+                "counter drift: {}/{} vs {pushed}/{popped}",
+                s.pushes, s.pops
+            ));
+        }
+        if s.depth != q.len() || s.pushes - s.pops != s.depth as u64 {
+            return Err(format!("depth {} inconsistent with counters", s.depth));
+        }
+        if s.depth_hwm < s.depth {
+            return Err("high-water mark below current depth".into());
+        }
+        if s.occupied_buckets > s.buckets || (s.depth > 0 && s.occupied_buckets == 0) {
+            return Err(format!(
+                "bucket occupancy {}/{} impossible at depth {}",
+                s.occupied_buckets, s.buckets, s.depth
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// The pre-calendar `FifoResource` kept a plain `Vec<VirtualTime>` of
+/// server free instants and linear-scanned for the minimum; the
+/// token-queue rework must be observably identical to it.
+fn model_submit(
+    free_at: &mut [VirtualTime],
+    arrival: VirtualTime,
+    service: Duration,
+) -> VirtualTime {
+    let idx = free_at
+        .iter()
+        .enumerate()
+        .min_by_key(|&(i, &free)| (free, i))
+        .map(|(i, _)| i)
+        .expect("at least one server");
+    let start = free_at[idx].max(arrival);
+    let done = start + service;
+    free_at[idx] = done;
+    done
+}
+
+#[test]
+fn prop_fifo_resource_matches_the_linear_scan_model() {
+    run("fifo-vs-linear-scan", 200, |g: &mut Gen| {
+        let servers = g.usize_in(1, 8);
+        let mut real = FifoResource::new(servers);
+        let mut free_at = vec![VirtualTime::ZERO; servers];
+        let mut arrival = VirtualTime::ZERO;
+        for _ in 0..g.usize_in(1, 60) {
+            arrival += Duration::from_nanos(g.u64_in(0, 100_000));
+            let service = Duration::from_nanos(g.u64_in(1, 50_000));
+            if g.bool() {
+                let done = real.submit(arrival, service);
+                let model = model_submit(&mut free_at, arrival, service);
+                if done != model {
+                    return Err(format!("submit: {done:?} vs model {model:?}"));
+                }
+            } else {
+                let count = g.u64_in(0, 20) as u32;
+                let done = real.submit_many(arrival, service, count);
+                let mut model = arrival;
+                for _ in 0..count {
+                    model = model.max(model_submit(&mut free_at, arrival, service));
+                }
+                if done != model {
+                    return Err(format!("submit_many({count}): {done:?} vs model {model:?}"));
+                }
+            }
+            let model_min = free_at.iter().copied().min().expect("non-empty");
+            if real.next_free() != model_min {
+                return Err(format!(
+                    "next_free: {:?} vs model {model_min:?}",
+                    real.next_free()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
