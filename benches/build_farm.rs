@@ -1,0 +1,97 @@
+//! Build-farm bench: the §4.3 `ARCH_OPT` variant matrix on 1..16 CI
+//! workers, cold and warm, recorded into `BENCH_micro.json`.
+//!
+//! Three kinds of numbers are recorded:
+//!
+//! * `build_farm_cold_{W}_virt_s` / `build_farm_warm_{W}_virt_s` — the
+//!   *virtual* farm makespan the DES predicts (deterministic), plus
+//!   `build_farm_wall_{W}_s`, the wall time the simulator needs for
+//!   the cold+warm pair (the §Perf trajectory);
+//! * `build_cache_cold_hit_rate` / `build_cache_warm_hit_rate` and
+//!   `build_wan_cold_mb` — the shared-cache economics of the matrix
+//!   (warm must be 1.0 and 0 MB respectively);
+//! * `build_dag_plan_ns_per_iter` / `build_warm_build_ns_per_iter` —
+//!   ns/iter micro numbers for parsing+planning a multi-stage file and
+//!   for a fully-cached rebuild (the simulator's own hot path).
+//!
+//! `build_farm_speedup_16x` (cold 1-worker / cold 16-worker) and
+//! `build_farm_warm_cold_ratio` (acceptance bar: < 0.10) summarise the
+//! figure.
+
+mod common;
+
+use std::time::Instant;
+
+use harbor::config::FARM_WORKERS;
+use harbor::container::{BuildGraph, Builder, Buildfile, LayerStore};
+use harbor::scenario::build_farm::{BuildFarm, FarmConfig, variant_buildfile, variant_matrix};
+
+use common::{record_bench, time_rec};
+
+fn main() {
+    let mut rec: Vec<(String, f64)> = Vec::new();
+    let jobs = variant_matrix().expect("variant matrix parses");
+
+    println!("== build farm: {}-variant ARCH_OPT matrix ==", jobs.len());
+    let mut cold_by_workers: Vec<(usize, f64)> = Vec::new();
+    let mut worst_ratio = 0.0f64;
+    for &workers in &FARM_WORKERS {
+        let t0 = Instant::now();
+        let mut farm = BuildFarm::new(FarmConfig::ci(workers));
+        let cold = farm.run_pass(&jobs).expect("cold pass");
+        let warm = farm.run_pass(&jobs).expect("warm pass");
+        let wall = t0.elapsed().as_secs_f64();
+
+        let ratio = warm.makespan.as_secs_f64() / cold.makespan.as_secs_f64();
+        worst_ratio = worst_ratio.max(ratio);
+        println!(
+            "  {workers:>2} workers: cold {:>9} (hit rate {:.0}%, WAN {:>6.1} MB, \
+             gc {:>6.1} MB), warm {:>9} (hit rate {:.0}%), computed in {wall:.3} s",
+            cold.makespan,
+            cold.build_hit_rate() * 100.0,
+            cold.wan_bytes as f64 / 1e6,
+            cold.gc_bytes as f64 / 1e6,
+            warm.makespan,
+            warm.build_hit_rate() * 100.0,
+        );
+        println!("      scheduler: {}", cold.queue.render());
+        cold_by_workers.push((workers, cold.makespan.as_secs_f64()));
+        rec.push((format!("build_farm_cold_{workers}_virt_s"), cold.makespan.as_secs_f64()));
+        rec.push((format!("build_farm_warm_{workers}_virt_s"), warm.makespan.as_secs_f64()));
+        rec.push((format!("build_farm_wall_{workers}_s"), wall));
+        if workers == FARM_WORKERS[0] {
+            rec.push(("build_cache_cold_hit_rate".into(), cold.build_hit_rate()));
+            rec.push(("build_cache_warm_hit_rate".into(), warm.build_hit_rate()));
+            rec.push(("build_wan_cold_mb".into(), cold.wan_bytes as f64 / 1e6));
+        }
+    }
+
+    let speedup = match (cold_by_workers.first(), cold_by_workers.last()) {
+        (Some(&(_, serial)), Some(&(_, widest))) if widest > 0.0 => serial / widest,
+        _ => 0.0,
+    };
+    println!("  cold farm speedup 1 -> 16 workers: {speedup:.2}x");
+    println!("  worst warm/cold ratio: {worst_ratio:.5} (bar: < 0.10)");
+    rec.push(("build_farm_speedup_16x".into(), speedup));
+    rec.push(("build_farm_warm_cold_ratio".into(), worst_ratio));
+    if worst_ratio >= 0.10 {
+        eprintln!("  WARNING: warm-cache makespan above the 10% acceptance bar");
+    }
+
+    println!("== builder hot paths ==");
+    let (app, pkgs) = harbor::scenario::build_farm::APPS[0];
+    let text = variant_buildfile(app, pkgs, "haswell");
+    time_rec(&mut rec, "build_dag_plan", "parse + plan 4-stage buildfile", || {
+        let bf = Buildfile::parse(&text).expect("variant parses");
+        std::hint::black_box(BuildGraph::plan(&bf));
+    });
+    let bf = Buildfile::parse(&text).expect("variant parses");
+    let mut warm_builder = Builder::new();
+    let mut store = LayerStore::new();
+    warm_builder.build(&bf, "warm:1", &mut store).expect("prime the cache");
+    time_rec(&mut rec, "build_warm_build", "fully-cached 4-stage rebuild", || {
+        std::hint::black_box(warm_builder.build(&bf, "warm:1", &mut store).expect("warm"));
+    });
+
+    record_bench(&rec);
+}

@@ -15,8 +15,9 @@ use crate::util::json::{self, Value};
 /// Configuration of one figure regeneration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
-    /// Which figure: "fig2", "fig3", "fig4", "fig5a", "fig5b",
-    /// "fig1-scale".
+    /// Which scenario: "fig2", "fig3", "fig4", "fig5a", "fig5b",
+    /// "fig1-scale", "mixed-fleet", "build-farm" (the live list is the
+    /// scenario registry: `harbor bench --list`).
     pub figure: String,
     /// Repetitions per bar (the paper: 5 on the workstation, 3 on Edison).
     pub reps: usize,
@@ -29,7 +30,8 @@ pub struct ExperimentConfig {
     /// Rank-class batched engine for the modeled workloads (the default;
     /// `false` forces the O(ranks) per-rank reference path).
     pub batched: bool,
-    /// Fleet node counts (the `fig1-scale` deployment sweep).
+    /// Fleet node counts (the `fig1-scale` deployment sweep) or CI
+    /// worker counts (the `build-farm` sweep).
     pub nodes: Vec<usize>,
 }
 
@@ -42,6 +44,10 @@ pub const SCALE_RANKS: [usize; 3] = [1536, 12288, 98304];
 /// once (the paper's Fig 1 "pull everywhere" step, grown to the scale
 /// PR 1 unlocked for the compute phase).
 pub const SCALE_NODES: [usize; 4] = [64, 512, 4096, 16384];
+
+/// The `build-farm` worker counts: how many CI workers build the
+/// per-platform `ARCH_OPT` variant matrix concurrently.
+pub const FARM_WORKERS: [usize; 3] = [1, 4, 16];
 
 impl ExperimentConfig {
     /// The paper's setup for each figure.
@@ -112,6 +118,18 @@ impl ExperimentConfig {
                 sizes: vec![],
                 batched: true,
                 nodes: vec![],
+            },
+            // the CI build farm (the §4.3 per-platform ARCH_OPT matrix
+            // at fleet scale): `nodes` carries the worker counts; the
+            // scenario is deterministic, so one rep suffices
+            "build-farm" => ExperimentConfig {
+                figure: "build-farm".into(),
+                reps: 1,
+                seed: 42,
+                ranks: vec![],
+                sizes: vec![],
+                batched: true,
+                nodes: FARM_WORKERS.to_vec(),
             },
             // no name enumeration here: the live list belongs to the
             // scenario registry (`harbor bench --list`), and a second
@@ -344,6 +362,16 @@ mod tests {
         let cfg = ExperimentConfig::paper_default("mixed-fleet").unwrap();
         assert_eq!(cfg.ranks, vec![24, 96]);
         assert_eq!(cfg.reps, 3);
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn build_farm_sweeps_worker_counts() {
+        let cfg = ExperimentConfig::paper_default("build-farm").unwrap();
+        assert_eq!(cfg.nodes, FARM_WORKERS.to_vec());
+        assert_eq!(cfg.reps, 1);
+        assert!(cfg.ranks.is_empty());
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);
     }

@@ -1,4 +1,4 @@
-//! Image builder: executes a buildfile into an image.
+//! Image builder: executes a buildfile into an image, as a stage DAG.
 //!
 //! We cannot run real shell commands, so `RUN` effects are *modelled*
 //! deterministically: the builder recognises package-manager invocations
@@ -10,36 +10,213 @@
 //! *cache* behaves exactly like Docker's: same parent + same directive
 //! ⇒ same layer id ⇒ cache hit.
 //!
+//! Multi-stage buildfiles parse into a stage-dependency DAG
+//! ([`BuildGraph`]): a stage depends on the stage its `FROM` continues
+//! and on every stage its `COPY --from=` reads.  The builder walks the
+//! DAG in topological order, skips stages the target does not need, and
+//! seals only the **terminal** stage's layers into the image — earlier
+//! stages' layers stay in the [`LayerStore`] as build cache but are
+//! pruned from what gets pushed and pulled.
+//!
+//! Every layer is keyed by a content hash of its full build inputs:
+//! the parent chain (the parent's [`LayerId`] commits to it
+//! recursively), the directive's *cache-canonical* text, and — for
+//! `COPY --from` — the **digest of the source stage's final layer**, so
+//! renaming a stage never invalidates the cache but changing what the
+//! source stage produces always does.
+//!
 //! Base images come from a small built-in catalogue (the `ubuntu:16.04`
 //! and FEniCS-stack bases the paper uses).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use sha2::{Digest, Sha256};
 
-use super::buildfile::{Buildfile, Directive};
+use super::buildfile::{Buildfile, Directive, resolve_among};
 use super::image::{FileEntry, Image, Layer, LayerId};
 use super::store::LayerStore;
 use crate::des::Duration;
 
+/// The stage-dependency DAG of a buildfile: which stages feed which,
+/// how deep every stage sits, and which stages the terminal stage
+/// actually needs.  Acyclic by construction — the parser only accepts
+/// backward stage references.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BuildGraph {
+    deps: Vec<Vec<usize>>,
+    levels: Vec<usize>,
+    needed: Vec<bool>,
+}
+
+impl BuildGraph {
+    /// Plan the stage DAG of `bf`: resolve every `FROM <stage>` and
+    /// `COPY --from=` edge, compute dependency levels, and mark the
+    /// stages reachable from the terminal (last) stage.
+    pub fn plan(bf: &Buildfile) -> BuildGraph {
+        let stages = bf.stages();
+        let names: Vec<Option<&str>> = stages.iter().map(|s| s.name).collect();
+        let mut deps: Vec<Vec<usize>> = vec![Vec::new(); stages.len()];
+        for s in &stages {
+            let earlier = &names[..s.index];
+            let mut d = Vec::new();
+            if let Some(base) = resolve_among(earlier, s.base) {
+                d.push(base);
+            }
+            for dir in s.directives {
+                if let Directive::Copy { from: Some(f), .. } = dir {
+                    if let Some(src) = resolve_among(earlier, f) {
+                        d.push(src);
+                    }
+                }
+            }
+            d.sort_unstable();
+            d.dedup();
+            deps[s.index] = d;
+        }
+        // deps point strictly backwards, so index order is topological
+        let mut levels = vec![0usize; deps.len()];
+        for i in 0..deps.len() {
+            levels[i] = deps[i].iter().map(|&d| levels[d] + 1).max().unwrap_or(0);
+        }
+        let mut needed = vec![false; deps.len()];
+        if let Some(last) = deps.len().checked_sub(1) {
+            let mut stack = vec![last];
+            while let Some(i) = stack.pop() {
+                if !needed[i] {
+                    needed[i] = true;
+                    stack.extend(deps[i].iter().copied());
+                }
+            }
+        }
+        BuildGraph {
+            deps,
+            levels,
+            needed,
+        }
+    }
+
+    /// Number of stages in the graph.
+    pub fn stage_count(&self) -> usize {
+        self.deps.len()
+    }
+
+    /// The stages `stage` depends on (sorted, deduplicated).
+    pub fn deps(&self, stage: usize) -> &[usize] {
+        &self.deps[stage]
+    }
+
+    /// Dependency depth of `stage` (0 = no stage dependencies).
+    pub fn level(&self, stage: usize) -> usize {
+        self.levels[stage]
+    }
+
+    /// Whether the terminal stage (transitively) needs `stage`.
+    pub fn is_needed(&self, stage: usize) -> bool {
+        self.needed[stage]
+    }
+
+    /// Needed stages grouped by level — each wave's stages have all
+    /// their dependencies in earlier waves, so a parallel builder can
+    /// run a whole wave concurrently.
+    pub fn schedule(&self) -> Vec<Vec<usize>> {
+        let max_level = self
+            .levels
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| self.needed[i])
+            .map(|(_, &l)| l)
+            .max();
+        let Some(max_level) = max_level else {
+            return Vec::new();
+        };
+        let mut waves: Vec<Vec<usize>> = vec![Vec::new(); max_level + 1];
+        for i in 0..self.deps.len() {
+            if self.needed[i] {
+                waves[self.levels[i]].push(i);
+            }
+        }
+        waves.retain(|w| !w.is_empty());
+        waves
+    }
+
+    /// The longest dependency chain through the needed stages, given
+    /// each stage's build cost — the makespan of a builder with
+    /// unlimited stage parallelism (what a CI farm worker running
+    /// stages concurrently pays, vs the serial `build_time`).
+    pub fn critical_path(&self, stage_times: &[Duration]) -> Duration {
+        let mut finish = vec![Duration::ZERO; self.deps.len()];
+        for i in 0..self.deps.len() {
+            if !self.needed[i] {
+                continue;
+            }
+            let ready = self.deps[i]
+                .iter()
+                .map(|&d| finish[d])
+                .fold(Duration::ZERO, Duration::max);
+            finish[i] = ready + stage_times.get(i).copied().unwrap_or(Duration::ZERO);
+        }
+        finish.last().copied().unwrap_or(Duration::ZERO)
+    }
+}
+
 /// Result of a build: the image plus provenance/caching info.
 #[derive(Debug, Clone)]
 pub struct BuildReport {
-    /// The built image.
+    /// The built image (terminal stage only; earlier stages pruned).
     pub image: Image,
     /// Layers that were produced by this build (vs. cache hits).
     pub layers_built: usize,
     /// Directives answered from the layer cache.
     pub layers_cached: usize,
-    /// Modelled wall time of the build (package installs dominate).
+    /// Modelled wall time of a *serial* build: the sum of every built
+    /// layer's cost across all needed stages.
     pub build_time: Duration,
+    /// Modelled wall time of a *stage-parallel* build: the longest
+    /// dependency chain of per-stage costs (see
+    /// [`BuildGraph::critical_path`]).  Equals `build_time` for
+    /// single-stage files.
+    pub critical_path: Duration,
+    /// Stages executed (reachable from the terminal stage).
+    pub stages_built: usize,
+    /// Stages skipped as unreachable from the terminal stage.
+    pub stages_skipped: usize,
+    /// Per-stage build cost, indexed by stage (zero for skipped
+    /// stages and for fully-cached stages).
+    pub stage_times: Vec<Duration>,
+    /// The stage DAG the build was scheduled from.
+    pub graph: BuildGraph,
+}
+
+/// Everything a finished stage hands to the stages that depend on it.
+#[derive(Debug, Clone, Default)]
+struct StageState {
+    layers: Vec<LayerId>,
+    env: Vec<(String, String)>,
+    labels: Vec<(String, String)>,
+    entrypoint: Option<String>,
+    arch_optimized: bool,
+    time: Duration,
 }
 
 /// Builds images into a shared [`LayerStore`], with Docker-style layer
-/// caching keyed on (parent id, directive canonical text).
-#[derive(Debug, Default)]
+/// caching keyed on (parent id, cache-canonical directive text).
+///
+/// Cloning a builder forks its cache (see [`fork`](Builder::fork));
+/// [`absorb`](Builder::absorb) merges a fork back — the pair is what a
+/// build farm uses to commit a worker's cache entries only when its
+/// build completes.
+#[derive(Debug, Default, Clone)]
 pub struct Builder {
-    cache: HashMap<(Option<LayerId>, String), LayerId>,
+    /// (parent id, cache-canonical directive) → the full cached layer.
+    /// Holding the `Layer` (not just its id) lets a cache hit re-insert
+    /// the blob into a store that has never seen it — a fresh store, or
+    /// one garbage-collected between build-farm passes — so an image's
+    /// layers are always resident wherever it was built.  Entries are
+    /// immutable and content-addressed, so they sit behind `Arc`s:
+    /// [`fork`](Builder::fork) clones the map of pointers, not the
+    /// manifests.
+    cache: HashMap<(Option<LayerId>, String), Arc<Layer>>,
 }
 
 impl Builder {
@@ -48,68 +225,156 @@ impl Builder {
         Self::default()
     }
 
+    /// A copy of this builder sharing nothing: the fork's cache starts
+    /// as a snapshot and diverges (a farm worker builds against the
+    /// committed cache without publishing half-done entries).
+    pub fn fork(&self) -> Builder {
+        self.clone()
+    }
+
+    /// Merge another builder's cache entries into this one (a farm
+    /// commits a worker's fork when its build completes).  Entries are
+    /// content-derived, so collisions are identical and last-write-wins
+    /// is sound.
+    pub fn absorb(&mut self, other: Builder) {
+        self.cache.extend(other.cache);
+    }
+
+    /// Number of (parent, directive) → layer entries in the cache.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
     /// Execute `bf`, tagging the result as `reference`.
+    ///
+    /// Stages run in topological order (file order is one, since stage
+    /// references only point backwards); stages the terminal stage does
+    /// not need are skipped entirely.  The returned image stacks only
+    /// the terminal stage's layers.
     pub fn build(
         &mut self,
         bf: &Buildfile,
         reference: &str,
         store: &mut LayerStore,
     ) -> Result<BuildReport, UnknownBase> {
-        let mut layers: Vec<LayerId> = Vec::new();
-        let mut env: Vec<(String, String)> = Vec::new();
-        let mut labels: Vec<(String, String)> = Vec::new();
-        let mut entrypoint: Option<String> = None;
-        let mut arch_optimized = false;
+        let stages = bf.stages();
+        let names: Vec<Option<&str>> = stages.iter().map(|s| s.name).collect();
+        let graph = BuildGraph::plan(bf);
+        let mut states: Vec<Option<StageState>> = vec![None; stages.len()];
         let mut built = 0usize;
         let mut cached = 0usize;
         let mut build_time = Duration::ZERO;
 
-        for d in &bf.directives {
-            // config-only directives do not create layers
-            match d {
-                Directive::Env { key, value } => {
-                    env.push((key.clone(), value.clone()));
-                    continue;
-                }
-                Directive::Label { key, value } => {
-                    labels.push((key.clone(), value.clone()));
-                    continue;
-                }
-                Directive::Entrypoint(e) => {
-                    entrypoint = Some(e.clone());
-                    continue;
-                }
-                Directive::User(_) | Directive::Workdir(_) => continue,
-                Directive::ArchOpt => {
-                    arch_optimized = true;
-                    // ARCH_OPT recompiles hot binaries: costs build time,
-                    // produces a small layer of rebuilt objects
-                }
-                _ => {}
-            }
-
-            let parent = layers.last().cloned();
-            let canon = d.canonical();
-            let key = (parent.clone(), canon.clone());
-            if let Some(hit) = self.cache.get(&key) {
-                layers.push(hit.clone());
-                cached += 1;
+        for stage in &stages {
+            if !graph.is_needed(stage.index) {
                 continue;
             }
-            let (files, cost) = synth_effects(d)?;
-            let layer = Layer::derive(parent.as_ref(), &canon, files);
-            self.cache.insert(key, layer.id.clone());
-            layers.push(layer.id.clone());
-            store.insert(layer);
-            built += 1;
-            build_time += cost;
+            // seed the chain and config: either from an earlier stage
+            // (FROM <stage> continues its layers and inherits its
+            // config, as Docker does) or fresh from a catalogue base
+            let base_stage = resolve_among(&names[..stage.index], stage.base);
+            let mut st = match base_stage {
+                Some(src) => {
+                    let mut s = states[src].clone().expect("deps built in topo order");
+                    s.time = Duration::ZERO;
+                    s
+                }
+                None => StageState::default(),
+            };
+
+            for d in stage.directives {
+                // config-only directives do not create layers
+                match d {
+                    Directive::From { .. } if base_stage.is_some() => continue,
+                    Directive::Env { key, value } => {
+                        st.env.push((key.clone(), value.clone()));
+                        continue;
+                    }
+                    Directive::Label { key, value } => {
+                        st.labels.push((key.clone(), value.clone()));
+                        continue;
+                    }
+                    Directive::Entrypoint(e) => {
+                        st.entrypoint = Some(e.clone());
+                        continue;
+                    }
+                    Directive::User(_) | Directive::Workdir(_) => continue,
+                    Directive::ArchOpt => {
+                        st.arch_optimized = true;
+                        // ARCH_OPT recompiles hot binaries: costs build
+                        // time, produces a small layer of rebuilt objects
+                    }
+                    _ => {}
+                }
+
+                // the digest a COPY --from commits to: the source
+                // stage's final layer id (renaming the stage changes
+                // nothing; changing what it built changes everything)
+                let copy_digest = match d {
+                    Directive::Copy { from: Some(f), .. } => {
+                        let src = resolve_among(&names[..stage.index], f)
+                            .expect("parse() validated stage references");
+                        let state = states[src].as_ref().expect("deps built in topo order");
+                        let last = state.layers.last().cloned();
+                        Some(last.expect("every stage chain has at least a base layer"))
+                    }
+                    _ => None,
+                };
+
+                let parent = st.layers.last().cloned();
+                let canon = cache_canonical(d, copy_digest.as_ref());
+                let key = (parent.clone(), canon.clone());
+                if let Some(hit) = self.cache.get(&key) {
+                    // self-heal: this store may never have seen the
+                    // blob (fresh store, or GC'd between farm passes)
+                    if !store.contains(&hit.id) {
+                        store.insert(Layer::clone(hit));
+                    }
+                    st.layers.push(hit.id.clone());
+                    cached += 1;
+                    continue;
+                }
+                let (files, cost) = synth_effects(d, copy_digest.as_ref())?;
+                let layer = Layer::derive(parent.as_ref(), &canon, files);
+                st.layers.push(layer.id.clone());
+                let layer = Arc::new(layer);
+                self.cache.insert(key, Arc::clone(&layer));
+                store.insert(Layer::clone(&layer));
+                built += 1;
+                build_time += cost;
+                st.time += cost;
+            }
+            states[stage.index] = Some(st);
         }
 
+        let stage_times: Vec<Duration> = states
+            .iter()
+            .map(|s| s.as_ref().map(|s| s.time).unwrap_or(Duration::ZERO))
+            .collect();
+        let critical_path = graph.critical_path(&stage_times);
+        let stages_built = states.iter().filter(|s| s.is_some()).count();
+        let terminal = states
+            .last()
+            .and_then(|s| s.clone())
+            .expect("parse() guarantees at least one stage");
+
         Ok(BuildReport {
-            image: Image::seal(reference, layers, env, entrypoint, labels, arch_optimized),
+            image: Image::seal(
+                reference,
+                terminal.layers,
+                terminal.env,
+                terminal.entrypoint,
+                terminal.labels,
+                terminal.arch_optimized,
+            ),
             layers_built: built,
             layers_cached: cached,
             build_time,
+            critical_path,
+            stages_built,
+            stages_skipped: stages.len() - stages_built,
+            stage_times,
+            graph,
         })
     }
 }
@@ -128,6 +393,20 @@ impl std::fmt::Display for UnknownBase {
 }
 impl std::error::Error for UnknownBase {}
 
+/// The directive text a layer hash and cache key commit to.  Identical
+/// to [`Directive::canonical`] except that stage *names* are erased:
+/// `FROM base AS x` hashes as `FROM base`, and `COPY --from=<stage>`
+/// substitutes the source stage's content digest for its name.
+fn cache_canonical(d: &Directive, copy_digest: Option<&LayerId>) -> String {
+    match (d, copy_digest) {
+        (Directive::From { base, .. }, _) => format!("FROM {base}"),
+        (Directive::Copy { src, dst, .. }, Some(digest)) => {
+            format!("COPY --from=@{} {src} {dst}", digest.0)
+        }
+        _ => d.canonical(),
+    }
+}
+
 /// Deterministic pseudo-random u64 from a string.
 fn det(s: &str) -> u64 {
     let d = Sha256::digest(s.as_bytes());
@@ -135,11 +414,37 @@ fn det(s: &str) -> u64 {
 }
 
 /// Synthesise the filesystem effect + wall cost of one directive.
-fn synth_effects(d: &Directive) -> Result<(Vec<FileEntry>, Duration), UnknownBase> {
+fn synth_effects(
+    d: &Directive,
+    copy_digest: Option<&LayerId>,
+) -> Result<(Vec<FileEntry>, Duration), UnknownBase> {
     Ok(match d {
-        Directive::From(base) => base_manifest(base)?,
+        Directive::From { base, .. } => base_manifest(base)?,
         Directive::Run(cmd) => run_effects(cmd),
-        Directive::Copy { src, dst } => {
+        Directive::Copy {
+            from: Some(_),
+            src,
+            dst,
+        } => {
+            // built artifacts out of the source stage: a few larger
+            // files, derived from the source digest so the manifest
+            // changes whenever the source stage does
+            let digest = &copy_digest.expect("COPY --from resolved before synthesis").0;
+            let h = det(&format!("{digest}:{src}"));
+            let n = 2 + (h % 6) as usize;
+            let files = (0..n)
+                .map(|i| FileEntry {
+                    path: format!("{dst}/a{i}"),
+                    bytes: 64_000 + (det(&format!("{digest}:{src}:{i}")) % 2_000_000),
+                })
+                .collect();
+            (files, Duration::from_millis(180))
+        }
+        Directive::Copy {
+            from: None,
+            src,
+            dst,
+        } => {
             // a handful of project files
             let h = det(src);
             let n = 3 + (h % 8) as usize;
@@ -269,6 +574,7 @@ mod tests {
         let r2 = Builder::new().build(&f, "scipy:1", &mut LayerStore::new()).unwrap();
         assert_eq!(r1.image.id, r2.image.id, "builds are reproducible");
         assert_eq!(r1.layers_built, 2);
+        assert_eq!(r1.critical_path, r1.build_time, "single stage: no parallelism");
     }
 
     #[test]
@@ -377,5 +683,165 @@ mod tests {
             .unwrap();
         assert!(r.image.size_bytes(&s) > 500_000_000);
         assert!(r.image.file_count(&s) > 4_000);
+    }
+
+    const TWO_STAGE: &str = "\
+FROM ubuntu:16.04 AS build
+RUN make -j app
+FROM alpine:3.4
+COPY --from=build /usr/local/app /opt/app
+ENTRYPOINT /opt/app/run
+";
+
+    #[test]
+    fn multistage_prunes_builder_layers_from_the_image() {
+        let mut b = Builder::new();
+        let mut s = LayerStore::new();
+        let r = b.build(&bf(TWO_STAGE), "app:1", &mut s).unwrap();
+        // image: alpine base + the COPY layer; ubuntu + make pruned
+        assert_eq!(r.image.layers.len(), 2);
+        assert_eq!(r.stages_built, 2);
+        assert_eq!(r.stages_skipped, 0);
+        assert_eq!(r.layers_built, 4, "pruned stages are still built");
+        // the pruned layers are in the store (they are the cache) ...
+        assert_eq!(s.len(), 4);
+        // ... but the image is dramatically smaller than the store
+        assert!(r.image.size_bytes(&s) * 3 < s.physical_bytes());
+        assert_eq!(r.image.entrypoint.as_deref(), Some("/opt/app/run"));
+    }
+
+    #[test]
+    fn multistage_critical_path_is_under_serial_time() {
+        // two independent builder stages feeding a final COPY stage:
+        // the critical path excludes the cheaper branch
+        let text = "\
+FROM ubuntu:16.04 AS heavy
+RUN make -j everything
+FROM alpine:3.4 AS light
+RUN echo done
+FROM alpine:3.4
+COPY --from=heavy /usr/local/a /opt/a
+COPY --from=light /tmp/b /opt/b
+";
+        let mut b = Builder::new();
+        let mut s = LayerStore::new();
+        let r = b.build(&bf(text), "par:1", &mut s).unwrap();
+        assert!(r.critical_path < r.build_time);
+        assert_eq!(r.stage_times.len(), 3);
+        assert!(r.stage_times[0] > r.stage_times[1]);
+    }
+
+    #[test]
+    fn from_stage_continues_the_chain_and_inherits_config() {
+        let text = "\
+FROM alpine:3.4 AS base
+ENV A=1
+RUN echo tool
+FROM base AS derived
+RUN echo more
+";
+        let mut b = Builder::new();
+        let mut s = LayerStore::new();
+        let r = b.build(&bf(text), "d:1", &mut s).unwrap();
+        // chain: alpine base, tool RUN, more RUN
+        assert_eq!(r.image.layers.len(), 3);
+        assert_eq!(r.image.env, vec![("A".to_string(), "1".to_string())]);
+        // the derived stage's chain shares the base stage's prefix
+        let base_only = Builder::new()
+            .build(&bf("FROM alpine:3.4 AS base\nENV A=1\nRUN echo tool"), "b:1", &mut s)
+            .unwrap();
+        assert_eq!(r.image.layers[..2], base_only.image.layers[..]);
+    }
+
+    #[test]
+    fn unreachable_stages_are_skipped() {
+        let text = "\
+FROM ubuntu:16.04 AS unused
+RUN make -j never-needed
+FROM alpine:3.4
+RUN echo hi
+";
+        let mut b = Builder::new();
+        let mut s = LayerStore::new();
+        let r = b.build(&bf(text), "skip:1", &mut s).unwrap();
+        assert_eq!(r.stages_built, 1);
+        assert_eq!(r.stages_skipped, 1);
+        assert_eq!(r.layers_built, 2, "only the target stage was built");
+        assert_eq!(r.stage_times[0], Duration::ZERO);
+    }
+
+    #[test]
+    fn renaming_a_stage_keeps_every_layer_id() {
+        let renamed = TWO_STAGE.replace("build", "compile");
+        let mut s1 = LayerStore::new();
+        let mut s2 = LayerStore::new();
+        let a = Builder::new().build(&bf(TWO_STAGE), "app:1", &mut s1).unwrap();
+        let b = Builder::new().build(&bf(&renamed), "app:1", &mut s2).unwrap();
+        assert_eq!(a.image.layers, b.image.layers, "stage names are not hashed");
+    }
+
+    #[test]
+    fn copy_from_invalidates_when_the_source_stage_changes() {
+        let changed = TWO_STAGE.replace("make -j app", "make -j app V2");
+        let mut b = Builder::new();
+        let mut s = LayerStore::new();
+        let first = b.build(&bf(TWO_STAGE), "app:1", &mut s).unwrap();
+        // identical rebuild: everything cached
+        let again = b.build(&bf(TWO_STAGE), "app:1", &mut s).unwrap();
+        assert_eq!(again.layers_built, 0);
+        assert_eq!(again.layers_cached, first.layers_built);
+        // changing the source stage rebuilds it AND the COPY layer,
+        // even though the COPY directive's text is unchanged
+        let v2 = b.build(&bf(&changed), "app:2", &mut s).unwrap();
+        assert_eq!(v2.layers_cached, 2, "both FROM bases still hit");
+        assert_eq!(v2.layers_built, 2, "changed RUN + dependent COPY rebuilt");
+        assert_ne!(v2.image.layers.last(), first.image.layers.last());
+    }
+
+    #[test]
+    fn diamond_graph_plans_levels_and_builds() {
+        let text = "\
+FROM ubuntu:16.04 AS common
+RUN apt-get install gcc
+FROM common AS left
+RUN make -j left
+FROM common AS right
+RUN make -j right
+FROM alpine:3.4
+COPY --from=left /usr/local/l /opt/l
+COPY --from=right /usr/local/r /opt/r
+";
+        let parsed = bf(text);
+        let g = BuildGraph::plan(&parsed);
+        assert_eq!(g.stage_count(), 4);
+        assert_eq!(g.deps(1), &[0]);
+        assert_eq!(g.deps(2), &[0]);
+        assert_eq!(g.deps(3), &[1, 2]);
+        assert_eq!(
+            (g.level(0), g.level(1), g.level(2), g.level(3)),
+            (0, 1, 1, 2)
+        );
+        assert_eq!(g.schedule(), vec![vec![0], vec![1, 2], vec![3]]);
+        let mut b = Builder::new();
+        let mut s = LayerStore::new();
+        let r = b.build(&parsed, "diamond:1", &mut s).unwrap();
+        assert_eq!(r.stages_built, 4);
+        // the common stage was built once, not once per branch
+        assert_eq!(r.layers_built, 2 + 1 + 1 + 3);
+    }
+
+    #[test]
+    fn fork_and_absorb_share_cache_entries() {
+        let f = bf("FROM alpine:3.4\nRUN echo a");
+        let mut committed = Builder::new();
+        let mut store = LayerStore::new();
+        let mut fork = committed.fork();
+        fork.build(&f, "a:1", &mut store).unwrap();
+        assert_eq!(committed.cache_len(), 0, "fork does not leak back");
+        committed.absorb(fork);
+        assert_eq!(committed.cache_len(), 2);
+        let warm = committed.build(&f, "a:2", &mut store).unwrap();
+        assert_eq!(warm.layers_built, 0);
+        assert_eq!(warm.layers_cached, 2);
     }
 }

@@ -1,4 +1,4 @@
-//! Buildfile (Dockerfile-DSL) parser.
+//! Buildfile (Dockerfile-DSL) parser, multi-stage aware.
 //!
 //! Supports the directives the paper's own Dockerfiles use (§2.2, §3.4):
 //! `FROM`, `RUN`, `ENV`, `USER`, `WORKDIR`, `COPY`, `ENTRYPOINT`,
@@ -8,13 +8,36 @@
 //! `ARCH_OPT` use host-architecture instruction sets (AVX) and do not
 //! pay the Fig 5a penalty.
 //!
+//! Multi-stage builds (§4.3's per-platform rebuild guidance at CI
+//! scale) follow Docker's rules:
+//!
+//! * `FROM <base> AS <stage>` opens a new build stage; `<base>` is a
+//!   catalogue reference or the *name of an earlier stage* (the stage
+//!   then continues that stage's layer chain);
+//! * `COPY --from=<stage> <src> <dst>` copies out of an earlier stage,
+//!   referenced by `AS` name or by decimal index;
+//! * the **last** stage is the build target — layers of earlier stages
+//!   exist only in the layer store (they are the build cache) and are
+//!   pruned from the final image.
+//!
+//! Stage references can only point backwards, so the stage-dependency
+//! graph a [`Buildfile`] parses into is acyclic by construction; the
+//! planner over it lives in [`super::builder::BuildGraph`].
+//!
 //! Syntax: one directive per line, `\` continuations, `#` comments.
 
 /// A parsed build directive.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Directive {
-    /// Base image to start from.
-    From(String),
+    /// Open a build stage from a base reference (`FROM <base>
+    /// [AS <stage>]`).  `base` may name an earlier stage.
+    From {
+        /// Catalogue reference, or the `AS` name of an earlier stage.
+        base: String,
+        /// Stage alias introduced with `AS` (anonymous stages have
+        /// none and are referenced by decimal index).
+        stage: Option<String>,
+    },
     /// Shell command whose filesystem effect becomes a layer.
     Run(String),
     /// Environment variable for the image config (no layer).
@@ -28,9 +51,13 @@ pub enum Directive {
     User(String),
     /// Working directory for the entrypoint.
     Workdir(String),
-    /// Copy project files into the image.
+    /// Copy files into the image — from the host build context, or
+    /// from an earlier stage (`COPY --from=<stage>`).
     Copy {
-        /// Host-side source path.
+        /// Source stage (`--from=`): an earlier stage's `AS` name or
+        /// decimal index; `None` copies from the host build context.
+        from: Option<String>,
+        /// Source path (host-side, or inside the source stage).
         src: String,
         /// Destination path inside the image.
         dst: String,
@@ -49,20 +76,44 @@ pub enum Directive {
 }
 
 impl Directive {
-    /// The canonical text form (what layer hashes commit to).
+    /// The canonical text form — a lossless round-trip of the parsed
+    /// directive (`parse(canonical)` reproduces the directive).  Layer
+    /// hashes commit to the builder's *cache-canonical* form instead,
+    /// which strips stage aliases and substitutes `COPY --from` stage
+    /// names with content digests (see `builder`).
     pub fn canonical(&self) -> String {
         match self {
-            Directive::From(b) => format!("FROM {b}"),
+            Directive::From { base, stage: None } => format!("FROM {base}"),
+            Directive::From { base, stage: Some(s) } => format!("FROM {base} AS {s}"),
             Directive::Run(c) => format!("RUN {c}"),
             Directive::Env { key, value } => format!("ENV {key}={value}"),
             Directive::User(u) => format!("USER {u}"),
             Directive::Workdir(w) => format!("WORKDIR {w}"),
-            Directive::Copy { src, dst } => format!("COPY {src} {dst}"),
+            Directive::Copy { from: None, src, dst } => format!("COPY {src} {dst}"),
+            Directive::Copy { from: Some(f), src, dst } => {
+                format!("COPY --from={f} {src} {dst}")
+            }
             Directive::Entrypoint(e) => format!("ENTRYPOINT {e}"),
             Directive::Label { key, value } => format!("LABEL {key}={value}"),
             Directive::ArchOpt => "ARCH_OPT".to_string(),
         }
     }
+}
+
+/// One `FROM …` section of a buildfile — a borrowed view produced by
+/// [`Buildfile::stages`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Stage<'a> {
+    /// Position in file order (also the stage's decimal `--from=N`
+    /// reference).
+    pub index: usize,
+    /// The `AS` alias, if the stage was named.
+    pub name: Option<&'a str>,
+    /// The `FROM` reference the stage starts from (catalogue image or
+    /// an earlier stage's name).
+    pub base: &'a str,
+    /// The stage's directives, its `FROM` first.
+    pub directives: &'a [Directive],
 }
 
 /// A parsed buildfile.
@@ -123,8 +174,12 @@ impl Buildfile {
             });
         }
 
-        // 2. parse directives
+        // 2. parse directives, validating stage structure as we go:
+        // stage names must be unique and stage references (`FROM
+        // <earlier stage>`, `COPY --from=`) may only point backwards —
+        // which is what makes the stage graph acyclic by construction
         let mut directives = Vec::new();
+        let mut stage_names: Vec<Option<String>> = Vec::new();
         for (line, text) in logical {
             let (word, rest) = match text.split_once(char::is_whitespace) {
                 Some((w, r)) => (w, r.trim()),
@@ -151,7 +206,39 @@ impl Buildfile {
             let d = match word.to_ascii_uppercase().as_str() {
                 "FROM" => {
                     need("a base reference")?;
-                    Directive::From(rest.to_string())
+                    let toks: Vec<&str> = rest.split_whitespace().collect();
+                    let (base, stage) = match toks.as_slice() {
+                        [base] => (base.to_string(), None),
+                        [base, kw, name] if kw.eq_ignore_ascii_case("as") => {
+                            (base.to_string(), Some(name.to_string()))
+                        }
+                        _ => {
+                            return Err(ParseError {
+                                line,
+                                message: "FROM takes `<base>` or `<base> AS <stage>`".into(),
+                            })
+                        }
+                    };
+                    if let Some(name) = &stage {
+                        let dup = stage_names.iter().any(|n| n.as_deref() == Some(name.as_str()));
+                        if dup {
+                            return Err(ParseError {
+                                line,
+                                message: format!("duplicate stage name `{name}`"),
+                            });
+                        }
+                        if name.parse::<usize>().is_ok() {
+                            return Err(ParseError {
+                                line,
+                                message: format!(
+                                    "stage name `{name}` is numeric (reserved for \
+                                     `--from=<index>` references)"
+                                ),
+                            });
+                        }
+                    }
+                    stage_names.push(stage.clone());
+                    Directive::From { base, stage }
                 }
                 "RUN" => {
                     need("a command")?;
@@ -171,11 +258,45 @@ impl Buildfile {
                 }
                 "COPY" => {
                     need("source and destination")?;
-                    let (src, dst) = rest.split_once(char::is_whitespace).ok_or(ParseError {
+                    let (from, paths) = match rest.strip_prefix("--from=") {
+                        Some(tail) => {
+                            let (stage, tail) =
+                                tail.split_once(char::is_whitespace).ok_or(ParseError {
+                                    line,
+                                    message: "COPY --from=<stage> requires source and destination"
+                                        .into(),
+                                })?;
+                            if stage.is_empty() {
+                                return Err(ParseError {
+                                    line,
+                                    message: "COPY --from= requires a stage name or index".into(),
+                                });
+                            }
+                            (Some(stage.to_string()), tail.trim())
+                        }
+                        None => (None, rest),
+                    };
+                    let (src, dst) = paths.split_once(char::is_whitespace).ok_or(ParseError {
                         line,
                         message: "COPY requires source and destination".into(),
                     })?;
+                    if let Some(stage) = &from {
+                        // the current stage is stage_names.len() - 1;
+                        // --from must resolve strictly before it
+                        let current = stage_names.len().saturating_sub(1);
+                        let earlier: Vec<Option<&str>> =
+                            stage_names[..current].iter().map(|n| n.as_deref()).collect();
+                        if resolve_among(&earlier, stage).is_none() {
+                            return Err(ParseError {
+                                line,
+                                message: format!(
+                                    "COPY --from=`{stage}` does not name an earlier stage"
+                                ),
+                            });
+                        }
+                    }
                     Directive::Copy {
+                        from,
                         src: src.trim().to_string(),
                         dst: dst.trim().to_string(),
                     }
@@ -201,7 +322,7 @@ impl Buildfile {
 
         // 3. structural checks
         match directives.first() {
-            Some(Directive::From(_)) => {}
+            Some(Directive::From { .. }) => {}
             _ => {
                 return Err(ParseError {
                     line: 1,
@@ -209,25 +330,93 @@ impl Buildfile {
                 })
             }
         }
-        if directives
-            .iter()
-            .skip(1)
-            .any(|d| matches!(d, Directive::From(_)))
-        {
-            return Err(ParseError {
-                line: 0,
-                message: "multi-stage builds (second FROM) are not supported".into(),
-            });
-        }
         Ok(Buildfile { directives })
     }
 
-    /// The base reference of the first FROM.
+    /// The base reference of the first `FROM`.
     pub fn base(&self) -> &str {
         match &self.directives[0] {
-            Directive::From(b) => b,
+            Directive::From { base, .. } => base,
             _ => unreachable!("parse() guarantees FROM first"),
         }
+    }
+
+    /// The buildfile's stages, in file order.  Single-stage files
+    /// return exactly one entry covering every directive.
+    pub fn stages(&self) -> Vec<Stage<'_>> {
+        let mut bounds: Vec<usize> = self
+            .directives
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| matches!(d, Directive::From { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        bounds.push(self.directives.len());
+        bounds
+            .windows(2)
+            .enumerate()
+            .map(|(index, w)| {
+                let directives = &self.directives[w[0]..w[1]];
+                let (base, name) = match &directives[0] {
+                    Directive::From { base, stage } => (base.as_str(), stage.as_deref()),
+                    _ => unreachable!("stage bounds start at FROM"),
+                };
+                Stage {
+                    index,
+                    name,
+                    base,
+                    directives,
+                }
+            })
+            .collect()
+    }
+
+    /// Number of stages (`FROM` directives).
+    pub fn stage_count(&self) -> usize {
+        self.directives
+            .iter()
+            .filter(|d| matches!(d, Directive::From { .. }))
+            .count()
+    }
+
+    /// The `AS` names of all stages, in stage order (`None` for
+    /// anonymous stages) — the vector [`resolve_stage`] resolves
+    /// against.  The builder and planner derive the same vector from
+    /// the [`stages`] list they already hold and pass slices of it to
+    /// the crate-internal `resolve_among`, so resolution rules live in
+    /// exactly one place.
+    ///
+    /// [`resolve_stage`]: Self::resolve_stage
+    /// [`stages`]: Self::stages
+    pub fn stage_names(&self) -> Vec<Option<&str>> {
+        self.directives
+            .iter()
+            .filter_map(|d| match d {
+                Directive::From { stage, .. } => Some(stage.as_deref()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Resolve a stage reference (an `AS` name or decimal index) among
+    /// the stages *strictly before* `before`.  This is the rule both
+    /// `COPY --from=` and stage-base `FROM`s obey, so references can
+    /// only point backwards.
+    pub fn resolve_stage(&self, reference: &str, before: usize) -> Option<usize> {
+        let names = self.stage_names();
+        resolve_among(&names[..before.min(names.len())], reference)
+    }
+}
+
+/// Resolve `reference` (an `AS` name, else a decimal index) against the
+/// given earlier-stage names (`None` = anonymous).
+pub(crate) fn resolve_among(earlier: &[Option<&str>], reference: &str) -> Option<usize> {
+    if let Some(i) = earlier.iter().position(|n| *n == Some(reference)) {
+        return Some(i);
+    }
+    match reference.parse::<usize>() {
+        Ok(i) if i < earlier.len() => Some(i),
+        _ => None,
     }
 }
 
@@ -250,6 +439,7 @@ RUN apt-get -y update && \
         let bf = Buildfile::parse(PAPER_EXAMPLE).unwrap();
         assert_eq!(bf.base(), "ubuntu:16.04");
         assert_eq!(bf.directives.len(), 3);
+        assert_eq!(bf.stage_count(), 1);
         match &bf.directives[2] {
             Directive::Run(cmd) => {
                 assert!(cmd.contains("apt-get -y update"));
@@ -285,6 +475,7 @@ RUN apt-get -y update && \
         assert_eq!(
             bf.directives[1],
             Directive::Copy {
+                from: None,
                 src: "./src".into(),
                 dst: "/app".into()
             }
@@ -299,9 +490,76 @@ RUN apt-get -y update && \
     }
 
     #[test]
-    fn rejects_multistage() {
-        let err = Buildfile::parse("FROM a:1\nFROM b:2").unwrap_err();
-        assert!(err.message.contains("multi-stage"));
+    fn parses_multistage_with_named_stages() {
+        let text = "FROM a:1 AS build\nRUN make\nFROM b:2\nCOPY --from=build /out /app";
+        let bf = Buildfile::parse(text).unwrap();
+        let stages = bf.stages();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].name, Some("build"));
+        assert_eq!(stages[0].base, "a:1");
+        assert_eq!(stages[0].directives.len(), 2);
+        assert_eq!(stages[1].name, None);
+        assert_eq!(stages[1].base, "b:2");
+        assert_eq!(
+            bf.directives[3],
+            Directive::Copy {
+                from: Some("build".into()),
+                src: "/out".into(),
+                dst: "/app".into()
+            }
+        );
+    }
+
+    #[test]
+    fn stage_base_may_name_an_earlier_stage() {
+        let bf = Buildfile::parse("FROM a:1 AS base\nFROM base AS derived\nRUN x").unwrap();
+        let stages = bf.stages();
+        assert_eq!(stages[1].base, "base");
+        assert_eq!(bf.resolve_stage("base", 1), Some(0));
+        // a stage cannot resolve itself or later stages
+        assert_eq!(bf.resolve_stage("derived", 1), None);
+        assert_eq!(bf.resolve_stage("derived", 2), Some(1));
+    }
+
+    #[test]
+    fn copy_from_resolves_by_index_too() {
+        let text = "FROM a:1\nRUN make\nFROM b:2\nCOPY --from=0 /out /app";
+        let bf = Buildfile::parse(text).unwrap();
+        assert_eq!(bf.resolve_stage("0", 1), Some(0));
+        assert_eq!(bf.resolve_stage("1", 1), None);
+    }
+
+    #[test]
+    fn rejects_forward_and_unknown_copy_from() {
+        let err = Buildfile::parse("FROM a:1\nCOPY --from=ghost /x /y").unwrap_err();
+        assert!(err.message.contains("earlier stage"), "{}", err.message);
+        // self-reference is a forward reference
+        let err = Buildfile::parse("FROM a:1 AS me\nCOPY --from=me /x /y").unwrap_err();
+        assert!(err.message.contains("earlier stage"));
+        // numeric self/forward index
+        let err = Buildfile::parse("FROM a:1\nCOPY --from=0 /x /y").unwrap_err();
+        assert!(err.message.contains("earlier stage"));
+    }
+
+    #[test]
+    fn rejects_duplicate_and_numeric_stage_names() {
+        let err = Buildfile::parse("FROM a:1 AS s\nFROM b:2 AS s").unwrap_err();
+        assert!(err.message.contains("duplicate stage name"));
+        assert_eq!(err.line, 2);
+        let err = Buildfile::parse("FROM a:1 AS 3").unwrap_err();
+        assert!(err.message.contains("numeric"));
+    }
+
+    #[test]
+    fn rejects_malformed_from_and_copy_from() {
+        let err = Buildfile::parse("FROM a:1 AS").unwrap_err();
+        assert!(err.message.contains("FROM takes"));
+        let err = Buildfile::parse("FROM a:1 AS x y").unwrap_err();
+        assert!(err.message.contains("FROM takes"));
+        let err = Buildfile::parse("FROM a:1\nFROM b:2\nCOPY --from= /x /y").unwrap_err();
+        assert!(err.message.contains("requires a stage"));
+        let err = Buildfile::parse("FROM a:1\nFROM b:2\nCOPY --from=0 /only").unwrap_err();
+        assert!(err.message.contains("source and destination"));
     }
 
     #[test]
@@ -325,14 +583,31 @@ RUN apt-get -y update && \
 
     #[test]
     fn canonical_round_trip() {
-        let bf = Buildfile::parse("FROM u:1\nENV A=b\nRUN make -j").unwrap();
+        let text = "FROM u:1 AS build\nENV A=b\nRUN make -j\nFROM u:1\n\
+                    COPY --from=build /out /app\nCOPY ./src /app/src";
+        let bf = Buildfile::parse(text).unwrap();
         let canon: Vec<_> = bf.directives.iter().map(|d| d.canonical()).collect();
-        assert_eq!(canon, vec!["FROM u:1", "ENV A=b", "RUN make -j"]);
+        assert_eq!(
+            canon,
+            vec![
+                "FROM u:1 AS build",
+                "ENV A=b",
+                "RUN make -j",
+                "FROM u:1",
+                "COPY --from=build /out /app",
+                "COPY ./src /app/src",
+            ]
+        );
+        // canonical() is lossless: reparsing reproduces the directives
+        let back = Buildfile::parse(&canon.join("\n")).unwrap();
+        assert_eq!(back, bf);
     }
 
     #[test]
     fn case_insensitive_directives() {
         let bf = Buildfile::parse("from u:1\nrun echo").unwrap();
         assert_eq!(bf.directives.len(), 2);
+        let bf = Buildfile::parse("FROM u:1 as build\nRUN echo").unwrap();
+        assert_eq!(bf.stages()[0].name, Some("build"));
     }
 }

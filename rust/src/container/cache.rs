@@ -161,6 +161,19 @@ impl LayerCache {
         self.store.missing(wanted)
     }
 
+    /// The accounted form of [`missing`](Self::missing): look every id
+    /// up through [`lookup`](Self::lookup) — recording hits, misses,
+    /// and recency — and return the ids a transfer must supply, in
+    /// `wanted` order.  One call per deploy/push wave keeps the
+    /// hit-rate accounting honest without per-caller loops.
+    pub fn filter_missing(&mut self, wanted: &[LayerId]) -> Vec<LayerId> {
+        wanted
+            .iter()
+            .filter(|id| self.lookup(id).is_none())
+            .cloned()
+            .collect()
+    }
+
     /// Accumulated hit/miss/eviction counters.
     pub fn stats(&self) -> CacheStats {
         self.stats
@@ -281,6 +294,20 @@ mod tests {
         let wanted = vec![a.id.clone(), b.id.clone()];
         let miss = c.missing(&wanted);
         assert_eq!(miss, vec![&b.id]);
+    }
+
+    #[test]
+    fn filter_missing_accounts_hits_and_misses() {
+        let mut c = LayerCache::unbounded();
+        let a = layer("a", 10);
+        let b = layer("b", 20);
+        c.admit(a.clone());
+        let wanted = vec![a.id.clone(), b.id.clone()];
+        let miss = c.filter_missing(&wanted);
+        assert_eq!(miss, vec![b.id.clone()]);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.bytes_hit, 10);
     }
 
     #[test]

@@ -453,12 +453,7 @@ impl Fleet {
             // node caches hold the blob (id + bytes + provenance), not
             // the file manifest — that stays in the catalogue, exactly
             // as a compressed blob cache on a real node would
-            let blob = Layer {
-                id: layer.id.clone(),
-                directive: layer.directive.clone(),
-                files: Vec::new(),
-                bytes: layer.bytes,
-            };
+            let blob = layer.blob();
 
             match self.config.fan_out {
                 FanOut::Direct => {

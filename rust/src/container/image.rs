@@ -84,6 +84,20 @@ impl Layer {
     pub fn file_count(&self) -> usize {
         self.files.len()
     }
+
+    /// The layer as a transferable blob: id, provenance, and
+    /// compressed size, but no file manifest.  This is what node
+    /// caches and registries move around — the manifest stays with the
+    /// catalogue copy, exactly as a compressed blob on a real node
+    /// would.
+    pub fn blob(&self) -> Layer {
+        Layer {
+            id: self.id.clone(),
+            directive: self.directive.clone(),
+            files: Vec::new(),
+            bytes: self.bytes,
+        }
+    }
 }
 
 /// An immutable image: layer stack + runtime config.

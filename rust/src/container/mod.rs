@@ -11,11 +11,15 @@
 //!   which shared base layers are stored once (§2.2's compactness
 //!   argument is measurable via [`store::LayerStore::dedup_ratio`]).
 //! * [`buildfile`] — parser for the Dockerfile-like build DSL
-//!   (`FROM` / `RUN` / `ENV` / `COPY` / `USER` / `WORKDIR` /
-//!   `ENTRYPOINT` / `LABEL` / `ARCH_OPT`).
-//! * [`builder`] — executes a buildfile into an image, with layer
-//!   caching keyed on (parent hash, directive) — the same cache rule
-//!   Docker uses.
+//!   (`FROM [... AS <stage>]` / `RUN` / `ENV` / `COPY [--from=<stage>]`
+//!   / `USER` / `WORKDIR` / `ENTRYPOINT` / `LABEL` / `ARCH_OPT`);
+//!   multi-stage files parse into a stage-dependency DAG.
+//! * [`builder`] — executes a buildfile into an image: a
+//!   [`BuildGraph`] planner walks the stage DAG in topological order,
+//!   every layer is keyed by a content hash of (parent chain,
+//!   cache-canonical directive, `COPY --from` source digests) — the
+//!   same cache rule Docker uses — and non-terminal stages are pruned
+//!   from the final image.
 //! * [`registry`] — a quay.io-like registry: push/pull move only the
 //!   layers the other side is missing, with transfer times from a
 //!   bandwidth model (pull times show up in the deployment pipeline
@@ -47,8 +51,8 @@ pub mod runtime;
 pub mod session;
 pub mod store;
 
-pub use buildfile::{Buildfile, Directive};
-pub use builder::Builder;
+pub use buildfile::{Buildfile, Directive, Stage};
+pub use builder::{BuildGraph, BuildReport, Builder};
 pub use cache::{CacheStats, LayerCache};
 pub use distribute::{FanOut, Fleet, FleetConfig, FleetReport, ShardedRegistry};
 pub use image::{Image, ImageId, Layer, LayerId};

@@ -125,6 +125,28 @@ impl LayerStore {
     pub fn ids(&self) -> impl Iterator<Item = &LayerId> {
         self.layers.keys()
     }
+
+    /// Garbage-collect: drop every resident layer `keep` rejects,
+    /// returning `(layers_freed, bytes_freed)`.  A build farm calls
+    /// this between passes with "reachable from a pushed image" as the
+    /// predicate — intermediate stage layers that no image references
+    /// are the collectable garbage.  Lifetime counters are monotone
+    /// and unaffected, exactly as with [`remove`](Self::remove).
+    pub fn retain(&mut self, keep: impl Fn(&LayerId) -> bool) -> (usize, u64) {
+        let mut freed = 0usize;
+        let mut bytes = 0u64;
+        self.layers.retain(|id, layer| {
+            if keep(id) {
+                true
+            } else {
+                freed += 1;
+                bytes += layer.bytes;
+                false
+            }
+        });
+        self.resident_bytes -= bytes;
+        (freed, bytes)
+    }
 }
 
 #[cfg(test)]
@@ -203,6 +225,24 @@ mod tests {
         assert!(s.is_empty());
         assert_eq!(s.logical_bytes(), 5); // lifetime counter is monotone
         assert!(s.remove(&a.id).is_none());
+    }
+
+    #[test]
+    fn retain_frees_unreachable_layers() {
+        let mut s = LayerStore::new();
+        let a = layer("a", 100);
+        let b = layer("b", 50);
+        let c = layer("c", 25);
+        s.insert(a.clone());
+        s.insert(b.clone());
+        s.insert(c.clone());
+        let (freed, bytes) = s.retain(|id| *id == a.id);
+        assert_eq!((freed, bytes), (2, 75));
+        assert!(s.contains(&a.id));
+        assert_eq!(s.physical_bytes(), 100);
+        assert_eq!(s.logical_bytes(), 175, "lifetime counter is monotone");
+        // retaining everything is a no-op
+        assert_eq!(s.retain(|_| true), (0, 0));
     }
 
     #[test]

@@ -67,6 +67,11 @@ live registry — the same table lives in EXPERIMENTS.md):
               storm on the shared Lustre (§4 discussion, unmeasured in
               the paper); containerising the Python tenant returns the
               writer to solo time
+  build-farm  CI fleet building the §4.3 per-platform ARCH_OPT variant
+              matrix as multi-stage buildfiles on 1..16 workers: one
+              shared build/blob cache, pushes through 4 registry
+              shards, non-terminal stages pruned; cold vs warm farm
+              makespan and cache-hit ratios
   all         every registered scenario
 
 Scenarios expand into independent cells run across `--jobs N` worker
@@ -125,6 +130,12 @@ fn cmd_build(raw: &[String]) -> anyhow::Result<()> {
         report.image.file_count(&store),
         report.build_time,
     );
+    if report.graph.stage_count() > 1 {
+        println!(
+            "  stages: {} built, {} skipped; critical path {} (stage-parallel)",
+            report.stages_built, report.stages_skipped, report.critical_path,
+        );
+    }
     for (i, layer) in report.image.layers.iter().enumerate() {
         let l = store.get(layer).unwrap();
         println!("  layer {i}: {} <- {}", layer, l.directive);
@@ -219,7 +230,7 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
         .opt("seed", "base simulation seed", None)
         .opt("config", "experiment config JSON (overrides defaults)", None)
         .opt("out", "also write a JSON report to this path", None)
-        .opt("nodes", "comma-separated fleet sizes (fig1-scale; default 64,512,4096,16384)", None)
+        .opt("nodes", "comma-separated fleet sizes (fig1-scale) or workers (build-farm)", None)
         .opt("jobs", "matrix workers; 0 = available parallelism (bit-identical)", Some("0"))
         .switch("list", "list the registered scenarios and exit")
         .switch("json", "print JSON instead of ASCII bars")
@@ -266,8 +277,9 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
             .collect(),
         one => vec![one.to_string()],
     };
-    if p.get("nodes").is_some() && !figures.iter().any(|f| f == "fig1-scale") {
-        anyhow::bail!("--nodes only applies to fig1-scale");
+    let takes_nodes = |f: &str| f == "fig1-scale" || f == "build-farm";
+    if p.get("nodes").is_some() && !figures.iter().any(|f| takes_nodes(f)) {
+        anyhow::bail!("--nodes only applies to fig1-scale and build-farm");
     }
     let mut all_json = Vec::new();
     for figure in &figures {
@@ -298,7 +310,7 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
             cfg.seed = seed.parse()?;
         }
         if let Some(nodes) = p.get("nodes") {
-            if figure == "fig1-scale" {
+            if takes_nodes(figure) {
                 cfg.nodes = nodes
                     .split(',')
                     .map(|s| s.trim().parse::<usize>())

@@ -1,0 +1,417 @@
+//! `build-farm` as a scenario: N CI workers building the §4.3
+//! per-platform `ARCH_OPT` variant matrix against one shared layer
+//! cache, pushing through the sharded registry.
+//!
+//! The paper's productivity argument (§2.2) rests on building the
+//! FEniCS stack once as layered images; its §4.3 guidance implies a
+//! *rebuild per host microarchitecture*.  At CI scale that is a build
+//! farm: every (application × microarchitecture) variant is a
+//! multi-stage buildfile whose early stages (toolchain, dependencies)
+//! are shared across variants, so a shared content-addressed build
+//! cache turns the matrix from `O(variants × stages)` work into
+//! `O(distinct stages)`.
+//!
+//! The farm is a DES: worker-completion events go through one calendar
+//! [`EventQueue`] (the initial wave enters as a `push_batch`), each
+//! build runs against a **fork** of the committed [`Builder`] cache
+//! and is absorbed only at its completion instant (a build cannot hit
+//! cache entries from builds that finish after it started), and each
+//! finished image is pushed through a [`ShardedRegistry`] — blobs the
+//! shared [`LayerCache`] already holds skip the WAN.  Between passes
+//! the farm garbage-collects store layers no pushed image references
+//! (the pruned non-terminal stages).
+//!
+//! Cell = one farm size; the cold pass vs the warm re-run of the same
+//! matrix become the paper-style figure rows.
+//!
+//! [`EventQueue`]: crate::des::EventQueue
+
+use std::collections::HashSet;
+
+use anyhow::Result;
+
+use crate::bench::{Figure, Row};
+use crate::config::ExperimentConfig;
+use crate::container::{
+    BuildReport, Builder, Buildfile, CacheStats, LayerCache, LayerId, LayerStore, Registry,
+    ShardedRegistry,
+};
+use crate::des::{Duration, EventQueue, QueueStats, VirtualTime};
+use crate::metrics::Stats;
+
+use super::{Cell, CellResult, Scenario, SimContext};
+
+/// Target microarchitectures the farm builds `ARCH_OPT` variants for
+/// (the §4.3 "rebuild performance-critical binaries per host" axis).
+pub const ARCHES: [&str; 4] = ["sandybridge", "haswell", "skylake", "knl"];
+
+/// Application stacks the farm builds: (name, builder-stage packages).
+pub const APPS: [(&str, &str); 3] = [
+    ("poisson", "petsc"),
+    ("hpgmg", "petsc hypre"),
+    ("dolfin", "petsc slepc swig"),
+];
+
+/// The multi-stage buildfile of one (app, arch) variant: a toolchain
+/// stage shared by every variant, a dependency stage shared by the
+/// app's variants, an arch-specific compile stage, and a slim runtime
+/// stage that copies the artifacts out and `ARCH_OPT`s the result —
+/// the builder stages are pruned from the pushed image.
+pub fn variant_buildfile(app: &str, pkgs: &str, arch: &str) -> String {
+    format!(
+        "FROM ubuntu:16.04 AS toolchain\n\
+         RUN apt-get -y update && apt-get -y install build-essential gfortran cmake\n\
+         FROM toolchain AS deps\n\
+         RUN apt-get -y install {pkgs}\n\
+         FROM deps AS build\n\
+         RUN make -j ARCH={arch} {app}\n\
+         FROM ubuntu:16.04\n\
+         COPY --from=build /usr/local/{app} /opt/{app}\n\
+         COPY --from=deps /usr/apt/config /opt/etc\n\
+         ARCH_OPT\n\
+         ENTRYPOINT /opt/{app}/bin/run --arch {arch}\n"
+    )
+}
+
+/// The full variant matrix, in job order: `(tag, buildfile)` for every
+/// application × microarchitecture pair.
+pub fn variant_matrix() -> Result<Vec<(String, Buildfile)>> {
+    let mut jobs = Vec::with_capacity(APPS.len() * ARCHES.len());
+    for (app, pkgs) in APPS {
+        for arch in ARCHES {
+            let bf = Buildfile::parse(&variant_buildfile(app, pkgs, arch))
+                .map_err(anyhow::Error::new)?;
+            jobs.push((format!("local/{app}:{arch}"), bf));
+        }
+    }
+    Ok(jobs)
+}
+
+/// Static description of a CI build farm.
+#[derive(Debug, Clone)]
+pub struct FarmConfig {
+    /// Concurrent CI workers.
+    pub workers: usize,
+    /// Registry shard frontends the farm pushes through.
+    pub shards: usize,
+    /// Fixed per-job setup cost (checkout, context upload).
+    pub setup: Duration,
+    /// Per-directive cache-probe cost a build pays, hit or miss (what
+    /// a fully warm build still costs).
+    pub per_layer_probe: Duration,
+}
+
+impl FarmConfig {
+    /// A CI-fleet default: 4 registry shards, 500 ms job setup, 5 ms
+    /// per-directive cache probe.
+    pub fn ci(workers: usize) -> Self {
+        FarmConfig {
+            workers,
+            shards: 4,
+            setup: Duration::from_millis(500),
+            per_layer_probe: Duration::from_millis(5),
+        }
+    }
+}
+
+/// What one farm pass over a job matrix did.
+#[derive(Debug, Clone)]
+pub struct FarmPass {
+    /// Jobs executed.
+    pub jobs: usize,
+    /// Span from the pass start until the last image was published.
+    pub makespan: Duration,
+    /// Layers built fresh across all jobs.
+    pub layers_built: usize,
+    /// Layers answered from the shared build cache.
+    pub layers_cached: usize,
+    /// Bytes pushed over the WAN (blob-cache misses only).
+    pub wan_bytes: u64,
+    /// WAN transfers performed.
+    pub wan_transfers: usize,
+    /// Shared blob-cache accounting for this pass only.
+    pub cache: CacheStats,
+    /// Calendar-queue counters of the pass's completion scheduler.
+    pub queue: QueueStats,
+    /// Images pushed to the registry.
+    pub images_pushed: usize,
+    /// Store layers garbage-collected after the pass (non-terminal
+    /// stage layers no pushed image references).
+    pub gc_layers: usize,
+    /// Bytes freed by the garbage collection.
+    pub gc_bytes: u64,
+}
+
+impl FarmPass {
+    /// Build-cache hit rate: cached / (built + cached).
+    pub fn build_hit_rate(&self) -> f64 {
+        let total = self.layers_built + self.layers_cached;
+        if total == 0 {
+            0.0
+        } else {
+            self.layers_cached as f64 / total as f64
+        }
+    }
+}
+
+/// A CI build farm: a committed [`Builder`] cache, a shared
+/// [`LayerStore`], a shared blob [`LayerCache`] in front of a
+/// [`ShardedRegistry`], and a virtual clock that advances with each
+/// [`run_pass`](BuildFarm::run_pass).
+#[derive(Debug)]
+pub struct BuildFarm {
+    config: FarmConfig,
+    builder: Builder,
+    store: LayerStore,
+    blob_cache: LayerCache,
+    registry: ShardedRegistry,
+    pushed: HashSet<LayerId>,
+    clock: VirtualTime,
+}
+
+impl BuildFarm {
+    /// A cold farm (empty caches) at virtual time zero.
+    pub fn new(config: FarmConfig) -> Self {
+        assert!(config.workers >= 1, "farm needs at least one worker");
+        let registry = ShardedRegistry::new(Registry::new(), config.shards);
+        BuildFarm {
+            config,
+            builder: Builder::new(),
+            store: LayerStore::new(),
+            blob_cache: LayerCache::unbounded(),
+            registry,
+            pushed: HashSet::new(),
+            clock: VirtualTime::ZERO,
+        }
+    }
+
+    /// The farm's configuration.
+    pub fn config(&self) -> &FarmConfig {
+        &self.config
+    }
+
+    /// The registry the farm pushes into.
+    pub fn registry(&self) -> &ShardedRegistry {
+        &self.registry
+    }
+
+    /// The shared layer store (after GC: pushed-image layers only).
+    pub fn store(&self) -> &LayerStore {
+        &self.store
+    }
+
+    /// The farm's virtual clock.
+    pub fn now(&self) -> VirtualTime {
+        self.clock
+    }
+
+    /// Run one pass over `jobs` on the farm's workers, in virtual
+    /// time, and garbage-collect the store afterwards.  Passes share
+    /// the build and blob caches — that is the point: the second pass
+    /// over the same matrix is warm.
+    pub fn run_pass(&mut self, jobs: &[(String, Buildfile)]) -> Result<FarmPass> {
+        let t0 = self.clock;
+        let workers = self.config.workers;
+        let cache_before = self.blob_cache.stats();
+        let mut queue: EventQueue<usize> = EventQueue::with_capacity(workers);
+        let mut pending: Vec<Option<(Builder, BuildReport)>> =
+            (0..workers).map(|_| None).collect();
+        let mut next_job = 0usize;
+        let mut finish = t0;
+        let mut layers_built = 0usize;
+        let mut layers_cached = 0usize;
+        let mut wan_bytes = 0u64;
+        let mut wan_transfers = 0usize;
+        let mut images_pushed = 0usize;
+
+        // initial wave: one job per idle worker, entering the calendar
+        // queue as a single batch
+        let mut batch = Vec::with_capacity(workers.min(jobs.len()));
+        for worker in 0..workers.min(jobs.len()) {
+            let done = self.start_job(&jobs[next_job], t0, worker, &mut pending)?;
+            batch.push((done, worker));
+            next_job += 1;
+        }
+        queue.push_batch(batch);
+
+        while let Some((now, worker)) = queue.pop() {
+            // commit the worker's build: absorb its cache fork, then
+            // push the image — blobs the shared cache holds skip the WAN
+            let (fork, report) = pending[worker].take().expect("worker had a job");
+            self.builder.absorb(fork);
+            layers_built += report.layers_built;
+            layers_cached += report.layers_cached;
+            let mut publish = now;
+            for id in self.blob_cache.filter_missing(&report.image.layers) {
+                let blob = self.store.get(&id).expect("built layers are stored").blob();
+                let done = self.registry.submit_transfer(now, &id, blob.bytes);
+                wan_bytes += blob.bytes;
+                wan_transfers += 1;
+                publish = publish.max(done);
+                self.blob_cache.admit(blob);
+            }
+            self.registry.push(&report.image, &self.store)?;
+            self.pushed.extend(report.image.layers.iter().cloned());
+            images_pushed += 1;
+            finish = finish.max(publish);
+
+            if next_job < jobs.len() {
+                let done = self.start_job(&jobs[next_job], now, worker, &mut pending)?;
+                queue.push(done, worker);
+                next_job += 1;
+            }
+        }
+
+        let queue_stats = queue.stats();
+        self.clock = finish;
+        let pushed = std::mem::take(&mut self.pushed);
+        let (gc_layers, gc_bytes) = self.store.retain(|id| pushed.contains(id));
+        self.pushed = pushed;
+
+        Ok(FarmPass {
+            jobs: jobs.len(),
+            makespan: finish.since(t0),
+            layers_built,
+            layers_cached,
+            wan_bytes,
+            wan_transfers,
+            cache: self.blob_cache.stats().since(&cache_before),
+            queue: queue_stats,
+            images_pushed,
+            gc_layers,
+            gc_bytes,
+        })
+    }
+
+    /// Start one job on `worker` at `now`: build against a fork of the
+    /// committed cache (commit happens at completion) and return the
+    /// completion instant — setup, the stage DAG's critical path (farm
+    /// workers run independent stages concurrently), and the
+    /// per-directive cache probes.
+    fn start_job(
+        &mut self,
+        job: &(String, Buildfile),
+        now: VirtualTime,
+        worker: usize,
+        pending: &mut [Option<(Builder, BuildReport)>],
+    ) -> Result<VirtualTime> {
+        let (tag, bf) = job;
+        let mut fork = self.builder.fork();
+        let report = fork.build(bf, tag, &mut self.store)?;
+        let probes = (report.layers_built + report.layers_cached) as u64;
+        let done = now
+            + self.config.setup
+            + report.critical_path
+            + self.config.per_layer_probe * probes;
+        pending[worker] = Some((fork, report));
+        Ok(done)
+    }
+}
+
+/// The CI build-farm scenario.
+pub struct BuildFarmScenario;
+
+/// One farm-size cell.
+#[derive(Debug, Clone, Copy)]
+struct FarmCell {
+    workers: usize,
+}
+
+impl Scenario for BuildFarmScenario {
+    fn name(&self) -> &'static str {
+        "build-farm"
+    }
+
+    fn describe(&self) -> &'static str {
+        "CI fleet building the §4.3 per-platform ARCH_OPT variant matrix \
+         (multi-stage buildfiles) on 1-16 workers with one shared layer \
+         cache, pushing through 4 registry shards; cold vs warm farm \
+         makespan and cache-hit ratios"
+    }
+
+    fn cells(&self, cfg: &ExperimentConfig) -> Result<Vec<Cell>> {
+        anyhow::ensure!(
+            !cfg.nodes.is_empty(),
+            "build-farm needs at least one worker count in `nodes`"
+        );
+        anyhow::ensure!(
+            cfg.nodes.iter().all(|&n| n >= 1),
+            "build-farm worker counts must be >= 1 (got {:?})",
+            cfg.nodes
+        );
+        Ok(cfg
+            .nodes
+            .iter()
+            .map(|&workers| {
+                Cell::new(format!("build-farm {workers} workers"), FarmCell { workers })
+            })
+            .collect())
+    }
+
+    fn run_cell(&self, _ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult> {
+        let c: &FarmCell = cell.payload()?;
+        let jobs = variant_matrix()?;
+        let mut farm = BuildFarm::new(FarmConfig::ci(c.workers));
+        let cold = farm.run_pass(&jobs)?;
+        let warm = farm.run_pass(&jobs)?;
+        // breakdown keys carry a structural "cold:"/"warm:" tag so
+        // assembly routes them to the right figure (as fig1-scale does)
+        Ok(CellResult::values(vec![
+            cold.makespan.as_secs_f64(),
+            warm.makespan.as_secs_f64(),
+        ])
+        .with_breakdown(vec![
+            ("cold:build cache hit rate".into(), cold.build_hit_rate()),
+            ("cold:wan MB".into(), cold.wan_bytes as f64 / 1e6),
+            ("cold:gc MB".into(), cold.gc_bytes as f64 / 1e6),
+            ("warm:build cache hit rate".into(), warm.build_hit_rate()),
+            ("warm:wan MB".into(), warm.wan_bytes as f64 / 1e6),
+        ]))
+    }
+
+    fn assemble(
+        &self,
+        ctx: &SimContext<'_>,
+        _cells: &[Cell],
+        rows: Vec<CellResult>,
+    ) -> Result<Vec<Figure>> {
+        let mut cold_fig = Figure::new(
+            "Build farm — cold pass makespan (12-variant ARCH_OPT matrix)",
+            "makespan [s]",
+            false,
+        );
+        let mut warm_fig = Figure::new(
+            "Build farm — warm re-run makespan (shared caches)",
+            "makespan [s]",
+            false,
+        );
+        let mut worst_ratio = 0.0f64;
+        for r in &rows {
+            let workers = ctx.cfg.nodes[r.cell];
+            let (cold_s, warm_s) = (r.values[0], r.values[1]);
+            worst_ratio = worst_ratio.max(warm_s / cold_s);
+            let part = |prefix: &str| -> Vec<(String, f64)> {
+                r.breakdown
+                    .iter()
+                    .filter_map(|(k, v)| k.strip_prefix(prefix).map(|k| (k.to_string(), *v)))
+                    .collect()
+            };
+            cold_fig.push(
+                Row::new(format!("{workers} workers"), Stats::from_samples(vec![cold_s]))
+                    .with_breakdown(part("cold:")),
+            );
+            warm_fig.push(
+                Row::new(format!("{workers} workers"), Stats::from_samples(vec![warm_s]))
+                    .with_breakdown(part("warm:")),
+            );
+        }
+        cold_fig.note(
+            "shared toolchain/deps stages hit the farm-wide build cache; only \
+             terminal-stage blobs cross the WAN (non-terminal stages pruned)",
+        );
+        warm_fig.note(format!(
+            "warm/cold makespan ratio {worst_ratio:.5} (acceptance bar: < 0.10)"
+        ));
+        Ok(vec![cold_fig, warm_fig])
+    }
+}

@@ -12,10 +12,12 @@
 //!
 //! All of the paper's figures (`fig1-scale`, `fig2`, `fig3`, `fig4`,
 //! `fig5a`, `fig5b`) live here as scenario modules, next to scenarios
-//! the paper discusses but never measures (`mixed-fleet`).  Adding a
-//! new experiment is a [`ScenarioRegistry::register`] call away — the
-//! walkthrough lives in `docs/ARCHITECTURE.md` §5.
+//! the paper discusses but never measures (`mixed-fleet`,
+//! `build-farm`).  Adding a new experiment is a
+//! [`ScenarioRegistry::register`] call away — the walkthrough lives in
+//! `docs/ARCHITECTURE.md` §5.
 
+pub mod build_farm;
 pub mod fig1_scale;
 pub mod fig2;
 pub mod fig34;
@@ -247,6 +249,7 @@ impl ScenarioRegistry {
         r.register(Box::new(fig5::Fig5 { workstation: true }));
         r.register(Box::new(fig5::Fig5 { workstation: false }));
         r.register(Box::new(mixed_fleet::MixedFleet));
+        r.register(Box::new(build_farm::BuildFarmScenario));
         r
     }
 
@@ -307,15 +310,24 @@ mod tests {
     use super::*;
 
     #[test]
-    fn builtin_registry_has_all_figures_and_mixed_fleet() {
+    fn builtin_registry_has_all_figures_and_extras() {
         let r = ScenarioRegistry::builtin();
         assert_eq!(
             r.names(),
-            vec!["fig1-scale", "fig2", "fig3", "fig4", "fig5a", "fig5b", "mixed-fleet"]
+            vec![
+                "fig1-scale",
+                "fig2",
+                "fig3",
+                "fig4",
+                "fig5a",
+                "fig5b",
+                "mixed-fleet",
+                "build-farm"
+            ]
         );
         assert!(r.get("fig2").is_some());
         assert!(r.get("fig9").is_none());
-        assert_eq!(r.len(), 7);
+        assert_eq!(r.len(), 8);
         assert!(!r.is_empty());
     }
 

@@ -1,0 +1,219 @@
+//! Integration suite for the multi-stage build DAG and the
+//! `build-farm` scenario:
+//!
+//! * multi-stage parse / canonical round-trips (including the real
+//!   variant matrix the farm builds);
+//! * diamond stage graphs: planning, wave schedule, and build output;
+//! * `COPY --from` cache invalidation when the source stage changes;
+//! * non-terminal stage pruning and the store GC that collects it;
+//! * `build-farm` renders byte-identically under `--jobs N` and is
+//!   listed by the scenario registry (what `harbor bench --list`
+//!   prints).
+
+use harbor::bench::Figure;
+use harbor::config::ExperimentConfig;
+use harbor::container::{BuildGraph, Builder, Buildfile, LayerStore};
+use harbor::coordinator::Coordinator;
+use harbor::runtime::CalibrationTable;
+use harbor::scenario::ScenarioRegistry;
+use harbor::scenario::build_farm::{
+    APPS, ARCHES, BuildFarm, FarmConfig, variant_buildfile, variant_matrix,
+};
+
+fn render_all(figs: &[Figure]) -> String {
+    figs.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+}
+
+#[test]
+fn variant_matrix_parses_and_round_trips() {
+    let jobs = variant_matrix().unwrap();
+    assert_eq!(jobs.len(), APPS.len() * ARCHES.len());
+    for (tag, bf) in &jobs {
+        assert!(tag.starts_with("local/"));
+        assert_eq!(bf.stage_count(), 4, "{tag} is a 4-stage file");
+        // canonical() is lossless: reparsing the canonical lines
+        // reproduces the parsed directives exactly
+        let canon: Vec<String> = bf.directives.iter().map(|d| d.canonical()).collect();
+        let back = Buildfile::parse(&canon.join("\n")).unwrap();
+        assert_eq!(&back, bf, "{tag} round-trips through canonical()");
+    }
+}
+
+#[test]
+fn variant_stages_form_a_chain_into_a_pruned_runtime_image() {
+    let (app, pkgs) = APPS[0];
+    let bf = Buildfile::parse(&variant_buildfile(app, pkgs, "haswell")).unwrap();
+    let g = BuildGraph::plan(&bf);
+    // toolchain <- deps <- build, and the final stage reads build+deps
+    assert_eq!(g.deps(0), &[] as &[usize]);
+    assert_eq!(g.deps(1), &[0]);
+    assert_eq!(g.deps(2), &[1]);
+    assert_eq!(g.deps(3), &[1, 2]);
+    assert_eq!(g.schedule(), vec![vec![0], vec![1], vec![2], vec![3]]);
+    let mut store = LayerStore::new();
+    let r = Builder::new().build(&bf, "v:1", &mut store).unwrap();
+    assert_eq!(r.stages_built, 4);
+    // runtime image: ubuntu base + 2 COPYs + ARCH_OPT; builder layers pruned
+    assert_eq!(r.image.layers.len(), 4);
+    assert!(r.image.arch_optimized, "final stage carries ARCH_OPT");
+    assert!(store.len() > r.image.layers.len(), "pruned layers stay in the store");
+    let in_image = |id: &harbor::container::LayerId| r.image.layers.contains(id);
+    let pruned = store.ids().filter(|id| !in_image(id)).count();
+    assert_eq!(pruned, store.len() - r.image.layers.len());
+}
+
+#[test]
+fn diamond_graph_schedules_by_wave_and_prunes() {
+    let text = "\
+FROM ubuntu:16.04 AS common
+RUN apt-get install gcc
+FROM common AS left
+RUN make -j left
+FROM common AS right
+RUN make -j right
+FROM alpine:3.4
+COPY --from=left /usr/local/l /opt/l
+COPY --from=right /usr/local/r /opt/r
+";
+    let bf = Buildfile::parse(text).unwrap();
+    let g = BuildGraph::plan(&bf);
+    assert_eq!(g.schedule(), vec![vec![0], vec![1, 2], vec![3]]);
+    assert!(g.is_needed(0) && g.is_needed(1) && g.is_needed(2) && g.is_needed(3));
+    let mut store = LayerStore::new();
+    let r = Builder::new().build(&bf, "d:1", &mut store).unwrap();
+    // both branches share the common stage: its 2 layers built once
+    assert_eq!(r.layers_built, 2 + 1 + 1 + 3);
+    assert_eq!(r.image.layers.len(), 3, "alpine + two COPY layers");
+    // the parallel branches overlap on the critical path
+    assert!(r.critical_path < r.build_time);
+}
+
+#[test]
+fn copy_from_invalidates_across_arch_variants_but_shares_prefixes() {
+    let (app, pkgs) = APPS[0];
+    let mut builder = Builder::new();
+    let mut store = LayerStore::new();
+    let a = Buildfile::parse(&variant_buildfile(app, pkgs, ARCHES[0])).unwrap();
+    let b = Buildfile::parse(&variant_buildfile(app, pkgs, ARCHES[1])).unwrap();
+    let ra = builder.build(&a, "a:1", &mut store).unwrap();
+    let rb = builder.build(&b, "b:1", &mut store).unwrap();
+    // second arch: toolchain + deps stages (3 layers) and the runtime
+    // base hit the cache; the arch-specific make, both COPYs (their
+    // --from digests changed), and ARCH_OPT rebuild
+    assert_eq!(rb.layers_cached, 4, "shared prefix + runtime base cached");
+    assert_eq!(rb.layers_built, 4, "arch make + 2 COPYs + ARCH_OPT rebuilt");
+    assert_ne!(ra.image.id, rb.image.id);
+    // identical rebuild of the first variant: fully cached
+    let ra2 = builder.build(&a, "a:2", &mut store).unwrap();
+    assert_eq!(ra2.layers_built, 0);
+    assert_eq!(ra2.image.layers, ra.image.layers);
+}
+
+#[test]
+fn farm_cold_pass_shares_the_cache_and_warm_pass_is_nearly_free() {
+    let jobs = variant_matrix().unwrap();
+    let mut farm = BuildFarm::new(FarmConfig::ci(1));
+    let cold = farm.run_pass(&jobs).unwrap();
+    let warm = farm.run_pass(&jobs).unwrap();
+    assert_eq!(cold.jobs, jobs.len());
+    assert_eq!(cold.images_pushed, jobs.len());
+    // serial cold farm: later variants hit the toolchain/deps stages
+    assert!(cold.build_hit_rate() > 0.3, "hit rate {}", cold.build_hit_rate());
+    assert!(cold.wan_bytes > 0);
+    assert!(cold.gc_bytes > 0, "non-terminal stage layers are collected");
+    // warm: everything cached, nothing crosses the WAN; cache hits
+    // re-materialize the GC'd builder-stage blobs into the store (the
+    // builder self-heals missing blobs) and the pass-end GC collects
+    // exactly that set again
+    assert_eq!(warm.layers_built, 0);
+    assert!((warm.build_hit_rate() - 1.0).abs() < 1e-12);
+    assert_eq!(warm.wan_bytes, 0);
+    assert_eq!(warm.wan_transfers, 0);
+    assert_eq!(warm.gc_layers, cold.gc_layers);
+    let ratio = warm.makespan.as_secs_f64() / cold.makespan.as_secs_f64();
+    assert!(ratio < 0.10, "warm/cold ratio {ratio} above the acceptance bar");
+    // one completion event per job went through the calendar queue
+    assert_eq!(cold.queue.pushes, jobs.len() as u64);
+    assert_eq!(cold.queue.pops, cold.queue.pushes);
+}
+
+#[test]
+fn gc_survives_cache_hits_on_collected_builder_stages() {
+    // pass 1 builds a full variant, so its toolchain/deps layers are
+    // GC'd as non-terminal; pass 2 pushes the deps image ITSELF — its
+    // terminal chain is exactly pass 1's collected prefix, resolved
+    // entirely from cache.  The builder must re-materialize those
+    // blobs into the store (cache entries hold full layers) so the
+    // push succeeds instead of dangling.
+    let (app, pkgs) = APPS[0];
+    let text = variant_buildfile(app, pkgs, ARCHES[0]);
+    let variant = Buildfile::parse(&text).unwrap();
+    // the first two stages of the variant, verbatim, as their own file
+    let deps_text = text.lines().take(4).collect::<Vec<_>>().join("\n");
+    let deps_only = Buildfile::parse(&deps_text).unwrap();
+    assert_eq!(deps_only.stage_count(), 2);
+
+    let mut farm = BuildFarm::new(FarmConfig::ci(2));
+    let first = farm.run_pass(&[("local/app:v1".to_string(), variant)]).unwrap();
+    assert!(first.gc_layers > 0, "builder stages were collected");
+    let second = farm.run_pass(&[("local/deps:v1".to_string(), deps_only)]).unwrap();
+    assert_eq!(second.layers_built, 0, "terminal chain came from cache");
+    assert_eq!(second.images_pushed, 1);
+    assert!(second.wan_bytes > 0, "resurrected blobs still cross the WAN");
+}
+
+#[test]
+fn wider_farms_are_faster_but_share_less_cold_cache() {
+    let jobs = variant_matrix().unwrap();
+    let run = |workers: usize| {
+        let mut farm = BuildFarm::new(FarmConfig::ci(workers));
+        farm.run_pass(&jobs).unwrap()
+    };
+    let serial = run(1);
+    let wide = run(16);
+    assert!(
+        wide.makespan < serial.makespan,
+        "16 workers ({}) must beat 1 ({})",
+        wide.makespan,
+        serial.makespan
+    );
+    // concurrency costs cache sharing: jobs started before their
+    // peers' commits cannot hit those peers' cache entries
+    assert!(wide.build_hit_rate() <= serial.build_hit_rate());
+    assert!(wide.layers_built >= serial.layers_built);
+    // whatever was built, the same set of images got pushed
+    assert_eq!(wide.images_pushed, serial.images_pushed);
+}
+
+#[test]
+fn build_farm_renders_byte_identically_under_jobs() {
+    let mut cfg = ExperimentConfig::paper_default("build-farm").unwrap();
+    cfg.nodes = vec![1, 4];
+    let run = |jobs: usize| {
+        Coordinator::with_table(CalibrationTable::builtin_fallback())
+            .with_jobs(jobs)
+            .run(&cfg)
+            .unwrap()
+    };
+    let serial = render_all(&run(1));
+    let parallel = render_all(&run(4));
+    assert_eq!(serial, parallel, "build-farm must be --jobs invariant");
+    assert!(serial.contains("Build farm — cold pass makespan"));
+    assert!(serial.contains("4 workers"));
+    assert!(serial.contains("warm/cold makespan ratio"));
+}
+
+#[test]
+fn build_farm_is_listed_by_the_registry() {
+    // `harbor bench --list` prints ScenarioRegistry::table(); the
+    // scenario must be there with a non-empty description
+    let registry = ScenarioRegistry::builtin();
+    let table = registry.table();
+    let row = table.iter().find(|(name, _)| *name == "build-farm");
+    let (_, describe) = row.expect("build-farm registered");
+    assert!(describe.contains("ARCH_OPT"));
+    assert!(registry.get("build-farm").is_some());
+    let cfg = registry.get("build-farm").unwrap().default_config().unwrap();
+    assert_eq!(cfg.figure, "build-farm");
+    assert!(!cfg.nodes.is_empty());
+}
