@@ -1,0 +1,104 @@
+//! Chaos-canary bench: the rolling canary upgrade of the 16k-node
+//! fleet under seeded fault injection, recorded into
+//! `BENCH_micro.json`.
+//!
+//! Recorded keys:
+//!
+//! * `chaos_calm_virt_s` / `chaos_storm_virt_s` — virtual upgrade
+//!   makespan of the fault-free control cell vs the intensity-0.8 cell
+//!   (both under the `hpc` retry policy);
+//! * `chaos_availability` — fleet availability over the stormy
+//!   upgrade (`1 - downtime / (nodes × span)`);
+//! * `chaos_wasted_mb` / `chaos_retries` — WAN/fabric megabytes lost
+//!   to drop windows, timeouts and dead receivers, and the transfer
+//!   re-attempts the retry machinery scheduled;
+//! * `chaos_determinism_ok` — 1.0 iff the full figure set renders
+//!   byte-identically under `--jobs 1` and `--jobs 4` (the CI
+//!   determinism gate fails on anything else);
+//! * `chaos_wall_s` — wall time of the serial regeneration (the
+//!   §Perf trajectory).
+
+mod common;
+
+use std::time::Instant;
+
+use harbor::bench::{Figure, Row};
+use harbor::config::ExperimentConfig;
+use harbor::coordinator::Coordinator;
+
+use common::record_bench;
+
+fn render_all(figs: &[Figure]) -> String {
+    figs.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+}
+
+fn row<'a>(fig: &'a Figure, needle: &str) -> &'a Row {
+    fig.rows
+        .iter()
+        .find(|r| r.label.contains(needle))
+        .unwrap_or_else(|| panic!("no row matching `{needle}` in `{}`", fig.title))
+}
+
+fn main() {
+    let mut rec: Vec<(String, f64)> = Vec::new();
+    let cfg = ExperimentConfig::paper_default("chaos-canary").expect("registered default");
+    println!(
+        "== chaos canary: {} nodes, intensity x retry-policy sweep ==",
+        cfg.nodes[0]
+    );
+
+    let t0 = Instant::now();
+    let serial = Coordinator::new().with_jobs(1).run(&cfg).expect("chaos-canary runs");
+    let wall = t0.elapsed().as_secs_f64();
+    for f in &serial {
+        println!("{}", f.render());
+    }
+
+    // determinism gate: the whole matrix again on 4 workers must
+    // render byte-for-byte the same figures
+    let parallel = Coordinator::new().with_jobs(4).run(&cfg).expect("chaos-canary runs (4 jobs)");
+    let deterministic = render_all(&serial) == render_all(&parallel);
+    if !deterministic {
+        eprintln!("  WARNING: --jobs 1 and --jobs 4 renders differ");
+    }
+
+    let [make_fig, avail_fig, waste_fig] = &serial[..] else {
+        panic!("chaos-canary assembles three figures, got {}", serial.len());
+    };
+    let calm = row(make_fig, "intensity 0.0, hpc");
+    let storm = row(make_fig, "intensity 0.8, hpc");
+    let retries = storm
+        .breakdown
+        .iter()
+        .find(|(k, _)| k == "retries")
+        .map(|&(_, v)| v)
+        .expect("makespan rows carry a retries breakdown");
+
+    println!(
+        "  calm {:.3} s -> storm {:.3} s virtual; availability {:.4}, \
+         {:.1} MB re-sent, {} retries; computed in {wall:.3} s (deterministic: {deterministic})",
+        calm.stats.mean(),
+        storm.stats.mean(),
+        row(avail_fig, "intensity 0.8, hpc").stats.mean(),
+        row(waste_fig, "intensity 0.8, hpc").stats.mean(),
+        retries as u64,
+    );
+
+    rec.push(("chaos_calm_virt_s".into(), calm.stats.mean()));
+    rec.push(("chaos_storm_virt_s".into(), storm.stats.mean()));
+    rec.push((
+        "chaos_availability".into(),
+        row(avail_fig, "intensity 0.8, hpc").stats.mean(),
+    ));
+    rec.push((
+        "chaos_wasted_mb".into(),
+        row(waste_fig, "intensity 0.8, hpc").stats.mean(),
+    ));
+    rec.push(("chaos_retries".into(), retries));
+    rec.push((
+        "chaos_determinism_ok".into(),
+        if deterministic { 1.0 } else { 0.0 },
+    ));
+    rec.push(("chaos_wall_s".into(), wall));
+    record_bench(&rec);
+}

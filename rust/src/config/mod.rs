@@ -16,8 +16,8 @@ use crate::util::json::{self, Value};
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
     /// Which scenario: "fig2", "fig3", "fig4", "fig5a", "fig5b",
-    /// "fig1-scale", "mixed-fleet", "build-farm" (the live list is the
-    /// scenario registry: `harbor bench --list`).
+    /// "fig1-scale", "mixed-fleet", "build-farm", "chaos-canary" (the
+    /// live list is the scenario registry: `harbor bench --list`).
     pub figure: String,
     /// Repetitions per bar (the paper: 5 on the workstation, 3 on Edison).
     pub reps: usize,
@@ -30,8 +30,9 @@ pub struct ExperimentConfig {
     /// Rank-class batched engine for the modeled workloads (the default;
     /// `false` forces the O(ranks) per-rank reference path).
     pub batched: bool,
-    /// Fleet node counts (the `fig1-scale` deployment sweep) or CI
-    /// worker counts (the `build-farm` sweep).
+    /// Fleet node counts (the `fig1-scale` deployment and
+    /// `chaos-canary` upgrade sweeps) or CI worker counts (the
+    /// `build-farm` sweep).
     pub nodes: Vec<usize>,
 }
 
@@ -48,6 +49,10 @@ pub const SCALE_NODES: [usize; 4] = [64, 512, 4096, 16384];
 /// The `build-farm` worker counts: how many CI workers build the
 /// per-platform `ARCH_OPT` variant matrix concurrently.
 pub const FARM_WORKERS: [usize; 3] = [1, 4, 16];
+
+/// The `chaos-canary` fleet size: the canary upgrade rolls over the
+/// full 16k-node fleet (the largest `fig1-scale` point) under faults.
+pub const CHAOS_FLEET: usize = 16384;
 
 impl ExperimentConfig {
     /// The paper's setup for each figure.
@@ -130,6 +135,19 @@ impl ExperimentConfig {
                 sizes: vec![],
                 batched: true,
                 nodes: FARM_WORKERS.to_vec(),
+            },
+            // the chaos canary upgrade: `nodes` carries the fleet
+            // size(s); the intensity x retry-policy sweep is built into
+            // the scenario, and cells are seeded from `CellId::seed`,
+            // so one rep suffices
+            "chaos-canary" => ExperimentConfig {
+                figure: "chaos-canary".into(),
+                reps: 1,
+                seed: 42,
+                ranks: vec![],
+                sizes: vec![],
+                batched: true,
+                nodes: vec![CHAOS_FLEET],
             },
             // no name enumeration here: the live list belongs to the
             // scenario registry (`harbor bench --list`), and a second
@@ -372,6 +390,16 @@ mod tests {
         assert_eq!(cfg.nodes, FARM_WORKERS.to_vec());
         assert_eq!(cfg.reps, 1);
         assert!(cfg.ranks.is_empty());
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn chaos_canary_targets_the_full_fleet() {
+        let cfg = ExperimentConfig::paper_default("chaos-canary").unwrap();
+        assert_eq!(cfg.nodes, vec![CHAOS_FLEET]);
+        assert_eq!(cfg.reps, 1);
+        assert!(cfg.ranks.is_empty() && cfg.sizes.is_empty());
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);
     }

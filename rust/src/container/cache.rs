@@ -156,6 +156,34 @@ impl LayerCache {
         }
     }
 
+    /// Eviction-storm pressure hook: force out least-recently-used
+    /// layers until at least `bytes` have been freed (or the cache is
+    /// empty).  Models a co-tenant filling the node-local disk — the
+    /// `CacheEvictStorm` fault — so the next deploy wave re-fetches
+    /// what the storm destroyed.  Evictions are charged to
+    /// [`CacheStats`] exactly like capacity evictions.  Returns
+    /// `(layers_evicted, bytes_evicted)`.
+    pub fn shed(&mut self, bytes: u64) -> (usize, u64) {
+        let mut layers = 0usize;
+        let mut freed = 0u64;
+        while freed < bytes && !self.store.is_empty() {
+            let victim = self
+                .recency
+                .iter()
+                .min_by_key(|&(id, &t)| (t, id))
+                .map(|(id, _)| id.clone())
+                .expect("non-empty cache has a victim");
+            self.recency.remove(&victim);
+            if let Some(evicted) = self.store.remove(&victim) {
+                self.stats.evictions += 1;
+                self.stats.bytes_evicted += evicted.bytes;
+                layers += 1;
+                freed += evicted.bytes;
+            }
+        }
+        (layers, freed)
+    }
+
     /// Which of `wanted` a transfer must supply (no accounting).
     pub fn missing<'a>(&self, wanted: &'a [LayerId]) -> Vec<&'a LayerId> {
         self.store.missing(wanted)
@@ -283,6 +311,36 @@ mod tests {
         }
         assert_eq!(c.len(), 100);
         assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn shed_evicts_lru_first_and_accounts_bytes() {
+        let mut c = LayerCache::unbounded();
+        let (a, b, d) = (layer("a", 100), layer("b", 100), layer("d", 100));
+        c.admit(a.clone());
+        c.admit(b.clone());
+        c.admit(d.clone());
+        // touch `a` so `b` is the oldest resident
+        assert!(c.lookup(&a.id).is_some());
+        let (layers, freed) = c.shed(150);
+        assert_eq!(layers, 2, "two 100-byte victims cover 150 bytes");
+        assert_eq!(freed, 200);
+        assert!(!c.contains(&b.id), "LRU victim goes first");
+        assert!(!c.contains(&d.id));
+        assert!(c.contains(&a.id), "recently touched layer survives");
+        assert_eq!(c.stats().evictions, 2);
+        assert_eq!(c.stats().bytes_evicted, 200);
+    }
+
+    #[test]
+    fn shed_stops_at_empty_and_zero_is_a_no_op() {
+        let mut c = LayerCache::unbounded();
+        assert_eq!(c.shed(1 << 30), (0, 0), "empty cache sheds nothing");
+        c.admit(layer("a", 10));
+        assert_eq!(c.shed(0), (0, 0), "zero-byte storm is free");
+        let (layers, freed) = c.shed(u64::MAX);
+        assert_eq!((layers, freed), (1, 10));
+        assert!(c.is_empty());
     }
 
     #[test]

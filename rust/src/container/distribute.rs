@@ -24,6 +24,17 @@
 //!   fast fabric and the WAN sees `O(unique layers)` bytes rather than
 //!   `O(nodes × layers)`.  [`FanOut::Direct`] is the contention
 //!   baseline: every node pulls every missing layer from its shard.
+//! * **Fault awareness** — [`Fleet::deploy_with_faults`] threads a
+//!   [`FaultSchedule`] through the same wave machinery: WAN transfers
+//!   retry under a [`RetryPolicy`] (capped exponential backoff with
+//!   [`SimRng`] jitter and a per-transfer timeout), pulls fail over to
+//!   surviving registry shards during outage windows
+//!   ([`ShardedRegistry::apply_faults`]), fan-out re-parents around
+//!   crashed peers, and the report grows
+//!   [`retried_bytes`](FleetReport::retried_bytes)/availability
+//!   columns instead of assuming every transfer lands.  An empty
+//!   schedule is invisible: [`Fleet::deploy`] is the zero-fault
+//!   wrapper and stays bit-identical to the fault-free model.
 //!
 //! A warm re-deploy — every layer already resident in every node cache
 //! — transfers zero registry bytes and zero intra-cluster bytes; each
@@ -35,7 +46,11 @@
 //! [`FifoResource`]: crate::des::FifoResource
 //! [`PathCost::registry_wan`]: crate::net::PathCost::registry_wan
 
-use crate::des::{Duration, EventQueue, FifoResource, QueueStats, VirtualTime};
+use std::ops::Range;
+
+use crate::des::{
+    Duration, EventQueue, FaultSchedule, FaultStats, FifoResource, QueueStats, SimRng, VirtualTime,
+};
 use crate::net::{Fabric, PathCost};
 
 use super::cache::{CacheStats, LayerCache};
@@ -43,6 +58,9 @@ use super::image::{Image, Layer, LayerId};
 use super::lifecycle::Container;
 use super::registry::{MissingLayer, PullError, PullReport, Registry};
 use super::store::LayerStore;
+
+/// One shard outage window: `(from, until)`; `None` = never recovers.
+type OutageWindow = (VirtualTime, Option<VirtualTime>);
 
 /// The registry catalogue fronted by per-shard transfer queues.
 ///
@@ -57,6 +75,31 @@ pub struct ShardedRegistry {
     registry: Registry,
     shards: Vec<FifoResource>,
     wan: PathCost,
+    /// Outage windows per shard, installed by
+    /// [`apply_faults`](Self::apply_faults).
+    outages: Vec<Vec<OutageWindow>>,
+}
+
+/// What one failover-aware transfer submission did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardAttempt {
+    /// A live shard accepted the transfer.
+    Served {
+        /// Shard that served the transfer (the owner, or a failover
+        /// target when the owner was down).
+        shard: usize,
+        /// Completion instant under FIFO contention on that shard.
+        done: VirtualTime,
+        /// Whether the owner shard was down and the pull was
+        /// re-hashed to a surviving shard.
+        failover: bool,
+    },
+    /// Every shard was inside an outage window at submission time.
+    AllDown {
+        /// Earliest instant any shard recovers (`None` if no shard
+        /// ever does).
+        next_up: Option<VirtualTime>,
+    },
 }
 
 impl ShardedRegistry {
@@ -70,6 +113,7 @@ impl ShardedRegistry {
             registry,
             shards: vec![FifoResource::new(1); shards],
             wan: PathCost::registry_wan(),
+            outages: vec![Vec::new(); shards],
         }
     }
 
@@ -105,6 +149,57 @@ impl ShardedRegistry {
         self.registry.push(image, source)
     }
 
+    /// Install the shard outage windows of `schedule`, replacing any
+    /// previous set.  Windows targeting shards this registry does not
+    /// have are ignored (schedules are generated against a fleet
+    /// config, not a specific registry).
+    pub fn apply_faults(&mut self, schedule: &FaultSchedule) {
+        self.clear_outages();
+        for &(shard, from, until) in schedule.shard_windows() {
+            if shard < self.shards.len() {
+                self.outages[shard].push((from, until));
+            }
+        }
+    }
+
+    /// Drop all installed outage windows (every shard healthy again).
+    pub fn clear_outages(&mut self) {
+        for windows in &mut self.outages {
+            windows.clear();
+        }
+    }
+
+    /// Whether `shard` is inside an installed outage window at `t`.
+    pub fn shard_down_at(&self, shard: usize, t: VirtualTime) -> bool {
+        self.outages[shard].iter().any(|&(from, until)| {
+            from <= t
+                && match until {
+                    None => true,
+                    Some(u) => t < u,
+                }
+        })
+    }
+
+    /// Earliest instant at or after `t` when `shard` is up (`None` if
+    /// it is inside a window that never closes).
+    pub fn shard_next_up(&self, shard: usize, t: VirtualTime) -> Option<VirtualTime> {
+        let mut t = t;
+        loop {
+            let covering = self.outages[shard].iter().find(|&&(from, until)| {
+                from <= t
+                    && match until {
+                        None => true,
+                        Some(u) => t < u,
+                    }
+            });
+            match covering {
+                None => return Some(t),
+                Some(&(_, None)) => return None,
+                Some(&(_, Some(u))) => t = u,
+            }
+        }
+    }
+
     /// Which shard owns `id` — a pure function of the content hash, so
     /// every client agrees without coordination (rendezvous placement,
     /// as in Trow's blob store).
@@ -124,7 +219,9 @@ impl ShardedRegistry {
 
     /// Schedule the transfer of `bytes` of blob `id` starting no
     /// earlier than `arrival`; returns the completion instant under
-    /// FIFO contention on the owning shard.
+    /// FIFO contention on the owning shard.  Ignores outage windows —
+    /// the fault-aware path is
+    /// [`submit_transfer_failover`](Self::submit_transfer_failover).
     pub fn submit_transfer(
         &mut self,
         arrival: VirtualTime,
@@ -134,6 +231,38 @@ impl ShardedRegistry {
         let shard = self.shard_of(id);
         let service = self.wan.transfer(bytes);
         self.shards[shard].submit(arrival, service)
+    }
+
+    /// Outage-aware transfer submission: the owning shard serves when
+    /// up; otherwise the pull re-hashes around the ring to the first
+    /// surviving shard (every replica holds the blob — the shards
+    /// front one catalogue).  With no outage windows installed this is
+    /// byte-identical to [`submit_transfer`](Self::submit_transfer).
+    pub fn submit_transfer_failover(
+        &mut self,
+        arrival: VirtualTime,
+        id: &LayerId,
+        bytes: u64,
+    ) -> ShardAttempt {
+        let owner = self.shard_of(id);
+        let count = self.shards.len();
+        for k in 0..count {
+            let shard = (owner + k) % count;
+            if self.shard_down_at(shard, arrival) {
+                continue;
+            }
+            let service = self.wan.transfer(bytes);
+            let done = self.shards[shard].submit(arrival, service);
+            return ShardAttempt::Served {
+                shard,
+                done,
+                failover: k > 0,
+            };
+        }
+        let next_up = (0..count)
+            .filter_map(|shard| self.shard_next_up(shard, arrival))
+            .min();
+        ShardAttempt::AllDown { next_up }
     }
 
     /// Fetch one blob: returns the layer plus its completion instant.
@@ -206,6 +335,9 @@ impl ShardedRegistry {
     }
 
     /// Forget all shard queue state (fresh deployment campaign).
+    /// Installed outage windows are kept — they belong to the fault
+    /// schedule, not the queues; see
+    /// [`clear_outages`](Self::clear_outages).
     pub fn reset_clocks(&mut self) {
         for s in &mut self.shards {
             s.reset();
@@ -229,6 +361,81 @@ pub enum FanOut {
         /// Siblings each holder serves per wave (≥ 1).
         arity: usize,
     },
+}
+
+/// Retry discipline for fault-aware transfers: capped exponential
+/// backoff with deterministic [`SimRng`] jitter plus an optional
+/// per-transfer timeout.
+///
+/// A transfer that starts inside a WAN drop window is lost and backed
+/// off *blindly* (the client cannot sense the window), so a long
+/// enough window exhausts `max_attempts` and the target is reported
+/// permanently failed rather than retried forever.  When every
+/// registry shard is down the front door *can* publish a recovery
+/// instant, so those retries aim at `max(recovery, backoff)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts per transfer, the first included (≥ 1).
+    pub max_attempts: u32,
+    /// Backoff before the first retry; doubles each further retry.
+    pub base_backoff: Duration,
+    /// Ceiling the exponential backoff saturates at.
+    pub max_backoff: Duration,
+    /// Multiplicative jitter half-width applied to each backoff
+    /// (`0.2` = ±20%); `0.0` draws nothing from the rng stream.
+    pub jitter: f64,
+    /// Abandon a transfer whose completion lies further than this
+    /// beyond its start (`None` = wait forever).
+    pub timeout: Option<Duration>,
+}
+
+impl RetryPolicy {
+    /// No retries at all: one attempt, no backoff, no timeout.  The
+    /// policy [`Fleet::deploy`] runs with — it never consults the rng,
+    /// which keeps the fault-free path bit-identical.
+    pub fn none() -> Self {
+        RetryPolicy {
+            max_attempts: 1,
+            base_backoff: Duration::ZERO,
+            max_backoff: Duration::ZERO,
+            jitter: 0.0,
+            timeout: None,
+        }
+    }
+
+    /// The deployment-campaign default: 6 attempts, 50 ms base backoff
+    /// doubling to a 5 s cap, ±20% jitter, 5-minute per-transfer
+    /// timeout.
+    pub fn hpc() -> Self {
+        RetryPolicy {
+            max_attempts: 6,
+            base_backoff: Duration::from_millis(50),
+            max_backoff: Duration::from_secs_f64(5.0),
+            jitter: 0.2,
+            timeout: Some(Duration::from_secs_f64(300.0)),
+        }
+    }
+
+    /// Backoff before attempt `attempt` (attempt 1 is the first try,
+    /// so its "backoff" is the base; attempt `k` waits
+    /// `base × 2^(k-1)`, saturating at [`max_backoff`]).  Jitter is
+    /// drawn from `rng` only when one is supplied and
+    /// [`jitter`](Self::jitter) is non-zero.
+    ///
+    /// [`max_backoff`]: Self::max_backoff
+    pub fn backoff(&self, attempt: u32, rng: Option<&mut SimRng>) -> Duration {
+        let exp = attempt.saturating_sub(1).min(20);
+        let capped = Duration::from_nanos(
+            self.base_backoff
+                .as_nanos()
+                .saturating_mul(1u64 << exp)
+                .min(self.max_backoff.as_nanos()),
+        );
+        match rng {
+            Some(r) if self.jitter > 0.0 => capped.scale(r.jitter(self.jitter)),
+            _ => capped,
+        }
+    }
 }
 
 /// Static description of a deployment fleet.
@@ -265,22 +472,36 @@ impl FleetConfig {
 }
 
 /// What one fleet deployment did (the fleet analogue of [`PullReport`]).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct FleetReport {
     /// Image reference deployed.
     pub reference: String,
-    /// Nodes in the fleet.
+    /// Nodes targeted by this wave (the deploy scope).
     pub nodes: usize,
     /// Layers in the image (with duplicates, if any).
     pub layers_total: usize,
     /// Distinct layers considered for transfer.
     pub unique_layers: usize,
-    /// WAN transfers performed (shard → cluster).
+    /// WAN transfers performed (shard → cluster), lost attempts
+    /// included.
     pub wan_transfers: usize,
     /// Bytes that crossed the WAN from registry shards.
     pub wan_bytes: u64,
     /// Bytes copied node-to-node inside the cluster.
     pub intra_bytes: u64,
+    /// Bytes that crossed a link but never landed in a cache: WAN
+    /// attempts lost to drop windows or timeouts, plus copies that
+    /// arrived while their target node was down.  The conservation
+    /// invariant is `total_bytes() == bytes admitted + retried_bytes`
+    /// (for unbounded caches).
+    pub retried_bytes: u64,
+    /// Transfer re-attempts scheduled (WAN retries + re-deliveries).
+    pub retries: u64,
+    /// Pulls re-hashed to a surviving shard during an outage.
+    pub failovers: u64,
+    /// Scope nodes newly given up on this wave (crashed and never
+    /// rejoining, or out of retry budget).
+    pub permanently_failed: usize,
     /// Virtual instant the deployment started.
     pub started_at: VirtualTime,
     /// Span from start until the slowest node finished (transfers +
@@ -292,6 +513,10 @@ pub struct FleetReport {
     pub shard_utilisation: Vec<f64>,
     /// Containers created and started on the fleet after the pull.
     pub containers_started: usize,
+    /// Fault accounting: injected side from the schedule's windows,
+    /// reaction side from this wave's counters.  All-zero for a
+    /// fault-free wave.
+    pub fault: FaultStats,
     /// Calendar-queue counters of the wave's transfer scheduler (one
     /// ready event per node per transferred layer; a fully warm
     /// re-deploy schedules none).  See `des::stats`.
@@ -304,9 +529,25 @@ impl FleetReport {
         self.wan_bytes + self.intra_bytes
     }
 
-    /// One-paragraph trace line for CLI output.
+    /// Bytes that actually landed in a node cache:
+    /// [`total_bytes`](Self::total_bytes) minus the wasted
+    /// [`retried_bytes`](Self::retried_bytes).
+    pub fn delivered_bytes(&self) -> u64 {
+        self.total_bytes().saturating_sub(self.retried_bytes)
+    }
+
+    /// Fleet availability over this wave's makespan:
+    /// `1 - downtime / (nodes × makespan)` (see
+    /// [`FaultStats::availability`]).
+    pub fn availability(&self) -> f64 {
+        self.fault.availability(self.nodes, self.makespan)
+    }
+
+    /// One-paragraph trace line for CLI output.  Fault-free waves
+    /// render exactly as before; the retry/failover tail appears only
+    /// when something went wrong.
     pub fn render(&self) -> String {
-        format!(
+        let mut text = format!(
             "deploy {} -> {} nodes: makespan {}, WAN {:.1} MB in {} transfer(s), \
              intra-cluster {:.1} MB, cache hit rate {:.0}%, shard util {}, \
              {} ready events (queue depth hwm {})",
@@ -324,7 +565,140 @@ impl FleetReport {
                 .join("/"),
             self.queue.pushes,
             self.queue.depth_hwm,
-        )
+        );
+        if self.retries != 0
+            || self.failovers != 0
+            || self.retried_bytes != 0
+            || self.permanently_failed != 0
+        {
+            text.push_str(&format!(
+                ", {} retry(ies), {} failover(s), {:.1} MB re-sent, \
+                 {} node(s) permanently failed, availability {:.4}",
+                self.retries,
+                self.failovers,
+                self.retried_bytes as f64 / 1e6,
+                self.permanently_failed,
+                self.availability(),
+            ));
+        }
+        text
+    }
+}
+
+/// Reaction-side counters one fault-aware wave accumulates.
+#[derive(Default)]
+struct FaultAccum {
+    wan_bytes: u64,
+    wan_transfers: usize,
+    retried_bytes: u64,
+    retries: u64,
+    failovers: u64,
+    transfers_dropped: u64,
+}
+
+/// Borrowed fault context threaded through one deployment wave; its
+/// methods keep the retry loops (and their accounting) in one place.
+struct WaveCtx<'a> {
+    faults: &'a FaultSchedule,
+    policy: &'a RetryPolicy,
+    rng: &'a mut SimRng,
+    acc: FaultAccum,
+}
+
+impl WaveCtx<'_> {
+    /// One WAN transfer of `bytes` of `id` starting no earlier than
+    /// `start`, with shard failover plus drop-window/timeout retries
+    /// under the policy.  Returns the completion instant of the first
+    /// surviving attempt, or `None` once the retry budget is spent
+    /// (or no shard ever recovers).
+    fn wan(
+        &mut self,
+        registry: &mut ShardedRegistry,
+        id: &LayerId,
+        bytes: u64,
+        start: VirtualTime,
+    ) -> Option<VirtualTime> {
+        let mut at = start;
+        let mut attempt = 1u32;
+        loop {
+            match registry.submit_transfer_failover(at, id, bytes) {
+                ShardAttempt::Served { done, failover, .. } => {
+                    self.acc.wan_bytes += bytes;
+                    self.acc.wan_transfers += 1;
+                    if failover {
+                        self.acc.failovers += 1;
+                    }
+                    // a transfer started inside a drop window is lost;
+                    // one running past the per-transfer timeout is
+                    // abandoned at start + timeout
+                    let lost = self.faults.drop_until(at).is_some();
+                    let gave_up_at = match self.policy.timeout {
+                        Some(limit) if !lost && done.since(at) > limit => Some(at + limit),
+                        _ => None,
+                    };
+                    if !lost && gave_up_at.is_none() {
+                        return Some(done);
+                    }
+                    self.acc.retried_bytes += bytes;
+                    self.acc.transfers_dropped += 1;
+                    if attempt >= self.policy.max_attempts {
+                        return None;
+                    }
+                    attempt += 1;
+                    self.acc.retries += 1;
+                    // the client cannot sense a drop window, so a lost
+                    // transfer backs off blindly; a timeout is only
+                    // known once the limit fires
+                    let pause = self.policy.backoff(attempt, Some(&mut *self.rng));
+                    at = match gave_up_at {
+                        Some(abandoned) => abandoned + pause,
+                        None => at + pause,
+                    };
+                }
+                ShardAttempt::AllDown { next_up } => {
+                    let up = next_up?;
+                    if attempt >= self.policy.max_attempts {
+                        return None;
+                    }
+                    attempt += 1;
+                    self.acc.retries += 1;
+                    // the registry front door redirects, so this retry
+                    // can aim at the published recovery instant
+                    let pause = self.policy.backoff(attempt, Some(&mut *self.rng));
+                    at = up.max(at + pause);
+                }
+            }
+        }
+    }
+
+    /// Direct-mode delivery to one node: WAN transfer, then re-pull
+    /// whenever the bytes arrive while the node is down.  `None` =
+    /// the node (or the registry) is a lost cause.
+    fn deliver_direct(
+        &mut self,
+        registry: &mut ShardedRegistry,
+        id: &LayerId,
+        bytes: u64,
+        node: usize,
+        start: VirtualTime,
+    ) -> Option<VirtualTime> {
+        let mut done = self.wan(registry, id, bytes, start)?;
+        loop {
+            match self.faults.node_next_up(node, done) {
+                Some(up) if up == done => return Some(done),
+                Some(up) => {
+                    // arrived while the node was down: wasted transfer,
+                    // pull again once it rejoins
+                    self.acc.retried_bytes += bytes;
+                    self.acc.retries += 1;
+                    done = self.wan(registry, id, bytes, up)?;
+                }
+                None => {
+                    self.acc.retried_bytes += bytes;
+                    return None;
+                }
+            }
+        }
     }
 }
 
@@ -339,6 +713,11 @@ pub struct Fleet {
     containers: Vec<Container>,
     clock: VirtualTime,
     next_container_id: u64,
+    /// Nodes given up on by a previous fault-injected wave.
+    dead: Vec<bool>,
+    /// Latest wave start whose eviction storms have been applied
+    /// (`None` = no wave ran yet); keeps each storm a one-shot.
+    storm_mark: Option<VirtualTime>,
 }
 
 impl Fleet {
@@ -351,12 +730,15 @@ impl Fleet {
         let caches = (0..config.nodes)
             .map(|_| LayerCache::new(config.cache_capacity_bytes))
             .collect();
+        let dead = vec![false; config.nodes];
         Fleet {
             config,
             caches,
             containers: Vec::new(),
             clock: VirtualTime::ZERO,
             next_container_id: 0,
+            dead,
+            storm_mark: None,
         }
     }
 
@@ -385,6 +767,13 @@ impl Fleet {
         self.clock
     }
 
+    /// Per-node permanent-failure flags (`true` = given up on by a
+    /// previous fault-injected wave; the node takes no further part
+    /// in deployments).
+    pub fn failed_nodes(&self) -> &[bool] {
+        &self.dead
+    }
+
     /// Sum of every node cache's lifetime counters.
     pub fn cache_totals(&self) -> CacheStats {
         let mut total = CacheStats::default();
@@ -399,13 +788,68 @@ impl Fleet {
     /// the owning registry shard, fan copies out across the cluster
     /// fabric, admit them into the node caches, then create and start
     /// one container per node.  Returns the wave's [`FleetReport`].
+    ///
+    /// This is the fault-free wrapper around
+    /// [`deploy_with_faults`](Self::deploy_with_faults): empty
+    /// schedule, [`RetryPolicy::none`], full node scope — and the rng
+    /// stream is never consulted, so reports are bit-identical to the
+    /// pre-fault model.
     pub fn deploy(
         &mut self,
         registry: &mut ShardedRegistry,
         reference: &str,
     ) -> Result<FleetReport, PullError> {
+        let nodes = self.config.nodes;
+        let mut rng = SimRng::new(0, "fault-free");
+        self.deploy_with_faults(
+            registry,
+            reference,
+            0..nodes,
+            &FaultSchedule::none(),
+            &RetryPolicy::none(),
+            &mut rng,
+        )
+    }
+
+    /// Deploy `reference` onto the nodes in `scope` under a fault
+    /// schedule and retry policy.
+    ///
+    /// Semantics on top of the fault-free wave:
+    ///
+    /// * **Eviction storms** at or before the wave start shed bytes
+    ///   from the struck node's cache before lookups run (each storm
+    ///   fires once across a campaign).
+    /// * **WAN transfers** go through [`WaveCtx::wan`]: shard
+    ///   failover, drop-window/timeout loss, capped backoff retries.
+    /// * **Crashed nodes**: a copy arriving during a down window is
+    ///   wasted (`retried_bytes`) and re-sent after the rejoin — from
+    ///   a live holder over the fabric when one exists, else from the
+    ///   registry.  Nodes that never rejoin (or exhaust the retry
+    ///   budget) are marked permanently failed, skipped by later
+    ///   waves, and reported in
+    ///   [`permanently_failed`](FleetReport::permanently_failed).
+    /// * **Scope** restricts which nodes deploy (rolling upgrades
+    ///   target rings); caches and failure flags are fleet-wide, so
+    ///   nodes outside the scope still serve as fan-out holders.
+    ///
+    /// Every retry loop either consumes retry budget or strictly
+    /// advances virtual time past a finite fault window, so the wave
+    /// always terminates: each scope node ends deployed or is
+    /// reported permanently failed.
+    pub fn deploy_with_faults(
+        &mut self,
+        registry: &mut ShardedRegistry,
+        reference: &str,
+        scope: Range<usize>,
+        faults: &FaultSchedule,
+        policy: &RetryPolicy,
+        rng: &mut SimRng,
+    ) -> Result<FleetReport, PullError> {
         let t0 = self.clock;
         let n = self.config.nodes;
+        assert!(!scope.is_empty(), "deploy scope must name at least one node");
+        assert!(scope.end <= n, "deploy scope exceeds the fleet");
+        assert!(policy.max_attempts >= 1, "retry policy needs one attempt");
         let image = registry
             .registry()
             .image(reference)
@@ -422,10 +866,30 @@ impl Fleet {
         }
 
         let stats_before = self.cache_totals();
+        // eviction storms that struck since the last wave land before
+        // this wave's lookups, so the cache delta shows the damage
+        let mark = self.storm_mark;
+        for &(at, node, bytes) in faults.evict_storms() {
+            let fresh = at <= t0
+                && match mark {
+                    None => true,
+                    Some(m) => at > m,
+                };
+            if fresh && node < n {
+                self.caches[node].shed(bytes);
+            }
+        }
+        self.storm_mark = Some(t0);
+
         let busy_before = registry.shard_busy();
-        let mut wan_bytes = 0u64;
+        let mut failed = self.dead.clone();
+        let mut ctx = WaveCtx {
+            faults,
+            policy,
+            rng,
+            acc: FaultAccum::default(),
+        };
         let mut intra_bytes = 0u64;
-        let mut wan_transfers = 0usize;
         // instant each node has all its layers (before local checks)
         let mut node_ready = vec![t0; n];
         // every transfer-completion instant is scheduled through one
@@ -433,69 +897,227 @@ impl Fleet {
         // in time order at the end of its layer, so the depth
         // high-water mark in the report is the peak of concurrently
         // in-flight completions, not a lifetime push count
-        let mut sched: EventQueue<usize> = EventQueue::with_capacity(n);
+        let mut sched: EventQueue<usize> = EventQueue::with_capacity(scope.len());
 
         for &id in &unique {
             let mut needers: Vec<usize> = Vec::new();
-            for (node, cache) in self.caches.iter_mut().enumerate() {
-                if cache.lookup(id).is_none() {
+            for node in scope.clone() {
+                if failed[node] {
+                    continue;
+                }
+                if self.caches[node].lookup(id).is_none() {
                     needers.push(node);
                 }
             }
             if needers.is_empty() {
                 continue; // fully warm layer: no transfer anywhere
             }
-            let layer = registry
-                .registry()
-                .layers
-                .get(id)
-                .ok_or_else(|| PullError::CorruptRegistry(id.clone()))?;
             // node caches hold the blob (id + bytes + provenance), not
             // the file manifest — that stays in the catalogue, exactly
             // as a compressed blob cache on a real node would
-            let blob = layer.blob();
+            let blob = registry
+                .registry()
+                .layers
+                .get(id)
+                .ok_or_else(|| PullError::CorruptRegistry(id.clone()))?
+                .blob();
 
             match self.config.fan_out {
                 FanOut::Direct => {
                     let mut arrivals = Vec::with_capacity(needers.len());
                     for &node in &needers {
-                        let done = registry.submit_transfer(t0, id, blob.bytes);
-                        wan_bytes += blob.bytes;
-                        wan_transfers += 1;
-                        arrivals.push((done, node));
-                        self.caches[node].admit(blob.clone());
+                        match ctx.deliver_direct(registry, id, blob.bytes, node, t0) {
+                            Some(done) => {
+                                arrivals.push((done, node));
+                                self.caches[node].admit(blob.clone());
+                            }
+                            None => failed[node] = true,
+                        }
                     }
                     sched.push_batch(arrivals);
                 }
                 FanOut::Peer { arity } => {
-                    let holders = n - needers.len();
-                    // seed over the WAN only if no node holds the layer
-                    let (start, mut have, rest) = if holders == 0 {
-                        let done = registry.submit_transfer(t0, id, blob.bytes);
-                        wan_bytes += blob.bytes;
-                        wan_transfers += 1;
-                        let seeder = needers[0];
+                    // live holders anywhere in the fleet can serve the
+                    // fan-out, scope or not
+                    let mut holder_nodes: Vec<usize> = (0..n)
+                        .filter(|&node| !failed[node] && self.caches[node].contains(id))
+                        .collect();
+
+                    let (start, rest) = if holder_nodes.is_empty() {
+                        // no holder anywhere: seed one copy over the
+                        // WAN onto the first needer that is (or comes
+                        // back) up
+                        let mut remaining = needers.clone();
+                        let mut seed: Option<(usize, VirtualTime)> = None;
+                        let mut t_seed = t0;
+                        while seed.is_none() && !remaining.is_empty() {
+                            // earliest-available candidate; prune ones
+                            // that never rejoin
+                            let mut best: Option<(usize, VirtualTime)> = None;
+                            let mut dead_idx: Vec<usize> = Vec::new();
+                            for (idx, &node) in remaining.iter().enumerate() {
+                                match ctx.faults.node_next_up(node, t_seed) {
+                                    None => dead_idx.push(idx),
+                                    Some(up) => {
+                                        let better = match best {
+                                            None => true,
+                                            Some((_, b)) => up < b,
+                                        };
+                                        if better {
+                                            best = Some((idx, up));
+                                        }
+                                    }
+                                }
+                            }
+                            for &idx in dead_idx.iter().rev() {
+                                let node = remaining.remove(idx);
+                                failed[node] = true;
+                                if let Some((b, _)) = best.as_mut() {
+                                    if *b > idx {
+                                        *b -= 1;
+                                    }
+                                }
+                            }
+                            let Some((idx, up)) = best else { break };
+                            match ctx.wan(registry, id, blob.bytes, up) {
+                                None => {
+                                    // registry unreachable for good (or
+                                    // budget spent): nobody in scope can
+                                    // get this layer
+                                    for node in remaining.drain(..) {
+                                        failed[node] = true;
+                                    }
+                                    break;
+                                }
+                                Some(done) => {
+                                    if ctx.faults.node_down_at(remaining[idx], done) {
+                                        // seed arrived mid-crash: wasted
+                                        ctx.acc.retried_bytes += blob.bytes;
+                                        match ctx.faults.node_next_up(remaining[idx], done) {
+                                            Some(up2) => {
+                                                ctx.acc.retries += 1;
+                                                t_seed = up2;
+                                            }
+                                            None => {
+                                                let node = remaining.remove(idx);
+                                                failed[node] = true;
+                                            }
+                                        }
+                                    } else {
+                                        seed = Some((idx, done));
+                                    }
+                                }
+                            }
+                        }
+                        let Some((idx, done)) = seed else {
+                            // every candidate died or the registry was
+                            // unreachable: layer undeliverable in scope
+                            continue;
+                        };
+                        let seeder = remaining.remove(idx);
                         sched.push(done, seeder);
                         self.caches[seeder].admit(blob.clone());
-                        (done, 1usize, &needers[1..])
+                        holder_nodes.push(seeder);
+                        (done, remaining)
                     } else {
-                        (t0, holders, &needers[..])
+                        (t0, needers.clone())
                     };
-                    intra_bytes += blob.bytes * rest.len() as u64;
+
                     let hop = self.config.fabric.p2p(blob.bytes, false);
                     let mut served = 0usize;
                     let mut t = start;
+                    let mut resend: Vec<(VirtualTime, usize)> = Vec::new();
                     while served < rest.len() {
-                        let wave = (have * arity).min(rest.len() - served);
+                        let live = holder_nodes
+                            .iter()
+                            .filter(|&&h| !ctx.faults.node_down_at(h, t))
+                            .count();
+                        if live == 0 {
+                            // every holder is down: wait for the first
+                            // rejoin, or fall back to the registry for
+                            // everyone still waiting
+                            let next = holder_nodes
+                                .iter()
+                                .filter_map(|&h| ctx.faults.node_next_up(h, t))
+                                .min();
+                            match next {
+                                Some(up) => {
+                                    t = up;
+                                }
+                                None => {
+                                    for &node in &rest[served..] {
+                                        ctx.acc.retries += 1;
+                                        resend.push((t, node));
+                                    }
+                                    served = rest.len();
+                                }
+                            }
+                            continue;
+                        }
+                        let wave = (live * arity).min(rest.len() - served);
                         t += hop;
                         let mut arrivals = Vec::with_capacity(wave);
                         for &node in &rest[served..served + wave] {
-                            arrivals.push((t, node));
-                            self.caches[node].admit(blob.clone());
+                            intra_bytes += blob.bytes;
+                            if ctx.faults.node_down_at(node, t) {
+                                // copy arrived mid-crash: wasted hop
+                                ctx.acc.retried_bytes += blob.bytes;
+                                if ctx.faults.node_next_up(node, t).is_some() {
+                                    ctx.acc.retries += 1;
+                                    resend.push((t, node));
+                                } else {
+                                    failed[node] = true;
+                                }
+                            } else {
+                                arrivals.push((t, node));
+                                self.caches[node].admit(blob.clone());
+                                holder_nodes.push(node);
+                            }
                         }
                         sched.push_batch(arrivals);
                         served += wave;
-                        have += wave;
+                    }
+
+                    // second pass: nodes that were down when their copy
+                    // arrived re-pull once they rejoin — from a live
+                    // holder over the fabric when one exists, else from
+                    // the registry
+                    for (when, node) in resend {
+                        if failed[node] {
+                            continue;
+                        }
+                        let mut when = when;
+                        loop {
+                            let Some(up) = ctx.faults.node_next_up(node, when) else {
+                                failed[node] = true;
+                                break;
+                            };
+                            let src_live = holder_nodes
+                                .iter()
+                                .any(|&h| !ctx.faults.node_down_at(h, up));
+                            let arrival = if src_live {
+                                intra_bytes += blob.bytes;
+                                up + hop
+                            } else {
+                                match ctx.wan(registry, id, blob.bytes, up) {
+                                    Some(done) => done,
+                                    None => {
+                                        failed[node] = true;
+                                        break;
+                                    }
+                                }
+                            };
+                            if ctx.faults.node_down_at(node, arrival) {
+                                ctx.acc.retried_bytes += blob.bytes;
+                                ctx.acc.retries += 1;
+                                when = arrival;
+                                continue;
+                            }
+                            sched.push(arrival, node);
+                            self.caches[node].admit(blob.clone());
+                            holder_nodes.push(node);
+                            break;
+                        }
                     }
                 }
             }
@@ -509,35 +1131,55 @@ impl Fleet {
         let queue = sched.stats();
 
         // local per-layer verify/mount, then create + start a container
+        // on every surviving node in scope
         let check = self.config.per_layer_check * image.layers.len() as u64;
         self.containers.clear();
         let mut finish = t0;
-        for ready in &node_ready {
-            let done = *ready + check;
+        let mut started = 0usize;
+        for node in scope.clone() {
+            if failed[node] {
+                continue;
+            }
+            let done = node_ready[node] + check;
             finish = finish.max(done);
             let mut c = Container::create(self.next_container_id, image.id.clone(), done);
             self.next_container_id += 1;
             c.start(done).expect("fresh container starts");
             self.containers.push(c);
+            started += 1;
         }
         let makespan = finish.since(t0);
         self.clock = finish;
 
         let shard_utilisation = registry.shard_utilisation(&busy_before, makespan);
 
+        let newly_failed = failed.iter().filter(|&&f| f).count()
+            - self.dead.iter().filter(|&&f| f).count();
+        self.dead = failed;
+        let mut fault = faults.stats_over(t0, finish);
+        fault.retries = ctx.acc.retries;
+        fault.failovers = ctx.acc.failovers;
+        fault.transfers_dropped = ctx.acc.transfers_dropped;
+        fault.permanent_failures = newly_failed as u64;
+
         Ok(FleetReport {
             reference: reference.to_string(),
-            nodes: n,
+            nodes: scope.len(),
             layers_total: image.layers.len(),
             unique_layers: unique.len(),
-            wan_transfers,
-            wan_bytes,
+            wan_transfers: ctx.acc.wan_transfers,
+            wan_bytes: ctx.acc.wan_bytes,
             intra_bytes,
+            retried_bytes: ctx.acc.retried_bytes,
+            retries: ctx.acc.retries,
+            failovers: ctx.acc.failovers,
+            permanently_failed: newly_failed,
             started_at: t0,
             makespan,
             cache: self.cache_totals().since(&stats_before),
             shard_utilisation,
-            containers_started: n,
+            containers_started: started,
+            fault,
             queue,
         })
     }
@@ -548,6 +1190,7 @@ mod tests {
     use super::*;
     use crate::container::buildfile::Buildfile;
     use crate::container::builder::Builder;
+    use crate::des::Fault;
 
     fn registry_with(reference: &str, text: &str) -> (ShardedRegistry, u64, usize) {
         let mut store = LayerStore::new();
@@ -748,6 +1391,8 @@ mod tests {
         assert!(text.contains("WAN"));
         assert!(text.contains("hit rate"));
         assert!(text.contains("ready events"));
+        // the fault tail only appears when something went wrong
+        assert!(!text.contains("retry(ies)"));
     }
 
     #[test]
@@ -782,5 +1427,306 @@ mod tests {
             warm.total_bytes() > 0,
             "evicted layers must be transferred again"
         );
+    }
+
+    // ---- fault-aware path ------------------------------------------
+
+    #[test]
+    fn retry_policy_backoff_caps_and_jitters() {
+        let p = RetryPolicy::hpc();
+        assert_eq!(p.backoff(1, None), Duration::from_millis(50));
+        assert_eq!(p.backoff(2, None), Duration::from_millis(100));
+        assert_eq!(p.backoff(20, None), Duration::from_secs_f64(5.0), "capped");
+        assert_eq!(p.backoff(0, None), Duration::from_millis(50), "0 clamps");
+        let mut rng = SimRng::new(7, "backoff");
+        let jittered = p.backoff(3, Some(&mut rng));
+        let base = p.backoff(3, None);
+        let ratio = jittered.as_secs_f64() / base.as_secs_f64();
+        assert!((0.8..=1.2).contains(&ratio), "{ratio}");
+        // no-retry policy never waits
+        assert_eq!(RetryPolicy::none().backoff(5, None), Duration::ZERO);
+    }
+
+    #[test]
+    fn faultless_deploy_with_faults_matches_deploy_bit_for_bit() {
+        let text = "FROM ubuntu:16.04\nRUN echo x";
+        let (mut reg_a, _, _) = registry_with("a:1", text);
+        let (mut reg_b, _, _) = registry_with("a:1", text);
+        let mut fleet_a = Fleet::new(FleetConfig::hpc(48));
+        let mut fleet_b = Fleet::new(FleetConfig::hpc(48));
+        let base = fleet_a.deploy(&mut reg_a, "a:1").unwrap();
+        let mut rng = SimRng::new(99, "chaos");
+        let chaos = fleet_b
+            .deploy_with_faults(
+                &mut reg_b,
+                "a:1",
+                0..48,
+                &FaultSchedule::none(),
+                &RetryPolicy::hpc(),
+                &mut rng,
+            )
+            .unwrap();
+        assert_eq!(base, chaos, "empty schedule must be invisible");
+        assert_eq!(base.render(), chaos.render());
+        // and the rng stream was never consumed
+        let mut fresh = SimRng::new(99, "chaos");
+        assert_eq!(
+            rng.uniform(0.0, 1.0).to_bits(),
+            fresh.uniform(0.0, 1.0).to_bits()
+        );
+    }
+
+    #[test]
+    fn shard_outage_fails_over_to_surviving_shard() {
+        let (mut sharded, bytes, _) = registry_with("a:1", "FROM ubuntu:16.04\nRUN echo x");
+        let ids: Vec<LayerId> = sharded.registry().layers.ids().cloned().collect();
+        let down = sharded.shard_of(&ids[0]);
+        let hour = VirtualTime(3_600_000_000_000);
+        let schedule = FaultSchedule::from_events(vec![
+            (VirtualTime::ZERO, Fault::ShardOutage { shard: down }),
+            (hour, Fault::ShardRecover { shard: down }),
+        ]);
+        sharded.apply_faults(&schedule);
+        assert!(sharded.shard_down_at(down, VirtualTime::ZERO));
+        assert_eq!(sharded.shard_next_up(down, VirtualTime::ZERO), Some(hour));
+        let mut fleet = Fleet::new(FleetConfig::hpc(16));
+        let mut rng = SimRng::new(1, "failover");
+        let report = fleet
+            .deploy_with_faults(
+                &mut sharded,
+                "a:1",
+                0..16,
+                &schedule,
+                &RetryPolicy::hpc(),
+                &mut rng,
+            )
+            .unwrap();
+        assert!(report.failovers >= 1, "owner shard down => failover");
+        assert_eq!(report.permanently_failed, 0);
+        assert_eq!(report.wan_bytes, bytes, "failover still seeds each layer once");
+        assert_eq!(report.retried_bytes, 0);
+        assert_eq!(report.containers_started, 16);
+        assert_eq!(report.fault.failovers, report.failovers);
+    }
+
+    #[test]
+    fn drop_window_forces_retry_and_bytes_stay_conserved() {
+        let (mut sharded, _, _) = registry_with("a:1", "FROM ubuntu:16.04\nRUN echo x");
+        // every WAN transfer started before 200 ms is lost
+        let schedule = FaultSchedule::from_events(vec![(
+            VirtualTime::ZERO,
+            Fault::TransferDrop {
+                until: VirtualTime(200_000_000),
+            },
+        )]);
+        let n = 8;
+        let mut fleet = Fleet::new(FleetConfig::hpc(n));
+        let mut rng = SimRng::new(3, "drops");
+        let report = fleet
+            .deploy_with_faults(
+                &mut sharded,
+                "a:1",
+                0..n,
+                &schedule,
+                &RetryPolicy::hpc(),
+                &mut rng,
+            )
+            .unwrap();
+        assert!(report.retries >= 1, "transfers inside the window are lost");
+        assert!(report.retried_bytes > 0);
+        assert_eq!(report.permanently_failed, 0, "backoff escapes the window");
+        // conservation: everything moved is either admitted into a
+        // cache or accounted as wasted
+        assert_eq!(
+            report.total_bytes(),
+            report.cache.bytes_inserted + report.retried_bytes
+        );
+        assert_eq!(report.delivered_bytes(), report.cache.bytes_inserted);
+        let text = report.render();
+        assert!(text.contains("retry(ies)"));
+        // a warm re-deploy after the chaos is still free
+        let warm = fleet.deploy(&mut sharded, "a:1").unwrap();
+        assert_eq!(warm.total_bytes(), 0);
+    }
+
+    #[test]
+    fn crashed_receiver_is_reserved_after_rejoin() {
+        // 4 nodes, arity 1, single-layer image: node 1 is the seeder's
+        // first fan-out target but is down when the copy arrives
+        let (mut sharded, bytes, _) = registry_with("one:1", "FROM alpine:3.4");
+        let mut cfg = FleetConfig::hpc(4);
+        cfg.fan_out = FanOut::Peer { arity: 1 };
+        cfg.per_layer_check = Duration::ZERO;
+        let seed_t = PathCost::registry_wan().transfer(bytes);
+        let hop = Fabric::aries().p2p(bytes, false);
+        let rejoin = VirtualTime::ZERO + seed_t + hop + hop + hop;
+        let schedule = FaultSchedule::from_events(vec![
+            (VirtualTime::ZERO, Fault::NodeCrash { node: 1 }),
+            (rejoin, Fault::NodeRejoin { node: 1 }),
+        ]);
+        let mut fleet = Fleet::new(cfg);
+        let mut rng = SimRng::new(5, "rejoin");
+        let report = fleet
+            .deploy_with_faults(
+                &mut sharded,
+                "one:1",
+                0..4,
+                &schedule,
+                &RetryPolicy::hpc(),
+                &mut rng,
+            )
+            .unwrap();
+        assert_eq!(report.permanently_failed, 0);
+        assert_eq!(report.retried_bytes, bytes, "one wasted fan-out copy");
+        assert!(report.retries >= 1);
+        assert_eq!(report.containers_started, 4);
+        assert_eq!(
+            report.total_bytes(),
+            report.cache.bytes_inserted + report.retried_bytes
+        );
+        for cache in fleet.caches() {
+            assert_eq!(cache.len(), 1, "every node ends with the layer");
+        }
+    }
+
+    #[test]
+    fn never_rejoining_node_fails_permanently_without_hanging() {
+        let (mut sharded, _, _) = registry_with("a:1", "FROM alpine:3.4\nRUN echo x");
+        let schedule = FaultSchedule::from_events(vec![(
+            VirtualTime::ZERO,
+            Fault::NodeCrash { node: 2 },
+        )]);
+        let n = 4;
+        let mut fleet = Fleet::new(FleetConfig::hpc(n));
+        let mut rng = SimRng::new(6, "dead-node");
+        let report = fleet
+            .deploy_with_faults(
+                &mut sharded,
+                "a:1",
+                0..n,
+                &schedule,
+                &RetryPolicy::hpc(),
+                &mut rng,
+            )
+            .unwrap();
+        assert_eq!(report.permanently_failed, 1);
+        assert_eq!(report.containers_started, 3);
+        assert!(fleet.failed_nodes()[2]);
+        // a later wave remembers the corpse instead of re-counting it
+        let again = fleet
+            .deploy_with_faults(
+                &mut sharded,
+                "a:1",
+                0..n,
+                &schedule,
+                &RetryPolicy::hpc(),
+                &mut rng,
+            )
+            .unwrap();
+        assert_eq!(again.permanently_failed, 0);
+        assert_eq!(again.containers_started, 3);
+    }
+
+    #[test]
+    fn endless_drop_window_terminates_with_permanent_failures() {
+        let (mut sharded, bytes, layers) = registry_with("one:1", "FROM alpine:3.4");
+        assert_eq!(layers, 1);
+        // every WAN transfer for the next hour is lost; hpc backoff
+        // sums to ~4 s, so all attempts burn out inside the window
+        let schedule = FaultSchedule::from_events(vec![(
+            VirtualTime::ZERO,
+            Fault::TransferDrop {
+                until: VirtualTime(3_600_000_000_000),
+            },
+        )]);
+        let n = 4;
+        let mut fleet = Fleet::new(FleetConfig::hpc(n));
+        let mut rng = SimRng::new(8, "endless");
+        let report = fleet
+            .deploy_with_faults(
+                &mut sharded,
+                "one:1",
+                0..n,
+                &schedule,
+                &RetryPolicy::hpc(),
+                &mut rng,
+            )
+            .unwrap();
+        let attempts = RetryPolicy::hpc().max_attempts as u64;
+        assert_eq!(report.permanently_failed, n, "nobody can be seeded");
+        assert_eq!(report.containers_started, 0);
+        assert_eq!(report.wan_transfers as u64, attempts);
+        assert_eq!(report.retried_bytes, bytes * attempts);
+        assert_eq!(report.cache.bytes_inserted, 0);
+        assert_eq!(
+            report.total_bytes(),
+            report.cache.bytes_inserted + report.retried_bytes
+        );
+    }
+
+    #[test]
+    fn scoped_deploy_targets_a_ring_and_later_rings_reuse_it() {
+        let (mut sharded, bytes, _) = registry_with("one:1", "FROM alpine:3.4");
+        let n = 8;
+        let mut fleet = Fleet::new(FleetConfig::hpc(n));
+        let mut rng = SimRng::new(9, "rings");
+        let none = FaultSchedule::none();
+        let canary = fleet
+            .deploy_with_faults(&mut sharded, "one:1", 0..2, &none, &RetryPolicy::none(), &mut rng)
+            .unwrap();
+        assert_eq!(canary.nodes, 2);
+        assert_eq!(canary.wan_bytes, bytes, "ring seeds over the WAN");
+        assert_eq!(canary.intra_bytes, bytes, "one fan-out copy in the ring");
+        assert_eq!(canary.containers_started, 2);
+        let rest = fleet
+            .deploy_with_faults(&mut sharded, "one:1", 2..n, &none, &RetryPolicy::none(), &mut rng)
+            .unwrap();
+        assert_eq!(rest.nodes, 6);
+        assert_eq!(rest.wan_bytes, 0, "canary ring already holds the layer");
+        assert_eq!(rest.intra_bytes, bytes * 6, "peers serve the fleet ring");
+        assert_eq!(rest.containers_started, 6);
+    }
+
+    #[test]
+    fn evict_storm_sheds_cache_and_forces_refetch() {
+        let (mut sharded, bytes, _) = registry_with("a:1", "FROM ubuntu:16.04\nRUN echo x");
+        let n = 4;
+        let mut fleet = Fleet::new(FleetConfig::hpc(n));
+        fleet.deploy(&mut sharded, "a:1").unwrap();
+        // a storm strikes node 0 between the waves, wiping its cache
+        let schedule = FaultSchedule::from_events(vec![(
+            fleet.now(),
+            Fault::CacheEvictStorm {
+                node: 0,
+                bytes: u64::MAX,
+            },
+        )]);
+        let mut rng = SimRng::new(11, "storm");
+        let report = fleet
+            .deploy_with_faults(
+                &mut sharded,
+                "a:1",
+                0..n,
+                &schedule,
+                &RetryPolicy::hpc(),
+                &mut rng,
+            )
+            .unwrap();
+        assert!(report.cache.evictions > 0, "storm shed the resident layers");
+        assert_eq!(report.wan_bytes, 0, "peers re-serve the struck node");
+        assert_eq!(report.intra_bytes, bytes, "refetch rides the fabric");
+        // the storm fires once: a third wave is fully warm again
+        let warm = fleet
+            .deploy_with_faults(
+                &mut sharded,
+                "a:1",
+                0..n,
+                &schedule,
+                &RetryPolicy::hpc(),
+                &mut rng,
+            )
+            .unwrap();
+        assert_eq!(warm.total_bytes(), 0);
+        assert_eq!(warm.cache.evictions, 0);
     }
 }

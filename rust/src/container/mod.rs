@@ -54,7 +54,9 @@ pub mod store;
 pub use buildfile::{Buildfile, Directive, Stage};
 pub use builder::{BuildGraph, BuildReport, Builder};
 pub use cache::{CacheStats, LayerCache};
-pub use distribute::{FanOut, Fleet, FleetConfig, FleetReport, ShardedRegistry};
+pub use distribute::{
+    FanOut, Fleet, FleetConfig, FleetReport, RetryPolicy, ShardAttempt, ShardedRegistry,
+};
 pub use image::{Image, ImageId, Layer, LayerId};
 pub use lifecycle::{Container, ContainerState};
 pub use registry::{PullReport, Registry};

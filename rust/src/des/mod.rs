@@ -20,15 +20,21 @@
 //!   service times; models the Lustre metadata server, NICs under
 //!   contention, and the registry's upload slots.  Its servers are
 //!   tokens in an [`EventQueue`].
+//! * [`fault`] — deterministic fault injection: a [`FaultSchedule`] of
+//!   typed crashes/outages/drop-windows generated from a [`SimRng`]
+//!   stream, replayable through the calendar queue, with
+//!   availability/MTTR accounting in [`FaultStats`].
 
+pub mod fault;
 mod queue;
 mod resource;
 mod rng;
 pub mod stats;
 mod time;
 
+pub use fault::{Fault, FaultConfig, FaultSchedule};
 pub use queue::{EventQueue, HeapEventQueue};
 pub use resource::FifoResource;
 pub use rng::SimRng;
-pub use stats::QueueStats;
+pub use stats::{FaultStats, QueueStats};
 pub use time::{Duration, VirtualTime};

@@ -26,6 +26,8 @@
 //!   counts mean the width is (or was) too narrow for the workload.
 //! * `pushes` / `pops` — lifetime totals; `pushes - pops == depth`.
 
+use super::time::Duration;
+
 /// Counters describing one [`EventQueue`](super::EventQueue)'s
 /// lifetime and current calendar geometry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -77,6 +79,101 @@ impl QueueStats {
     }
 }
 
+/// Availability/MTTR accounting for one fault-injected run.
+///
+/// Two halves meet here: the *injected* side (crash/outage/storm
+/// counts and node down-time, derived from the
+/// [`FaultSchedule`](super::fault::FaultSchedule) windows) and the
+/// *reaction* side (retries, failovers, dropped transfers, permanent
+/// failures, counted by the distribution tier as it works around the
+/// faults).  A fault-free run carries `FaultStats::default()` — every
+/// counter zero — so reports stay bit-identical when no chaos is
+/// configured.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultStats {
+    /// Node crashes injected.
+    pub node_crashes: u64,
+    /// Crashed nodes that rejoined (repairs completed).
+    pub node_repairs: u64,
+    /// Registry shard outages injected.
+    pub shard_outages: u64,
+    /// WAN drop windows injected.
+    pub drop_windows: u64,
+    /// Cache eviction storms injected.
+    pub evict_storms: u64,
+    /// WAN transfers lost to drop windows or timeouts.
+    pub transfers_dropped: u64,
+    /// Transfer re-attempts (WAN retries plus node re-deliveries).
+    pub retries: u64,
+    /// Pulls re-hashed to a surviving shard during an outage.
+    pub failovers: u64,
+    /// Nodes (or transfer targets) given up on for good.
+    pub permanent_failures: u64,
+    /// Summed node down-time overlapping the accounted span.
+    pub downtime: Duration,
+    /// Summed crash→rejoin spans of completed repairs.
+    pub repair_time: Duration,
+}
+
+impl FaultStats {
+    /// Mean time to repair: `repair_time / node_repairs`
+    /// ([`Duration::ZERO`] when nothing was repaired).
+    pub fn mttr(&self) -> Duration {
+        if self.node_repairs == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64(self.repair_time.as_secs_f64() / self.node_repairs as f64)
+        }
+    }
+
+    /// Fraction of node-seconds the fleet was up over `horizon`:
+    /// `1 - downtime / (nodes × horizon)`, clamped to `[0, 1]`
+    /// (`1.0` for an empty horizon).
+    pub fn availability(&self, nodes: usize, horizon: Duration) -> f64 {
+        let total = nodes as f64 * horizon.as_secs_f64();
+        if total <= 0.0 {
+            1.0
+        } else {
+            (1.0 - self.downtime.as_secs_f64() / total).clamp(0.0, 1.0)
+        }
+    }
+
+    /// Accumulate another run's counters into this one (rolling
+    /// deployments sum their ring reports).
+    pub fn merge(&mut self, other: &FaultStats) {
+        self.node_crashes += other.node_crashes;
+        self.node_repairs += other.node_repairs;
+        self.shard_outages += other.shard_outages;
+        self.drop_windows += other.drop_windows;
+        self.evict_storms += other.evict_storms;
+        self.transfers_dropped += other.transfers_dropped;
+        self.retries += other.retries;
+        self.failovers += other.failovers;
+        self.permanent_failures += other.permanent_failures;
+        self.downtime += other.downtime;
+        self.repair_time += other.repair_time;
+    }
+
+    /// One-line summary for reports and bench output.
+    pub fn render(&self) -> String {
+        format!(
+            "faults: {} crash(es) ({} repaired, MTTR {}), {} outage(s), \
+             {} drop window(s), {} storm(s); reaction: {} retry(ies), \
+             {} failover(s), {} dropped, {} permanent failure(s)",
+            self.node_crashes,
+            self.node_repairs,
+            self.mttr(),
+            self.shard_outages,
+            self.drop_windows,
+            self.evict_storms,
+            self.retries,
+            self.failovers,
+            self.transfers_dropped,
+            self.permanent_failures,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,5 +206,44 @@ mod tests {
         assert!(text.contains("depth hwm 40"));
         assert!(text.contains("3/64 buckets"));
         assert!(text.contains("2 resize(s)"));
+    }
+
+    #[test]
+    fn fault_stats_mttr_and_availability() {
+        let mut f = FaultStats::default();
+        assert_eq!(f.mttr(), Duration::ZERO);
+        assert_eq!(f.availability(16, Duration::from_millis(100)), 1.0);
+        f.node_repairs = 2;
+        f.repair_time = Duration::from_millis(30);
+        f.downtime = Duration::from_millis(40);
+        assert_eq!(f.mttr(), Duration::from_millis(15));
+        // 40 ms down over 4 nodes x 100 ms = 90% available
+        let a = f.availability(4, Duration::from_millis(100));
+        assert!((a - 0.9).abs() < 1e-12, "{a}");
+        assert_eq!(FaultStats::default().availability(0, Duration::ZERO), 1.0);
+    }
+
+    #[test]
+    fn fault_stats_merge_and_render() {
+        let mut a = FaultStats {
+            node_crashes: 1,
+            retries: 2,
+            ..FaultStats::default()
+        };
+        let b = FaultStats {
+            node_crashes: 2,
+            failovers: 1,
+            downtime: Duration::from_millis(5),
+            ..FaultStats::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.node_crashes, 3);
+        assert_eq!(a.retries, 2);
+        assert_eq!(a.failovers, 1);
+        assert_eq!(a.downtime, Duration::from_millis(5));
+        let text = a.render();
+        assert!(text.contains("3 crash(es)"));
+        assert!(text.contains("2 retry(ies)"));
+        assert!(text.contains("1 failover(s)"));
     }
 }

@@ -72,6 +72,12 @@ live registry — the same table lives in EXPERIMENTS.md):
               shared build/blob cache, pushes through 4 registry
               shards, non-terminal stages pruned; cold vs warm farm
               makespan and cache-hit ratios
+  chaos-canary  rolling canary upgrade (r1 -> r2, one hotpatch layer)
+              of the 16k-node fleet under seeded fault injection: node
+              crashes, shard outages, WAN drop windows, cache storms
+              vs retry/backoff/failover; sweeps fault intensity x
+              retry policy, reports tail makespan, availability and
+              wasted WAN bytes
   all         every registered scenario
 
 Scenarios expand into independent cells run across `--jobs N` worker
@@ -230,7 +236,11 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
         .opt("seed", "base simulation seed", None)
         .opt("config", "experiment config JSON (overrides defaults)", None)
         .opt("out", "also write a JSON report to this path", None)
-        .opt("nodes", "comma-separated fleet sizes (fig1-scale) or workers (build-farm)", None)
+        .opt(
+            "nodes",
+            "comma-separated fleet sizes (fig1-scale, chaos-canary) or workers (build-farm)",
+            None,
+        )
         .opt("jobs", "matrix workers; 0 = available parallelism (bit-identical)", Some("0"))
         .switch("list", "list the registered scenarios and exit")
         .switch("json", "print JSON instead of ASCII bars")
@@ -277,9 +287,9 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
             .collect(),
         one => vec![one.to_string()],
     };
-    let takes_nodes = |f: &str| f == "fig1-scale" || f == "build-farm";
+    let takes_nodes = |f: &str| f == "fig1-scale" || f == "build-farm" || f == "chaos-canary";
     if p.get("nodes").is_some() && !figures.iter().any(|f| takes_nodes(f)) {
-        anyhow::bail!("--nodes only applies to fig1-scale and build-farm");
+        anyhow::bail!("--nodes only applies to fig1-scale, build-farm and chaos-canary");
     }
     let mut all_json = Vec::new();
     for figure in &figures {

@@ -1,0 +1,433 @@
+//! `chaos-canary`: a rolling canary upgrade of the FEniCS fleet under
+//! seeded fault injection.
+//!
+//! The paper's deployment story (§3.1's "pull everywhere" step) is
+//! measured on a quiet cluster; production clusters are not quiet.
+//! This scenario replays the same fleet deployment while a
+//! deterministic [`FaultSchedule`] crashes nodes, takes registry
+//! shards out, drops WAN transfers, and storms node caches — and the
+//! distribution tier answers with the [`RetryPolicy`] machinery
+//! (capped exponential backoff, shard failover, fan-out re-parenting).
+//!
+//! The shape is a *canary* upgrade: the fleet already runs release
+//! `r1`; release `r2` (the same image plus one hotpatch layer, so only
+//! the delta layer moves) is first rolled to a small canary ring, and
+//! only if a majority of the ring survives does the rollout proceed to
+//! the rest of the fleet.  Cells sweep fault intensity × retry policy;
+//! the figures report tail makespan, fleet availability over the
+//! upgrade, and the WAN/fabric bytes wasted on lost transfers.
+//!
+//! Determinism: every cell derives its fault-schedule and retry-jitter
+//! streams from [`CellId::seed`](super::CellId::seed), so the matrix
+//! is bit-identical across `--jobs` settings, and the
+//! `intensity = 0.0` cells reproduce the fault-free deploy reports
+//! bit-for-bit (pinned by `tests/fault_injection.rs`).
+
+use anyhow::Result;
+
+use crate::bench::{Figure, Row};
+use crate::config::ExperimentConfig;
+use crate::container::{
+    Builder, Buildfile, Fleet, FleetConfig, FleetReport, LayerStore, Registry, RetryPolicy,
+    ShardedRegistry,
+};
+use crate::coordinator::FENICS_BUILDFILE;
+use crate::des::{Duration, FaultConfig, FaultSchedule, SimRng};
+use crate::metrics::Stats;
+
+use super::{Cell, CellResult, Scenario, SimContext};
+
+/// The running release every node already holds when the upgrade
+/// starts (the paper pipeline's reference).
+pub const V1_REFERENCE: &str = "quay.io/fenicsproject/stable:2016.1.0r1";
+
+/// The canary release being rolled out: `r1` plus one hotpatch layer,
+/// so the upgrade moves only the delta layer.
+pub const V2_REFERENCE: &str = "quay.io/fenicsproject/stable:2016.1.0r2";
+
+/// Fault intensities the matrix sweeps (`0.0` = the fault-free
+/// control cell, pinned bit-identical to [`Fleet::deploy`]).
+pub const INTENSITIES: [f64; 3] = [0.0, 0.4, 0.8];
+
+/// Virtual window (from the upgrade start) the fault schedule is
+/// generated within: 60 s.
+const CHAOS_HORIZON: Duration = Duration(60_000_000_000);
+
+/// The canary release's buildfile: the paper's FEniCS stack with one
+/// hotpatch `RUN` layer appended, so `r2` shares every `r1` layer and
+/// the rollout transfers only the delta.
+pub fn canary_buildfile() -> String {
+    format!("{FENICS_BUILDFILE}RUN apt-get -y install hotpatch-r2\n")
+}
+
+/// Build both releases into one store and publish them behind four
+/// shard frontends — the registry side of the canary campaign.
+pub fn canary_registry() -> Result<ShardedRegistry> {
+    let mut store = LayerStore::new();
+    let mut builder = Builder::new();
+    let v1 = builder.build(&Buildfile::parse(FENICS_BUILDFILE)?, V1_REFERENCE, &mut store)?;
+    let bf2 = Buildfile::parse(&canary_buildfile())?;
+    let v2 = builder.build(&bf2, V2_REFERENCE, &mut store)?;
+    let mut registry = Registry::new();
+    registry.push(&v1.image, &store)?;
+    registry.push(&v2.image, &store)?;
+    Ok(ShardedRegistry::new(registry, 4))
+}
+
+/// Size of the canary ring for a fleet of `nodes`: 1/16th of the
+/// fleet, at least one node.
+pub fn canary_ring(nodes: usize) -> usize {
+    (nodes / 16).max(1)
+}
+
+/// The retry policies the matrix sweeps: no retries at all (every
+/// lost transfer is terminal) against the deployment-campaign default.
+pub fn policies() -> [(&'static str, RetryPolicy); 2] {
+    [("no-retry", RetryPolicy::none()), ("hpc", RetryPolicy::hpc())]
+}
+
+/// The chaos canary-upgrade scenario.
+pub struct ChaosCanary;
+
+/// One (fleet size × fault intensity × retry policy) cell.
+#[derive(Debug, Clone, Copy)]
+struct ChaosCell {
+    nodes: usize,
+    intensity: f64,
+    policy_name: &'static str,
+    policy: RetryPolicy,
+}
+
+impl ChaosCell {
+    fn label(&self) -> String {
+        format!(
+            "{} nodes, intensity {:.1}, {}",
+            self.nodes, self.intensity, self.policy_name
+        )
+    }
+}
+
+/// Byte conservation for one ring report: everything that crossed a
+/// link either landed in a node cache or is accounted as re-sent.
+/// Holds exactly for the unbounded caches [`FleetConfig::hpc`] uses.
+fn ensure_conserved(report: &FleetReport) -> Result<()> {
+    anyhow::ensure!(
+        report.total_bytes() == report.cache.bytes_inserted + report.retried_bytes,
+        "byte conservation violated in `{}`: {} moved != {} admitted + {} re-sent",
+        report.reference,
+        report.total_bytes(),
+        report.cache.bytes_inserted,
+        report.retried_bytes,
+    );
+    Ok(())
+}
+
+impl Scenario for ChaosCanary {
+    fn name(&self) -> &'static str {
+        "chaos-canary"
+    }
+
+    fn describe(&self) -> &'static str {
+        "rolling canary upgrade (r1 -> r2, one hotpatch layer) on the \
+         fleet under seeded fault injection: crashes, shard outages, \
+         drop windows and cache storms vs retry/backoff/failover; \
+         sweeps fault intensity x retry policy, reports tail makespan, \
+         availability and wasted WAN bytes"
+    }
+
+    fn cells(&self, cfg: &ExperimentConfig) -> Result<Vec<Cell>> {
+        anyhow::ensure!(
+            !cfg.nodes.is_empty(),
+            "chaos-canary needs at least one fleet size in `nodes`"
+        );
+        anyhow::ensure!(
+            cfg.nodes.iter().all(|&n| n >= 2),
+            "chaos-canary fleets need >= 2 nodes (a canary ring plus a \
+             rest ring; got {:?})",
+            cfg.nodes
+        );
+        let mut cells = Vec::with_capacity(cfg.nodes.len() * INTENSITIES.len() * 2);
+        for &nodes in &cfg.nodes {
+            for &intensity in &INTENSITIES {
+                for (policy_name, policy) in policies() {
+                    let c = ChaosCell {
+                        nodes,
+                        intensity,
+                        policy_name,
+                        policy,
+                    };
+                    cells.push(Cell::new(c.label(), c));
+                }
+            }
+        }
+        Ok(cells)
+    }
+
+    fn run_cell(&self, ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult> {
+        let c: &ChaosCell = cell.payload()?;
+        let mut registry = canary_registry()?;
+        let mut fleet = Fleet::new(FleetConfig::hpc(c.nodes));
+
+        // the fleet runs r1 before the chaos starts (fault-free warmup)
+        let baseline = fleet.deploy(&mut registry, V1_REFERENCE)?;
+        anyhow::ensure!(
+            baseline.containers_started == c.nodes,
+            "baseline r1 deploy must reach every node"
+        );
+
+        // the cell's two private streams: where the faults land, and
+        // the retry jitter reacting to them
+        let fault_cfg = FaultConfig::new(
+            c.nodes,
+            registry.shard_count(),
+            CHAOS_HORIZON,
+            c.intensity,
+        );
+        let mut schedule_rng = SimRng::new(cell.id.seed(ctx.cfg.seed), "fault-schedule");
+        let schedule = FaultSchedule::generate(&fault_cfg, &mut schedule_rng).shifted(fleet.now());
+        registry.apply_faults(&schedule);
+        let mut jitter_rng = SimRng::new(cell.id.seed(ctx.cfg.seed), "retry-jitter");
+
+        // ring 1: the canary; ring 2 only if a majority of the canary
+        // ring came up on r2
+        let ring = canary_ring(c.nodes);
+        let canary = fleet.deploy_with_faults(
+            &mut registry,
+            V2_REFERENCE,
+            0..ring,
+            &schedule,
+            &c.policy,
+            &mut jitter_rng,
+        )?;
+        ensure_conserved(&canary)?;
+        anyhow::ensure!(
+            canary.containers_started + canary.permanently_failed == ring,
+            "canary ring must end deployed or permanently failed"
+        );
+        let aborted = canary.permanently_failed * 2 > ring;
+        let rest = if aborted {
+            None
+        } else {
+            let r = fleet.deploy_with_faults(
+                &mut registry,
+                V2_REFERENCE,
+                ring..c.nodes,
+                &schedule,
+                &c.policy,
+                &mut jitter_rng,
+            )?;
+            ensure_conserved(&r)?;
+            anyhow::ensure!(
+                r.containers_started + r.permanently_failed == c.nodes - ring,
+                "rest ring must end deployed or permanently failed"
+            );
+            Some(r)
+        };
+
+        // injected stats once over the whole rollout span (the ring
+        // reports each count the schedule's events globally, so they
+        // must not simply be merged), reaction counters summed from
+        // the rings
+        let end = match &rest {
+            Some(r) => r.started_at + r.makespan,
+            None => canary.started_at + canary.makespan,
+        };
+        let span = end.since(canary.started_at);
+        let mut fault = schedule.stats_over(canary.started_at, end);
+        fault.retries = canary.retries + rest.as_ref().map_or(0, |r| r.retries);
+        fault.failovers = canary.failovers + rest.as_ref().map_or(0, |r| r.failovers);
+        fault.transfers_dropped = canary.fault.transfers_dropped
+            + rest.as_ref().map_or(0, |r| r.fault.transfers_dropped);
+        let permanent =
+            canary.permanently_failed + rest.as_ref().map_or(0, |r| r.permanently_failed);
+        fault.permanent_failures = permanent as u64;
+
+        let availability = fault.availability(c.nodes, span);
+        let wasted = canary.retried_bytes + rest.as_ref().map_or(0, |r| r.retried_bytes);
+        let wan = canary.wan_bytes + rest.as_ref().map_or(0, |r| r.wan_bytes);
+        let delivered =
+            canary.delivered_bytes() + rest.as_ref().map_or(0, |r| r.delivered_bytes());
+
+        Ok(CellResult::values(vec![
+            span.as_secs_f64(),
+            availability,
+            wasted as f64 / 1e6,
+            fault.retries as f64,
+        ])
+        .with_breakdown(vec![
+            ("make:canary ring s".into(), canary.makespan.as_secs_f64()),
+            (
+                "make:fleet ring s".into(),
+                rest.as_ref().map_or(0.0, |r| r.makespan.as_secs_f64()),
+            ),
+            ("make:retries".into(), fault.retries as f64),
+            ("make:failovers".into(), fault.failovers as f64),
+            ("make:permanently failed".into(), permanent as f64),
+            ("avail:downtime s".into(), fault.downtime.as_secs_f64()),
+            ("avail:mttr s".into(), fault.mttr().as_secs_f64()),
+            ("avail:crashes".into(), fault.node_crashes as f64),
+            ("avail:aborted".into(), if aborted { 1.0 } else { 0.0 }),
+            ("waste:wan MB".into(), wan as f64 / 1e6),
+            ("waste:delivered MB".into(), delivered as f64 / 1e6),
+        ]))
+    }
+
+    fn assemble(
+        &self,
+        _ctx: &SimContext<'_>,
+        cells: &[Cell],
+        rows: Vec<CellResult>,
+    ) -> Result<Vec<Figure>> {
+        let mut make_fig = Figure::new(
+            "Chaos canary — rolling-upgrade makespan under faults",
+            "makespan [s]",
+            false,
+        );
+        let mut avail_fig = Figure::new(
+            "Chaos canary — fleet availability over the upgrade",
+            "availability",
+            false,
+        );
+        let mut waste_fig = Figure::new(
+            "Chaos canary — WAN/fabric bytes wasted on lost transfers",
+            "re-sent [MB]",
+            false,
+        );
+        for r in &rows {
+            let c: &ChaosCell = cells[r.cell].payload()?;
+            let label = c.label();
+            let part = |prefix: &str| -> Vec<(String, f64)> {
+                r.breakdown
+                    .iter()
+                    .filter_map(|(k, v)| k.strip_prefix(prefix).map(|k| (k.to_string(), *v)))
+                    .collect()
+            };
+            make_fig.push(
+                Row::new(label.clone(), Stats::from_samples(vec![r.values[0]]))
+                    .with_breakdown(part("make:")),
+            );
+            avail_fig.push(
+                Row::new(label.clone(), Stats::from_samples(vec![r.values[1]]))
+                    .with_breakdown(part("avail:")),
+            );
+            waste_fig.push(
+                Row::new(label, Stats::from_samples(vec![r.values[2]]))
+                    .with_breakdown(part("waste:")),
+            );
+        }
+        make_fig.note(
+            "r2 rolls to a 1/16th canary ring first; the rest of the fleet \
+             follows only if a majority of the ring survives (aborted \
+             rollouts report the canary ring alone)",
+        );
+        avail_fig.note(
+            "availability = 1 - node downtime / (nodes x upgrade span); \
+             intensity 0.0 is the fault-free control and must sit at 1.0",
+        );
+        waste_fig.note(
+            "conservation: bytes moved == bytes admitted to caches + \
+             re-sent bytes (checked per ring while the cells ran)",
+        );
+        Ok(vec![make_fig, avail_fig, waste_fig])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::CalibrationTable;
+    use crate::scenario::CellId;
+
+    fn ctx_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            nodes: vec![64],
+            ..ExperimentConfig::paper_default("chaos-canary").unwrap()
+        }
+    }
+
+    #[test]
+    fn cells_sweep_intensity_times_policy() {
+        let cfg = ctx_cfg();
+        let cells = ChaosCanary.cells(&cfg).unwrap();
+        assert_eq!(cells.len(), INTENSITIES.len() * 2);
+        assert!(cells[0].label.contains("intensity 0.0"));
+        assert!(cells[0].label.contains("no-retry"));
+        assert!(cells[1].label.contains("hpc"));
+        assert!(ChaosCanary
+            .cells(&ExperimentConfig {
+                nodes: vec![],
+                ..cfg.clone()
+            })
+            .is_err());
+        assert!(ChaosCanary
+            .cells(&ExperimentConfig {
+                nodes: vec![1],
+                ..cfg
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn canary_registry_serves_both_releases_and_shares_layers() {
+        let registry = canary_registry().unwrap();
+        let v1 = registry.registry().image(V1_REFERENCE).unwrap();
+        let v2 = registry.registry().image(V2_REFERENCE).unwrap();
+        // r2 = r1 plus exactly one hotpatch layer, sharing the r1 chain
+        assert_eq!(v2.layers.len(), v1.layers.len() + 1);
+        assert_eq!(&v2.layers[..v1.layers.len()], &v1.layers[..]);
+    }
+
+    #[test]
+    fn ring_is_a_sixteenth_with_a_floor_of_one() {
+        assert_eq!(canary_ring(16384), 1024);
+        assert_eq!(canary_ring(64), 4);
+        assert_eq!(canary_ring(2), 1);
+    }
+
+    fn run(nodes: usize, intensity: f64, policy_idx: usize, index: usize) -> CellResult {
+        let cfg = ExperimentConfig {
+            nodes: vec![nodes],
+            ..ExperimentConfig::paper_default("chaos-canary").unwrap()
+        };
+        let table = CalibrationTable::builtin_fallback();
+        let ctx = SimContext {
+            cfg: &cfg,
+            table: &table,
+        };
+        let (name, policy) = policies()[policy_idx];
+        let mut cell = Cell::new(
+            "test",
+            ChaosCell {
+                nodes,
+                intensity,
+                policy_name: name,
+                policy,
+            },
+        );
+        cell.id = CellId {
+            scenario: "chaos-canary",
+            index,
+        };
+        ChaosCanary.run_cell(&ctx, &cell).unwrap()
+    }
+
+    #[test]
+    fn zero_intensity_cell_is_fully_available_and_waste_free() {
+        let r = run(64, 0.0, 0, 0);
+        assert_eq!(r.values[1], 1.0, "availability");
+        assert_eq!(r.values[2], 0.0, "wasted MB");
+        assert_eq!(r.values[3], 0.0, "retries");
+        assert!(r.values[0] > 0.0, "upgrade takes virtual time");
+    }
+
+    #[test]
+    fn chaotic_cell_is_deterministic_for_a_fixed_seed() {
+        let a = run(64, 0.8, 1, 5);
+        let b = run(64, 0.8, 1, 5);
+        assert_eq!(a.values, b.values);
+        assert_eq!(a.breakdown, b.breakdown);
+        // a different cell index reseeds the schedule
+        let c = run(64, 0.8, 1, 4);
+        assert!(a.values != c.values || a.breakdown != c.breakdown);
+    }
+}

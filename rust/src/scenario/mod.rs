@@ -13,11 +13,12 @@
 //! All of the paper's figures (`fig1-scale`, `fig2`, `fig3`, `fig4`,
 //! `fig5a`, `fig5b`) live here as scenario modules, next to scenarios
 //! the paper discusses but never measures (`mixed-fleet`,
-//! `build-farm`).  Adding a new experiment is a
+//! `build-farm`, `chaos-canary`).  Adding a new experiment is a
 //! [`ScenarioRegistry::register`] call away — the walkthrough lives in
 //! `docs/ARCHITECTURE.md` §5.
 
 pub mod build_farm;
+pub mod chaos_canary;
 pub mod fig1_scale;
 pub mod fig2;
 pub mod fig34;
@@ -250,6 +251,7 @@ impl ScenarioRegistry {
         r.register(Box::new(fig5::Fig5 { workstation: false }));
         r.register(Box::new(mixed_fleet::MixedFleet));
         r.register(Box::new(build_farm::BuildFarmScenario));
+        r.register(Box::new(chaos_canary::ChaosCanary));
         r
     }
 
@@ -322,12 +324,13 @@ mod tests {
                 "fig5a",
                 "fig5b",
                 "mixed-fleet",
-                "build-farm"
+                "build-farm",
+                "chaos-canary"
             ]
         );
         assert!(r.get("fig2").is_some());
         assert!(r.get("fig9").is_none());
-        assert_eq!(r.len(), 8);
+        assert_eq!(r.len(), 9);
         assert!(!r.is_empty());
     }
 

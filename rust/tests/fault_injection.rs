@@ -1,0 +1,218 @@
+//! Integration: the fault-injection layer's contracts.
+//!
+//! * the same seed generates a byte-identical [`FaultSchedule`], and
+//!   the chaos-canary matrix renders byte-identically across `--jobs`;
+//! * a zero-intensity schedule reproduces the fault-free deploy
+//!   reports **bit-for-bit** (the chaos layer is free when unused);
+//! * under heavy chaos every scope node ends either deployed or
+//!   reported permanently failed — nothing is silently lost — and the
+//!   byte-conservation invariant extends to `retried_bytes`;
+//! * a retry storm against a never-ending drop window terminates with
+//!   permanent failures instead of hanging.
+
+use std::ops::Range;
+
+use harbor::config::ExperimentConfig;
+use harbor::container::{Fleet, FleetConfig, FleetReport, RetryPolicy, ShardedRegistry};
+use harbor::coordinator::Coordinator;
+use harbor::des::{Duration, Fault, FaultConfig, FaultSchedule, SimRng, VirtualTime};
+use harbor::runtime::CalibrationTable;
+use harbor::scenario::chaos_canary::{
+    canary_registry, canary_ring, ChaosCanary, V1_REFERENCE, V2_REFERENCE,
+};
+use harbor::scenario::{CellId, Scenario, SimContext};
+
+fn schedule(nodes: usize, intensity: f64, seed: u64) -> FaultSchedule {
+    let cfg = FaultConfig::new(nodes, 4, Duration::from_secs_f64(60.0), intensity);
+    FaultSchedule::generate(&cfg, &mut SimRng::new(seed, "fault-schedule"))
+}
+
+/// One ring of the rolling upgrade (unwrapping keeps call sites
+/// readable; a deploy error is a test failure either way).
+fn upgrade(
+    fleet: &mut Fleet,
+    registry: &mut ShardedRegistry,
+    scope: Range<usize>,
+    sched: &FaultSchedule,
+    policy: &RetryPolicy,
+    rng: &mut SimRng,
+) -> FleetReport {
+    fleet
+        .deploy_with_faults(registry, V2_REFERENCE, scope, sched, policy, rng)
+        .unwrap()
+}
+
+#[test]
+fn same_seed_generates_a_byte_identical_schedule() {
+    let a = schedule(256, 0.8, 7);
+    let b = schedule(256, 0.8, 7);
+    assert_eq!(a.events(), b.events());
+    assert_eq!(a.len(), b.len());
+    // a different seed rolls different chaos
+    let c = schedule(256, 0.8, 8);
+    assert_ne!(a.events(), c.events());
+    // and zero intensity injects nothing at any seed
+    assert!(schedule(256, 0.0, 7).is_empty());
+}
+
+#[test]
+fn chaos_matrix_renders_identically_across_jobs() {
+    let cfg = ExperimentConfig {
+        nodes: vec![16],
+        ..ExperimentConfig::paper_default("chaos-canary").unwrap()
+    };
+    let run = |jobs| {
+        Coordinator::with_table(CalibrationTable::builtin_fallback())
+            .with_jobs(jobs)
+            .run(&cfg)
+            .unwrap()
+            .iter()
+            .map(|f| f.render())
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let serial = run(1);
+    assert_eq!(serial, run(4), "--jobs must not change a single byte");
+    assert_eq!(serial, run(1), "re-running must not change a single byte");
+}
+
+#[test]
+fn zero_intensity_rolling_upgrade_is_bit_identical_to_fault_free() {
+    let nodes = 32;
+    let ring = canary_ring(nodes);
+    let empty = FaultSchedule::none();
+
+    // arm A: the chaos path with an empty schedule and the full retry
+    // policy (jitter armed but never drawn)
+    let mut reg_a = canary_registry().unwrap();
+    let mut fleet_a = Fleet::new(FleetConfig::hpc(nodes));
+    fleet_a.deploy(&mut reg_a, V1_REFERENCE).unwrap();
+    reg_a.apply_faults(&empty);
+    let hpc = RetryPolicy::hpc();
+    let mut rng_a = SimRng::new(99, "retry-jitter");
+    let a1 = upgrade(&mut fleet_a, &mut reg_a, 0..ring, &empty, &hpc, &mut rng_a);
+    let a2 = upgrade(&mut fleet_a, &mut reg_a, ring..nodes, &empty, &hpc, &mut rng_a);
+
+    // arm B: the same rings under the no-retry policy and a different
+    // rng — a fault-free run may not depend on either
+    let mut reg_b = canary_registry().unwrap();
+    let mut fleet_b = Fleet::new(FleetConfig::hpc(nodes));
+    fleet_b.deploy(&mut reg_b, V1_REFERENCE).unwrap();
+    let none = RetryPolicy::none();
+    let mut rng_b = SimRng::new(12345, "other-stream");
+    let b1 = upgrade(&mut fleet_b, &mut reg_b, 0..ring, &empty, &none, &mut rng_b);
+    let b2 = upgrade(&mut fleet_b, &mut reg_b, ring..nodes, &empty, &none, &mut rng_b);
+
+    assert_eq!(a1, b1, "canary ring reports must be bit-identical");
+    assert_eq!(a2, b2, "rest ring reports must be bit-identical");
+    assert_eq!(a1.render(), b1.render());
+    // the untouched rng still sits at its seed position
+    let mut fresh = SimRng::new(99, "retry-jitter");
+    assert_eq!(
+        rng_a.uniform(0.0, 1.0).to_bits(),
+        fresh.uniform(0.0, 1.0).to_bits()
+    );
+    // and the fault tail never appears in a fault-free render
+    assert!(!a1.render().contains("retry(ies)"));
+    assert_eq!(a1.fault, Default::default());
+}
+
+#[test]
+fn zero_intensity_cell_matches_a_hand_rolled_fault_free_upgrade() {
+    let cfg = ExperimentConfig {
+        nodes: vec![32],
+        ..ExperimentConfig::paper_default("chaos-canary").unwrap()
+    };
+    let table = CalibrationTable::builtin_fallback();
+    let ctx = SimContext {
+        cfg: &cfg,
+        table: &table,
+    };
+    let scenario = ChaosCanary;
+    let mut cells = scenario.cells(&cfg).unwrap();
+    for (i, c) in cells.iter_mut().enumerate() {
+        c.id = CellId {
+            scenario: "chaos-canary",
+            index: i,
+        };
+    }
+    // expansion order: intensity outer, policy inner — cell 1 is
+    // (intensity 0.0, hpc)
+    assert!(cells[1].label.contains("intensity 0.0") && cells[1].label.contains("hpc"));
+    let r = scenario.run_cell(&ctx, &cells[1]).unwrap();
+
+    // hand-rolled fault-free rolling upgrade over the same rings
+    let nodes = 32;
+    let ring = canary_ring(nodes);
+    let mut reg = canary_registry().unwrap();
+    let mut fleet = Fleet::new(FleetConfig::hpc(nodes));
+    fleet.deploy(&mut reg, V1_REFERENCE).unwrap();
+    let empty = FaultSchedule::none();
+    let none = RetryPolicy::none();
+    let mut rng = SimRng::new(0, "unused");
+    let canary = upgrade(&mut fleet, &mut reg, 0..ring, &empty, &none, &mut rng);
+    let rest = upgrade(&mut fleet, &mut reg, ring..nodes, &empty, &none, &mut rng);
+    let span = (rest.started_at + rest.makespan).since(canary.started_at);
+
+    assert_eq!(r.values[0].to_bits(), span.as_secs_f64().to_bits());
+    assert_eq!(r.values[1], 1.0, "fault-free availability is exactly 1");
+    assert_eq!(r.values[2], 0.0, "no bytes wasted");
+    assert_eq!(r.values[3], 0.0, "no retries");
+}
+
+#[test]
+fn no_scope_node_is_orphaned_and_bytes_stay_conserved_under_chaos() {
+    for seed in 0..8u64 {
+        let nodes = 32;
+        let ring = canary_ring(nodes);
+        let mut reg = canary_registry().unwrap();
+        let mut fleet = Fleet::new(FleetConfig::hpc(nodes));
+        fleet.deploy(&mut reg, V1_REFERENCE).unwrap();
+        let sched = schedule(nodes, 1.0, seed).shifted(fleet.now());
+        reg.apply_faults(&sched);
+        let mut rng = SimRng::new(seed, "retry-jitter");
+        let policy = RetryPolicy::hpc();
+        let canary = upgrade(&mut fleet, &mut reg, 0..ring, &sched, &policy, &mut rng);
+        let rest = upgrade(&mut fleet, &mut reg, ring..nodes, &sched, &policy, &mut rng);
+        for (label, r, scope) in [("canary", &canary, ring), ("rest", &rest, nodes - ring)] {
+            assert_eq!(
+                r.containers_started + r.permanently_failed,
+                scope,
+                "seed {seed}: every {label} node must end deployed or permanently failed"
+            );
+            assert_eq!(
+                r.total_bytes(),
+                r.cache.bytes_inserted + r.retried_bytes,
+                "seed {seed}: {label} ring broke byte conservation"
+            );
+        }
+    }
+}
+
+#[test]
+fn retry_storm_against_a_total_drop_window_terminates() {
+    let nodes = 4;
+    let mut reg = canary_registry().unwrap();
+    let mut fleet = Fleet::new(FleetConfig::hpc(nodes));
+    fleet.deploy(&mut reg, V1_REFERENCE).unwrap();
+    // one drop window swallowing every WAN transfer forever
+    let sched = FaultSchedule::from_events(vec![(
+        VirtualTime(0),
+        Fault::TransferDrop {
+            until: VirtualTime(u64::MAX),
+        },
+    )]);
+    reg.apply_faults(&sched);
+    let policy = RetryPolicy::hpc();
+    let mut rng = SimRng::new(1, "retry-jitter");
+    let r = upgrade(&mut fleet, &mut reg, 0..nodes, &sched, &policy, &mut rng);
+    // the hotpatch layer can never cross the WAN: the seeding attempts
+    // exhaust the retry budget and every node is given up on
+    assert_eq!(r.permanently_failed, nodes);
+    assert_eq!(r.containers_started, 0);
+    assert_eq!(r.wan_transfers as u32, policy.max_attempts);
+    assert_eq!(r.wan_bytes, r.retried_bytes, "every WAN byte was wasted");
+    assert_eq!(r.total_bytes(), r.cache.bytes_inserted + r.retried_bytes);
+    assert!(r.fault.retries > 0 && r.fault.transfers_dropped > 0);
+    assert!(r.render().contains("permanently failed"));
+}
