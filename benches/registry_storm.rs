@@ -1,0 +1,107 @@
+//! Registry-storm bench: the open-loop heavy-tailed pull/push storm
+//! against the registry front door, recorded into `BENCH_micro.json`.
+//!
+//! Recorded keys (the percentile cells are the 4-shard frontends):
+//!
+//! * `storm_p50_s` / `storm_p99_s` / `storm_p999_s` — warmup-trimmed
+//!   blob pull latency percentiles at offered load 0.90x (just under
+//!   the knee);
+//! * `storm_sat_p99_s` — the same p99 at offered load 1.20x, past the
+//!   saturation knee;
+//! * `storm_knee_ratio` — p99(1.20x) / p99(0.25x): how hard the tail
+//!   diverges across the knee (the saturation signature);
+//! * `storm_delivered_mbps` — delivered payload throughput of the
+//!   0.90x cell;
+//! * `storm_determinism_ok` — 1.0 iff the full figure set renders
+//!   byte-identically under `--jobs 1` and `--jobs 4` (the CI
+//!   determinism gate fails on anything else);
+//! * `storm_wall_s` — wall time of the serial regeneration (the §Perf
+//!   trajectory).
+
+mod common;
+
+use std::time::Instant;
+
+use harbor::bench::{Figure, Row};
+use harbor::config::ExperimentConfig;
+use harbor::coordinator::Coordinator;
+
+use common::record_bench;
+
+fn render_all(figs: &[Figure]) -> String {
+    figs.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+}
+
+fn row<'a>(fig: &'a Figure, needle: &str) -> &'a Row {
+    fig.rows
+        .iter()
+        .find(|r| r.label.contains(needle))
+        .unwrap_or_else(|| panic!("no row matching `{needle}` in `{}`", fig.title))
+}
+
+fn part(r: &Row, key: &str) -> f64 {
+    r.breakdown
+        .iter()
+        .find(|(k, _)| k == key)
+        .map(|&(_, v)| v)
+        .unwrap_or_else(|| panic!("row `{}` carries no `{key}` breakdown", r.label))
+}
+
+fn main() {
+    let mut rec: Vec<(String, f64)> = Vec::new();
+    let cfg = ExperimentConfig::paper_default("registry-storm").expect("registered default");
+    println!(
+        "== registry storm: shards {:?}, open-loop offered-load sweep ==",
+        cfg.nodes
+    );
+
+    let t0 = Instant::now();
+    let serial = Coordinator::new().with_jobs(1).run(&cfg).expect("registry-storm runs");
+    let wall = t0.elapsed().as_secs_f64();
+    for f in &serial {
+        println!("{}", f.render());
+    }
+
+    // determinism gate: the whole matrix again on 4 workers must
+    // render byte-for-byte the same figures
+    let parallel = Coordinator::new()
+        .with_jobs(4)
+        .run(&cfg)
+        .expect("registry-storm runs (4 jobs)");
+    let deterministic = render_all(&serial) == render_all(&parallel);
+    if !deterministic {
+        eprintln!("  WARNING: --jobs 1 and --jobs 4 renders differ");
+    }
+
+    let [lat_fig, sat_fig] = &serial[..] else {
+        panic!("registry-storm assembles two figures, got {}", serial.len());
+    };
+    let knee = row(lat_fig, "4 shard(s), load 0.90x");
+    let past = row(lat_fig, "4 shard(s), load 1.20x");
+    let calm = row(lat_fig, "4 shard(s), load 0.25x");
+    let p99 = knee.stats.mean();
+    let sat_p99 = past.stats.mean();
+    let knee_ratio = sat_p99 / calm.stats.mean().max(f64::MIN_POSITIVE);
+    let delivered = row(sat_fig, "4 shard(s), load 0.90x").stats.mean();
+
+    println!(
+        "  4 shards: p50 {:.3} s / p99 {p99:.3} s / p999 {:.3} s at 0.90x; \
+         p99 {sat_p99:.3} s past the knee (x{knee_ratio:.1} over 0.25x); \
+         {delivered:.1} MB/s delivered; computed in {wall:.3} s (deterministic: {deterministic})",
+        part(knee, "p50 s"),
+        part(knee, "p999 s"),
+    );
+
+    rec.push(("storm_p50_s".into(), part(knee, "p50 s")));
+    rec.push(("storm_p99_s".into(), p99));
+    rec.push(("storm_p999_s".into(), part(knee, "p999 s")));
+    rec.push(("storm_sat_p99_s".into(), sat_p99));
+    rec.push(("storm_knee_ratio".into(), knee_ratio));
+    rec.push(("storm_delivered_mbps".into(), delivered));
+    rec.push((
+        "storm_determinism_ok".into(),
+        if deterministic { 1.0 } else { 0.0 },
+    ));
+    rec.push(("storm_wall_s".into(), wall));
+    record_bench(&rec);
+}

@@ -17,6 +17,7 @@ use harbor::bench::{Figure, RowSet};
 use harbor::cluster::MachineSpec;
 use harbor::config::ExperimentConfig;
 use harbor::coordinator::Coordinator;
+use harbor::des::{Duration, LatencyHistogram};
 use harbor::platform::Platform;
 use harbor::runtime::CalibrationTable;
 use harbor::scenario::{Cell, CellResult, Scenario, SimContext};
@@ -109,6 +110,15 @@ impl Scenario for StartupSweep {
             fig.push(row);
         }
         fig.note("native starts free; the VM pays boot + hypervisor setup");
+        // the des-level percentile estimator is reusable from any
+        // scenario: deterministic log-spaced bins, no sorting, and the
+        // same numbers at every --jobs setting (registry-storm builds
+        // its whole latency figure on this)
+        let mut hist = LatencyHistogram::new();
+        for r in &rows {
+            hist.record(Duration::from_secs_f64(r.primary()));
+        }
+        fig.note(format!("all-platform {}", hist.render()));
         Ok(vec![fig])
     }
 }

@@ -16,8 +16,9 @@ use crate::util::json::{self, Value};
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
     /// Which scenario: "fig2", "fig3", "fig4", "fig5a", "fig5b",
-    /// "fig1-scale", "mixed-fleet", "build-farm", "chaos-canary" (the
-    /// live list is the scenario registry: `harbor bench --list`).
+    /// "fig1-scale", "mixed-fleet", "build-farm", "chaos-canary",
+    /// "registry-storm" (the live list is the scenario registry:
+    /// `harbor bench --list`).
     pub figure: String,
     /// Repetitions per bar (the paper: 5 on the workstation, 3 on Edison).
     pub reps: usize,
@@ -31,8 +32,9 @@ pub struct ExperimentConfig {
     /// `false` forces the O(ranks) per-rank reference path).
     pub batched: bool,
     /// Fleet node counts (the `fig1-scale` deployment and
-    /// `chaos-canary` upgrade sweeps) or CI worker counts (the
-    /// `build-farm` sweep).
+    /// `chaos-canary` upgrade sweeps), CI worker counts (the
+    /// `build-farm` sweep), or registry shard counts (the
+    /// `registry-storm` sweep).
     pub nodes: Vec<usize>,
 }
 
@@ -53,6 +55,11 @@ pub const FARM_WORKERS: [usize; 3] = [1, 4, 16];
 /// The `chaos-canary` fleet size: the canary upgrade rolls over the
 /// full 16k-node fleet (the largest `fig1-scale` point) under faults.
 pub const CHAOS_FLEET: usize = 16384;
+
+/// The `registry-storm` shard counts: how many FIFO frontends the
+/// front door multiplexes the open-loop session storm onto (`nodes`
+/// carries these; the offered-load sweep is built into the scenario).
+pub const STORM_SHARDS: [usize; 3] = [2, 4, 8];
 
 impl ExperimentConfig {
     /// The paper's setup for each figure.
@@ -148,6 +155,18 @@ impl ExperimentConfig {
                 sizes: vec![],
                 batched: true,
                 nodes: vec![CHAOS_FLEET],
+            },
+            // the registry front-door storm: `nodes` carries the shard
+            // counts; the offered-load sweep and arrival seeding live
+            // in the scenario, so one rep suffices
+            "registry-storm" => ExperimentConfig {
+                figure: "registry-storm".into(),
+                reps: 1,
+                seed: 42,
+                ranks: vec![],
+                sizes: vec![],
+                batched: true,
+                nodes: STORM_SHARDS.to_vec(),
             },
             // no name enumeration here: the live list belongs to the
             // scenario registry (`harbor bench --list`), and a second
@@ -398,6 +417,16 @@ mod tests {
     fn chaos_canary_targets_the_full_fleet() {
         let cfg = ExperimentConfig::paper_default("chaos-canary").unwrap();
         assert_eq!(cfg.nodes, vec![CHAOS_FLEET]);
+        assert_eq!(cfg.reps, 1);
+        assert!(cfg.ranks.is_empty() && cfg.sizes.is_empty());
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn registry_storm_sweeps_shard_counts() {
+        let cfg = ExperimentConfig::paper_default("registry-storm").unwrap();
+        assert_eq!(cfg.nodes, STORM_SHARDS.to_vec());
         assert_eq!(cfg.reps, 1);
         assert!(cfg.ranks.is_empty() && cfg.sizes.is_empty());
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();

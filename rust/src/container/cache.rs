@@ -54,6 +54,21 @@ impl CacheStats {
         self.bytes_evicted += other.bytes_evicted;
     }
 
+    /// One-line summary for reports and bench output.
+    pub fn render(&self) -> String {
+        format!(
+            "cache: {}/{} hit(s) ({:.0}% hit rate), {} eviction(s), \
+             {:.1} MB hit / {:.1} MB inserted / {:.1} MB evicted",
+            self.hits,
+            self.hits + self.misses,
+            self.hit_rate() * 100.0,
+            self.evictions,
+            self.bytes_hit as f64 / 1e6,
+            self.bytes_inserted as f64 / 1e6,
+            self.bytes_evicted as f64 / 1e6,
+        )
+    }
+
     /// Counter delta since an `earlier` snapshot of the same cache set
     /// (all fields are monotone, so plain subtraction is exact).
     pub fn since(&self, earlier: &CacheStats) -> CacheStats {
@@ -261,6 +276,9 @@ mod tests {
         assert_eq!(s.bytes_hit, 100);
         assert_eq!(s.bytes_inserted, 100);
         assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        let text = s.render();
+        assert!(text.contains("1/2 hit(s)"), "{text}");
+        assert!(text.contains("50% hit rate"), "{text}");
     }
 
     #[test]

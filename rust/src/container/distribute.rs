@@ -323,6 +323,20 @@ impl ShardedRegistry {
         self.shards.iter().map(|s| s.busy_time()).collect()
     }
 
+    /// Queueing delay a request arriving at `at` would see on each
+    /// shard frontend (see [`FifoResource::backlog`]) — the saturation
+    /// view an open-loop storm reports alongside latency percentiles.
+    pub fn shard_backlog(&self, at: VirtualTime) -> Vec<Duration> {
+        self.shards.iter().map(|s| s.backlog(at)).collect()
+    }
+
+    /// Aggregate WAN drain rate over all shard frontends, in bytes per
+    /// second — the capacity an offered-load sweep is calibrated
+    /// against (per-request RTT overhead comes on top).
+    pub fn aggregate_bandwidth(&self) -> f64 {
+        self.wan.beta_bytes_per_sec * self.shards.len() as f64
+    }
+
     /// Per-shard utilisation over `horizon`, counting only service
     /// delivered beyond the `busy_before` snapshot (a prior
     /// [`shard_busy`](Self::shard_busy) result).
@@ -1235,6 +1249,36 @@ mod tests {
         assert_eq!(again.layers_transferred, 0);
         assert_eq!(again.bytes_transferred, 0);
         assert_eq!(again.time, Duration::ZERO);
+    }
+
+    #[test]
+    fn backlog_and_bandwidth_views() {
+        let (mut sharded, _, _) = registry_with("a:1", "FROM alpine:3.4");
+        let wan = sharded.wan();
+        assert_eq!(sharded.aggregate_bandwidth(), wan.beta_bytes_per_sec * 4.0);
+        assert!(
+            sharded
+                .shard_backlog(VirtualTime::ZERO)
+                .iter()
+                .all(|&b| b == Duration::ZERO),
+            "idle shards have no backlog"
+        );
+        let id = sharded
+            .registry()
+            .layers
+            .ids()
+            .next()
+            .cloned()
+            .expect("image has layers");
+        let shard = sharded.shard_of(&id);
+        let done = sharded.submit_transfer(VirtualTime::ZERO, &id, 64_000_000);
+        let backlog = sharded.shard_backlog(VirtualTime::ZERO);
+        assert_eq!(backlog[shard], done.since(VirtualTime::ZERO));
+        for (s, &b) in backlog.iter().enumerate() {
+            if s != shard {
+                assert_eq!(b, Duration::ZERO, "other shards stay idle");
+            }
+        }
     }
 
     #[test]

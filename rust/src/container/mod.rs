@@ -31,6 +31,11 @@
 //!   sharded behind per-shard FIFO frontends, DES-scheduled concurrent
 //!   pulls, and Trow-style peer fan-out so a layer crosses the WAN once
 //!   and rides the cluster fabric to thousands of nodes.
+//! * [`protocol`] — the registry front door: the OCI distribution API
+//!   as sessions — per-upload UUIDs, chunked resumable transfers with
+//!   byte-range progress, retry-after-disconnect resume — multiplexed
+//!   onto the sharded frontends and interruptible per session by a
+//!   fault schedule.
 //! * [`lifecycle`] — the container state machine (Created → Running →
 //!   Exited) a runtime drives.
 //! * [`session`] — the `fenicsproject` wrapper script (§3.2): notebook /
@@ -46,6 +51,7 @@ pub mod cache;
 pub mod distribute;
 pub mod image;
 pub mod lifecycle;
+pub mod protocol;
 pub mod registry;
 pub mod runtime;
 pub mod session;
@@ -59,6 +65,9 @@ pub use distribute::{
 };
 pub use image::{Image, ImageId, Layer, LayerId};
 pub use lifecycle::{Container, ContainerState};
+pub use protocol::{
+    FrontDoor, FrontDoorReport, SessionId, SessionRequest, TransferKind, TransferSession,
+};
 pub use registry::{PullReport, Registry};
 pub use runtime::{ContainerRuntime, RuntimeKind};
 pub use session::{SessionKind, SessionManager};

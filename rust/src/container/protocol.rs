@@ -1,0 +1,816 @@
+//! Registry front-door protocol tier: resumable transfer sessions.
+//!
+//! The [`ShardedRegistry`](super::distribute::ShardedRegistry) models
+//! shards as FIFO pipes; a production registry serves *sessions* — the
+//! OCI distribution API the way Trow accounts it: per-upload UUIDs,
+//! chunked blob transfers with byte-range progress, and
+//! resume-after-disconnect that re-sends only the unacknowledged
+//! ranges.  This module is that tier:
+//!
+//! ```text
+//!   SessionRequest (pull/push, arrival time)
+//!        │ open
+//!        ▼
+//!   ┌──────────────────────── FrontDoor ────────────────────────┐
+//!   │ edge cache? ──hit──▶ serve locally (edge_hit_time)        │
+//!   │     │miss                                                 │
+//!   │     ▼            chunk by chunk                           │
+//!   │ TransferSession ──────────────▶ ShardedRegistry frontends │
+//!   │     ▲    │  ack: advance byte range    (FifoResource/WAN) │
+//!   │     │    ▼                                                │
+//!   │  RetryPolicy ◀─── FaultSchedule: TransferDrop/ShardOutage │
+//!   │  (backoff, resume from last acked byte — not from zero)   │
+//!   └───────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Every concurrent session is multiplexed onto the shard frontends
+//! through one calendar [`EventQueue`], so submissions happen in
+//! nondecreasing virtual time (the FIFO contract of
+//! [`FifoResource`](crate::des::FifoResource)) and the whole run is a
+//! deterministic function of `(requests, schedule, policy, seed)` —
+//! byte-identical across machines and `--jobs` settings.
+//!
+//! Faults interrupt *sessions*, not whole transfers: a
+//! [`TransferDrop`](crate::des::fault::Fault::TransferDrop) window
+//! overlapping a chunk's flight loses that chunk only, and the
+//! [`RetryPolicy`] resumes the session from its last acknowledged
+//! byte.  Shard outages are absorbed by failover re-hashing (see
+//! [`ShardedRegistry::submit_transfer_failover`]); when every shard is
+//! dark the session parks until the earliest recovery.
+//!
+//! [`ShardedRegistry::submit_transfer_failover`]:
+//! super::distribute::ShardedRegistry::submit_transfer_failover
+
+use std::fmt;
+
+use crate::des::{
+    Duration, EventQueue, FaultSchedule, FaultStats, LatencyHistogram, QueueStats, SimRng,
+    VirtualTime,
+};
+use crate::util::rng::fnv1a;
+
+use super::cache::LayerCache;
+use super::distribute::{RetryPolicy, ShardAttempt, ShardedRegistry};
+use super::image::{Layer, LayerId};
+
+/// Default transfer chunk: 32 MB, the OCI chunked-upload sweet spot
+/// against the 120 ms registry WAN RTT (per-chunk RTT overhead stays
+/// near 10 % while a disconnect loses at most one chunk of progress).
+pub const DEFAULT_CHUNK_BYTES: u64 = 32_000_000;
+
+/// Per-session identifier, rendered UUID-style the way Trow names
+/// blob uploads.  Allocated sequentially by the [`FrontDoor`], so ids
+/// are deterministic; the UUID text is a pure hash of the counter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SessionId(
+    /// Sequential session counter within one front door.
+    pub u64,
+);
+
+impl fmt::Display for SessionId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let h = fnv1a(self.0.to_le_bytes());
+        let h2 = fnv1a(h.to_le_bytes().into_iter().chain([0x5e]));
+        write!(
+            f,
+            "{:08x}-{:04x}-4{:03x}-{:04x}-{:012x}",
+            (h >> 32) as u32,
+            (h >> 16) as u16,
+            h & 0xfff,
+            0x8000 | (h2 as u16 & 0x3fff),
+            (h2 >> 16) & 0xffff_ffff_ffff,
+        )
+    }
+}
+
+/// Which direction a session moves bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferKind {
+    /// Registry → client (a layer download).
+    Pull,
+    /// Client → registry (a chunked resumable blob upload; the layer
+    /// enters the catalogue when the last chunk is acknowledged).
+    Push,
+}
+
+/// One client request the front door will open as a session.
+#[derive(Debug, Clone)]
+pub struct SessionRequest {
+    /// Arrival instant (sessions open in `(time, request-order)`).
+    pub at: VirtualTime,
+    /// Pull or push.
+    pub kind: TransferKind,
+    /// The layer the session moves.
+    pub layer: LayerId,
+    /// Upload payload (pushes only); the blob inserted into the
+    /// registry store when the session completes.
+    pub payload: Option<Layer>,
+}
+
+impl SessionRequest {
+    /// A pull of `layer` arriving at `at`.
+    pub fn pull(at: VirtualTime, layer: LayerId) -> Self {
+        SessionRequest {
+            at,
+            kind: TransferKind::Pull,
+            layer,
+            payload: None,
+        }
+    }
+
+    /// A push of `payload` arriving at `at`.
+    pub fn push(at: VirtualTime, payload: Layer) -> Self {
+        SessionRequest {
+            at,
+            kind: TransferKind::Push,
+            layer: payload.id.clone(),
+            payload: Some(payload),
+        }
+    }
+}
+
+/// One transfer session's byte-range progress and outcome.
+///
+/// `wire_bytes == acked_bytes + resent_bytes` holds per session by
+/// construction: every chunk that crossed the WAN either advanced the
+/// acknowledged range or was lost and re-sent from the last acked
+/// byte — never from zero, and acked ranges are never sent twice.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransferSession {
+    /// Session identifier (UUID-style display).
+    pub id: SessionId,
+    /// Pull or push.
+    pub kind: TransferKind,
+    /// The layer moved.
+    pub layer: LayerId,
+    /// Full size of the transfer (0 until a pull resolves its layer).
+    pub total_bytes: u64,
+    /// Bytes acknowledged so far (resume point after a disconnect).
+    pub acked_bytes: u64,
+    /// Bytes that crossed the WAN, acknowledged or not.
+    pub wire_bytes: u64,
+    /// Bytes lost in flight and sent again.
+    pub resent_bytes: u64,
+    /// Chunks that completed transmission (acked or lost).
+    pub chunks_sent: u64,
+    /// Chunks acknowledged.
+    pub chunks_acked: u64,
+    /// Chunks lost to drop windows or timeouts.
+    pub drops: u64,
+    /// Re-attempts after a lost chunk or an all-shards-down park.
+    pub retries: u64,
+    /// Chunks served by a non-owner shard during an outage.
+    pub failovers: u64,
+    /// Instant the session opened.
+    pub opened_at: VirtualTime,
+    /// Instant the session delivered or was abandoned.
+    pub done_at: VirtualTime,
+    /// Whether every byte was delivered (or served from the edge
+    /// cache); `false` means the retry budget ran out.
+    pub delivered: bool,
+    /// Whether the edge cache served the whole session.
+    pub cache_hit: bool,
+    /// Attempts spent on the chunk currently in flight (resets on each
+    /// ack; bounds are [`RetryPolicy::max_attempts`]).
+    attempt: u32,
+}
+
+impl TransferSession {
+    /// Open-to-done span (abandon time for failed sessions).
+    pub fn latency(&self) -> Duration {
+        self.done_at.since(self.opened_at)
+    }
+
+    /// Attempts spent on the chunk in flight when the session ended
+    /// (0 for a clean delivery — every ack resets the counter).
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+}
+
+/// Front-door event: everything a run schedules through its calendar.
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// Session `i` arrives and opens.
+    Open(usize),
+    /// A chunk of session `s` finished crossing the WAN (it was
+    /// submitted at `start`); acknowledge or declare it lost.
+    Sent {
+        /// Session index.
+        s: usize,
+        /// Submission instant (the in-flight exposure is `[start, now)`).
+        start: VirtualTime,
+        /// Chunk size.
+        bytes: u64,
+    },
+    /// Session `i` retries its current chunk after backoff.
+    Retry(usize),
+}
+
+/// Aggregate outcome of one [`FrontDoor::run`].
+///
+/// The conservation invariant extends session-wise to the whole run:
+/// `wire_bytes == payload_bytes + resent_bytes`, and a delivered
+/// session contributed exactly its `total_bytes` to either
+/// `payload_bytes` (WAN path) or `hit_bytes` (edge-cache path).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FrontDoorReport {
+    /// Sessions opened.
+    pub sessions: u64,
+    /// Sessions that delivered every byte.
+    pub delivered: u64,
+    /// Sessions abandoned after the retry budget ran out.
+    pub failed: u64,
+    /// Sessions served whole from the edge cache.
+    pub cache_hits: u64,
+    /// WAN bytes acknowledged across all sessions.
+    pub payload_bytes: u64,
+    /// Bytes served from the edge cache instead of the WAN.
+    pub hit_bytes: u64,
+    /// Bytes that crossed the WAN, acknowledged or not.
+    pub wire_bytes: u64,
+    /// Bytes lost in flight and sent again.
+    pub resent_bytes: u64,
+    /// Chunks that completed transmission.
+    pub chunks: u64,
+    /// Injected faults and the sessions' reaction counters.
+    pub fault: FaultStats,
+    /// Calendar counters of the session event loop.
+    pub queue: QueueStats,
+    /// Delivered-session latency percentiles (deterministic log-binned
+    /// estimator — see [`LatencyHistogram`]).
+    pub latency: LatencyHistogram,
+}
+
+impl FrontDoorReport {
+    /// Multi-line summary for traces and bench output.
+    pub fn render(&self) -> String {
+        let mb = |b: u64| b as f64 / 1e6;
+        format!(
+            "sessions {}: {} delivered ({} edge hit(s)), {} failed; \
+             {:.1} MB payload + {:.1} MB resent = {:.1} MB wire in {} chunk(s)\n  \
+             {}\n  {}\n  queue: {}",
+            self.sessions,
+            self.delivered,
+            self.cache_hits,
+            self.failed,
+            mb(self.payload_bytes),
+            mb(self.resent_bytes),
+            mb(self.wire_bytes),
+            self.chunks,
+            self.latency.render(),
+            self.fault.render(),
+            self.queue.render(),
+        )
+    }
+}
+
+/// The registry front door: opens, multiplexes, interrupts, and
+/// resumes concurrent transfer sessions over a [`ShardedRegistry`].
+#[derive(Debug)]
+pub struct FrontDoor {
+    registry: ShardedRegistry,
+    schedule: FaultSchedule,
+    policy: RetryPolicy,
+    chunk_bytes: u64,
+    edge_cache: Option<LayerCache>,
+    edge_hit_time: Duration,
+    next_session: u64,
+}
+
+impl FrontDoor {
+    /// A front door over `registry` with [`DEFAULT_CHUNK_BYTES`]
+    /// chunks, no faults, no retries ([`RetryPolicy::none`] — the rng
+    /// is never consulted), and no edge cache.
+    pub fn new(registry: ShardedRegistry) -> Self {
+        FrontDoor {
+            registry,
+            schedule: FaultSchedule::none(),
+            policy: RetryPolicy::none(),
+            chunk_bytes: DEFAULT_CHUNK_BYTES,
+            edge_cache: None,
+            edge_hit_time: Duration::from_millis(2),
+            next_session: 0,
+        }
+    }
+
+    /// Override the transfer chunk size (must be ≥ 1).
+    pub fn with_chunk_bytes(mut self, bytes: u64) -> Self {
+        assert!(bytes >= 1, "chunks must move at least one byte");
+        self.chunk_bytes = bytes;
+        self
+    }
+
+    /// Override the retry policy sessions resume under.
+    pub fn with_policy(mut self, policy: RetryPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Add an edge cache of `capacity_bytes`: pulls of resident layers
+    /// are served locally in `edge_hit_time` instead of crossing the
+    /// WAN, and delivered pulls are admitted for later sessions.
+    pub fn with_edge_cache(mut self, capacity_bytes: u64) -> Self {
+        self.edge_cache = Some(LayerCache::new(capacity_bytes));
+        self
+    }
+
+    /// Install a fault schedule: its shard outage windows go to the
+    /// [`ShardedRegistry`] (failover re-hashing) and its drop windows
+    /// interrupt chunks in flight here.
+    pub fn apply_faults(&mut self, schedule: FaultSchedule) {
+        self.registry.apply_faults(&schedule);
+        self.schedule = schedule;
+    }
+
+    /// The fronted registry.
+    pub fn registry(&self) -> &ShardedRegistry {
+        &self.registry
+    }
+
+    /// Mutable registry access (catalogue setup).
+    pub fn registry_mut(&mut self) -> &mut ShardedRegistry {
+        &mut self.registry
+    }
+
+    /// The edge cache, when one is configured.
+    pub fn edge_cache(&self) -> Option<&LayerCache> {
+        self.edge_cache.as_ref()
+    }
+
+    /// Current transfer chunk size.
+    pub fn chunk_bytes(&self) -> u64 {
+        self.chunk_bytes
+    }
+
+    /// Run every request to completion (delivery or abandonment) and
+    /// return the per-session outcomes plus the aggregate report.
+    ///
+    /// The event loop is single-threaded and calendar-ordered, so the
+    /// result is a deterministic function of the inputs; `rng` is
+    /// consulted **only** for retry-backoff jitter (pass `None`, or a
+    /// policy with zero jitter, and it is never touched — the
+    /// fault-free bit-identity property the tests pin).
+    ///
+    /// A pull whose layer is unknown when the session opens is
+    /// abandoned on the spot (counted in
+    /// [`failed`](FrontDoorReport::failed)); a push inserts its
+    /// payload into the catalogue when the last chunk is acknowledged,
+    /// so later-opening pulls of that layer succeed within the same
+    /// run.
+    pub fn run(
+        &mut self,
+        requests: Vec<SessionRequest>,
+        mut rng: Option<&mut SimRng>,
+    ) -> (Vec<TransferSession>, FrontDoorReport) {
+        let n = requests.len();
+        let mut sessions: Vec<TransferSession> = Vec::with_capacity(n);
+        let mut payloads: Vec<Option<Layer>> = Vec::with_capacity(n);
+        let mut q: EventQueue<Ev> = EventQueue::with_capacity(n.max(1));
+        let mut opens = Vec::with_capacity(n);
+        for (i, req) in requests.into_iter().enumerate() {
+            sessions.push(TransferSession {
+                id: SessionId(self.next_session),
+                kind: req.kind,
+                layer: req.layer,
+                total_bytes: match req.kind {
+                    TransferKind::Push => req.payload.as_ref().map_or(0, |l| l.bytes),
+                    TransferKind::Pull => 0, // resolved when the session opens
+                },
+                acked_bytes: 0,
+                wire_bytes: 0,
+                resent_bytes: 0,
+                chunks_sent: 0,
+                chunks_acked: 0,
+                drops: 0,
+                retries: 0,
+                failovers: 0,
+                opened_at: req.at,
+                done_at: req.at,
+                delivered: false,
+                cache_hit: false,
+                attempt: 0,
+            });
+            self.next_session += 1;
+            payloads.push(req.payload);
+            opens.push((req.at, Ev::Open(i)));
+        }
+        q.push_batch(opens);
+
+        while let Some((now, ev)) = q.pop() {
+            match ev {
+                Ev::Open(i) => {
+                    sessions[i].opened_at = now;
+                    if sessions[i].kind == TransferKind::Pull {
+                        let Some(found) = self.registry.registry().layers.get(&sessions[i].layer)
+                        else {
+                            sessions[i].done_at = now; // unknown layer: abandon
+                            continue;
+                        };
+                        sessions[i].total_bytes = found.bytes;
+                        let hit = self
+                            .edge_cache
+                            .as_mut()
+                            .is_some_and(|c| c.lookup(&sessions[i].layer).is_some());
+                        if hit {
+                            sessions[i].cache_hit = true;
+                            sessions[i].delivered = true;
+                            sessions[i].done_at = now + self.edge_hit_time;
+                            continue;
+                        }
+                        if self.edge_cache.is_some() {
+                            payloads[i] = self
+                                .registry
+                                .registry()
+                                .layers
+                                .get(&sessions[i].layer)
+                                .cloned();
+                        }
+                    }
+                    if sessions[i].total_bytes == 0 {
+                        self.complete(i, now, &mut sessions, &mut payloads);
+                    } else if !self.send_chunk(i, now, &mut sessions, &mut q, &mut rng) {
+                        sessions[i].done_at = now;
+                    }
+                }
+                Ev::Sent { s: i, start, bytes } => {
+                    sessions[i].wire_bytes += bytes;
+                    sessions[i].chunks_sent += 1;
+                    let timed_out = self
+                        .policy
+                        .timeout
+                        .is_some_and(|limit| now.since(start) > limit);
+                    if timed_out || self.schedule.drop_overlapping(start, now).is_some() {
+                        // the chunk is lost; the acked range is not —
+                        // the retry resumes from the last acked byte
+                        sessions[i].resent_bytes += bytes;
+                        sessions[i].drops += 1;
+                        if sessions[i].attempt >= self.policy.max_attempts {
+                            sessions[i].done_at = now; // budget exhausted
+                        } else {
+                            let wait =
+                                self.policy.backoff(sessions[i].attempt, rng.as_deref_mut());
+                            sessions[i].retries += 1;
+                            q.push(now + wait, Ev::Retry(i));
+                        }
+                    } else {
+                        sessions[i].acked_bytes += bytes;
+                        sessions[i].chunks_acked += 1;
+                        sessions[i].attempt = 0;
+                        if sessions[i].acked_bytes >= sessions[i].total_bytes {
+                            self.complete(i, now, &mut sessions, &mut payloads);
+                        } else if !self.send_chunk(i, now, &mut sessions, &mut q, &mut rng) {
+                            sessions[i].done_at = now;
+                        }
+                    }
+                }
+                Ev::Retry(i) => {
+                    if !self.send_chunk(i, now, &mut sessions, &mut q, &mut rng) {
+                        sessions[i].done_at = now;
+                    }
+                }
+            }
+        }
+
+        let mut report = FrontDoorReport {
+            queue: q.stats(),
+            ..FrontDoorReport::default()
+        };
+        let mut end = VirtualTime::ZERO;
+        for s in &sessions {
+            report.sessions += 1;
+            end = end.max(s.done_at);
+            if s.delivered {
+                report.delivered += 1;
+                report.latency.record(s.latency());
+                if s.cache_hit {
+                    report.cache_hits += 1;
+                    report.hit_bytes += s.total_bytes;
+                }
+            } else {
+                report.failed += 1;
+            }
+            report.payload_bytes += s.acked_bytes;
+            report.wire_bytes += s.wire_bytes;
+            report.resent_bytes += s.resent_bytes;
+            report.chunks += s.chunks_sent;
+        }
+        report.fault = self.schedule.stats_over(VirtualTime::ZERO, end);
+        for s in &sessions {
+            report.fault.transfers_dropped += s.drops;
+            report.fault.retries += s.retries;
+            report.fault.failovers += s.failovers;
+        }
+        report.fault.permanent_failures += report.failed;
+        (sessions, report)
+    }
+
+    /// Submit the next unacked chunk of session `i` at `now`.  Returns
+    /// `false` when the session must be abandoned (retry budget
+    /// exhausted, or no shard ever recovers).
+    fn send_chunk(
+        &mut self,
+        i: usize,
+        now: VirtualTime,
+        sessions: &mut [TransferSession],
+        q: &mut EventQueue<Ev>,
+        rng: &mut Option<&mut SimRng>,
+    ) -> bool {
+        let s = &mut sessions[i];
+        let chunk = (s.total_bytes - s.acked_bytes).min(self.chunk_bytes);
+        s.attempt += 1;
+        match self.registry.submit_transfer_failover(now, &s.layer, chunk) {
+            ShardAttempt::Served { done, failover, .. } => {
+                if failover {
+                    s.failovers += 1;
+                }
+                q.push(done, Ev::Sent { s: i, start: now, bytes: chunk });
+                true
+            }
+            ShardAttempt::AllDown { next_up } => {
+                // nothing crossed the WAN; park until a shard recovers
+                let Some(up) = next_up else { return false };
+                if s.attempt >= self.policy.max_attempts {
+                    return false;
+                }
+                let wait = self.policy.backoff(s.attempt, rng.as_deref_mut());
+                s.retries += 1;
+                q.push(up.max(now) + wait, Ev::Retry(i));
+                true
+            }
+        }
+    }
+
+    /// Finalise a delivered session at `now`: pushes land their
+    /// payload in the catalogue, pulls warm the edge cache.
+    fn complete(
+        &mut self,
+        i: usize,
+        now: VirtualTime,
+        sessions: &mut [TransferSession],
+        payloads: &mut [Option<Layer>],
+    ) {
+        let s = &mut sessions[i];
+        s.delivered = true;
+        s.done_at = now;
+        match s.kind {
+            TransferKind::Push => {
+                if let Some(layer) = payloads[i].take() {
+                    self.registry.registry_mut().layers.insert(layer);
+                }
+            }
+            TransferKind::Pull => {
+                if let (Some(cache), Some(layer)) = (self.edge_cache.as_mut(), payloads[i].take())
+                {
+                    cache.admit(layer);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::image::FileEntry;
+    use crate::container::registry::Registry;
+    use crate::des::fault::Fault;
+
+    fn layer(tag: &str, bytes: u64) -> Layer {
+        Layer::derive(
+            None,
+            tag,
+            vec![FileEntry {
+                path: format!("/{tag}"),
+                bytes,
+            }],
+        )
+    }
+
+    fn front_with(layers: &[Layer], shards: usize) -> FrontDoor {
+        let mut reg = Registry::new();
+        for l in layers {
+            reg.layers.insert(l.clone());
+        }
+        FrontDoor::new(ShardedRegistry::new(reg, shards))
+    }
+
+    fn sec(s: f64) -> VirtualTime {
+        VirtualTime::ZERO + Duration::from_secs_f64(s)
+    }
+
+    #[test]
+    fn session_id_displays_uuid_shaped() {
+        let text = SessionId(7).to_string();
+        assert_eq!(text.len(), 36);
+        for at in [8, 13, 18, 23] {
+            assert_eq!(&text[at..=at], "-", "{text}");
+        }
+        assert_eq!(&text[14..15], "4", "version nibble: {text}");
+        assert_ne!(SessionId(8).to_string(), text);
+        assert_eq!(SessionId(7).to_string(), text, "display is pure");
+    }
+
+    #[test]
+    fn single_pull_round_trip() {
+        let l = layer("base", 100_000_000);
+        let total = l.bytes;
+        let mut fd = front_with(&[l.clone()], 4).with_chunk_bytes(10_000_000);
+        let (sessions, report) =
+            fd.run(vec![SessionRequest::pull(sec(0.0), l.id.clone())], None);
+        let s = &sessions[0];
+        assert!(s.delivered && !s.cache_hit);
+        assert_eq!(s.acked_bytes, total, "delivered == total");
+        assert_eq!(s.wire_bytes, total);
+        assert_eq!(s.resent_bytes, 0);
+        assert_eq!(s.chunks_sent, total.div_ceil(10_000_000));
+        assert_eq!(s.chunks_sent, s.chunks_acked);
+        assert!(s.latency() > Duration::ZERO);
+        assert_eq!(report.delivered, 1);
+        assert_eq!(report.payload_bytes, total);
+        assert_eq!(report.wire_bytes, report.payload_bytes + report.resent_bytes);
+        assert_eq!(report.latency.count(), 1);
+        assert!(report.render().contains("1 delivered"));
+    }
+
+    #[test]
+    fn chunking_pays_per_chunk_rtt() {
+        let l = layer("base", 64_000_000);
+        let mut coarse = front_with(&[l.clone()], 1).with_chunk_bytes(64_000_000);
+        let mut fine = front_with(&[l.clone()], 1).with_chunk_bytes(1_000_000);
+        let (a, _) = coarse.run(vec![SessionRequest::pull(sec(0.0), l.id.clone())], None);
+        let (b, _) = fine.run(vec![SessionRequest::pull(sec(0.0), l.id.clone())], None);
+        assert!(
+            b[0].latency() > a[0].latency(),
+            "64 RTTs > 1 RTT: {} vs {}",
+            b[0].latency(),
+            a[0].latency()
+        );
+    }
+
+    #[test]
+    fn push_lands_layer_and_later_pull_sees_it() {
+        let l = layer("pushed", 10_000_000);
+        let id = l.id.clone();
+        let mut fd = front_with(&[], 2);
+        assert!(!fd.registry().registry().layers.contains(&id));
+        let (sessions, report) = fd.run(
+            vec![
+                SessionRequest::push(sec(0.0), l),
+                SessionRequest::pull(sec(10.0), id.clone()),
+            ],
+            None,
+        );
+        assert!(sessions[0].delivered, "push delivered");
+        assert!(sessions[1].delivered, "pull opened after the push landed");
+        assert_eq!(sessions[1].total_bytes, 10_000_000);
+        assert_eq!(report.delivered, 2);
+        assert!(fd.registry().registry().layers.contains(&id));
+    }
+
+    #[test]
+    fn unknown_pull_is_abandoned() {
+        let mut fd = front_with(&[], 2);
+        let (sessions, report) = fd.run(
+            vec![SessionRequest::pull(sec(0.0), LayerId("ghost".into()))],
+            None,
+        );
+        assert!(!sessions[0].delivered);
+        assert_eq!(sessions[0].wire_bytes, 0);
+        assert_eq!(report.failed, 1);
+        assert_eq!(report.fault.permanent_failures, 1);
+    }
+
+    #[test]
+    fn drop_window_loses_one_chunk_and_resumes_from_acked_range() {
+        let l = layer("big", 100_000_000);
+        let total = l.bytes;
+        let mut fd = front_with(&[l.clone()], 1)
+            .with_chunk_bytes(10_000_000)
+            .with_policy(RetryPolicy::hpc());
+        // one drop window mid-transfer: ~10 chunks x ~450 ms each
+        fd.apply_faults(FaultSchedule::from_events(vec![(
+            sec(1.0),
+            Fault::TransferDrop { until: sec(1.5) },
+        )]));
+        let (sessions, report) = fd.run(vec![SessionRequest::pull(sec(0.0), l.id)], None);
+        let s = &sessions[0];
+        assert!(s.delivered, "retry resumed the session");
+        assert_eq!(s.acked_bytes, total, "delivered == total");
+        assert!(s.drops >= 1 && s.retries >= 1, "{s:?}");
+        assert!(s.resent_bytes >= 10_000_000, "the lost chunk was re-sent");
+        assert!(
+            s.resent_bytes < total,
+            "resume re-sends only unacked ranges, not the whole blob"
+        );
+        assert_eq!(s.wire_bytes, s.acked_bytes + s.resent_bytes);
+        assert_eq!(report.wire_bytes, report.payload_bytes + report.resent_bytes);
+        assert!(report.fault.transfers_dropped >= 1);
+    }
+
+    #[test]
+    fn permanent_outage_abandons_after_budget() {
+        let l = layer("doomed", 50_000_000);
+        let mut fd = front_with(&[l.clone()], 2).with_policy(RetryPolicy::hpc());
+        // both shards go dark before the pull and never recover
+        fd.apply_faults(FaultSchedule::from_events(vec![
+            (sec(0.0), Fault::ShardOutage { shard: 0 }),
+            (sec(0.0), Fault::ShardOutage { shard: 1 }),
+        ]));
+        let (sessions, report) = fd.run(vec![SessionRequest::pull(sec(1.0), l.id)], None);
+        assert!(!sessions[0].delivered);
+        assert_eq!(sessions[0].wire_bytes, 0, "nothing ever crossed the WAN");
+        assert_eq!(report.failed, 1);
+        assert_eq!(report.fault.permanent_failures, 1);
+    }
+
+    #[test]
+    fn shard_outage_fails_over_mid_session() {
+        let l = layer("failover", 60_000_000);
+        let mut fd = front_with(&[l.clone()], 2)
+            .with_chunk_bytes(10_000_000)
+            .with_policy(RetryPolicy::hpc());
+        let owner = fd.registry().shard_of(&l.id);
+        fd.apply_faults(FaultSchedule::from_events(vec![
+            (sec(0.0), Fault::ShardOutage { shard: owner }),
+            (sec(60.0), Fault::ShardRecover { shard: owner }),
+        ]));
+        let (sessions, report) = fd.run(vec![SessionRequest::pull(sec(0.5), l.id)], None);
+        let s = &sessions[0];
+        assert!(s.delivered);
+        assert!(s.failovers >= 1, "owner dark: chunks re-hashed, {s:?}");
+        assert_eq!(s.resent_bytes, 0, "failover is not a loss");
+        assert!(report.fault.failovers >= 1);
+    }
+
+    #[test]
+    fn edge_cache_serves_repeat_pulls_locally() {
+        let l = layer("hot", 30_000_000);
+        let total = l.bytes;
+        let mut fd = front_with(&[l.clone()], 2).with_edge_cache(u64::MAX);
+        let (sessions, report) = fd.run(
+            vec![
+                SessionRequest::pull(sec(0.0), l.id.clone()),
+                SessionRequest::pull(sec(100.0), l.id.clone()),
+            ],
+            None,
+        );
+        assert!(!sessions[0].cache_hit, "cold first pull");
+        assert!(sessions[1].cache_hit, "warm second pull");
+        assert!(sessions[1].latency() < sessions[0].latency());
+        assert_eq!(sessions[1].wire_bytes, 0);
+        assert_eq!(report.cache_hits, 1);
+        assert_eq!(report.hit_bytes, total);
+        assert_eq!(report.payload_bytes, total, "WAN paid once");
+        let stats = fd.edge_cache().expect("configured").stats();
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.misses, 1);
+    }
+
+    #[test]
+    fn concurrent_sessions_interleave_on_shards() {
+        let a = layer("a", 40_000_000);
+        let b = layer("b", 40_000_000);
+        let mut fd = front_with(&[a.clone(), b.clone()], 1).with_chunk_bytes(10_000_000);
+        let (sessions, _) = fd.run(
+            vec![
+                SessionRequest::pull(sec(0.0), a.id.clone()),
+                SessionRequest::pull(sec(0.0), b.id.clone()),
+            ],
+            None,
+        );
+        assert!(sessions.iter().all(|s| s.delivered));
+        // one shard, interleaved chunks: both finish later than a solo
+        // run, and neither monopolises the pipe
+        let mut solo = front_with(&[a.clone()], 1).with_chunk_bytes(10_000_000);
+        let (alone, _) = solo.run(vec![SessionRequest::pull(sec(0.0), a.id)], None);
+        assert!(sessions[0].latency() > alone[0].latency());
+        assert!(sessions[1].latency() > alone[0].latency());
+    }
+
+    #[test]
+    fn run_is_deterministic_and_ids_are_sequential() {
+        let l = layer("det", 25_000_000);
+        let reqs = vec![
+            SessionRequest::pull(sec(0.0), l.id.clone()),
+            SessionRequest::pull(sec(0.1), l.id.clone()),
+        ];
+        let (s1, r1) = front_with(&[l.clone()], 2).run(reqs.clone(), None);
+        let (s2, r2) = front_with(&[l.clone()], 2).run(reqs, None);
+        assert_eq!(s1, s2);
+        assert_eq!(r1, r2);
+        assert_eq!(s1[0].id, SessionId(0));
+        assert_eq!(s1[1].id, SessionId(1));
+    }
+
+    #[test]
+    fn zero_byte_push_completes_instantly() {
+        let mut l = layer("empty", 0);
+        l.bytes = 0;
+        let mut fd = front_with(&[], 1);
+        let (sessions, report) = fd.run(vec![SessionRequest::push(sec(2.0), l)], None);
+        assert!(sessions[0].delivered);
+        assert_eq!(sessions[0].done_at, sec(2.0));
+        assert_eq!(report.wire_bytes, 0);
+    }
+}

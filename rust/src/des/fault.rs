@@ -372,6 +372,20 @@ impl FaultSchedule {
             .max()
     }
 
+    /// If any WAN drop window overlaps the span `[start, end)` —
+    /// a chunk in flight over that span is lost — the latest close
+    /// instant over the overlapping windows; `None` when the WAN is
+    /// clean for the whole span.  [`drop_until`](Self::drop_until) is
+    /// the instantaneous special case `start == end`.
+    pub fn drop_overlapping(&self, start: VirtualTime, end: VirtualTime) -> Option<VirtualTime> {
+        self.drop_windows
+            .iter()
+            .filter(|&&(open, close)| open < end && start < close)
+            .map(|&(_, close)| close)
+            .max()
+            .or_else(|| self.drop_until(start))
+    }
+
     /// The eviction storms, as `(at, node, bytes)` in time order.
     pub fn evict_storms(&self) -> &[(VirtualTime, usize, u64)] {
         &self.storms
@@ -502,6 +516,26 @@ mod tests {
         assert_eq!(s.drop_until(ms(15)), Some(ms(20)));
         assert_eq!(s.drop_until(ms(20)), None, "window close is clean");
         assert_eq!(s.drop_until(ms(9)), None);
+    }
+
+    #[test]
+    fn drop_overlapping_catches_in_flight_spans() {
+        let s = FaultSchedule::from_events(vec![
+            (ms(10), Fault::TransferDrop { until: ms(20) }),
+            (ms(15), Fault::TransferDrop { until: ms(30) }),
+        ]);
+        // span fully before / fully after the windows: clean
+        assert_eq!(s.drop_overlapping(ms(0), ms(10)), None, "ends at open");
+        assert_eq!(s.drop_overlapping(ms(30), ms(40)), None);
+        // span straddling a window edge is hit
+        assert_eq!(s.drop_overlapping(ms(5), ms(11)), Some(ms(20)));
+        assert_eq!(s.drop_overlapping(ms(19), ms(40)), Some(ms(30)), "latest close wins");
+        // span containing both windows
+        assert_eq!(s.drop_overlapping(ms(0), ms(100)), Some(ms(30)));
+        // degenerate zero-width span matches drop_until
+        assert_eq!(s.drop_overlapping(ms(15), ms(15)), s.drop_until(ms(15)));
+        assert_eq!(s.drop_overlapping(ms(9), ms(9)), None);
+        assert_eq!(FaultSchedule::none().drop_overlapping(ms(0), ms(100)), None);
     }
 
     #[test]

@@ -24,6 +24,11 @@
 //!   typed crashes/outages/drop-windows generated from a [`SimRng`]
 //!   stream, replayable through the calendar queue, with
 //!   availability/MTTR accounting in [`FaultStats`].
+//! * [`LatencyHistogram`] / [`warmup_trim`] / [`is_stationary`] — the
+//!   percentile layer: a deterministic log-binned streaming estimator
+//!   (bit-identical p50/p99/p999 across machines and `--jobs`) plus
+//!   MSER warmup trimming and a stationarity check for open-loop
+//!   scenarios.
 
 pub mod fault;
 mod queue;
@@ -36,5 +41,5 @@ pub use fault::{Fault, FaultConfig, FaultSchedule};
 pub use queue::{EventQueue, HeapEventQueue};
 pub use resource::FifoResource;
 pub use rng::SimRng;
-pub use stats::{FaultStats, QueueStats};
+pub use stats::{is_stationary, warmup_trim, FaultStats, LatencyHistogram, QueueStats};
 pub use time::{Duration, VirtualTime};

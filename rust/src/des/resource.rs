@@ -147,6 +147,18 @@ impl FifoResource {
         self.free_at.peek_time().unwrap_or(VirtualTime::ZERO)
     }
 
+    /// How long a request arriving at `at` would wait before service
+    /// starts ([`Duration::ZERO`] when a server is already idle).
+    /// This is the queueing-delay view a saturation sweep reports.
+    pub fn backlog(&self, at: VirtualTime) -> Duration {
+        let free = self.next_free();
+        if free > at {
+            free - at
+        } else {
+            Duration::ZERO
+        }
+    }
+
     /// Forget all queued state (new simulation phase).
     pub fn reset(&mut self) {
         self.free_at = idle_tokens(self.servers);
@@ -268,6 +280,17 @@ mod tests {
                 b.submit(t(2), Duration::from_millis(1))
             );
         }
+    }
+
+    #[test]
+    fn backlog_is_wait_before_service() {
+        let mut r = FifoResource::new(1);
+        assert_eq!(r.backlog(t(0)), Duration::ZERO, "idle station");
+        r.submit(t(0), Duration::from_millis(10));
+        assert_eq!(r.backlog(t(0)), Duration::from_millis(10));
+        assert_eq!(r.backlog(t(4)), Duration::from_millis(6));
+        assert_eq!(r.backlog(t(10)), Duration::ZERO, "drained by then");
+        assert_eq!(r.backlog(t(50)), Duration::ZERO);
     }
 
     #[test]

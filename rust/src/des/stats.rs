@@ -25,8 +25,272 @@
 //!   due event, answered by jumping straight to the minimum.  Large
 //!   counts mean the width is (or was) too narrow for the workload.
 //! * `pushes` / `pops` — lifetime totals; `pushes - pops == depth`.
+//!
+//! Latency observability lives here too: [`LatencyHistogram`] is a
+//! deterministic streaming percentile estimator (fixed log-spaced
+//! integer bins, so p50/p99/p999 are exactly reproducible across
+//! machines and `--jobs` settings), and [`warmup_trim`] /
+//! [`is_stationary`] are the transient-removal helpers open-loop
+//! scenarios apply before reporting steady-state percentiles.
 
 use super::time::Duration;
+
+/// Significant mantissa bits per histogram octave (`2^SUB_BITS`
+/// linear sub-bins per power of two).
+const SUB_BITS: u32 = 5;
+/// Sub-bins per octave; also the number of exact unit-width low bins.
+const SUB: usize = 1 << SUB_BITS;
+/// Total bins: `SUB` exact low bins plus `SUB` sub-bins for every
+/// octave `SUB_BITS..=63`, covering the full `u64` nanosecond range.
+const BINS: usize = SUB * (64 - SUB_BITS as usize + 1);
+
+/// The bin a `ns` value lands in.  Values below `SUB` get exact
+/// unit-width bins; above, the top `SUB_BITS + 1` mantissa bits pick
+/// an octave and a linear sub-bin within it — integer-only (no libm),
+/// so the mapping is bit-identical on every platform.
+fn bin_of(ns: u64) -> usize {
+    if ns < SUB as u64 {
+        return ns as usize;
+    }
+    let e = 63 - ns.leading_zeros();
+    let shift = e - SUB_BITS;
+    let sub = (ns >> shift) as usize - SUB;
+    SUB + shift as usize * SUB + sub
+}
+
+/// Largest `ns` value mapping to `bin` (the estimator quotes this
+/// upper edge, so estimates never under-report a quantile).
+fn bin_max(bin: usize) -> u64 {
+    if bin < SUB {
+        return bin as u64;
+    }
+    let shift = ((bin - SUB) / SUB) as u32;
+    let sub = ((bin - SUB) % SUB) as u64;
+    let lo = (SUB as u64 + sub) << shift;
+    lo + (1u64 << shift) - 1
+}
+
+/// Deterministic streaming percentile estimator over `Duration`
+/// samples.
+///
+/// Samples are counted into fixed log-spaced integer bins (HDR-style:
+/// `SUB_BITS` significant bits, so every bin spans at most `1/32` of
+/// its lower edge).  Quantiles quote the upper edge of the bin holding
+/// the requested rank, clamped to the exact observed maximum, which
+/// bounds the relative over-estimate by `1/32` and never
+/// under-reports.  Because the bins are fixed and integer-indexed, the
+/// same sample stream yields bit-identical `p50/p99/p999` on every
+/// machine and at every `--jobs` setting — the property the scenario
+/// determinism gates rely on.  `min`/`max`/`mean` are tracked exactly.
+#[derive(Clone, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    /// Sample count per bin (`BINS` entries).
+    counts: Vec<u64>,
+    /// Total samples recorded.
+    count: u64,
+    /// Exact sum of all recorded nanoseconds.
+    total_ns: u128,
+    /// Exact minimum recorded, in nanoseconds.
+    min_ns: u64,
+    /// Exact maximum recorded, in nanoseconds.
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl std::fmt::Debug for LatencyHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LatencyHistogram")
+            .field("count", &self.count)
+            .field("mean", &self.mean())
+            .field("p50", &self.p50())
+            .field("p99", &self.p99())
+            .field("max", &self.max())
+            .finish()
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: vec![0; BINS],
+            count: 0,
+            total_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+
+    /// Record one latency sample.
+    pub fn record(&mut self, sample: Duration) {
+        let ns = sample.as_nanos();
+        self.counts[bin_of(ns)] += 1;
+        self.count += 1;
+        self.total_ns += u128::from(ns);
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Number of samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Whether no samples have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact minimum sample ([`Duration::ZERO`] when empty).
+    pub fn min(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos(self.min_ns)
+        }
+    }
+
+    /// Exact maximum sample ([`Duration::ZERO`] when empty).
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns)
+    }
+
+    /// Exact mean sample (integer nanoseconds; [`Duration::ZERO`] when
+    /// empty).
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos((self.total_ns / u128::from(self.count)) as u64)
+        }
+    }
+
+    /// The `q`-quantile estimate: the upper edge of the bin holding
+    /// rank `ceil(q * count)` (clamped to `[1, count]`), itself
+    /// clamped to the exact observed maximum.  Guarantees
+    /// `exact <= quantile(q) <= exact * (1 + 1/32)`.  Empty histogram
+    /// ⇒ [`Duration::ZERO`]; `q <= 0` ⇒ the exact minimum.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        if q <= 0.0 {
+            return Duration::from_nanos(self.min_ns);
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (bin, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Duration::from_nanos(bin_max(bin).min(self.max_ns));
+            }
+        }
+        Duration::from_nanos(self.max_ns)
+    }
+
+    /// Median estimate (`quantile(0.5)`).
+    pub fn p50(&self) -> Duration {
+        self.quantile(0.5)
+    }
+
+    /// 99th-percentile estimate (`quantile(0.99)`).
+    pub fn p99(&self) -> Duration {
+        self.quantile(0.99)
+    }
+
+    /// 99.9th-percentile estimate (`quantile(0.999)`).
+    pub fn p999(&self) -> Duration {
+        self.quantile(0.999)
+    }
+
+    /// Accumulate another histogram's samples into this one (shard or
+    /// per-worker histograms merge losslessly: binning is fixed, so
+    /// merge-then-quantile equals record-everything-then-quantile).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        for (c, &o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.count += other.count;
+        self.total_ns += other.total_ns;
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// One-line summary for reports and bench output.
+    pub fn render(&self) -> String {
+        if self.count == 0 {
+            return "latency: no samples".to_string();
+        }
+        format!(
+            "latency: n {}, mean {}, p50 {}, p99 {}, p999 {}, max {}",
+            self.count,
+            self.mean(),
+            self.p50(),
+            self.p99(),
+            self.p999(),
+            self.max(),
+        )
+    }
+}
+
+/// Number of leading samples to discard as initialisation transient,
+/// by the MSER rule: pick the truncation point `d` (at most `n/2`)
+/// minimising the marginal standard error
+/// `variance(samples[d..]) / (n - d)` of the remaining mean.  Series
+/// shorter than 8 samples are returned untrimmed.  Pure function of
+/// the sample values — deterministic across machines.
+pub fn warmup_trim(samples: &[f64]) -> usize {
+    let n = samples.len();
+    if n < 8 {
+        return 0;
+    }
+    // suffix sums so every candidate truncation is O(1)
+    let mut s1 = vec![0.0; n + 1];
+    let mut s2 = vec![0.0; n + 1];
+    for i in (0..n).rev() {
+        s1[i] = s1[i + 1] + samples[i];
+        s2[i] = s2[i + 1] + samples[i] * samples[i];
+    }
+    let mut best_d = 0;
+    let mut best = f64::INFINITY;
+    for d in 0..=n / 2 {
+        let m = (n - d) as f64;
+        let var = (s2[d] - s1[d] * s1[d] / m).max(0.0);
+        let stat = var / (m * m);
+        if stat < best {
+            best = stat;
+            best_d = d;
+        }
+    }
+    best_d
+}
+
+/// Whether a (warmup-trimmed) series looks steady-state: the means of
+/// its first and second halves differ by at most `tol` relative to the
+/// larger of the two.  Series shorter than 2 samples are trivially
+/// stationary.
+pub fn is_stationary(samples: &[f64], tol: f64) -> bool {
+    let n = samples.len();
+    if n < 2 {
+        return true;
+    }
+    let half = n / 2;
+    let m1 = samples[..half].iter().sum::<f64>() / half as f64;
+    let m2 = samples[n - half..].iter().sum::<f64>() / half as f64;
+    let scale = m1.abs().max(m2.abs());
+    if scale <= f64::EPSILON {
+        return true;
+    }
+    (m1 - m2).abs() / scale <= tol
+}
 
 /// Counters describing one [`EventQueue`](super::EventQueue)'s
 /// lifetime and current calendar geometry.
@@ -245,5 +509,159 @@ mod tests {
         assert!(text.contains("3 crash(es)"));
         assert!(text.contains("2 retry(ies)"));
         assert!(text.contains("1 failover(s)"));
+    }
+
+    use crate::des::rng::SimRng;
+
+    /// Every quantile estimate must sit in `[exact, exact * 33/32]`
+    /// against the exact sorted-sample oracle.
+    fn oracle_check(name: &str, samples: &[u64]) {
+        let mut h = LatencyHistogram::new();
+        for &s in samples {
+            h.record(Duration::from_nanos(s));
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_unstable();
+        for &q in &[0.01, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+            let exact = sorted[rank - 1];
+            let est = h.quantile(q).as_nanos();
+            assert!(est >= exact, "{name} q={q}: est {est} < exact {exact}");
+            assert!(
+                est <= exact + exact / 32 + 1,
+                "{name} q={q}: est {est} beyond bin width of exact {exact}"
+            );
+        }
+        assert_eq!(h.count(), samples.len() as u64);
+        assert_eq!(h.min().as_nanos(), sorted[0]);
+        assert_eq!(h.max().as_nanos(), *sorted.last().unwrap());
+        let exact_mean = samples.iter().map(|&s| u128::from(s)).sum::<u128>()
+            / samples.len() as u128;
+        assert_eq!(h.mean().as_nanos(), exact_mean as u64, "{name} mean is exact");
+    }
+
+    #[test]
+    fn histogram_matches_oracle_on_uniform_stream() {
+        let mut rng = SimRng::new(1, "hist-uniform");
+        let samples: Vec<u64> = (0..10_000).map(|_| rng.uniform(1e3, 1e8) as u64).collect();
+        oracle_check("uniform", &samples);
+    }
+
+    #[test]
+    fn histogram_matches_oracle_on_bimodal_stream() {
+        let mut rng = SimRng::new(2, "hist-bimodal");
+        let samples: Vec<u64> = (0..10_000)
+            .map(|_| {
+                if rng.uniform(0.0, 1.0) < 0.8 {
+                    rng.uniform(0.8e6, 1.2e6) as u64 // ~1 ms mode
+                } else {
+                    rng.uniform(0.8e8, 1.2e8) as u64 // ~100 ms mode
+                }
+            })
+            .collect();
+        oracle_check("bimodal", &samples);
+    }
+
+    #[test]
+    fn histogram_matches_oracle_on_pareto_tail() {
+        let mut rng = SimRng::new(3, "hist-pareto");
+        let samples: Vec<u64> = (0..10_000)
+            .map(|_| {
+                let u: f64 = rng.uniform(0.0, 1.0);
+                ((1e4 / (1.0 - u).powf(1.0 / 1.5)) as u64).min(1_000_000_000_000)
+            })
+            .collect();
+        oracle_check("pareto", &samples);
+    }
+
+    #[test]
+    fn histogram_empty_and_one_sample_edges() {
+        let h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), Duration::ZERO);
+        assert_eq!(h.p999(), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.min(), Duration::ZERO);
+        assert_eq!(h.render(), "latency: no samples");
+
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_millis(7));
+        for q in [0.0, 0.5, 0.99, 0.999, 1.0] {
+            assert_eq!(h.quantile(q), Duration::from_millis(7), "q={q}");
+        }
+        assert_eq!(h.mean(), Duration::from_millis(7));
+        assert_eq!(h.min(), h.max());
+        assert!(h.render().contains("n 1"));
+    }
+
+    #[test]
+    fn histogram_zero_sample_is_representable() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::ZERO);
+        h.record(Duration::from_nanos(1));
+        assert_eq!(h.quantile(0.0), Duration::ZERO);
+        assert_eq!(h.quantile(1.0), Duration::from_nanos(1));
+    }
+
+    #[test]
+    fn histogram_bins_round_trip() {
+        let mut probes = vec![0u64, 1, 31, 32, 33, 63, 64, 65, 1_000, u64::MAX];
+        let mut rng = SimRng::new(4, "hist-bins");
+        for _ in 0..1_000 {
+            probes.push(rng.uniform(0.0, 1e18) as u64);
+        }
+        for &ns in &probes {
+            let bin = bin_of(ns);
+            assert!(bin < BINS, "{ns} -> bin {bin}");
+            let hi = bin_max(bin);
+            assert!(hi >= ns, "{ns}: bin max {hi} below the sample");
+            assert_eq!(bin_of(hi), bin, "{ns}: bin max maps back to the bin");
+            assert!(hi - ns <= ns / 32 + 1, "{ns}: bin wider than 1/32");
+        }
+    }
+
+    #[test]
+    fn histogram_merge_equals_recording_everything() {
+        let mut rng = SimRng::new(5, "hist-merge");
+        let a: Vec<u64> = (0..500).map(|_| rng.uniform(1e3, 1e9) as u64).collect();
+        let b: Vec<u64> = (0..700).map(|_| rng.uniform(1e2, 1e7) as u64).collect();
+        let mut ha = LatencyHistogram::new();
+        let mut hb = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for &s in &a {
+            ha.record(Duration::from_nanos(s));
+            all.record(Duration::from_nanos(s));
+        }
+        for &s in &b {
+            hb.record(Duration::from_nanos(s));
+            all.record(Duration::from_nanos(s));
+        }
+        ha.merge(&hb);
+        assert_eq!(ha, all, "merge is lossless");
+        let empty = LatencyHistogram::new();
+        let snapshot = ha.clone();
+        ha.merge(&empty);
+        assert_eq!(ha, snapshot, "merging empty is a no-op");
+    }
+
+    #[test]
+    fn warmup_trim_finds_the_transient() {
+        let mut series = vec![10.0; 20];
+        series.extend(vec![1.0; 80]);
+        assert_eq!(warmup_trim(&series), 20);
+        assert_eq!(warmup_trim(&[5.0; 100]), 0, "steady series untrimmed");
+        assert_eq!(warmup_trim(&[1.0, 2.0, 3.0]), 0, "short series untrimmed");
+        assert_eq!(warmup_trim(&[]), 0);
+    }
+
+    #[test]
+    fn stationarity_detects_drift() {
+        let flat: Vec<f64> = (0..100).map(|i| 5.0 + 0.001 * (i % 3) as f64).collect();
+        assert!(is_stationary(&flat, 0.05));
+        let ramp: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        assert!(!is_stationary(&ramp, 0.05));
+        assert!(is_stationary(&[], 0.0), "empty is trivially stationary");
+        assert!(is_stationary(&[0.0, 0.0], 0.0), "all-zero is stationary");
     }
 }

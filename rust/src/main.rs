@@ -78,6 +78,11 @@ live registry — the same table lives in EXPERIMENTS.md):
               vs retry/backoff/failover; sweeps fault intensity x
               retry policy, reports tail makespan, availability and
               wasted WAN bytes
+  registry-storm  open-loop heavy-tailed (bounded-Pareto) blob
+              pull/push session storm against the registry front door
+              (resumable chunked transfers on 2..8 shard frontends);
+              sweeps offered load x shard count, reports warmup-trimmed
+              p50/p99/p999 latency and the saturation knee
   all         every registered scenario
 
 Scenarios expand into independent cells run across `--jobs N` worker
@@ -238,7 +243,8 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
         .opt("out", "also write a JSON report to this path", None)
         .opt(
             "nodes",
-            "comma-separated fleet sizes (fig1-scale, chaos-canary) or workers (build-farm)",
+            "comma-separated fleet sizes (fig1-scale, chaos-canary), workers (build-farm) \
+             or registry shards (registry-storm)",
             None,
         )
         .opt("jobs", "matrix workers; 0 = available parallelism (bit-identical)", Some("0"))
@@ -287,9 +293,13 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
             .collect(),
         one => vec![one.to_string()],
     };
-    let takes_nodes = |f: &str| f == "fig1-scale" || f == "build-farm" || f == "chaos-canary";
+    let takes_nodes = |f: &str| {
+        f == "fig1-scale" || f == "build-farm" || f == "chaos-canary" || f == "registry-storm"
+    };
     if p.get("nodes").is_some() && !figures.iter().any(|f| takes_nodes(f)) {
-        anyhow::bail!("--nodes only applies to fig1-scale, build-farm and chaos-canary");
+        anyhow::bail!(
+            "--nodes only applies to fig1-scale, build-farm, chaos-canary and registry-storm"
+        );
     }
     let mut all_json = Vec::new();
     for figure in &figures {

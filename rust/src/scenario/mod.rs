@@ -13,7 +13,8 @@
 //! All of the paper's figures (`fig1-scale`, `fig2`, `fig3`, `fig4`,
 //! `fig5a`, `fig5b`) live here as scenario modules, next to scenarios
 //! the paper discusses but never measures (`mixed-fleet`,
-//! `build-farm`, `chaos-canary`).  Adding a new experiment is a
+//! `build-farm`, `chaos-canary`, `registry-storm`).  Adding a new
+//! experiment is a
 //! [`ScenarioRegistry::register`] call away — the walkthrough lives in
 //! `docs/ARCHITECTURE.md` §5.
 
@@ -24,6 +25,7 @@ pub mod fig2;
 pub mod fig34;
 pub mod fig5;
 pub mod mixed_fleet;
+pub mod registry_storm;
 pub mod runner;
 
 pub use runner::MatrixRunner;
@@ -252,6 +254,7 @@ impl ScenarioRegistry {
         r.register(Box::new(mixed_fleet::MixedFleet));
         r.register(Box::new(build_farm::BuildFarmScenario));
         r.register(Box::new(chaos_canary::ChaosCanary));
+        r.register(Box::new(registry_storm::RegistryStorm));
         r
     }
 
@@ -325,12 +328,13 @@ mod tests {
                 "fig5b",
                 "mixed-fleet",
                 "build-farm",
-                "chaos-canary"
+                "chaos-canary",
+                "registry-storm"
             ]
         );
         assert!(r.get("fig2").is_some());
         assert!(r.get("fig9").is_none());
-        assert_eq!(r.len(), 9);
+        assert_eq!(r.len(), 10);
         assert!(!r.is_empty());
     }
 

@@ -1,0 +1,234 @@
+//! Integration: the registry front-door protocol tier's contracts.
+//!
+//! * resume-after-disconnect conserves bytes on *any* fault schedule:
+//!   every session satisfies `wire == acked + resent`, a delivered
+//!   session acknowledged exactly its `total_bytes` (never more — an
+//!   acked range is never re-sent), and re-sent bytes appear only
+//!   where chunks were actually lost;
+//! * the session schedule is deterministic: the same seed reproduces
+//!   the [`FrontDoorReport`] field for field, and the registry-storm
+//!   matrix renders byte-identically across `--jobs 1` and `--jobs 4`;
+//! * a zero-intensity schedule is bit-identical to the fault-free run
+//!   and leaves the retry-jitter RNG stream untouched;
+//! * the edge cache short-circuits repeat pulls without touching the
+//!   WAN, and its hits are visible in the report.
+
+use harbor::config::ExperimentConfig;
+use harbor::container::image::FileEntry;
+use harbor::container::{
+    FrontDoor, Layer, Registry, RetryPolicy, SessionRequest, ShardedRegistry, TransferKind,
+};
+use harbor::coordinator::Coordinator;
+use harbor::des::{Duration, FaultConfig, FaultSchedule, SimRng, VirtualTime};
+use harbor::runtime::CalibrationTable;
+use harbor::util::proptest::{run, Gen};
+
+/// A content-addressed blob of `bytes` for the catalogue.
+fn blob(tag: &str, bytes: u64) -> Layer {
+    let files = vec![FileEntry {
+        path: format!("/{tag}"),
+        bytes,
+    }];
+    Layer::derive(None, tag, files)
+}
+
+/// A front door over `shards` frontends serving `layers`.
+fn front(layers: &[Layer], shards: usize) -> FrontDoor {
+    let mut registry = Registry::new();
+    for l in layers {
+        registry.layers.insert(l.clone());
+    }
+    FrontDoor::new(ShardedRegistry::new(registry, shards))
+}
+
+/// A randomized open-loop pull/push request stream over `layers`.
+fn request_stream(g: &mut Gen, layers: &[Layer]) -> Vec<SessionRequest> {
+    let mut requests = Vec::new();
+    let mut at = VirtualTime::ZERO;
+    for _ in 0..g.usize_in(4, 24) {
+        at += Duration::from_secs_f64(g.f64_in(0.0, 2.0));
+        let l = &layers[g.usize_in(0, layers.len() - 1)];
+        if g.bool() {
+            requests.push(SessionRequest::push(at, l.clone()));
+        } else {
+            requests.push(SessionRequest::pull(at, l.id.clone()));
+        }
+    }
+    requests
+}
+
+#[test]
+fn prop_resume_conserves_bytes_on_any_fault_schedule() {
+    run("protocol-byte-conservation", 60, |g: &mut Gen| {
+        let shards = g.usize_in(1, 4);
+        let layers: Vec<Layer> = (0..g.usize_in(1, 6))
+            .map(|i| blob(&format!("blob-{i}"), g.u64_in(1, 96_000_000)))
+            .collect();
+        let seed = g.u64_in(0, u64::MAX / 2);
+        let cfg = FaultConfig::new(4, shards, Duration::from_secs_f64(40.0), 1.0);
+        let schedule = FaultSchedule::generate(&cfg, &mut SimRng::new(seed, "fault-schedule"));
+        let mut fd = front(&layers, shards)
+            .with_chunk_bytes(g.u64_in(1_000_000, 32_000_000))
+            .with_policy(RetryPolicy::hpc());
+        fd.apply_faults(schedule);
+        let requests = request_stream(g, &layers);
+        let n = requests.len() as u64;
+        let mut jitter = SimRng::new(seed, "retry-jitter");
+        let (sessions, report) = fd.run(requests, Some(&mut jitter));
+
+        for s in &sessions {
+            if s.wire_bytes != s.acked_bytes + s.resent_bytes {
+                return Err(format!(
+                    "session {}: wire {} != acked {} + resent {}",
+                    s.id, s.wire_bytes, s.acked_bytes, s.resent_bytes
+                ));
+            }
+            if s.acked_bytes > s.total_bytes {
+                return Err(format!("session {}: over-acknowledged", s.id));
+            }
+            if s.delivered && !s.cache_hit && s.acked_bytes != s.total_bytes {
+                return Err(format!(
+                    "session {}: delivered {} of {} bytes",
+                    s.id, s.acked_bytes, s.total_bytes
+                ));
+            }
+            if (s.resent_bytes > 0) != (s.drops > 0) {
+                return Err(format!(
+                    "session {}: resent bytes without drops (or vice versa)",
+                    s.id
+                ));
+            }
+        }
+        if report.wire_bytes != report.payload_bytes + report.resent_bytes {
+            return Err(format!(
+                "run: wire {} != payload {} + resent {}",
+                report.wire_bytes, report.payload_bytes, report.resent_bytes
+            ));
+        }
+        if report.delivered + report.failed != n || report.sessions != n {
+            return Err("a session vanished from the report".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn same_seed_reproduces_the_report_field_for_field() {
+    let layers: Vec<Layer> = (0..4).map(|i| blob(&format!("b{i}"), 40_000_000 + i)).collect();
+    let arm = || {
+        let cfg = FaultConfig::new(4, 2, Duration::from_secs_f64(30.0), 0.8);
+        let schedule = FaultSchedule::generate(&cfg, &mut SimRng::new(11, "fault-schedule"));
+        let mut fd = front(&layers, 2)
+            .with_chunk_bytes(8_000_000)
+            .with_policy(RetryPolicy::hpc());
+        fd.apply_faults(schedule);
+        let mut g = SimRng::new(5, "arrivals");
+        let mut at = VirtualTime::ZERO;
+        let requests: Vec<SessionRequest> = (0..32)
+            .map(|_| {
+                at += Duration::from_secs_f64(g.uniform(0.0, 1.0));
+                let l = &layers[g.index(layers.len())];
+                if g.uniform(0.0, 1.0) < 0.2 {
+                    SessionRequest::push(at, l.clone())
+                } else {
+                    SessionRequest::pull(at, l.id.clone())
+                }
+            })
+            .collect();
+        let mut jitter = SimRng::new(7, "retry-jitter");
+        fd.run(requests, Some(&mut jitter))
+    };
+    let (sessions_a, report_a) = arm();
+    let (sessions_b, report_b) = arm();
+    assert_eq!(sessions_a, sessions_b, "session outcomes must be reproducible");
+    assert_eq!(report_a, report_b, "reports must match field for field");
+    assert_eq!(report_a.render(), report_b.render());
+    // sessions are numbered in request order, and the ids are stable
+    for (i, s) in sessions_a.iter().enumerate() {
+        assert_eq!(s.id.0, i as u64);
+        assert_eq!(format!("{}", s.id), format!("{}", sessions_b[i].id));
+    }
+}
+
+#[test]
+fn registry_storm_matrix_renders_identically_across_jobs() {
+    let cfg = ExperimentConfig {
+        nodes: vec![2],
+        ..ExperimentConfig::paper_default("registry-storm").unwrap()
+    };
+    let run = |jobs| {
+        Coordinator::with_table(CalibrationTable::builtin_fallback())
+            .with_jobs(jobs)
+            .run(&cfg)
+            .unwrap()
+            .iter()
+            .map(|f| f.render())
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let serial = run(1);
+    assert_eq!(serial, run(4), "--jobs must not change a single byte");
+    assert!(serial.contains("p99"), "the latency figure reports percentiles");
+}
+
+#[test]
+fn zero_intensity_run_is_bit_identical_to_fault_free_with_rng_untouched() {
+    let layers: Vec<Layer> = (0..3).map(|i| blob(&format!("z{i}"), 64_000_000)).collect();
+    let requests = |layers: &[Layer]| -> Vec<SessionRequest> {
+        let mut out = Vec::new();
+        for (i, l) in layers.iter().enumerate() {
+            let at = VirtualTime::ZERO + Duration::from_secs_f64(i as f64 * 0.5);
+            out.push(SessionRequest::pull(at, l.id.clone()));
+            out.push(SessionRequest::push(at + Duration::from_millis(100), l.clone()));
+        }
+        out
+    };
+
+    // arm A: zero-intensity schedule, full retry policy, jitter armed
+    let cfg = FaultConfig::new(4, 2, Duration::from_secs_f64(60.0), 0.0);
+    let zero = FaultSchedule::generate(&cfg, &mut SimRng::new(3, "fault-schedule"));
+    assert!(zero.is_empty(), "zero intensity must inject nothing");
+    let mut fd_a = front(&layers, 2).with_policy(RetryPolicy::hpc());
+    fd_a.apply_faults(zero);
+    let mut rng_a = SimRng::new(99, "retry-jitter");
+    let (sessions_a, report_a) = fd_a.run(requests(&layers), Some(&mut rng_a));
+
+    // arm B: no schedule at all, no-retry policy, no rng — a fault-free
+    // run may depend on none of them
+    let mut fd_b = front(&layers, 2).with_policy(RetryPolicy::none());
+    let (sessions_b, report_b) = fd_b.run(requests(&layers), None);
+
+    assert_eq!(sessions_a, sessions_b, "zero-intensity sessions must be bit-identical");
+    assert_eq!(report_a, report_b, "zero-intensity reports must be bit-identical");
+    assert_eq!(report_a.render(), report_b.render());
+    assert_eq!(report_a.failed, 0);
+    assert_eq!(report_a.resent_bytes, 0, "nothing is re-sent without faults");
+
+    // the jitter stream still sits at its seed position
+    let mut fresh = SimRng::new(99, "retry-jitter");
+    assert_eq!(
+        rng_a.uniform(0.0, 1.0).to_bits(),
+        fresh.uniform(0.0, 1.0).to_bits(),
+        "a fault-free run must not consult the rng"
+    );
+}
+
+#[test]
+fn edge_cache_keeps_repeat_pulls_off_the_wan() {
+    let l = blob("hot", 48_000_000);
+    let mut fd = front(std::slice::from_ref(&l), 2).with_edge_cache(u64::MAX);
+    let pulls: Vec<SessionRequest> = (0..5)
+        .map(|i| {
+            let at = VirtualTime::ZERO + Duration::from_secs_f64(i as f64 * 10.0);
+            SessionRequest::pull(at, l.id.clone())
+        })
+        .collect();
+    let (sessions, report) = fd.run(pulls, None);
+    assert!(sessions[0].delivered && !sessions[0].cache_hit);
+    assert!(sessions[1..].iter().all(|s| s.delivered && s.cache_hit));
+    assert_eq!(report.cache_hits, 4);
+    assert_eq!(report.hit_bytes, 4 * l.bytes);
+    assert_eq!(report.wire_bytes, l.bytes, "the blob crossed the WAN exactly once");
+    // the cache hits are orders of magnitude faster than the WAN pull
+    assert!(sessions[1].latency() < sessions[0].latency());
+}

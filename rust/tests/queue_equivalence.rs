@@ -8,7 +8,9 @@
 //! far-future outliers, batch pushes, interleaved push/pop drains) and
 //! requires the pop streams to match event for event.  A `FifoResource`
 //! property pins the reworked server-token station to a linear-scan
-//! model of the original implementation.
+//! model of the original implementation, and a bounded-Pareto stream
+//! replays the registry-storm arrival process (bursts plus a sparse
+//! heavy tail in one schedule) against the heap reference.
 
 use harbor::des::{Duration, EventQueue, FifoResource, HeapEventQueue, VirtualTime};
 use harbor::util::proptest::{run, Gen};
@@ -151,6 +153,55 @@ fn prop_stats_conserve_counts() {
             ));
         }
         Ok(())
+    });
+}
+
+/// The registry-storm arrival process: bounded-Pareto inter-arrival
+/// gaps spanning two orders of magnitude push dense bursts *and* a
+/// sparse far tail through the same calendar, interleaved with
+/// service-completion events and concurrent drains — the geometry
+/// adaptation must stay event-for-event identical to the heap.
+#[test]
+fn prop_heavy_tailed_open_loop_stream_matches_heap() {
+    run("calendar-pareto-storm", 150, |g: &mut Gen| {
+        let mut cal = EventQueue::new();
+        let mut heap = HeapEventQueue::new();
+        let alpha = 1.5;
+        let span: f64 = 100.0;
+        let tail = 1.0 - span.powf(-alpha);
+        let mean_gap_ns = g.u64_in(10, 1_000_000);
+        let mut now = 0u64;
+        let mut next_id = 0usize;
+        for _ in 0..g.usize_in(1, 400) {
+            // open-loop arrival: the next session opens a Pareto gap on
+            let gap = (1.0 - g.f64_in(0.0, 1.0) * tail).powf(-1.0 / alpha);
+            now += (gap * mean_gap_ns as f64) as u64;
+            cal.push(t(now), next_id);
+            heap.push(t(now), next_id);
+            next_id += 1;
+            // its chunk completion re-enters the schedule further out
+            if g.bool() {
+                let done = now + g.u64_in(0, 10 * mean_gap_ns);
+                cal.push(t(done), next_id);
+                heap.push(t(done), next_id);
+                next_id += 1;
+            }
+            if g.bool() {
+                let (a, b) = (cal.pop(), heap.pop());
+                if a != b {
+                    return Err(format!("storm pop diverged: {a:?} vs {b:?}"));
+                }
+            }
+        }
+        loop {
+            let (a, b) = (cal.pop(), heap.pop());
+            if a != b {
+                return Err(format!("storm drain diverged: {a:?} vs {b:?}"));
+            }
+            if a.is_none() {
+                return Ok(());
+            }
+        }
     });
 }
 
