@@ -1,6 +1,14 @@
 //! Fleet-scale deployment bench: pull-makespan vs node count for the
-//! `fig1-scale` sweep (64 → 16384 nodes), cold and warm, recorded into
-//! `BENCH_micro.json`.
+//! `fig1-scale` sweep (64 → 1 048 576 nodes), cold and warm, recorded
+//! into `BENCH_micro.json`.
+//!
+//! The sweep runs on the node-class collapsed engine ([`ClassFleet`]),
+//! which prices a deploy in O(classes × layers) events instead of
+//! O(nodes × layers) — that is what makes the 262 144 and 1 048 576
+//! rows feasible inside a bench run. Every row at or below 16 384
+//! nodes is cross-checked against the per-node reference walk
+//! ([`Fleet`]): the two reports must render byte-identically, so the
+//! big rows inherit the reference semantics from the small ones.
 //!
 //! Two kinds of numbers are recorded per fleet size `N`:
 //!
@@ -18,10 +26,15 @@ mod common;
 use std::time::Instant;
 
 use harbor::config::SCALE_NODES;
-use harbor::container::{Fleet, FleetConfig};
+use harbor::container::{ClassFleet, Fleet, FleetConfig};
 use harbor::coordinator::fleet_registry;
 
 use common::record_bench;
+
+/// Largest fleet the per-node reference walk is asked to reproduce for
+/// the golden cross-check (the walk is O(nodes × layers), so this is a
+/// wall-time budget, not a correctness limit).
+const GOLDEN_CEILING: usize = 16_384;
 
 fn main() {
     let reference = "quay.io/fenicsproject/stable:2016.1.0r1";
@@ -32,20 +45,43 @@ fn main() {
     for &nodes in &SCALE_NODES {
         let t0 = Instant::now();
         let mut sharded = fleet_registry(reference).expect("fleet registry");
-        let mut fleet = Fleet::new(FleetConfig::hpc(nodes));
+        let mut fleet = ClassFleet::new(FleetConfig::hpc(nodes));
         let cold = fleet.deploy(&mut sharded, reference).expect("cold deploy");
+        let peak_classes = fleet.peak_classes();
         let warm = fleet.deploy(&mut sharded, reference).expect("warm deploy");
         let wall = t0.elapsed().as_secs_f64();
+
+        if nodes <= GOLDEN_CEILING {
+            let mut ref_sharded = fleet_registry(reference).expect("fleet registry");
+            let mut ref_fleet = Fleet::new(FleetConfig::hpc(nodes));
+            let ref_cold = ref_fleet
+                .deploy(&mut ref_sharded, reference)
+                .expect("reference cold deploy");
+            let ref_warm = ref_fleet
+                .deploy(&mut ref_sharded, reference)
+                .expect("reference warm deploy");
+            assert_eq!(
+                cold.render(),
+                ref_cold.render(),
+                "collapsed cold deploy diverged from per-node reference at {nodes} nodes"
+            );
+            assert_eq!(
+                warm.render(),
+                ref_warm.render(),
+                "collapsed warm deploy diverged from per-node reference at {nodes} nodes"
+            );
+        }
 
         let ratio = warm.makespan.as_secs_f64() / cold.makespan.as_secs_f64();
         worst_ratio = worst_ratio.max(ratio);
         println!(
-            "  {nodes:>6} nodes: cold {:>9} (WAN {:>6.1} MB, intra {:>9.1} MB), \
-             warm {:>9}, ratio {ratio:.5}, computed in {wall:.3} s",
+            "  {nodes:>7} nodes: cold {:>9} (WAN {:>6.1} MB, intra {:>9.1} MB), \
+             warm {:>9}, ratio {ratio:.5}, {:>3} peak classes, computed in {wall:.3} s",
             cold.makespan,
             cold.wan_bytes as f64 / 1e6,
             cold.intra_bytes as f64 / 1e6,
             warm.makespan,
+            peak_classes,
         );
         println!("           scheduler: {}", cold.queue.render());
         rec.push((format!("fig1_cold_{nodes}_virt_s"), cold.makespan.as_secs_f64()));

@@ -1,0 +1,75 @@
+//! Node-class collapsing bench: how many equivalence classes a fleet
+//! deploy actually materialises, and what a collapsed deploy costs in
+//! wall time, across the full `fig1-scale` node sweep.
+//!
+//! The collapsed engine ([`ClassFleet`]) prices a deploy in
+//! O(classes × layers) events. The interesting empirical fact is that
+//! the class count is driven by the peer fan-out wave structure — it
+//! grows with log(nodes), not nodes — so the million-node row costs
+//! about the same as the 16k row. Two key families land in
+//! `BENCH_micro.json`:
+//!
+//! * `fleet_classes_{N}` — peak class count during a cold deploy onto
+//!   `N` nodes (the curve CI plots against node count);
+//! * `fleet_classes_events_{N}` — calendar-queue events the collapsed
+//!   deploy scheduled (vs `N × layers` for the per-node walk);
+//! * `fleet_classes_deploy_{N}_ns_per_iter` — wall time per collapsed
+//!   cold deploy at N ∈ {16384, 262144, 1048576}.
+
+mod common;
+
+use harbor::config::SCALE_NODES;
+use harbor::container::{ClassFleet, FleetConfig};
+use harbor::coordinator::fleet_registry;
+
+use common::{record_bench, time_rec};
+
+/// Image reference the fleet pulls (same as the fig1-scale scenario).
+const REFERENCE: &str = "quay.io/fenicsproject/stable:2016.1.0r1";
+
+/// Node counts for the ns/op timing rows.
+const TIMED_NODES: [usize; 3] = [16_384, 262_144, 1_048_576];
+
+fn main() {
+    let mut rec: Vec<(String, f64)> = Vec::new();
+
+    println!("== node-class collapsing: class count vs node count ==");
+    for &nodes in &SCALE_NODES {
+        let mut sharded = fleet_registry(REFERENCE).expect("fleet registry");
+        let mut fleet = ClassFleet::new(FleetConfig::hpc(nodes));
+        let cold = fleet.deploy(&mut sharded, REFERENCE).expect("cold deploy");
+        let node_events = cold.queue.pushes;
+        println!(
+            "  {nodes:>7} nodes: {:>3} peak classes, {:>5} class events \
+             ({} node-equivalent), {} classes after re-merge",
+            fleet.peak_classes(),
+            fleet.class_events(),
+            node_events,
+            fleet.class_count(),
+        );
+        rec.push((format!("fleet_classes_{nodes}"), fleet.peak_classes() as f64));
+        rec.push((
+            format!("fleet_classes_events_{nodes}"),
+            fleet.class_events() as f64,
+        ));
+    }
+
+    println!("== node-class collapsing: collapsed cold-deploy wall time ==");
+    for &nodes in &TIMED_NODES {
+        // the registry is rebuilt outside the timed closure; each
+        // iteration deploys a fresh (cold) fleet through it, so the
+        // measured cost is the collapsed deploy itself
+        let mut sharded = fleet_registry(REFERENCE).expect("fleet registry");
+        time_rec(
+            &mut rec,
+            &format!("fleet_classes_deploy_{nodes}"),
+            &format!("collapsed cold deploy, {nodes} nodes"),
+            || {
+                let mut fleet = ClassFleet::new(FleetConfig::hpc(nodes));
+                fleet.deploy(&mut sharded, REFERENCE).expect("cold deploy");
+            },
+        );
+    }
+
+    record_bench(&rec);
+}

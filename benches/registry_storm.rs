@@ -12,6 +12,11 @@
 //!   diverges across the knee (the saturation signature);
 //! * `storm_delivered_mbps` — delivered payload throughput of the
 //!   0.90x cell;
+//! * `storm_chaos_p99_s` / `storm_chaos_p999_s` — tail latency of the
+//!   0.90x cell replayed under the seeded shard-fault schedule
+//!   (intensity 0.4);
+//! * `storm_chaos_availability` — delivered/offered session fraction
+//!   of that chaos cell;
 //! * `storm_determinism_ok` — 1.0 iff the full figure set renders
 //!   byte-identically under `--jobs 1` and `--jobs 4` (the CI
 //!   determinism gate fails on anything else);
@@ -83,6 +88,8 @@ fn main() {
     let sat_p99 = past.stats.mean();
     let knee_ratio = sat_p99 / calm.stats.mean().max(f64::MIN_POSITIVE);
     let delivered = row(sat_fig, "4 shard(s), load 0.90x").stats.mean();
+    let chaos = row(lat_fig, "chaos 0.4");
+    let chaos_avail = part(row(sat_fig, "chaos 0.4"), "availability");
 
     println!(
         "  4 shards: p50 {:.3} s / p99 {p99:.3} s / p999 {:.3} s at 0.90x; \
@@ -91,6 +98,11 @@ fn main() {
         part(knee, "p50 s"),
         part(knee, "p999 s"),
     );
+    println!(
+        "  chaos 0.4: p99 {:.3} s / p999 {:.3} s, availability {chaos_avail:.4}",
+        chaos.stats.mean(),
+        part(chaos, "p999 s"),
+    );
 
     rec.push(("storm_p50_s".into(), part(knee, "p50 s")));
     rec.push(("storm_p99_s".into(), p99));
@@ -98,6 +110,9 @@ fn main() {
     rec.push(("storm_sat_p99_s".into(), sat_p99));
     rec.push(("storm_knee_ratio".into(), knee_ratio));
     rec.push(("storm_delivered_mbps".into(), delivered));
+    rec.push(("storm_chaos_p99_s".into(), chaos.stats.mean()));
+    rec.push(("storm_chaos_p999_s".into(), part(chaos, "p999 s")));
+    rec.push(("storm_chaos_availability".into(), chaos_avail));
     rec.push((
         "storm_determinism_ok".into(),
         if deterministic { 1.0 } else { 0.0 },

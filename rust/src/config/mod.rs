@@ -45,8 +45,11 @@ pub const SCALE_RANKS: [usize; 3] = [1536, 12288, 98304];
 
 /// The `fig1-scale` fleet sizes: pull one image onto this many nodes at
 /// once (the paper's Fig 1 "pull everywhere" step, grown to the scale
-/// PR 1 unlocked for the compute phase).
-pub const SCALE_NODES: [usize; 4] = [64, 512, 4096, 16384];
+/// PR 1 unlocked for the compute phase).  The 65 536 / 262 144 /
+/// 1 048 576 rows run on the collapsed node-class engine
+/// (`ClassFleet`), which costs O(classes × layers) events instead of
+/// O(nodes × layers) — a per-node walk at 1M nodes is infeasible.
+pub const SCALE_NODES: [usize; 7] = [64, 512, 4096, 16384, 65_536, 262_144, 1_048_576];
 
 /// The `build-farm` worker counts: how many CI workers build the
 /// per-platform `ARCH_OPT` variant matrix concurrently.
@@ -366,8 +369,8 @@ mod tests {
     fn fig1_scale_sweeps_fleet_sizes() {
         let cfg = ExperimentConfig::paper_default("fig1-scale").unwrap();
         assert_eq!(cfg.nodes, SCALE_NODES.to_vec());
-        assert_eq!(*cfg.nodes.last().unwrap(), 16384);
-        assert!(cfg.nodes.len() >= 4);
+        assert_eq!(*cfg.nodes.last().unwrap(), 1_048_576);
+        assert!(cfg.nodes.len() >= 7);
         assert!(cfg.ranks.is_empty());
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);

@@ -54,6 +54,20 @@ impl CacheStats {
         self.bytes_evicted += other.bytes_evicted;
     }
 
+    /// Accumulate `delta` scaled by a node-class multiplicity: one
+    /// representative cache performed `delta` worth of work on behalf
+    /// of `multiplicity` identical nodes (see `NodeClass` in
+    /// [`distribute`](super::distribute)).  `merge` is the
+    /// `multiplicity == 1` special case.
+    pub fn add_scaled(&mut self, delta: &CacheStats, multiplicity: u64) {
+        self.hits += delta.hits * multiplicity;
+        self.misses += delta.misses * multiplicity;
+        self.evictions += delta.evictions * multiplicity;
+        self.bytes_hit += delta.bytes_hit * multiplicity;
+        self.bytes_inserted += delta.bytes_inserted * multiplicity;
+        self.bytes_evicted += delta.bytes_evicted * multiplicity;
+    }
+
     /// One-line summary for reports and bench output.
     pub fn render(&self) -> String {
         format!(
@@ -246,6 +260,21 @@ impl LayerCache {
     pub fn store(&self) -> &LayerStore {
         &self.store
     }
+
+    /// Resident layer ids in recency order, least-recently-used first
+    /// (ties broken by id, matching the eviction victim order).  Two
+    /// caches with equal signatures hold the same content *and* evict
+    /// in the same order under any future pressure — the reconvergence
+    /// test node-class re-merging relies on.
+    pub fn recency_signature(&self) -> Vec<LayerId> {
+        let mut order: Vec<(u64, LayerId)> = self
+            .recency
+            .iter()
+            .map(|(id, &t)| (t, id.clone()))
+            .collect();
+        order.sort();
+        order.into_iter().map(|(_, id)| id).collect()
+    }
 }
 
 #[cfg(test)]
@@ -384,6 +413,44 @@ mod tests {
         let s = c.stats();
         assert_eq!((s.hits, s.misses), (1, 1));
         assert_eq!(s.bytes_hit, 10);
+    }
+
+    #[test]
+    fn add_scaled_multiplies_every_counter() {
+        let mut c = LayerCache::new(15);
+        c.admit(layer("a", 10));
+        c.lookup(&layer("a", 10).id);
+        c.lookup(&layer("b", 20).id);
+        c.admit(layer("b", 20)); // evicts a
+        let delta = c.stats();
+        let mut agg = CacheStats::default();
+        agg.add_scaled(&delta, 1000);
+        assert_eq!(agg.hits, delta.hits * 1000);
+        assert_eq!(agg.misses, delta.misses * 1000);
+        assert_eq!(agg.evictions, delta.evictions * 1000);
+        assert_eq!(agg.bytes_hit, delta.bytes_hit * 1000);
+        assert_eq!(agg.bytes_inserted, delta.bytes_inserted * 1000);
+        assert_eq!(agg.bytes_evicted, delta.bytes_evicted * 1000);
+        // multiplicity 1 is exactly merge
+        let mut one = CacheStats::default();
+        one.add_scaled(&delta, 1);
+        let mut merged = CacheStats::default();
+        merged.merge(&delta);
+        assert_eq!(one, merged);
+    }
+
+    #[test]
+    fn recency_signature_orders_lru_first() {
+        let mut c = LayerCache::unbounded();
+        let (a, b, d) = (layer("a", 1), layer("b", 1), layer("d", 1));
+        c.admit(a.clone());
+        c.admit(b.clone());
+        c.admit(d.clone());
+        assert!(c.lookup(&a.id).is_some()); // a becomes most recent
+        assert_eq!(c.recency_signature(), vec![b.id.clone(), d.id.clone(), a.id.clone()]);
+        // an identically-treated clone reconverges to the same signature
+        let e = c.clone();
+        assert_eq!(c.recency_signature(), e.recency_signature());
     }
 
     #[test]

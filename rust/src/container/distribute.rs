@@ -42,6 +42,28 @@
 //! `fig1-scale` figure shows warm makespans orders of magnitude under
 //! cold ones.
 //!
+//! # Node-class collapsing: the O(classes × layers) engine
+//!
+//! [`Fleet`] walks every node per layer, which caps `fig1-scale` at
+//! ~16 384 nodes.  [`ClassFleet`] is the collapsed engine: nodes with
+//! identical (cached-layer set, shard assignment, fan-out wave
+//! position, retry/fault state) form a [`NodeClass`] — a [`NodeSet`]
+//! of members plus **one** representative [`LayerCache`] whose
+//! accounting is charged at class multiplicity
+//! ([`CacheStats::add_scaled`]).  Classes split lazily when something
+//! differentiates members (a deploy-scope boundary, a fault or
+//! eviction storm striking one node, a fan-out wave consuming part of
+//! a class) and re-merge after each wave when representative states
+//! reconverge ([`LayerCache::recency_signature`]), so a fault-free
+//! million-node deploy costs O(waves × layers) events through the same
+//! calendar [`EventQueue`] (class-level completions enter via
+//! `push_batch`).  [`Fleet`] is retained as the per-node reference
+//! implementation — the same pattern as `HeapEventQueue` — and for
+//! fleets of any size the collapsed path renders byte-identically
+//! (`class_equivalence` tests + the CI golden diff gate enforce it at
+//! ≤ 16 384 nodes).  [`DeployEngine`] dispatches between the two:
+//! [`FanOut::Direct`] is inherently O(nodes) and always runs per-node.
+//!
 //! [`Registry::pull`]: super::registry::Registry::pull
 //! [`FifoResource`]: crate::des::FifoResource
 //! [`PathCost::registry_wan`]: crate::net::PathCost::registry_wan
@@ -49,9 +71,11 @@
 use std::ops::Range;
 
 use crate::des::{
-    Duration, EventQueue, FaultSchedule, FaultStats, FifoResource, QueueStats, SimRng, VirtualTime,
+    Duration, EventQueue, Fault, FaultSchedule, FaultStats, FifoResource, QueueStats, SimRng,
+    VirtualTime,
 };
 use crate::net::{Fabric, PathCost};
+use crate::util::human;
 
 use super::cache::{CacheStats, LayerCache};
 use super::image::{Image, Layer, LayerId};
@@ -562,15 +586,15 @@ impl FleetReport {
     /// when something went wrong.
     pub fn render(&self) -> String {
         let mut text = format!(
-            "deploy {} -> {} nodes: makespan {}, WAN {:.1} MB in {} transfer(s), \
-             intra-cluster {:.1} MB, cache hit rate {:.0}%, shard util {}, \
+            "deploy {} -> {} nodes: makespan {}, WAN {} in {} transfer(s), \
+             intra-cluster {}, cache hit rate {:.0}%, shard util {}, \
              {} ready events (queue depth hwm {})",
             self.reference,
-            self.nodes,
+            human::thousands(self.nodes as u64),
             self.makespan,
-            self.wan_bytes as f64 / 1e6,
+            human::bytes(self.wan_bytes),
             self.wan_transfers,
-            self.intra_bytes as f64 / 1e6,
+            human::bytes(self.intra_bytes),
             self.cache.hit_rate() * 100.0,
             self.shard_utilisation
                 .iter()
@@ -586,11 +610,11 @@ impl FleetReport {
             || self.permanently_failed != 0
         {
             text.push_str(&format!(
-                ", {} retry(ies), {} failover(s), {:.1} MB re-sent, \
+                ", {} retry(ies), {} failover(s), {} re-sent, \
                  {} node(s) permanently failed, availability {:.4}",
                 self.retries,
                 self.failovers,
-                self.retried_bytes as f64 / 1e6,
+                human::bytes(self.retried_bytes),
                 self.permanently_failed,
                 self.availability(),
             ));
@@ -1199,6 +1223,1015 @@ impl Fleet {
     }
 }
 
+// ===================================================================
+// Node-class collapsing: the O(classes × layers) deploy engine
+// ===================================================================
+
+/// A set of node indices stored as sorted, disjoint, coalesced
+/// half-open runs — class membership for [`NodeClass`].
+///
+/// A fresh fleet is one run `[0, n)`; splits carve runs and merges
+/// coalesce them back, so a fault-free campaign keeps the
+/// representation O(classes), never O(nodes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeSet {
+    runs: Vec<(usize, usize)>,
+}
+
+impl NodeSet {
+    /// The contiguous set `[range.start, range.end)`.
+    pub fn from_range(range: Range<usize>) -> Self {
+        if range.is_empty() {
+            NodeSet { runs: Vec::new() }
+        } else {
+            NodeSet {
+                runs: vec![(range.start, range.end)],
+            }
+        }
+    }
+
+    /// The one-node set `{node}`.
+    pub fn singleton(node: usize) -> Self {
+        NodeSet {
+            runs: vec![(node, node + 1)],
+        }
+    }
+
+    /// Number of member nodes.
+    pub fn len(&self) -> usize {
+        self.runs.iter().map(|&(s, e)| e - s).sum()
+    }
+
+    /// Whether the set has no members.
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+
+    /// Smallest member, if any.
+    pub fn first(&self) -> Option<usize> {
+        self.runs.first().map(|&(s, _)| s)
+    }
+
+    /// The backing runs, sorted and disjoint.
+    pub fn runs(&self) -> &[(usize, usize)] {
+        &self.runs
+    }
+
+    /// Members in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.runs.iter().flat_map(|&(s, e)| s..e)
+    }
+
+    fn run_of(&self, node: usize) -> Option<usize> {
+        self.runs
+            .binary_search_by(|&(s, e)| {
+                if node < s {
+                    std::cmp::Ordering::Greater
+                } else if node >= e {
+                    std::cmp::Ordering::Less
+                } else {
+                    std::cmp::Ordering::Equal
+                }
+            })
+            .ok()
+    }
+
+    /// Whether `node` is a member.
+    pub fn contains(&self, node: usize) -> bool {
+        self.run_of(node).is_some()
+    }
+
+    /// Remove one member; returns whether it was present.
+    pub fn remove(&mut self, node: usize) -> bool {
+        let Some(i) = self.run_of(node) else {
+            return false;
+        };
+        let (s, e) = self.runs[i];
+        match (node == s, node + 1 == e) {
+            (true, true) => {
+                self.runs.remove(i);
+            }
+            (true, false) => self.runs[i] = (s + 1, e),
+            (false, true) => self.runs[i] = (s, e - 1),
+            (false, false) => {
+                self.runs[i] = (s, node);
+                self.runs.insert(i + 1, (node + 1, e));
+            }
+        }
+        true
+    }
+
+    /// Remove every member of `other` (set difference, in place).
+    pub fn subtract(&mut self, other: &NodeSet) {
+        let mut out = Vec::with_capacity(self.runs.len() + other.runs.len());
+        for &(start, end) in &self.runs {
+            let mut s = start;
+            for &(os, oe) in &other.runs {
+                if oe <= s {
+                    continue;
+                }
+                if os >= end {
+                    break;
+                }
+                if os > s {
+                    out.push((s, os));
+                }
+                s = s.max(oe);
+                if s >= end {
+                    break;
+                }
+            }
+            if s < end {
+                out.push((s, end));
+            }
+        }
+        self.runs = out;
+    }
+
+    /// Merge `other` in (the sets are disjoint in every caller; the
+    /// merge coalesces adjacent runs so reconverged classes shrink
+    /// back to few runs).
+    pub fn union(&mut self, other: &NodeSet) {
+        let mut merged: Vec<(usize, usize)> =
+            Vec::with_capacity(self.runs.len() + other.runs.len());
+        let mut a = self.runs.iter().copied().peekable();
+        let mut b = other.runs.iter().copied().peekable();
+        loop {
+            let next = match (a.peek(), b.peek()) {
+                (Some(&x), Some(&y)) => {
+                    if x.0 <= y.0 {
+                        a.next()
+                    } else {
+                        b.next()
+                    }
+                }
+                (Some(_), None) => a.next(),
+                (None, Some(_)) => b.next(),
+                (None, None) => break,
+            };
+            let (s, e) = next.expect("peeked run exists");
+            match merged.last_mut() {
+                Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                _ => merged.push((s, e)),
+            }
+        }
+        self.runs = merged;
+    }
+
+    /// Split off and return every member `< bound`, keeping the rest.
+    pub fn split_below(&mut self, bound: usize) -> NodeSet {
+        let mut below = Vec::new();
+        let mut above = Vec::new();
+        for &(s, e) in &self.runs {
+            if e <= bound {
+                below.push((s, e));
+            } else if s >= bound {
+                above.push((s, e));
+            } else {
+                below.push((s, bound));
+                above.push((bound, e));
+            }
+        }
+        self.runs = above;
+        NodeSet { runs: below }
+    }
+}
+
+/// An equivalence class of fleet nodes in identical deploy state:
+/// same cached-layer set (hence same shard assignments — shards are a
+/// pure function of layer content), same fan-out wave position, same
+/// retry/fault state.  One representative [`LayerCache`] stands in
+/// for every member; its accounting is charged at multiplicity by the
+/// owning [`ClassFleet`].
+#[derive(Debug, Clone)]
+pub struct NodeClass {
+    /// Member nodes.
+    members: NodeSet,
+    /// The representative's cache (identical on every member).
+    cache: LayerCache,
+    /// Instant the members hold all layers so far this wave.
+    ready: VirtualTime,
+    /// Whether the members are permanently failed.
+    dead: bool,
+}
+
+impl NodeClass {
+    /// Member nodes.
+    pub fn members(&self) -> &NodeSet {
+        &self.members
+    }
+
+    /// Number of nodes this class stands in for.
+    pub fn multiplicity(&self) -> u64 {
+        self.members.len() as u64
+    }
+
+    /// The representative's cache.
+    pub fn cache(&self) -> &LayerCache {
+        &self.cache
+    }
+
+    /// Whether the members are permanently failed.
+    pub fn is_dead(&self) -> bool {
+        self.dead
+    }
+}
+
+/// Charge a representative-cache operation to the fleet accumulator
+/// at class multiplicity: the rep performs `op` once, the delta counts
+/// once per member.
+fn charge<R>(
+    agg: &mut CacheStats,
+    class: &mut NodeClass,
+    op: impl FnOnce(&mut LayerCache) -> R,
+) -> R {
+    let before = class.cache.stats();
+    let out = op(&mut class.cache);
+    agg.add_scaled(&class.cache.stats().since(&before), class.members.len() as u64);
+    out
+}
+
+/// The collapsed deploy engine: a [`Fleet`] whose nodes are held as
+/// [`NodeClass`]es, so `deploy`/`deploy_with_faults` cost
+/// O(classes × layers) events instead of O(nodes × layers).
+///
+/// Peer fan-out only ([`FanOut::Direct`] is inherently O(nodes) — use
+/// [`DeployEngine`] for automatic fallback).  Reports are
+/// byte-identical to the per-node [`Fleet`] on the same inputs: the
+/// wave walk visits classes in ascending member order, so WAN
+/// submissions and rng draws happen in the per-node order, and the
+/// report's queue counters are the node-equivalent push/pop/high-water
+/// numbers (its geometry fields describe the class-level calendar the
+/// engine actually ran).
+#[derive(Debug)]
+pub struct ClassFleet {
+    config: FleetConfig,
+    classes: Vec<NodeClass>,
+    /// Fleet-lifetime cache counters over multiplicities (the
+    /// collapsed stand-in for summing per-node cache stats).
+    agg_cache: CacheStats,
+    /// One representative container per surviving class.
+    containers: Vec<Container>,
+    clock: VirtualTime,
+    next_container_id: u64,
+    storm_mark: Option<VirtualTime>,
+    /// Class count at the end of the latest wave, before re-merge.
+    peak_classes: usize,
+    /// Class-level completion events the latest wave scheduled.
+    class_events: u64,
+}
+
+impl ClassFleet {
+    /// A cold collapsed fleet: every node in one class.  Panics on
+    /// [`FanOut::Direct`] — that path has no symmetry to exploit.
+    pub fn new(config: FleetConfig) -> Self {
+        assert!(config.nodes >= 1, "fleet needs at least one node");
+        match config.fan_out {
+            FanOut::Peer { arity } => assert!(arity >= 1, "peer fan-out needs arity >= 1"),
+            FanOut::Direct => panic!("ClassFleet models peer fan-out only (use DeployEngine)"),
+        }
+        let all = NodeClass {
+            members: NodeSet::from_range(0..config.nodes),
+            cache: LayerCache::new(config.cache_capacity_bytes),
+            ready: VirtualTime::ZERO,
+            dead: false,
+        };
+        ClassFleet {
+            config,
+            classes: vec![all],
+            agg_cache: CacheStats::default(),
+            containers: Vec::new(),
+            clock: VirtualTime::ZERO,
+            next_container_id: 0,
+            storm_mark: None,
+            peak_classes: 1,
+            class_events: 0,
+        }
+    }
+
+    /// The fleet's configuration.
+    pub fn config(&self) -> &FleetConfig {
+        &self.config
+    }
+
+    /// The fleet's virtual clock (advances with each deploy wave).
+    pub fn now(&self) -> VirtualTime {
+        self.clock
+    }
+
+    /// Current classes (after the latest wave's re-merge).
+    pub fn classes(&self) -> &[NodeClass] {
+        &self.classes
+    }
+
+    /// Class count right now.
+    pub fn class_count(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Peak class count over the latest wave, before re-merge — the
+    /// `classes` in O(classes × layers).
+    pub fn peak_classes(&self) -> usize {
+        self.peak_classes
+    }
+
+    /// Class-level completion events the latest wave pushed through
+    /// the calendar queue (the per-node engine pushes one per node per
+    /// transferred layer).
+    pub fn class_events(&self) -> u64 {
+        self.class_events
+    }
+
+    /// Representative containers (one per surviving class) from the
+    /// latest wave.
+    pub fn containers(&self) -> &[Container] {
+        &self.containers
+    }
+
+    /// Nodes permanently failed so far, over multiplicities.
+    pub fn failed_count(&self) -> usize {
+        self.classes.iter().filter(|c| c.dead).map(|c| c.members.len()).sum()
+    }
+
+    /// Fleet-lifetime cache counters (the collapsed analogue of
+    /// [`Fleet::cache_totals`]).
+    pub fn cache_totals(&self) -> CacheStats {
+        self.agg_cache
+    }
+
+    fn class_of(&self, node: usize) -> usize {
+        (0..self.classes.len())
+            .find(|&ci| self.classes[ci].members.contains(node))
+            .expect("every node belongs to exactly one class")
+    }
+
+    /// Split classes straddling `bound` so no class crosses it.
+    fn split_at(&mut self, bound: usize) {
+        for ci in 0..self.classes.len() {
+            let below = self.classes[ci].members.split_below(bound);
+            if below.is_empty() {
+                continue;
+            }
+            if self.classes[ci].members.is_empty() {
+                // entire class below the boundary: put it back
+                self.classes[ci].members = below;
+                continue;
+            }
+            let twin = NodeClass {
+                members: below,
+                cache: self.classes[ci].cache.clone(),
+                ready: self.classes[ci].ready,
+                dead: self.classes[ci].dead,
+            };
+            self.classes.push(twin);
+        }
+    }
+
+    /// Make `node` a singleton class; returns its class index.
+    fn isolate(&mut self, node: usize) -> usize {
+        let ci = self.class_of(node);
+        if self.classes[ci].members.len() == 1 {
+            return ci;
+        }
+        self.classes[ci].members.remove(node);
+        let twin = NodeClass {
+            members: NodeSet::singleton(node),
+            cache: self.classes[ci].cache.clone(),
+            ready: self.classes[ci].ready,
+            dead: self.classes[ci].dead,
+        };
+        self.classes.push(twin);
+        self.classes.len() - 1
+    }
+
+    /// Split the run `[s, e)` out of class `ci` into a new class;
+    /// returns the new class index.  `[s, e)` must be a strict subset
+    /// of the class.
+    fn split_run(&mut self, ci: usize, s: usize, e: usize) -> usize {
+        let chunk = NodeSet { runs: vec![(s, e)] };
+        self.classes[ci].members.subtract(&chunk);
+        debug_assert!(!self.classes[ci].members.is_empty(), "split leaves a remainder");
+        let twin = NodeClass {
+            members: chunk,
+            cache: self.classes[ci].cache.clone(),
+            ready: self.classes[ci].ready,
+            dead: self.classes[ci].dead,
+        };
+        self.classes.push(twin);
+        self.classes.len() - 1
+    }
+
+    /// Re-merge classes whose representative states reconverged: same
+    /// liveness and the same cache content in the same recency order
+    /// mean identical behaviour under any future wave, so the classes
+    /// are indistinguishable again.  Canonical (ascending first
+    /// member) order keeps campaigns deterministic.
+    fn remerge(&mut self) {
+        use std::collections::HashMap;
+        let mut order = std::mem::take(&mut self.classes);
+        order.sort_by_key(|c| c.members.first());
+        let mut groups: HashMap<(bool, Vec<LayerId>), usize> = HashMap::new();
+        let mut out: Vec<NodeClass> = Vec::new();
+        for class in order {
+            let key = (class.dead, class.cache.recency_signature());
+            match groups.get(&key) {
+                Some(&i) => out[i].members.union(&class.members),
+                None => {
+                    groups.insert(key, out.len());
+                    out.push(class);
+                }
+            }
+        }
+        self.classes = out;
+    }
+
+    /// Collapsed equivalent of [`Fleet::deploy`]: full scope, empty
+    /// schedule, no retries, rng never consulted.
+    pub fn deploy(
+        &mut self,
+        registry: &mut ShardedRegistry,
+        reference: &str,
+    ) -> Result<FleetReport, PullError> {
+        let nodes = self.config.nodes;
+        let mut rng = SimRng::new(0, "fault-free");
+        self.deploy_with_faults(
+            registry,
+            reference,
+            0..nodes,
+            &FaultSchedule::none(),
+            &RetryPolicy::none(),
+            &mut rng,
+        )
+    }
+
+    /// Collapsed equivalent of [`Fleet::deploy_with_faults`] — same
+    /// semantics, same report, O(classes × layers) events.
+    ///
+    /// The walk preserves the reference engine's WAN submission order
+    /// and rng draw order exactly: fault-touched nodes are isolated
+    /// into singleton classes up front (so multi-member classes are
+    /// never down and never consult the schedule), needers are visited
+    /// in ascending node order via run segments, and every per-node
+    /// accounting step is applied once at class multiplicity.
+    #[allow(clippy::needless_range_loop)]
+    pub fn deploy_with_faults(
+        &mut self,
+        registry: &mut ShardedRegistry,
+        reference: &str,
+        scope: Range<usize>,
+        faults: &FaultSchedule,
+        policy: &RetryPolicy,
+        rng: &mut SimRng,
+    ) -> Result<FleetReport, PullError> {
+        let t0 = self.clock;
+        let n = self.config.nodes;
+        assert!(!scope.is_empty(), "deploy scope must name at least one node");
+        assert!(scope.end <= n, "deploy scope exceeds the fleet");
+        assert!(policy.max_attempts >= 1, "retry policy needs one attempt");
+        let FanOut::Peer { arity } = self.config.fan_out else {
+            unreachable!("ClassFleet::new rejects direct fan-out");
+        };
+        let image = registry
+            .registry()
+            .image(reference)
+            .cloned()
+            .ok_or_else(|| PullError::UnknownReference(reference.to_string()))?;
+
+        let mut unique: Vec<&LayerId> = Vec::new();
+        for id in &image.layers {
+            if !unique.contains(&id) {
+                unique.push(id);
+            }
+        }
+
+        // pre-split: scope boundaries plus every fault-touched node.
+        // After this, any class with more than one member is untouched
+        // by every node-level fault in the schedule — it is never
+        // down, never struck by a storm, and `node_next_up` would
+        // return "up right now" for each member — so only singletons
+        // ever consult the schedule.
+        self.split_at(scope.start);
+        self.split_at(scope.end);
+        for &(_, fault) in faults.events() {
+            let touched = match fault {
+                Fault::NodeCrash { node }
+                | Fault::NodeRejoin { node }
+                | Fault::CacheEvictStorm { node, .. } => Some(node),
+                _ => None,
+            };
+            if let Some(node) = touched {
+                if node < n {
+                    self.isolate(node);
+                }
+            }
+        }
+        for class in &mut self.classes {
+            class.ready = t0;
+        }
+        let dead_before = self.failed_count();
+        let stats_before = self.agg_cache;
+
+        // eviction storms land before lookups, exactly as per-node
+        let mark = self.storm_mark;
+        for &(at, node, bytes) in faults.evict_storms() {
+            let fresh = at <= t0
+                && match mark {
+                    None => true,
+                    Some(m) => at > m,
+                };
+            if fresh && node < n {
+                let ci = self.class_of(node);
+                debug_assert_eq!(self.classes[ci].members.len(), 1, "storm node is isolated");
+                charge(&mut self.agg_cache, &mut self.classes[ci], |c| c.shed(bytes));
+            }
+        }
+        self.storm_mark = Some(t0);
+
+        let busy_before = registry.shard_busy();
+        let mut ctx = WaveCtx {
+            faults,
+            policy,
+            rng,
+            acc: FaultAccum::default(),
+        };
+        let mut intra_bytes = 0u64;
+        // class-level completions ride one calendar queue; the
+        // node-equivalent counters the per-node engine would report
+        // are synthesized alongside (its queue fully drains between
+        // layers, so the node-level high-water mark is the largest
+        // per-layer multiplicity sum)
+        let mut sched: EventQueue<(usize, u64)> =
+            EventQueue::with_capacity(self.classes.len().max(16));
+        let mut v_pushes = 0u64;
+        let mut v_hwm = 0u64;
+
+        for &id in &unique {
+            // scaled lookups are the accounting: one representative
+            // lookup stands in for `multiplicity` per-node lookups
+            let mut needer_cls: Vec<usize> = Vec::new();
+            for ci in 0..self.classes.len() {
+                let in_scope = {
+                    let c = &self.classes[ci];
+                    !c.dead && c.members.first().is_some_and(|f| scope.contains(&f))
+                };
+                if !in_scope {
+                    continue;
+                }
+                let miss = charge(&mut self.agg_cache, &mut self.classes[ci], |c| {
+                    c.lookup(id).is_none()
+                });
+                if miss {
+                    needer_cls.push(ci);
+                }
+            }
+            if needer_cls.is_empty() {
+                continue; // fully warm layer: no transfer anywhere
+            }
+            needer_cls.sort_by_key(|&ci| self.classes[ci].members.first());
+            let blob = registry
+                .registry()
+                .layers
+                .get(id)
+                .ok_or_else(|| PullError::CorruptRegistry(id.clone()))?
+                .blob();
+
+            let mut holder_cls: Vec<usize> = (0..self.classes.len())
+                .filter(|&ci| !self.classes[ci].dead && self.classes[ci].cache.contains(id))
+                .collect();
+
+            let mut layer_inflight = 0u64;
+            let (start, pool) = if holder_cls.is_empty() {
+                // no holder anywhere: seed one copy over the WAN onto
+                // the earliest-available needer.  Candidates are
+                // classes; a multi-member class is "up right now" by
+                // the pre-split invariant, a singleton asks the
+                // schedule — and ascending-first order with a strict
+                // minimum reproduces the per-node first-minimum walk.
+                let mut remaining = needer_cls.clone();
+                let mut seed: Option<(usize, VirtualTime)> = None;
+                let mut t_seed = t0;
+                while seed.is_none() && !remaining.is_empty() {
+                    let mut best: Option<(usize, VirtualTime)> = None;
+                    let mut dead_idx: Vec<usize> = Vec::new();
+                    for (idx, &ci) in remaining.iter().enumerate() {
+                        let c = &self.classes[ci];
+                        let up = if c.members.len() > 1 {
+                            Some(t_seed)
+                        } else {
+                            ctx.faults
+                                .node_next_up(c.members.first().expect("class non-empty"), t_seed)
+                        };
+                        match up {
+                            None => dead_idx.push(idx),
+                            Some(up) => {
+                                let better = match best {
+                                    None => true,
+                                    Some((_, b)) => up < b,
+                                };
+                                if better {
+                                    best = Some((idx, up));
+                                }
+                            }
+                        }
+                    }
+                    for &idx in dead_idx.iter().rev() {
+                        let ci = remaining.remove(idx);
+                        self.classes[ci].dead = true;
+                        if let Some((b, _)) = best.as_mut() {
+                            if *b > idx {
+                                *b -= 1;
+                            }
+                        }
+                    }
+                    let Some((idx, up)) = best else { break };
+                    match ctx.wan(registry, id, blob.bytes, up) {
+                        None => {
+                            for ci in remaining.drain(..) {
+                                self.classes[ci].dead = true;
+                            }
+                            break;
+                        }
+                        Some(done) => {
+                            let ci = remaining[idx];
+                            let seed_node =
+                                self.classes[ci].members.first().expect("class non-empty");
+                            let down = self.classes[ci].members.len() == 1
+                                && ctx.faults.node_down_at(seed_node, done);
+                            if down {
+                                // seed arrived mid-crash: wasted
+                                ctx.acc.retried_bytes += blob.bytes;
+                                match ctx.faults.node_next_up(seed_node, done) {
+                                    Some(up2) => {
+                                        ctx.acc.retries += 1;
+                                        t_seed = up2;
+                                    }
+                                    None => {
+                                        let ci = remaining.remove(idx);
+                                        self.classes[ci].dead = true;
+                                    }
+                                }
+                            } else {
+                                seed = Some((idx, done));
+                            }
+                        }
+                    }
+                }
+                let Some((idx, done)) = seed else {
+                    continue; // layer undeliverable in scope
+                };
+                let origin = remaining.remove(idx);
+                let first = self.classes[origin].members.first().expect("class non-empty");
+                let seeder_ci = if self.classes[origin].members.len() == 1 {
+                    origin
+                } else {
+                    // the seeder leaves its class; the rest ride waves
+                    let si = self.isolate(first);
+                    remaining.insert(idx, origin);
+                    si
+                };
+                sched.push(done, (seeder_ci, 1));
+                v_pushes += 1;
+                layer_inflight += 1;
+                v_hwm = v_hwm.max(layer_inflight);
+                charge(&mut self.agg_cache, &mut self.classes[seeder_ci], |c| {
+                    c.admit(blob.clone())
+                });
+                holder_cls.push(seeder_ci);
+                (done, remaining)
+            } else {
+                (t0, needer_cls.clone())
+            };
+
+            // ascending-order run segments snapshot the pool; waves
+            // consume them left to right, exactly the per-node order
+            let mut segments: Vec<(usize, usize, usize)> = Vec::new();
+            for &ci in &pool {
+                for &(s, e) in self.classes[ci].members.runs() {
+                    segments.push((s, e, ci));
+                }
+            }
+            segments.sort_unstable();
+            let total: usize = segments.iter().map(|&(s, e, _)| e - s).sum();
+            let mut cur_seg = 0usize;
+            let mut cur_off = 0usize;
+
+            let hop = self.config.fabric.p2p(blob.bytes, false);
+            let mut served = 0usize;
+            let mut t = start;
+            let mut resend: Vec<(VirtualTime, usize)> = Vec::new();
+            while served < total {
+                let live: usize = holder_cls
+                    .iter()
+                    .map(|&ci| {
+                        let c = &self.classes[ci];
+                        let m = c.members.len();
+                        if m > 1 {
+                            m
+                        } else if ctx
+                            .faults
+                            .node_down_at(c.members.first().expect("class non-empty"), t)
+                        {
+                            0
+                        } else {
+                            1
+                        }
+                    })
+                    .sum();
+                if live == 0 {
+                    // every holder is a down singleton: wait for the
+                    // first rejoin, or fall back to the registry for
+                    // everyone still waiting (the reference's own
+                    // O(scope) path — all holders are permanently
+                    // gone, so each survivor re-pulls individually)
+                    let next = holder_cls
+                        .iter()
+                        .filter_map(|&ci| {
+                            let c = &self.classes[ci];
+                            debug_assert_eq!(c.members.len(), 1, "live holders counted above");
+                            ctx.faults
+                                .node_next_up(c.members.first().expect("class non-empty"), t)
+                        })
+                        .min();
+                    match next {
+                        Some(up) => {
+                            t = up;
+                        }
+                        None => {
+                            for seg_i in cur_seg..segments.len() {
+                                let (s, e, _ci) = segments[seg_i];
+                                let s = if seg_i == cur_seg { s + cur_off } else { s };
+                                for node in s..e {
+                                    let si = self.isolate(node);
+                                    ctx.acc.retries += 1;
+                                    resend.push((t, si));
+                                }
+                            }
+                            cur_seg = segments.len();
+                            cur_off = 0;
+                            served = total;
+                        }
+                    }
+                    continue;
+                }
+                let wave = (live * arity).min(total - served);
+                t += hop;
+                let mut arrivals: Vec<(VirtualTime, (usize, u64))> = Vec::new();
+                let mut need = wave;
+                while need > 0 {
+                    let (s, e, ci) = segments[cur_seg];
+                    let s2 = s + cur_off;
+                    let take = (e - s2).min(need);
+                    intra_bytes += blob.bytes * take as u64;
+                    let class_len = self.classes[ci].members.len();
+                    if class_len == 1 {
+                        debug_assert_eq!(take, 1, "singleton segments are one node");
+                        let node = s2;
+                        if ctx.faults.node_down_at(node, t) {
+                            // copy arrived mid-crash: wasted hop
+                            ctx.acc.retried_bytes += blob.bytes;
+                            if ctx.faults.node_next_up(node, t).is_some() {
+                                ctx.acc.retries += 1;
+                                resend.push((t, ci));
+                            } else {
+                                self.classes[ci].dead = true;
+                            }
+                        } else {
+                            arrivals.push((t, (ci, 1)));
+                            charge(&mut self.agg_cache, &mut self.classes[ci], |c| {
+                                c.admit(blob.clone())
+                            });
+                            holder_cls.push(ci);
+                        }
+                    } else {
+                        // multi-member classes are never down (the
+                        // pre-split invariant): the chunk lands whole
+                        let target = if take == class_len {
+                            ci
+                        } else {
+                            self.split_run(ci, s2, s2 + take)
+                        };
+                        arrivals.push((t, (target, take as u64)));
+                        charge(&mut self.agg_cache, &mut self.classes[target], |c| {
+                            c.admit(blob.clone())
+                        });
+                        holder_cls.push(target);
+                    }
+                    cur_off += take;
+                    need -= take;
+                    if s2 + take == e {
+                        cur_seg += 1;
+                        cur_off = 0;
+                    }
+                }
+                for &(_, (_, m)) in &arrivals {
+                    v_pushes += m;
+                    layer_inflight += m;
+                }
+                v_hwm = v_hwm.max(layer_inflight);
+                sched.push_batch(arrivals);
+                served += wave;
+            }
+
+            // second pass: singletons whose copy arrived while they
+            // were down re-pull once they rejoin
+            for (when, ci) in resend {
+                if self.classes[ci].dead {
+                    continue;
+                }
+                let node = self.classes[ci].members.first().expect("class non-empty");
+                let mut when = when;
+                loop {
+                    let Some(up) = ctx.faults.node_next_up(node, when) else {
+                        self.classes[ci].dead = true;
+                        break;
+                    };
+                    let src_live = holder_cls.iter().any(|&h| {
+                        let c = &self.classes[h];
+                        c.members.len() > 1
+                            || !ctx
+                                .faults
+                                .node_down_at(c.members.first().expect("class non-empty"), up)
+                    });
+                    let arrival = if src_live {
+                        intra_bytes += blob.bytes;
+                        up + hop
+                    } else {
+                        match ctx.wan(registry, id, blob.bytes, up) {
+                            Some(done) => done,
+                            None => {
+                                self.classes[ci].dead = true;
+                                break;
+                            }
+                        }
+                    };
+                    if ctx.faults.node_down_at(node, arrival) {
+                        ctx.acc.retried_bytes += blob.bytes;
+                        ctx.acc.retries += 1;
+                        when = arrival;
+                        continue;
+                    }
+                    sched.push(arrival, (ci, 1));
+                    v_pushes += 1;
+                    layer_inflight += 1;
+                    v_hwm = v_hwm.max(layer_inflight);
+                    charge(&mut self.agg_cache, &mut self.classes[ci], |c| {
+                        c.admit(blob.clone())
+                    });
+                    holder_cls.push(ci);
+                    break;
+                }
+            }
+
+            // drain this layer's class completions in time order
+            while let Some((ready, (ci, _m))) = sched.pop() {
+                self.classes[ci].ready = self.classes[ci].ready.max(ready);
+            }
+        }
+        let class_queue = sched.stats();
+        self.class_events = class_queue.pushes;
+        self.peak_classes = self.classes.len();
+
+        // local per-layer verify/mount, then one representative
+        // container per surviving in-scope class
+        let check = self.config.per_layer_check * image.layers.len() as u64;
+        self.containers.clear();
+        let mut finish = t0;
+        let mut started = 0usize;
+        for ci in 0..self.classes.len() {
+            let in_scope = {
+                let c = &self.classes[ci];
+                !c.dead && c.members.first().is_some_and(|f| scope.contains(&f))
+            };
+            if !in_scope {
+                continue;
+            }
+            let m = self.classes[ci].members.len();
+            let done = self.classes[ci].ready + check;
+            finish = finish.max(done);
+            let mut c = Container::create(self.next_container_id, image.id.clone(), done);
+            // ids stay node-dense so engines allocate the same space
+            self.next_container_id += m as u64;
+            c.start(done).expect("fresh container starts");
+            self.containers.push(c);
+            started += m;
+        }
+        let makespan = finish.since(t0);
+        self.clock = finish;
+
+        let shard_utilisation = registry.shard_utilisation(&busy_before, makespan);
+
+        let newly_failed = self.failed_count() - dead_before;
+        let mut fault = faults.stats_over(t0, finish);
+        fault.retries = ctx.acc.retries;
+        fault.failovers = ctx.acc.failovers;
+        fault.transfers_dropped = ctx.acc.transfers_dropped;
+        fault.permanent_failures = newly_failed as u64;
+
+        // reconverged classes collapse back before the next wave
+        self.remerge();
+
+        let mut queue = class_queue;
+        queue.pushes = v_pushes;
+        queue.pops = v_pushes;
+        queue.depth = 0;
+        queue.depth_hwm = v_hwm as usize;
+
+        Ok(FleetReport {
+            reference: reference.to_string(),
+            nodes: scope.len(),
+            layers_total: image.layers.len(),
+            unique_layers: unique.len(),
+            wan_transfers: ctx.acc.wan_transfers,
+            wan_bytes: ctx.acc.wan_bytes,
+            intra_bytes,
+            retried_bytes: ctx.acc.retried_bytes,
+            retries: ctx.acc.retries,
+            failovers: ctx.acc.failovers,
+            permanently_failed: newly_failed,
+            started_at: t0,
+            makespan,
+            cache: self.agg_cache.since(&stats_before),
+            shard_utilisation,
+            containers_started: started,
+            fault,
+            queue,
+        })
+    }
+}
+
+/// Engine dispatch: the collapsed [`ClassFleet`] where its symmetry
+/// argument applies (peer fan-out), the per-node reference [`Fleet`]
+/// otherwise — one `match` instead of every scenario re-deciding.
+#[derive(Debug)]
+pub enum DeployEngine {
+    /// The O(nodes × layers) per-node reference implementation.
+    PerNode(Fleet),
+    /// The O(classes × layers) collapsed implementation.
+    Collapsed(ClassFleet),
+}
+
+impl DeployEngine {
+    /// `collapsed = true` selects [`ClassFleet`] when the config
+    /// allows it ([`FanOut::Peer`]); [`FanOut::Direct`] — inherently
+    /// O(nodes) — and `collapsed = false` run the per-node reference.
+    pub fn new(config: FleetConfig, collapsed: bool) -> Self {
+        match config.fan_out {
+            FanOut::Peer { .. } if collapsed => DeployEngine::Collapsed(ClassFleet::new(config)),
+            _ => DeployEngine::PerNode(Fleet::new(config)),
+        }
+    }
+
+    /// See [`Fleet::deploy`] / [`ClassFleet::deploy`].
+    pub fn deploy(
+        &mut self,
+        registry: &mut ShardedRegistry,
+        reference: &str,
+    ) -> Result<FleetReport, PullError> {
+        match self {
+            DeployEngine::PerNode(f) => f.deploy(registry, reference),
+            DeployEngine::Collapsed(f) => f.deploy(registry, reference),
+        }
+    }
+
+    /// See [`Fleet::deploy_with_faults`] /
+    /// [`ClassFleet::deploy_with_faults`].
+    pub fn deploy_with_faults(
+        &mut self,
+        registry: &mut ShardedRegistry,
+        reference: &str,
+        scope: Range<usize>,
+        faults: &FaultSchedule,
+        policy: &RetryPolicy,
+        rng: &mut SimRng,
+    ) -> Result<FleetReport, PullError> {
+        match self {
+            DeployEngine::PerNode(f) => {
+                f.deploy_with_faults(registry, reference, scope, faults, policy, rng)
+            }
+            DeployEngine::Collapsed(f) => {
+                f.deploy_with_faults(registry, reference, scope, faults, policy, rng)
+            }
+        }
+    }
+
+    /// The engine's virtual clock.
+    pub fn now(&self) -> VirtualTime {
+        match self {
+            DeployEngine::PerNode(f) => f.now(),
+            DeployEngine::Collapsed(f) => f.now(),
+        }
+    }
+
+    /// Peak class count over the latest wave (`None` for the per-node
+    /// engine, which has no classes).
+    pub fn peak_classes(&self) -> Option<usize> {
+        match self {
+            DeployEngine::PerNode(_) => None,
+            DeployEngine::Collapsed(f) => Some(f.peak_classes()),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1772,5 +2805,234 @@ mod tests {
             .unwrap();
         assert_eq!(warm.total_bytes(), 0);
         assert_eq!(warm.cache.evictions, 0);
+    }
+
+    // --- node-class collapsing ---
+
+    /// The golden-diff contract: the collapsed engine renders
+    /// byte-identically and matches every semantic field; only the
+    /// queue *geometry* (buckets/width/resizes) may differ, because
+    /// the collapsed calendar holds class events, not node events.
+    fn assert_equivalent(per_node: &FleetReport, collapsed: &FleetReport) {
+        assert_eq!(per_node.render(), collapsed.render(), "renders must be byte-identical");
+        let mut norm = collapsed.clone();
+        norm.queue.buckets = per_node.queue.buckets;
+        norm.queue.occupied_buckets = per_node.queue.occupied_buckets;
+        norm.queue.bucket_width_ns = per_node.queue.bucket_width_ns;
+        norm.queue.resizes = per_node.queue.resizes;
+        norm.queue.sparse_jumps = per_node.queue.sparse_jumps;
+        assert_eq!(per_node, &norm, "semantic fields must match exactly");
+    }
+
+    #[test]
+    fn node_set_algebra_round_trips() {
+        let mut s = NodeSet::from_range(0..10);
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.first(), Some(0));
+        assert!(s.contains(9) && !s.contains(10));
+        // remove splits a run in two
+        assert!(s.remove(4));
+        assert!(!s.remove(4));
+        assert_eq!(s.runs(), &[(0, 4), (5, 10)]);
+        assert_eq!(s.len(), 9);
+        // subtract carves across runs
+        let mut t = s.clone();
+        t.subtract(&NodeSet::from_range(2..7));
+        assert_eq!(t.runs(), &[(0, 2), (7, 10)]);
+        // union coalesces back (multiplicity sums preserved)
+        let mut u = t.clone();
+        let mut carved = s.clone();
+        carved.subtract(&t);
+        u.union(&carved);
+        assert_eq!(u, s, "subtract + union round-trips");
+        assert_eq!(u.len(), t.len() + carved.len());
+        // adjacent runs coalesce into one
+        let mut a = NodeSet::from_range(0..4);
+        a.union(&NodeSet::from_range(4..8));
+        assert_eq!(a.runs(), &[(0, 8)]);
+        // split_below cuts at the boundary
+        let mut rest = NodeSet::from_range(0..8);
+        let below = rest.split_below(3);
+        assert_eq!(below.runs(), &[(0, 3)]);
+        assert_eq!(rest.runs(), &[(3, 8)]);
+        assert_eq!(below.iter().collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn collapsed_cold_deploy_matches_per_node_render() {
+        let text = "FROM ubuntu:16.04\nRUN echo x";
+        let (mut reg_a, _, _) = registry_with("a:1", text);
+        let (mut reg_b, _, _) = registry_with("a:1", text);
+        let n = 64;
+        let mut per_node = Fleet::new(FleetConfig::hpc(n));
+        let mut collapsed = ClassFleet::new(FleetConfig::hpc(n));
+        let cold_a = per_node.deploy(&mut reg_a, "a:1").unwrap();
+        let cold_b = collapsed.deploy(&mut reg_b, "a:1").unwrap();
+        assert_equivalent(&cold_a, &cold_b);
+        // the fault-free campaign reconverges into one class
+        assert_eq!(collapsed.class_count(), 1, "cohorts re-merge after the wave");
+        assert!(collapsed.peak_classes() < n, "never one class per node");
+        assert!(
+            collapsed.class_events() < cold_a.queue.pushes,
+            "class events ({}) undercut node events ({})",
+            collapsed.class_events(),
+            cold_a.queue.pushes
+        );
+        // warm re-deploys stay equivalent (and free)
+        let warm_a = per_node.deploy(&mut reg_a, "a:1").unwrap();
+        let warm_b = collapsed.deploy(&mut reg_b, "a:1").unwrap();
+        assert_equivalent(&warm_a, &warm_b);
+        assert_eq!(warm_b.total_bytes(), 0);
+    }
+
+    #[test]
+    fn collapsed_faulted_deploy_matches_per_node() {
+        let text = "FROM ubuntu:16.04\nRUN echo x\nRUN echo y";
+        let (mut reg_a, _, _) = registry_with("a:1", text);
+        let (mut reg_b, _, _) = registry_with("a:1", text);
+        let n = 48;
+        let rejoin = VirtualTime(400_000_000);
+        let schedule = FaultSchedule::from_events(vec![
+            (VirtualTime::ZERO, Fault::NodeCrash { node: 3 }),
+            (rejoin, Fault::NodeRejoin { node: 3 }),
+            (VirtualTime::ZERO, Fault::NodeCrash { node: 17 }), // permanent
+            (
+                VirtualTime::ZERO,
+                Fault::TransferDrop {
+                    until: VirtualTime(150_000),
+                },
+            ),
+            (
+                VirtualTime::ZERO,
+                Fault::CacheEvictStorm {
+                    node: 9,
+                    bytes: u64::MAX,
+                },
+            ),
+        ]);
+        let mut per_node = Fleet::new(FleetConfig::hpc(n));
+        let mut collapsed = ClassFleet::new(FleetConfig::hpc(n));
+        let mut rng_a = SimRng::new(7, "chaos");
+        let mut rng_b = SimRng::new(7, "chaos");
+        let rep_a = per_node
+            .deploy_with_faults(&mut reg_a, "a:1", 0..n, &schedule, &RetryPolicy::hpc(), &mut rng_a)
+            .unwrap();
+        let rep_b = collapsed
+            .deploy_with_faults(&mut reg_b, "a:1", 0..n, &schedule, &RetryPolicy::hpc(), &mut rng_b)
+            .unwrap();
+        assert_equivalent(&rep_a, &rep_b);
+        assert_eq!(rep_b.permanently_failed, 1, "node 17 never rejoins");
+        // conservation over multiplicities
+        assert_eq!(
+            rep_b.total_bytes(),
+            rep_b.cache.bytes_inserted + rep_b.retried_bytes
+        );
+        // both rng streams advanced identically
+        assert_eq!(
+            rng_a.uniform(0.0, 1.0).to_bits(),
+            rng_b.uniform(0.0, 1.0).to_bits()
+        );
+        // a second, fault-free wave stays equivalent (per-wave state —
+        // dead nodes, caches, storm marks — carried over identically)
+        let none = FaultSchedule::none();
+        let warm_a = per_node
+            .deploy_with_faults(&mut reg_a, "a:1", 0..n, &none, &RetryPolicy::hpc(), &mut rng_a)
+            .unwrap();
+        let warm_b = collapsed
+            .deploy_with_faults(&mut reg_b, "a:1", 0..n, &none, &RetryPolicy::hpc(), &mut rng_b)
+            .unwrap();
+        assert_equivalent(&warm_a, &warm_b);
+    }
+
+    #[test]
+    fn collapsed_scoped_deploy_matches_per_node() {
+        let text = "FROM alpine:3.4\nRUN echo z";
+        let (mut reg_a, _, _) = registry_with("a:1", text);
+        let (mut reg_b, _, _) = registry_with("a:1", text);
+        let n = 32;
+        let none = FaultSchedule::none();
+        let mut per_node = Fleet::new(FleetConfig::hpc(n));
+        let mut collapsed = ClassFleet::new(FleetConfig::hpc(n));
+        let mut rng_a = SimRng::new(13, "canary");
+        let mut rng_b = SimRng::new(13, "canary");
+        // canary ring first, then the rest — scope boundaries split
+        // classes and the fleet-wide holders serve the second ring
+        let ring_a = per_node
+            .deploy_with_faults(&mut reg_a, "a:1", 0..4, &none, &RetryPolicy::none(), &mut rng_a)
+            .unwrap();
+        let ring_b = collapsed
+            .deploy_with_faults(&mut reg_b, "a:1", 0..4, &none, &RetryPolicy::none(), &mut rng_b)
+            .unwrap();
+        assert_equivalent(&ring_a, &ring_b);
+        let rest_a = per_node
+            .deploy_with_faults(&mut reg_a, "a:1", 4..n, &none, &RetryPolicy::none(), &mut rng_a)
+            .unwrap();
+        let rest_b = collapsed
+            .deploy_with_faults(&mut reg_b, "a:1", 4..n, &none, &RetryPolicy::none(), &mut rng_b)
+            .unwrap();
+        assert_equivalent(&rest_a, &rest_b);
+        assert_eq!(rest_b.wan_bytes, 0, "the ring already seeded the fleet");
+    }
+
+    #[test]
+    fn collapsed_deploy_is_o_classes_at_scale() {
+        let (mut sharded, bytes, layers) = registry_with("a:1", "FROM ubuntu:16.04\nRUN echo x");
+        let n = 65_536;
+        let mut fleet = ClassFleet::new(FleetConfig::hpc(n));
+        let cold = fleet.deploy(&mut sharded, "a:1").unwrap();
+        assert_eq!(cold.containers_started, n);
+        assert_eq!(cold.wan_bytes, bytes);
+        assert_eq!(cold.intra_bytes, bytes * (n as u64 - 1));
+        // the per-node engine would schedule n × layers = 131 072
+        // events; the collapsed engine schedules one per class chunk
+        // per wave — orders of magnitude fewer
+        let node_events = (n * layers) as u64;
+        assert_eq!(cold.queue.pushes, node_events, "report stays node-equivalent");
+        assert!(
+            fleet.class_events() < node_events / 100,
+            "O(classes) events: {} vs {}",
+            fleet.class_events(),
+            node_events
+        );
+        assert!(
+            fleet.peak_classes() < 128,
+            "peak classes stay near waves x layers: {}",
+            fleet.peak_classes()
+        );
+        assert_eq!(fleet.class_count(), 1, "fault-free fleet reconverges");
+    }
+
+    #[test]
+    #[should_panic(expected = "peer fan-out only")]
+    fn class_fleet_rejects_direct_fan_out() {
+        let cfg = FleetConfig {
+            fan_out: FanOut::Direct,
+            ..FleetConfig::hpc(8)
+        };
+        let _ = ClassFleet::new(cfg);
+    }
+
+    #[test]
+    fn deploy_engine_dispatches_and_falls_back() {
+        let direct = FleetConfig {
+            fan_out: FanOut::Direct,
+            ..FleetConfig::hpc(8)
+        };
+        assert!(matches!(
+            DeployEngine::new(direct, true),
+            DeployEngine::PerNode(_)
+        ));
+        assert!(matches!(
+            DeployEngine::new(FleetConfig::hpc(8), false),
+            DeployEngine::PerNode(_)
+        ));
+        let mut engine = DeployEngine::new(FleetConfig::hpc(8), true);
+        assert!(matches!(engine, DeployEngine::Collapsed(_)));
+        assert_eq!(engine.peak_classes(), Some(1));
+        let (mut sharded, bytes, _) = registry_with("a:1", "FROM ubuntu:16.04\nRUN echo x");
+        let report = engine.deploy(&mut sharded, "a:1").unwrap();
+        assert_eq!(report.wan_bytes, bytes);
+        assert_eq!(report.containers_started, 8);
+        assert!(engine.now() > VirtualTime::ZERO);
     }
 }

@@ -61,7 +61,8 @@ pub use buildfile::{Buildfile, Directive, Stage};
 pub use builder::{BuildGraph, BuildReport, Builder};
 pub use cache::{CacheStats, LayerCache};
 pub use distribute::{
-    FanOut, Fleet, FleetConfig, FleetReport, RetryPolicy, ShardAttempt, ShardedRegistry,
+    ClassFleet, DeployEngine, FanOut, Fleet, FleetConfig, FleetReport, NodeClass, NodeSet,
+    RetryPolicy, ShardAttempt, ShardedRegistry,
 };
 pub use image::{Image, ImageId, Layer, LayerId};
 pub use lifecycle::{Container, ContainerState};

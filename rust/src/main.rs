@@ -22,7 +22,7 @@ use harbor::fem::exec::Exec;
 use harbor::mpi::AbiResolver;
 use harbor::platform::Platform;
 use harbor::runtime::{calibrate, CalibrationTable, Engine};
-use harbor::util::cli::Args;
+use harbor::util::cli::{parse_count, Args};
 use harbor::util::json::Value;
 use harbor::workload::{run_poisson_app, AppConfig};
 
@@ -52,9 +52,10 @@ SCENARIOS (harbor bench <scenario>; `harbor bench --list` prints the
 live registry — the same table lives in EXPERIMENTS.md):
   fig1-scale  the Fig 1 workflow's deployment phase (§3.4: build ->
               push -> pull everywhere) at fleet scale: one image pulled
-              onto 64..16384 nodes through 4 registry shards, with
+              onto 64..1,048,576 nodes through 4 registry shards, with
               node-local layer caches and Trow-style peer fan-out;
-              reports cold-pull vs warm re-deploy makespan
+              reports cold-pull vs warm re-deploy makespan (node-class
+              collapsed engine; --per-rank = per-node reference)
   fig2        Fig 2 (§4) — workstation benchmarks (Poisson LU/AMG, I/O,
               elasticity) across native / Docker / rkt / VirtualBox
   fig3        Fig 3 (§4) — C++ Poisson solver on Edison, 24..192 ranks:
@@ -244,7 +245,8 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
         .opt(
             "nodes",
             "comma-separated fleet sizes (fig1-scale, chaos-canary), workers (build-farm) \
-             or registry shards (registry-storm)",
+             or registry shards (registry-storm); binary suffixes accepted \
+             (64k = 65536, 1m = 1048576)",
             None,
         )
         .opt("jobs", "matrix workers; 0 = available parallelism (bit-identical)", Some("0"))
@@ -331,10 +333,25 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
         }
         if let Some(nodes) = p.get("nodes") {
             if takes_nodes(figure) {
-                cfg.nodes = nodes
+                // fleet-shaped scenarios run the collapsed engine, so
+                // they take million-node rows; the shard/worker-shaped
+                // ones stay per-entity and keep a tight ceiling
+                let ceiling: usize = match figure.as_str() {
+                    "fig1-scale" | "chaos-canary" => 1 << 20,
+                    _ => 1024, // build-farm workers, registry-storm shards
+                };
+                let parsed = nodes
                     .split(',')
-                    .map(|s| s.trim().parse::<usize>())
-                    .collect::<Result<_, _>>()?;
+                    .map(|s| parse_count(s.trim()))
+                    .collect::<Result<Vec<_>, _>>()?;
+                for &n in &parsed {
+                    anyhow::ensure!(
+                        n <= ceiling,
+                        "--nodes {n} exceeds the {figure} ceiling of {ceiling} \
+                         (suffixes: 64k = 65536, 1m = 1048576)"
+                    );
+                }
+                cfg.nodes = parsed;
             }
         }
         let figs = coordinator.run(&cfg)?;

@@ -28,7 +28,7 @@ use anyhow::Result;
 use crate::bench::{Figure, Row};
 use crate::config::ExperimentConfig;
 use crate::container::{
-    Builder, Buildfile, Fleet, FleetConfig, FleetReport, LayerStore, Registry, RetryPolicy,
+    Builder, Buildfile, DeployEngine, FleetConfig, FleetReport, LayerStore, Registry, RetryPolicy,
     ShardedRegistry,
 };
 use crate::coordinator::FENICS_BUILDFILE;
@@ -46,7 +46,8 @@ pub const V1_REFERENCE: &str = "quay.io/fenicsproject/stable:2016.1.0r1";
 pub const V2_REFERENCE: &str = "quay.io/fenicsproject/stable:2016.1.0r2";
 
 /// Fault intensities the matrix sweeps (`0.0` = the fault-free
-/// control cell, pinned bit-identical to [`Fleet::deploy`]).
+/// control cell, pinned bit-identical to
+/// [`Fleet::deploy`](crate::container::Fleet::deploy)).
 pub const INTENSITIES: [f64; 3] = [0.0, 0.4, 0.8];
 
 /// Virtual window (from the upgrade start) the fault schedule is
@@ -166,7 +167,9 @@ impl Scenario for ChaosCanary {
     fn run_cell(&self, ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult> {
         let c: &ChaosCell = cell.payload()?;
         let mut registry = canary_registry()?;
-        let mut fleet = Fleet::new(FleetConfig::hpc(c.nodes));
+        // batched (the default) rides the collapsed node-class engine;
+        // --per-rank forces the per-node reference walk
+        let mut fleet = DeployEngine::new(FleetConfig::hpc(c.nodes), ctx.cfg.batched);
 
         // the fleet runs r1 before the chaos starts (fault-free warmup)
         let baseline = fleet.deploy(&mut registry, V1_REFERENCE)?;

@@ -11,9 +11,10 @@ use anyhow::Result;
 
 use crate::bench::{Figure, Row};
 use crate::config::ExperimentConfig;
-use crate::container::{Fleet, FleetConfig};
+use crate::container::{DeployEngine, FleetConfig};
 use crate::coordinator::fleet_registry;
 use crate::metrics::Stats;
+use crate::util::human;
 
 use super::{Cell, CellResult, Scenario, SimContext};
 
@@ -35,9 +36,10 @@ impl Scenario for Fig1Scale {
     }
 
     fn describe(&self) -> &'static str {
-        "Fig 1 workflow (§3.4) at fleet scale — one image pulled onto 64-16384 \
-         nodes through 4 registry shards with node-local caches and peer \
-         fan-out; cold pull vs warm re-deploy makespan"
+        "Fig 1 workflow (§3.4) at fleet scale — one image pulled onto 64 to \
+         1,048,576 nodes through 4 registry shards with node-local caches and \
+         peer fan-out; cold pull vs warm re-deploy makespan (node-class \
+         collapsed engine; --per-rank forces the per-node reference)"
     }
 
     fn cells(&self, cfg: &ExperimentConfig) -> Result<Vec<Cell>> {
@@ -53,14 +55,22 @@ impl Scenario for Fig1Scale {
         Ok(cfg
             .nodes
             .iter()
-            .map(|&nodes| Cell::new(format!("fig1-scale {nodes} nodes"), FleetCell { nodes }))
+            .map(|&nodes| {
+                Cell::new(
+                    format!("fig1-scale {} nodes", human::thousands(nodes as u64)),
+                    FleetCell { nodes },
+                )
+            })
             .collect())
     }
 
-    fn run_cell(&self, _ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult> {
+    fn run_cell(&self, ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult> {
         let c: &FleetCell = cell.payload()?;
         let mut sharded = fleet_registry(REFERENCE)?;
-        let mut fleet = Fleet::new(FleetConfig::hpc(c.nodes));
+        // batched (the default) = the collapsed node-class engine;
+        // --per-rank opts into the per-node reference walk (feasible
+        // up to the 16k rows, used by the CI golden-diff gate)
+        let mut fleet = DeployEngine::new(FleetConfig::hpc(c.nodes), ctx.cfg.batched);
         let cold = fleet.deploy(&mut sharded, REFERENCE)?;
         let warm = fleet.deploy(&mut sharded, REFERENCE)?;
         // breakdown keys carry a structural "cold:"/"warm:" tag so
@@ -96,6 +106,7 @@ impl Scenario for Fig1Scale {
         let mut worst_ratio = 0.0f64;
         for r in &rows {
             let nodes = ctx.cfg.nodes[r.cell];
+            let label = format!("{} nodes", human::thousands(nodes as u64));
             let (cold_s, warm_s) = (r.values[0], r.values[1]);
             worst_ratio = worst_ratio.max(warm_s / cold_s);
             let part = |prefix: &str| -> Vec<(String, f64)> {
@@ -105,12 +116,11 @@ impl Scenario for Fig1Scale {
                     .collect()
             };
             cold_fig.push(
-                Row::new(format!("{nodes} nodes"), Stats::from_samples(vec![cold_s]))
+                Row::new(label.clone(), Stats::from_samples(vec![cold_s]))
                     .with_breakdown(part("cold:")),
             );
             warm_fig.push(
-                Row::new(format!("{nodes} nodes"), Stats::from_samples(vec![warm_s]))
-                    .with_breakdown(part("warm:")),
+                Row::new(label, Stats::from_samples(vec![warm_s])).with_breakdown(part("warm:")),
             );
         }
         cold_fig.note(

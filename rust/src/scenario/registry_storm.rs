@@ -34,7 +34,10 @@ use crate::container::{
     ShardedRegistry, TransferKind,
 };
 use crate::coordinator::FENICS_BUILDFILE;
-use crate::des::{is_stationary, warmup_trim, LatencyHistogram, SimRng, VirtualTime};
+use crate::des::{
+    is_stationary, warmup_trim, Duration, FaultConfig, FaultSchedule, LatencyHistogram, SimRng,
+    VirtualTime,
+};
 use crate::metrics::Stats;
 
 use super::{Cell, CellResult, Scenario, SimContext};
@@ -78,16 +81,30 @@ fn bounded_pareto_mean() -> f64 {
 /// The open-loop registry-storm scenario.
 pub struct RegistryStorm;
 
-/// One (shard count × offered load) cell.
+/// Fault intensity of the one chaos cell the matrix appends: shard
+/// outages and WAN drop windows striking the storm mid-flight.
+pub const STORM_CHAOS_INTENSITY: f64 = 0.4;
+
+/// One (shard count × offered load × fault intensity) cell.  The
+/// sweep cells run fault-free (`intensity = 0.0`); one extra cell
+/// replays the near-knee load under a seeded fault schedule.
 #[derive(Debug, Clone, Copy)]
 struct StormCell {
     shards: usize,
     load: f64,
+    intensity: f64,
 }
 
 impl StormCell {
     fn label(&self) -> String {
-        format!("{} shard(s), load {:.2}x", self.shards, self.load)
+        if self.intensity > 0.0 {
+            format!(
+                "{} shard(s), load {:.2}x, chaos {:.1}",
+                self.shards, self.load, self.intensity
+            )
+        } else {
+            format!("{} shard(s), load {:.2}x", self.shards, self.load)
+        }
     }
 }
 
@@ -135,13 +152,25 @@ impl Scenario for RegistryStorm {
             "registry-storm shard counts must be >= 1 (got {:?})",
             cfg.nodes
         );
-        let mut cells = Vec::with_capacity(cfg.nodes.len() * LOADS.len());
+        let mut cells = Vec::with_capacity(cfg.nodes.len() * LOADS.len() + 1);
         for &shards in &cfg.nodes {
             for &load in &LOADS {
-                let c = StormCell { shards, load };
+                let c = StormCell {
+                    shards,
+                    load,
+                    intensity: 0.0,
+                };
                 cells.push(Cell::new(c.label(), c));
             }
         }
+        // one chaos cell: the near-knee load on the widest frontend,
+        // with shard outages and drop windows striking mid-storm
+        let chaos = StormCell {
+            shards: *cfg.nodes.iter().max().expect("nodes checked non-empty"),
+            load: 0.9,
+            intensity: STORM_CHAOS_INTENSITY,
+        };
+        cells.push(Cell::new(chaos.label(), chaos));
         Ok(cells)
     }
 
@@ -197,6 +226,20 @@ impl Scenario for RegistryStorm {
         }
         let offered_span = at.as_secs_f64();
 
+        // the chaos cell replays the storm under a seeded schedule of
+        // shard outages and WAN drop windows (no fleet here, so the
+        // node-level fault classes stay empty)
+        if c.intensity > 0.0 {
+            let fault_cfg = FaultConfig::new(
+                0,
+                c.shards,
+                Duration::from_secs_f64(offered_span),
+                c.intensity,
+            );
+            let mut chaos_rng = SimRng::new(cell.id.seed(ctx.cfg.seed), "storm-chaos");
+            fd.apply_faults(FaultSchedule::generate(&fault_cfg, &mut chaos_rng));
+        }
+
         let mut jitter = SimRng::new(cell.id.seed(ctx.cfg.seed), "storm-jitter");
         let (sessions, report) = fd.run(requests, Some(&mut jitter));
 
@@ -212,7 +255,10 @@ impl Scenario for RegistryStorm {
             report.delivered + report.failed == report.sessions,
             "every session must deliver or fail"
         );
-        anyhow::ensure!(report.failed == 0, "no faults here: nothing may fail");
+        if c.intensity == 0.0 {
+            anyhow::ensure!(report.failed == 0, "no faults here: nothing may fail");
+        }
+        let availability = report.delivered as f64 / report.sessions.max(1) as f64;
 
         // steady-state percentiles: warmup-trim the arrival-ordered
         // pull latencies, then bin them with the des-level estimator
@@ -276,6 +322,8 @@ impl Scenario for RegistryStorm {
             ("sat:wire MB".into(), report.wire_bytes as f64 / 1e6),
             ("sat:chunks".into(), report.chunks as f64),
             ("sat:queue hwm".into(), report.queue.depth_hwm as f64),
+            ("sat:failed sessions".into(), report.failed as f64),
+            ("sat:availability".into(), availability),
         ]))
     }
 
@@ -356,8 +404,10 @@ mod tests {
     fn cells_sweep_shards_times_loads() {
         let cfg = ExperimentConfig::paper_default("registry-storm").unwrap();
         let cells = RegistryStorm.cells(&cfg).unwrap();
-        assert_eq!(cells.len(), cfg.nodes.len() * LOADS.len());
+        assert_eq!(cells.len(), cfg.nodes.len() * LOADS.len() + 1);
         assert!(cells[0].label.contains("load 0.25x"));
+        let chaos = cells.last().unwrap();
+        assert!(chaos.label.contains("chaos 0.4"), "{}", chaos.label);
         assert!(RegistryStorm
             .cells(&ExperimentConfig {
                 nodes: vec![],
@@ -372,7 +422,7 @@ mod tests {
             .is_err());
     }
 
-    fn run(shards: usize, load: f64, index: usize) -> CellResult {
+    fn run_chaotic(shards: usize, load: f64, intensity: f64, index: usize) -> CellResult {
         let cfg = ExperimentConfig {
             nodes: vec![shards],
             ..ExperimentConfig::paper_default("registry-storm").unwrap()
@@ -382,12 +432,44 @@ mod tests {
             cfg: &cfg,
             table: &table,
         };
-        let mut cell = Cell::new("test", StormCell { shards, load });
+        let mut cell = Cell::new(
+            "test",
+            StormCell {
+                shards,
+                load,
+                intensity,
+            },
+        );
         cell.id = CellId {
             scenario: "registry-storm",
             index,
         };
         RegistryStorm.run_cell(&ctx, &cell).unwrap()
+    }
+
+    fn run(shards: usize, load: f64, index: usize) -> CellResult {
+        run_chaotic(shards, load, 0.0, index)
+    }
+
+    #[test]
+    fn chaos_cell_reports_availability_and_stays_deterministic() {
+        let a = run_chaotic(4, 0.9, STORM_CHAOS_INTENSITY, 8);
+        let b = run_chaotic(4, 0.9, STORM_CHAOS_INTENSITY, 8);
+        assert_eq!(a.values, b.values);
+        assert_eq!(a.breakdown, b.breakdown);
+        let stat = |r: &CellResult, key: &str| {
+            r.breakdown
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|&(_, v)| v)
+                .unwrap()
+        };
+        let avail = stat(&a, "sat:availability");
+        assert!((0.0..=1.0).contains(&avail), "availability {avail}");
+        // the fault-free sweep cells always sit at exactly 1.0
+        let calm = run(4, 0.9, 2);
+        assert_eq!(stat(&calm, "sat:availability"), 1.0);
+        assert_eq!(stat(&calm, "sat:failed sessions"), 0.0);
     }
 
     #[test]

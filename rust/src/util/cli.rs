@@ -45,6 +45,31 @@ impl std::fmt::Display for UsageError {
 }
 impl std::error::Error for UsageError {}
 
+/// Parse a human-scale count: plain digits (`4096`) or a binary
+/// `k`/`m` suffix (`64k` = 64 × 1024 = 65 536, `1m` = 1 048 576).
+///
+/// Used by `--nodes` so million-node fleets read as `1m` instead of a
+/// seven-digit literal. The multipliers are powers of 1024 — node
+/// counts in the sweeps are powers of two, so `64k`/`256k`/`1m` land
+/// exactly on the 65 536 / 262 144 / 1 048 576 figure rows.
+pub fn parse_count(raw: &str) -> Result<usize, UsageError> {
+    let s = raw.trim();
+    let bad = || {
+        UsageError(format!(
+            "cannot parse `{raw}` as a count: accepted forms are plain integers \
+             (`4096`), `<n>k` = n x 1024 (`64k` = 65536) and `<n>m` = n x 1048576 \
+             (`1m` = 1048576)"
+        ))
+    };
+    let (digits, mult): (&str, usize) = match s.char_indices().next_back() {
+        Some((i, 'k')) | Some((i, 'K')) => (&s[..i], 1024),
+        Some((i, 'm')) | Some((i, 'M')) => (&s[..i], 1024 * 1024),
+        _ => (s, 1),
+    };
+    let base: usize = digits.parse().map_err(|_| bad())?;
+    base.checked_mul(mult).ok_or_else(bad)
+}
+
 impl Args {
     /// A spec for `command` with a one-line description.
     pub fn new(command: &'static str, about: &'static str) -> Self {
@@ -304,6 +329,27 @@ mod tests {
         let with = spec.parse(&raw(&["fig2"])).unwrap();
         assert_eq!(with.pos_opt(0), Some("fig2"));
         assert!(spec.usage().contains("[figure]"));
+    }
+
+    #[test]
+    fn parse_count_accepts_plain_integers_and_binary_suffixes() {
+        assert_eq!(parse_count("4096").unwrap(), 4096);
+        assert_eq!(parse_count(" 512 ").unwrap(), 512);
+        assert_eq!(parse_count("64k").unwrap(), 65_536);
+        assert_eq!(parse_count("256K").unwrap(), 262_144);
+        assert_eq!(parse_count("1m").unwrap(), 1_048_576);
+        assert_eq!(parse_count("4M").unwrap(), 4_194_304);
+    }
+
+    #[test]
+    fn parse_count_rejects_garbage_with_the_accepted_forms() {
+        for bad in ["", "k", "1.5k", "64kb", "ten", "-4", "1e6"] {
+            let e = parse_count(bad).unwrap_err();
+            assert!(e.0.contains("accepted forms"), "error for `{bad}`: {e}");
+            assert!(e.0.contains("64k"), "error lists examples: {e}");
+        }
+        // overflow on the multiply is an error, not a wrap
+        assert!(parse_count("99999999999999999m").is_err());
     }
 
     #[test]

@@ -1,0 +1,69 @@
+//! Human-scale number formatting for reports and figure tables.
+//!
+//! Million-node fleets overflow the `{:.1} MB` / bare-integer habits
+//! the small sweeps grew up with: a 1 048 576-node cold deploy moves
+//! tens of TiB of intra-cluster traffic and its row label needs digit
+//! grouping to stay aligned next to "64 nodes". Byte totals keep the
+//! historical decimal-MB rendering below 1 GiB (so small-fleet renders
+//! stay byte-identical across the per-node and collapsed engines) and
+//! switch to binary GiB/TiB above it.
+
+/// `1048576` → `"1,048,576"`. Groups digits in threes with commas.
+pub fn thousands(n: u64) -> String {
+    let digits = n.to_string();
+    let mut out = String::with_capacity(digits.len() + digits.len() / 3);
+    let lead = digits.len() % 3;
+    for (i, c) in digits.chars().enumerate() {
+        if i != 0 && (i + 3 - lead) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+const GIB: u64 = 1 << 30;
+const TIB: u64 = 1 << 40;
+
+/// Byte totals for reports: decimal MB below 1 GiB (the historical
+/// rendering, kept bit-for-bit), binary GiB/TiB above.
+pub fn bytes(b: u64) -> String {
+    if b >= TIB {
+        format!("{:.2} TiB", b as f64 / TIB as f64)
+    } else if b >= GIB {
+        format!("{:.2} GiB", b as f64 / GIB as f64)
+    } else {
+        format!("{:.1} MB", b as f64 / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thousands_groups_digits_in_threes() {
+        assert_eq!(thousands(0), "0");
+        assert_eq!(thousands(32), "32");
+        assert_eq!(thousands(512), "512");
+        assert_eq!(thousands(4096), "4,096");
+        assert_eq!(thousands(16384), "16,384");
+        assert_eq!(thousands(1_048_576), "1,048,576");
+        assert_eq!(thousands(1_234_567_890), "1,234,567,890");
+    }
+
+    #[test]
+    fn bytes_keep_the_legacy_mb_rendering_below_a_gib() {
+        assert_eq!(bytes(0), "0.0 MB");
+        assert_eq!(bytes(91_500_000), "91.5 MB");
+        assert_eq!(bytes(GIB - 1), format!("{:.1} MB", (GIB - 1) as f64 / 1e6));
+    }
+
+    #[test]
+    fn bytes_switch_to_binary_units_above_a_gib() {
+        assert_eq!(bytes(GIB), "1.00 GiB");
+        assert_eq!(bytes(3 * GIB / 2), "1.50 GiB");
+        assert_eq!(bytes(TIB), "1.00 TiB");
+        assert_eq!(bytes(45 * TIB / 10), "4.50 TiB");
+    }
+}

@@ -12,8 +12,11 @@
 //! * [`cli`] — a tiny declarative flag parser (replaces `clap`).
 //! * [`proptest`] — a miniature property-testing loop with failure-case
 //!   reporting (replaces `proptest` for our invariant tests).
+//! * [`human`] — digit grouping and byte humanization for reports
+//!   (replaces `humansize`/`num-format`).
 
 pub mod cli;
+pub mod human;
 pub mod json;
 pub mod proptest;
 pub mod rng;

@@ -1,0 +1,205 @@
+//! Integration: the node-class collapsed engine is *exact*, not an
+//! approximation.
+//!
+//! `ClassFleet` prices a deploy in O(classes × layers) events; the
+//! contract is that its [`FleetReport`]s render byte-identically to
+//! the per-node [`Fleet`] walk — same makespans, same WAN/intra/retry
+//! accounting, same fault reactions — for any seed, fleet size and
+//! fault intensity. This suite sweeps that product space, checks the
+//! byte-conservation invariant over class multiplicities, pins the
+//! coordinator-level equivalence across `--jobs`, and round-trips the
+//! `NodeSet` run algebra the class splitter is built on.
+
+use harbor::bench::Figure;
+use harbor::config::ExperimentConfig;
+use harbor::container::{ClassFleet, Fleet, FleetConfig, FleetReport, NodeSet, RetryPolicy};
+use harbor::coordinator::{fleet_registry, Coordinator};
+use harbor::des::{Duration, FaultConfig, FaultSchedule, SimRng};
+use harbor::runtime::CalibrationTable;
+
+/// Image reference every deployment pulls (same as fig1-scale).
+const REFERENCE: &str = "quay.io/fenicsproject/stable:2016.1.0r1";
+
+/// Fault-window horizon for generated schedules.
+const HORIZON: Duration = Duration(60_000_000_000);
+
+fn conserved(report: &FleetReport) {
+    assert_eq!(
+        report.total_bytes(),
+        report.cache.bytes_inserted + report.retried_bytes,
+        "byte conservation violated in `{}`: {} moved != {} admitted + {} re-sent",
+        report.reference,
+        report.total_bytes(),
+        report.cache.bytes_inserted,
+        report.retried_bytes,
+    );
+}
+
+/// Run the same seeded faulted deploy through both engines and demand
+/// byte-identical renders plus matching semantic counters.
+fn check_equivalent(nodes: usize, seed: u64, intensity: f64) {
+    let config = FleetConfig::hpc(nodes);
+    let policy = RetryPolicy::hpc();
+    let fault_cfg = FaultConfig::new(nodes, 4, HORIZON, intensity);
+
+    let run = |collapsed: bool| -> (FleetReport, f64) {
+        let mut sharded = fleet_registry(REFERENCE).expect("fleet registry");
+        let schedule =
+            FaultSchedule::generate(&fault_cfg, &mut SimRng::new(seed, "fault-schedule"));
+        sharded.apply_faults(&schedule);
+        let mut jitter = SimRng::new(seed, "retry-jitter");
+        let report = if collapsed {
+            let mut fleet = ClassFleet::new(config.clone());
+            let r = fleet
+                .deploy_with_faults(
+                    &mut sharded,
+                    REFERENCE,
+                    0..nodes,
+                    &schedule,
+                    &policy,
+                    &mut jitter,
+                )
+                .expect("collapsed deploy");
+            // class multiplicities must still tile the fleet exactly,
+            // dead or alive, after the post-deploy re-merge
+            let covered: u64 = fleet.classes().iter().map(|c| c.multiplicity()).sum();
+            assert_eq!(covered, nodes as u64, "classes must partition the fleet");
+            r
+        } else {
+            let mut fleet = Fleet::new(config.clone());
+            fleet
+                .deploy_with_faults(
+                    &mut sharded,
+                    REFERENCE,
+                    0..nodes,
+                    &schedule,
+                    &policy,
+                    &mut jitter,
+                )
+                .expect("per-node deploy")
+        };
+        // one post-deploy draw: equal bits proves both engines consumed
+        // the jitter stream the same number of times
+        (report, jitter.uniform(0.0, 1.0))
+    };
+
+    let (reference, ref_draw) = run(false);
+    let (collapsed, col_draw) = run(true);
+
+    let ctx = format!("nodes={nodes} seed={seed} intensity={intensity}");
+    assert_eq!(
+        collapsed.render(),
+        reference.render(),
+        "collapsed render diverged ({ctx})"
+    );
+    assert_eq!(collapsed.makespan, reference.makespan, "makespan ({ctx})");
+    assert_eq!(collapsed.wan_bytes, reference.wan_bytes, "wan bytes ({ctx})");
+    assert_eq!(collapsed.intra_bytes, reference.intra_bytes, "intra bytes ({ctx})");
+    assert_eq!(collapsed.retried_bytes, reference.retried_bytes, "retried bytes ({ctx})");
+    assert_eq!(collapsed.retries, reference.retries, "retries ({ctx})");
+    assert_eq!(collapsed.failovers, reference.failovers, "failovers ({ctx})");
+    assert_eq!(
+        collapsed.permanently_failed, reference.permanently_failed,
+        "permanently failed ({ctx})"
+    );
+    assert_eq!(collapsed.cache, reference.cache, "cache accounting ({ctx})");
+    assert_eq!(collapsed.fault, reference.fault, "fault accounting ({ctx})");
+    assert_eq!(
+        collapsed.queue.pushes, reference.queue.pushes,
+        "node-equivalent event count ({ctx})"
+    );
+    assert_eq!(
+        collapsed.queue.depth_hwm, reference.queue.depth_hwm,
+        "queue high-water mark ({ctx})"
+    );
+    assert_eq!(
+        col_draw.to_bits(),
+        ref_draw.to_bits(),
+        "jitter stream position diverged ({ctx})"
+    );
+    conserved(&collapsed);
+    conserved(&reference);
+}
+
+#[test]
+fn collapsed_matches_per_node_across_seeds_at_512() {
+    for seed in 0..8u64 {
+        for &intensity in &[0.0, 0.4, 1.0] {
+            check_equivalent(512, seed, intensity);
+        }
+    }
+}
+
+#[test]
+fn collapsed_matches_per_node_across_seeds_at_4096() {
+    // the bigger size exercises deeper fan-out waves (more chunk
+    // classes) with the same seeds; 8 seeds x 3 intensities
+    for seed in 0..8u64 {
+        for &intensity in &[0.0, 0.4, 1.0] {
+            check_equivalent(4096, seed, intensity);
+        }
+    }
+}
+
+fn render_all(figs: &[Figure]) -> String {
+    figs.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+}
+
+#[test]
+fn fig1_scale_renders_identically_across_engines_and_jobs() {
+    // the coordinator-level golden diff the CI gate runs at 4096 nodes:
+    // collapsed (default) and per-rank reference, serial and --jobs 4,
+    // must all render the same figures
+    let mut cfg = ExperimentConfig::paper_default("fig1-scale").expect("registered default");
+    cfg.nodes = vec![64, 512];
+    let mut renders = Vec::new();
+    for batched in [true, false] {
+        for jobs in [1, 4] {
+            cfg.batched = batched;
+            let figs = Coordinator::with_table(CalibrationTable::builtin_fallback())
+                .with_jobs(jobs)
+                .run(&cfg)
+                .expect("fig1-scale runs");
+            renders.push((batched, jobs, render_all(&figs)));
+        }
+    }
+    let (_, _, golden) = &renders[0];
+    for (batched, jobs, render) in &renders {
+        assert_eq!(
+            render, golden,
+            "fig1-scale render diverged at batched={batched} jobs={jobs}"
+        );
+    }
+}
+
+#[test]
+fn node_set_split_and_merge_round_trips() {
+    // the splitter's run algebra: carving singletons and ranges out of
+    // a fleet-wide run and unioning the pieces back must preserve the
+    // multiplicity sum and reproduce the original set exactly
+    let full = NodeSet::from_range(0..1000);
+    let mut rest = full.clone();
+    let low = rest.split_below(137);
+    assert_eq!(low.len() + rest.len(), full.len());
+    assert!(low.iter().all(|n| n < 137));
+    assert!(rest.iter().all(|n| n >= 137));
+
+    let mut pieces = vec![low, rest];
+    for node in [0, 136, 137, 499, 998, 999] {
+        let from = pieces
+            .iter_mut()
+            .find(|p| p.contains(node))
+            .expect("node still covered");
+        assert!(from.remove(node));
+        pieces.push(NodeSet::singleton(node));
+    }
+    assert_eq!(pieces.iter().map(NodeSet::len).sum::<usize>(), full.len());
+
+    let mut merged = NodeSet::from_range(0..0);
+    for p in &pieces {
+        merged.union(p);
+    }
+    assert_eq!(merged, full, "split pieces must union back to the fleet");
+    merged.subtract(&full);
+    assert!(merged.is_empty());
+}
