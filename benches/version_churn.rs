@@ -1,0 +1,138 @@
+//! Version-churn bench: the package-resolver tier end to end,
+//! recorded into `BENCH_micro.json`.
+//!
+//! Recorded keys:
+//!
+//! * `resolve_fenics_ns_per_iter` — one cold resolution of the §2.2
+//!   FEniCS stack manifest (17 packages) against the builtin index;
+//! * `resolve_churn_invalidation_pct` — share of cold layers rebuilt
+//!   after a numpy patch bump across the 4-arch variant matrix (the
+//!   widest frontier in the stack);
+//! * `resolve_frontier_ok` — 1.0 iff the stages the builder actually
+//!   rebuilt equal the lockfile diff's predicted frontier, with the
+//!   terminal stage re-linked (the invalidation contract);
+//! * `resolve_determinism_ok` — 1.0 iff `version-churn` and
+//!   `dep-storm` render byte-identically under `--jobs 1` and
+//!   `--jobs 4` (the CI determinism gate fails on anything else);
+//! * `resolve_wall_s` — wall time of both serial regenerations (the
+//!   §Perf trajectory).
+
+mod common;
+
+use std::time::Instant;
+
+use harbor::bench::{Figure, Row};
+use harbor::config::ExperimentConfig;
+use harbor::container::resolve::{
+    emit_stack_buildfile, fenics_index, fenics_manifest, rebuilt_packages, resolve,
+    terminal_rebuilt, Lockfile, STACK_BASE,
+};
+use harbor::container::{Builder, Buildfile, LayerStore};
+use harbor::coordinator::Coordinator;
+use harbor::scenario::build_farm::ARCHES;
+
+use common::{record_bench, time_rec};
+
+fn render_all(figs: &[Figure]) -> String {
+    figs.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+}
+
+fn row<'a>(fig: &'a Figure, needle: &str) -> &'a Row {
+    fig.rows
+        .iter()
+        .find(|r| r.label.contains(needle))
+        .unwrap_or_else(|| panic!("no row matching `{needle}` in `{}`", fig.title))
+}
+
+fn part(r: &Row, key: &str) -> f64 {
+    r.breakdown
+        .iter()
+        .find(|(k, _)| k == key)
+        .map(|&(_, v)| v)
+        .unwrap_or_else(|| panic!("row `{}` carries no `{key}` breakdown", r.label))
+}
+
+/// Direct frontier check against the builder (the same contract the
+/// scenario cells assert, measured here without the scenario harness):
+/// bump numpy, rebuild every arch variant on a fork of the cold cache,
+/// and compare the rebuilt package stages to the lockfile prediction.
+fn frontier_check() -> f64 {
+    let mut index = fenics_index();
+    let manifest = fenics_manifest();
+    let lock1 = Lockfile::from_resolution(&resolve(&manifest, &index, 0).unwrap(), &index);
+    let mut builder = Builder::new();
+    let mut store = LayerStore::new();
+    for arch in ARCHES {
+        let text = emit_stack_buildfile(&manifest, &lock1, STACK_BASE, Some(arch)).unwrap();
+        let bf = Buildfile::parse(&text).unwrap();
+        builder.build(&bf, &format!("bench/{arch}:cold"), &mut store).unwrap();
+    }
+    index.bump_patch("numpy").expect("numpy is indexed");
+    let lock2 = Lockfile::from_resolution(&resolve(&manifest, &index, 0).unwrap(), &index);
+    let frontier = lock1.diff(&lock2).rebuild_frontier(&lock2);
+    for arch in ARCHES {
+        let text = emit_stack_buildfile(&manifest, &lock2, STACK_BASE, Some(arch)).unwrap();
+        let bf = Buildfile::parse(&text).unwrap();
+        let mut fork = builder.fork();
+        let warm = fork.build(&bf, &format!("bench/{arch}:warm"), &mut store).unwrap();
+        if rebuilt_packages(&bf, &warm) != frontier || !terminal_rebuilt(&warm) {
+            eprintln!("  WARNING: {arch} rebuilt set diverged from the predicted frontier");
+            return 0.0;
+        }
+    }
+    1.0
+}
+
+fn main() {
+    let mut rec: Vec<(String, f64)> = Vec::new();
+    println!("== version churn: resolver micro + scenario regeneration ==");
+
+    let index = fenics_index();
+    let manifest = fenics_manifest();
+    time_rec(&mut rec, "resolve_fenics", "resolve fenics-stack (17 pkgs)", || {
+        let res = resolve(&manifest, &index, 0).unwrap();
+        std::hint::black_box(&res);
+    });
+
+    let frontier_ok = frontier_check();
+
+    let churn_cfg = ExperimentConfig::paper_default("version-churn").expect("registered");
+    let storm_cfg = ExperimentConfig::paper_default("dep-storm").expect("registered");
+    let t0 = Instant::now();
+    let churn = Coordinator::new().with_jobs(1).run(&churn_cfg).expect("version-churn runs");
+    let storm = Coordinator::new().with_jobs(1).run(&storm_cfg).expect("dep-storm runs");
+    let wall = t0.elapsed().as_secs_f64();
+    for f in churn.iter().chain(storm.iter()) {
+        println!("{}", f.render());
+    }
+
+    // determinism gate: both scenarios again on 4 workers must render
+    // byte-for-byte the same figures
+    let churn4 = Coordinator::new().with_jobs(4).run(&churn_cfg).expect("version-churn (4 jobs)");
+    let storm4 = Coordinator::new().with_jobs(4).run(&storm_cfg).expect("dep-storm (4 jobs)");
+    let deterministic =
+        render_all(&churn) == render_all(&churn4) && render_all(&storm) == render_all(&storm4);
+    if !deterministic {
+        eprintln!("  WARNING: --jobs 1 and --jobs 4 renders differ");
+    }
+
+    let churn_fig = churn.first().expect("version-churn assembles a figure");
+    let numpy = row(churn_fig, "bump numpy");
+    let invalidation = part(numpy, "invalidation %");
+    println!(
+        "  bump numpy: {:.1}% of cold layers rebuilt over {} stage frontier in {:.1} virtual s; \
+         computed in {wall:.3} s (frontier ok: {frontier_ok}, deterministic: {deterministic})",
+        invalidation,
+        part(numpy, "frontier stages"),
+        numpy.stats.mean(),
+    );
+
+    rec.push(("resolve_churn_invalidation_pct".into(), invalidation));
+    rec.push(("resolve_frontier_ok".into(), frontier_ok));
+    rec.push((
+        "resolve_determinism_ok".into(),
+        if deterministic { 1.0 } else { 0.0 },
+    ));
+    rec.push(("resolve_wall_s".into(), wall));
+    record_bench(&rec);
+}

@@ -17,8 +17,8 @@ use crate::util::json::{self, Value};
 pub struct ExperimentConfig {
     /// Which scenario: "fig2", "fig3", "fig4", "fig5a", "fig5b",
     /// "fig1-scale", "mixed-fleet", "build-farm", "chaos-canary",
-    /// "registry-storm" (the live list is the scenario registry:
-    /// `harbor bench --list`).
+    /// "registry-storm", "version-churn", "dep-storm" (the live list
+    /// is the scenario registry: `harbor bench --list`).
     pub figure: String,
     /// Repetitions per bar (the paper: 5 on the workstation, 3 on Edison).
     pub reps: usize,
@@ -33,8 +33,9 @@ pub struct ExperimentConfig {
     pub batched: bool,
     /// Fleet node counts (the `fig1-scale` deployment and
     /// `chaos-canary` upgrade sweeps), CI worker counts (the
-    /// `build-farm` sweep), or registry shard counts (the
-    /// `registry-storm` sweep).
+    /// `build-farm` sweep), registry shard counts (the
+    /// `registry-storm` sweep), or manifest counts (the `dep-storm`
+    /// sweep).
     pub nodes: Vec<usize>,
 }
 
@@ -63,6 +64,11 @@ pub const CHAOS_FLEET: usize = 16384;
 /// front door multiplexes the open-loop session storm onto (`nodes`
 /// carries these; the offered-load sweep is built into the scenario).
 pub const STORM_SHARDS: [usize; 3] = [2, 4, 8];
+
+/// The `dep-storm` manifest counts: how many randomly drawn root
+/// manifests the cold-resolve storm pushes through the resolver and
+/// the CI farm (`nodes` carries these).
+pub const STORM_MANIFESTS: [usize; 3] = [16, 64, 256];
 
 impl ExperimentConfig {
     /// The paper's setup for each figure.
@@ -170,6 +176,32 @@ impl ExperimentConfig {
                 sizes: vec![],
                 batched: true,
                 nodes: STORM_SHARDS.to_vec(),
+            },
+            // the version-churn sweep: cells are the fixed bump
+            // targets (see `scenario::version_churn::BUMP_TARGETS`),
+            // resolution is seed-invariant and the builder is
+            // deterministic, so one rep suffices and no dimension
+            // sweeps
+            "version-churn" => ExperimentConfig {
+                figure: "version-churn".into(),
+                reps: 1,
+                seed: 42,
+                ranks: vec![],
+                sizes: vec![],
+                batched: true,
+                nodes: vec![],
+            },
+            // the cold-resolve storm: `nodes` carries the manifest
+            // counts; manifest draws are seeded from `CellId::seed`,
+            // so one rep suffices
+            "dep-storm" => ExperimentConfig {
+                figure: "dep-storm".into(),
+                reps: 1,
+                seed: 42,
+                ranks: vec![],
+                sizes: vec![],
+                batched: true,
+                nodes: STORM_MANIFESTS.to_vec(),
             },
             // no name enumeration here: the live list belongs to the
             // scenario registry (`harbor bench --list`), and a second
@@ -434,6 +466,21 @@ mod tests {
         assert!(cfg.ranks.is_empty() && cfg.sizes.is_empty());
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn version_churn_and_dep_storm_defaults() {
+        let churn = ExperimentConfig::paper_default("version-churn").unwrap();
+        assert_eq!(churn.reps, 1);
+        assert!(churn.ranks.is_empty() && churn.sizes.is_empty() && churn.nodes.is_empty());
+        let back = ExperimentConfig::from_json(&churn.to_json()).unwrap();
+        assert_eq!(churn, back);
+        let storm = ExperimentConfig::paper_default("dep-storm").unwrap();
+        assert_eq!(storm.nodes, STORM_MANIFESTS.to_vec());
+        assert_eq!(storm.reps, 1);
+        assert!(storm.ranks.is_empty() && storm.sizes.is_empty());
+        let back = ExperimentConfig::from_json(&storm.to_json()).unwrap();
+        assert_eq!(storm, back);
     }
 
     #[test]

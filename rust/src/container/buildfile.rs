@@ -333,6 +333,21 @@ impl Buildfile {
         Ok(Buildfile { directives })
     }
 
+    /// The canonical text form: every directive's
+    /// [`canonical`](Directive::canonical) spelling, one per line, with
+    /// a trailing newline.  A lossless round-trip
+    /// (`parse(canonical()) == self`), and a fixed point for text that
+    /// is already canonical — which the resolver's emitted buildfiles
+    /// are, so goldens diff byte-for-byte (`tests/resolver.rs`).
+    pub fn canonical(&self) -> String {
+        let mut out = String::new();
+        for d in &self.directives {
+            out.push_str(&d.canonical());
+            out.push('\n');
+        }
+        out
+    }
+
     /// The base reference of the first `FROM`.
     pub fn base(&self) -> &str {
         match &self.directives[0] {
@@ -481,6 +496,22 @@ RUN apt-get -y update && \
             }
         );
         assert_eq!(bf.directives[2], Directive::ArchOpt);
+    }
+
+    #[test]
+    fn canonical_is_a_lossless_round_trip_and_fixed_point() {
+        let text = "FROM ubuntu:16.04 AS build\nRUN make -j app\nENV A=1\n\
+                    FROM ubuntu:16.04\nCOPY --from=build /out /app\nARCH_OPT\nENTRYPOINT /app\n";
+        let bf = Buildfile::parse(text).unwrap();
+        let canon = bf.canonical();
+        assert_eq!(Buildfile::parse(&canon).unwrap(), bf);
+        // `text` is already in canonical spelling, so canonical() is a
+        // byte-level fixed point on it
+        assert_eq!(canon, text);
+        // messy spacing/continuations normalise to the same canonical
+        let messy = "FROM   ubuntu:16.04   AS build\nRUN make \\\n    -j app\nENV A=1\n\
+                     FROM ubuntu:16.04\nCOPY --from=build   /out   /app\nARCH_OPT\nENTRYPOINT /app\n";
+        assert_eq!(Buildfile::parse(messy).unwrap().canonical(), canon);
     }
 
     #[test]

@@ -36,6 +36,11 @@
 //!   byte-range progress, retry-after-disconnect resume — multiplexed
 //!   onto the sharded frontends and interruptible per session by a
 //!   fault schedule.
+//! * [`resolve`] — the package-resolver tier: semver ranges resolved
+//!   against a published package index into a byte-stable lockfile,
+//!   emitted as multi-stage buildfiles the builder consumes unchanged;
+//!   a lockfile diff predicts exactly which stages a version bump
+//!   rebuilds.
 //! * [`lifecycle`] — the container state machine (Created → Running →
 //!   Exited) a runtime drives.
 //! * [`session`] — the `fenicsproject` wrapper script (§3.2): notebook /
@@ -53,6 +58,7 @@ pub mod image;
 pub mod lifecycle;
 pub mod protocol;
 pub mod registry;
+pub mod resolve;
 pub mod runtime;
 pub mod session;
 pub mod store;
@@ -70,6 +76,9 @@ pub use protocol::{
     FrontDoor, FrontDoorReport, SessionId, SessionRequest, TransferKind, TransferSession,
 };
 pub use registry::{PullReport, Registry};
+pub use resolve::{
+    Lockfile, Manifest, PackageCache, PackageIndex, Range, Resolution, ResolveError, Version,
+};
 pub use runtime::{ContainerRuntime, RuntimeKind};
 pub use session::{SessionKind, SessionManager};
 pub use store::LayerStore;

@@ -186,6 +186,21 @@ impl TransferSession {
     pub fn attempts(&self) -> u32 {
         self.attempt
     }
+
+    /// Fraction of the requested payload that reached the client, in
+    /// `[0, 1]`.  Edge-cache hits serve every byte without touching
+    /// the WAN, so they score 1.0 despite `acked_bytes == 0`; a
+    /// session abandoned mid-transfer scores the fraction it acked
+    /// before the retry budget ran out.
+    pub fn availability(&self) -> f64 {
+        if self.cache_hit {
+            1.0
+        } else if self.total_bytes == 0 {
+            if self.delivered { 1.0 } else { 0.0 }
+        } else {
+            self.acked_bytes as f64 / self.total_bytes as f64
+        }
+    }
 }
 
 /// Front-door event: everything a run schedules through its calendar.
@@ -240,6 +255,12 @@ pub struct FrontDoorReport {
     /// Delivered-session latency percentiles (deterministic log-binned
     /// estimator — see [`LatencyHistogram`]).
     pub latency: LatencyHistogram,
+    /// Per-session availability percentiles: every session (delivered
+    /// or abandoned) records [`TransferSession::availability`] scaled
+    /// to nanoseconds (1.0 → 1 s), so `quantile(0.01)` reads the
+    /// worst-percentile fraction of payload clients actually received
+    /// under faults.
+    pub availability: LatencyHistogram,
 }
 
 impl FrontDoorReport {
@@ -480,6 +501,9 @@ impl FrontDoor {
         for s in &sessions {
             report.sessions += 1;
             end = end.max(s.done_at);
+            report
+                .availability
+                .record(Duration::from_nanos((s.availability() * 1e9).round() as u64));
             if s.delivered {
                 report.delivered += 1;
                 report.latency.record(s.latency());

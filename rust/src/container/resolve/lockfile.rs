@@ -1,0 +1,315 @@
+//! Canonical, byte-stable lockfiles — and the diffs that predict
+//! rebuild frontiers.
+//!
+//! A [`Lockfile`] records the pinned outcome of one resolution: every
+//! package at its exact version, with its (pinned) dependency edges.
+//! [`Lockfile::canonical`] is byte-stable — packages and dependency
+//! lines in name order, one spelling per line, trailing newline — so
+//! two lockfiles are semantically equal iff their bytes are equal, and
+//! golden files diff cleanly.
+//!
+//! The payoff is [`Lockfile::diff`] + [`LockDiff::rebuild_frontier`]:
+//! because the emitted buildfile gives every package a stage whose
+//! layer keys commit to its own pinned version and its dependencies'
+//! stage digests (see the `resolve` module docs), the set of stages a
+//! bump invalidates is exactly *changed ∪ added, closed under
+//! dependents* — computable from two lockfiles alone, before any build
+//! runs.  `version-churn` asserts that prediction equals the stages the
+//! builder actually rebuilds.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use super::manifest::PackageIndex;
+use super::resolver::Resolution;
+use super::semver::Version;
+
+/// The header line every lockfile starts with.
+const HEADER: &str = "# harbor-lock v1";
+
+/// One pinned package: its version and its pinned dependency edges.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LockedPackage {
+    /// The pinned version.
+    pub version: Version,
+    /// Pinned `(dependency, version)` edges, name-ordered.
+    pub deps: Vec<(String, Version)>,
+}
+
+/// A resolved, pinned package set (name-ordered).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Lockfile {
+    /// Every pinned package, keyed by name.
+    pub packages: BTreeMap<String, LockedPackage>,
+}
+
+/// A malformed lockfile line.
+#[derive(Debug, Clone)]
+pub struct LockParseError {
+    /// 1-based line number.
+    pub line: usize,
+    /// What was wrong.
+    pub message: String,
+}
+
+impl fmt::Display for LockParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "lockfile line {}: {}", self.line, self.message)
+    }
+}
+impl std::error::Error for LockParseError {}
+
+impl Lockfile {
+    /// Pin a [`Resolution`]: record each package's version and its
+    /// dependency edges at their resolved versions.
+    pub fn from_resolution(res: &Resolution, index: &PackageIndex) -> Self {
+        let mut packages = BTreeMap::new();
+        for (name, &version) in &res.pinned {
+            let mut deps: Vec<(String, Version)> = index
+                .deps(name, version)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|d| res.pinned.get(&d.name).map(|&v| (d.name.clone(), v)))
+                .collect();
+            deps.sort();
+            packages.insert(
+                name.clone(),
+                LockedPackage { version, deps },
+            );
+        }
+        Lockfile { packages }
+    }
+
+    /// The canonical byte form (see the module docs).  Stable under
+    /// `parse` ∘ `canonical`.
+    pub fn canonical(&self) -> String {
+        let mut out = String::from(HEADER);
+        out.push('\n');
+        for (name, p) in &self.packages {
+            out.push_str(&format!("package {} {}\n", name, p.version));
+            for (dep, version) in &p.deps {
+                out.push_str(&format!("  dep {dep} {version}\n"));
+            }
+        }
+        out
+    }
+
+    /// Parse the canonical text form (tolerates comments, blank lines,
+    /// and any indentation).
+    pub fn parse(text: &str) -> Result<Lockfile, LockParseError> {
+        let mut packages: BTreeMap<String, LockedPackage> = BTreeMap::new();
+        let mut current: Option<String> = None;
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fail = |message: String| LockParseError {
+                line: line_no,
+                message,
+            };
+            let words: Vec<&str> = line.split_whitespace().collect();
+            match words.as_slice() {
+                ["package", name, version] => {
+                    let version: Version = version
+                        .parse()
+                        .map_err(|e: super::semver::SemverError| fail(e.to_string()))?;
+                    if packages
+                        .insert(
+                            name.to_string(),
+                            LockedPackage {
+                                version,
+                                deps: Vec::new(),
+                            },
+                        )
+                        .is_some()
+                    {
+                        return Err(fail(format!("duplicate package `{name}`")));
+                    }
+                    current = Some(name.to_string());
+                }
+                ["dep", name, version] => {
+                    let version: Version = version
+                        .parse()
+                        .map_err(|e: super::semver::SemverError| fail(e.to_string()))?;
+                    let owner = current
+                        .as_ref()
+                        .ok_or_else(|| fail("`dep` before any `package`".into()))?;
+                    packages
+                        .get_mut(owner)
+                        .expect("current tracks an inserted package")
+                        .deps
+                        .push((name.to_string(), version));
+                }
+                _ => return Err(fail(format!("unrecognised line `{line}`"))),
+            }
+        }
+        for p in packages.values_mut() {
+            p.deps.sort();
+        }
+        Ok(Lockfile { packages })
+    }
+
+    /// What changed between two lockfiles, by package name.
+    pub fn diff(&self, new: &Lockfile) -> LockDiff {
+        let old_names: BTreeSet<&String> = self.packages.keys().collect();
+        let new_names: BTreeSet<&String> = new.packages.keys().collect();
+        LockDiff {
+            added: new_names
+                .difference(&old_names)
+                .map(|s| (*s).clone())
+                .collect(),
+            removed: old_names
+                .difference(&new_names)
+                .map(|s| (*s).clone())
+                .collect(),
+            changed: old_names
+                .intersection(&new_names)
+                .filter(|n| self.packages[**n].version != new.packages[**n].version)
+                .map(|s| (*s).clone())
+                .collect(),
+        }
+    }
+}
+
+/// The package-level difference between two lockfiles.  All three
+/// lists are name-sorted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LockDiff {
+    /// Packages only the new lockfile pins.
+    pub added: Vec<String>,
+    /// Packages only the old lockfile pins.
+    pub removed: Vec<String>,
+    /// Packages pinned by both at different versions.
+    pub changed: Vec<String>,
+}
+
+impl LockDiff {
+    /// Whether the two lockfiles pin identical sets.
+    pub fn is_empty(&self) -> bool {
+        self.added.is_empty() && self.removed.is_empty() && self.changed.is_empty()
+    }
+
+    /// The predicted rebuild frontier under `new`: every added or
+    /// changed package, closed under *dependents* in the new lockfile's
+    /// edge set.  This is exactly the set of package stages whose
+    /// cache keys change in the emitted buildfile (stage layers commit
+    /// to the package's own version and to dependency stage digests),
+    /// so the builder must rebuild precisely these stages — the
+    /// equality `version-churn` asserts per cell.
+    pub fn rebuild_frontier(&self, new: &Lockfile) -> BTreeSet<String> {
+        let mut frontier: BTreeSet<String> = self
+            .added
+            .iter()
+            .chain(self.changed.iter())
+            .cloned()
+            .collect();
+        loop {
+            let grown: Vec<String> = new
+                .packages
+                .iter()
+                .filter(|(name, p)| {
+                    !frontier.contains(*name)
+                        && p.deps.iter().any(|(d, _)| frontier.contains(d))
+                })
+                .map(|(name, _)| name.clone())
+                .collect();
+            if grown.is_empty() {
+                return frontier;
+            }
+            frontier.extend(grown);
+        }
+    }
+}
+
+impl fmt::Display for LockDiff {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "+{} -{} ~{}",
+            self.added.join(","),
+            self.removed.join(","),
+            self.changed.join(",")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lock(entries: &[(&str, &str, &[(&str, &str)])]) -> Lockfile {
+        let mut packages = BTreeMap::new();
+        for (name, version, deps) in entries {
+            let mut deps: Vec<(String, Version)> = deps
+                .iter()
+                .map(|(n, v)| (n.to_string(), v.parse().unwrap()))
+                .collect();
+            deps.sort();
+            packages.insert(
+                name.to_string(),
+                LockedPackage {
+                    version: version.parse().unwrap(),
+                    deps,
+                },
+            );
+        }
+        Lockfile { packages }
+    }
+
+    #[test]
+    fn canonical_parse_round_trip_is_byte_stable() {
+        let l = lock(&[
+            ("numpy", "1.11.1", &[]),
+            ("scipy", "0.17.1", &[("numpy", "1.11.1")]),
+        ]);
+        let text = l.canonical();
+        assert!(text.starts_with("# harbor-lock v1\n"));
+        assert!(text.ends_with('\n'));
+        let back = Lockfile::parse(&text).unwrap();
+        assert_eq!(back, l);
+        assert_eq!(back.canonical(), text);
+    }
+
+    #[test]
+    fn parse_rejects_garbage_and_duplicates() {
+        assert!(Lockfile::parse("package a 1.0.0\npackage a 1.0.0\n").is_err());
+        assert!(Lockfile::parse("dep x 1.0.0\n").is_err());
+        assert!(Lockfile::parse("wat\n").is_err());
+        assert!(Lockfile::parse("package a not-a-version\n").is_err());
+    }
+
+    #[test]
+    fn diff_classifies_added_removed_changed() {
+        let old = lock(&[("a", "1.0.0", &[]), ("b", "1.0.0", &[]), ("c", "1.0.0", &[])]);
+        let new = lock(&[("a", "1.0.1", &[]), ("b", "1.0.0", &[]), ("d", "2.0.0", &[])]);
+        let d = old.diff(&new);
+        assert_eq!(d.added, vec!["d"]);
+        assert_eq!(d.removed, vec!["c"]);
+        assert_eq!(d.changed, vec!["a"]);
+        assert!(!d.is_empty());
+        assert!(old.diff(&old).is_empty());
+    }
+
+    #[test]
+    fn frontier_closes_over_dependents() {
+        // chain: app -> mid -> leaf, plus a bystander
+        let old = lock(&[
+            ("leaf", "1.0.0", &[]),
+            ("mid", "1.0.0", &[("leaf", "1.0.0")]),
+            ("app", "1.0.0", &[("mid", "1.0.0")]),
+            ("bystander", "1.0.0", &[]),
+        ]);
+        let new = lock(&[
+            ("leaf", "1.0.1", &[]),
+            ("mid", "1.0.0", &[("leaf", "1.0.1")]),
+            ("app", "1.0.0", &[("mid", "1.0.0")]),
+            ("bystander", "1.0.0", &[]),
+        ]);
+        let frontier = old.diff(&new).rebuild_frontier(&new);
+        let expect: BTreeSet<String> =
+            ["leaf", "mid", "app"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(frontier, expect);
+    }
+}

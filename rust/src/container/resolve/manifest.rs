@@ -1,0 +1,306 @@
+//! Package manifests and the registry's package index.
+//!
+//! A [`Manifest`] is what a stack author writes: a root package name,
+//! its version, and semver-ranged dependency declarations.  A
+//! [`PackageIndex`] is what the registry knows: every published
+//! `(package, version)` with that version's own dependency ranges.
+//! Both are plain `nanoserde`-style structs with a line-oriented text
+//! form (`parse` / `canonical`) so manifests can be committed as golden
+//! files and diffed byte-for-byte.
+//!
+//! The text form, one declaration per line (`#` comments and blank
+//! lines are ignored):
+//!
+//! ```text
+//! # harbor-manifest v1
+//! package fenics-stack 2016.1.0
+//! dep dolfin ~2016.1.0
+//! dep scipy ^0.17.0
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::semver::{Range, SemverError, Version};
+
+/// One ranged dependency declaration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dependency {
+    /// Depended-on package name.
+    pub name: String,
+    /// Acceptable version interval.
+    pub range: Range,
+}
+
+impl Dependency {
+    /// Construct a dependency, parsing `range` syntax.
+    pub fn new(name: &str, range: &str) -> Result<Self, SemverError> {
+        Ok(Dependency {
+            name: name.to_string(),
+            range: Range::parse(range)?,
+        })
+    }
+}
+
+/// A root package declaration: what the resolver resolves.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// Root package name (names the emitted stack image).
+    pub name: String,
+    /// Root package version.
+    pub version: Version,
+    /// Direct dependencies, in declaration order.
+    pub deps: Vec<Dependency>,
+}
+
+/// A malformed manifest line.
+#[derive(Debug, Clone)]
+pub struct ManifestError {
+    /// 1-based line number of the offending declaration.
+    pub line: usize,
+    /// What was wrong with it.
+    pub message: String,
+}
+
+impl fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "manifest line {}: {}", self.line, self.message)
+    }
+}
+impl std::error::Error for ManifestError {}
+
+impl Manifest {
+    /// A manifest with no dependencies yet.
+    pub fn new(name: &str, version: Version) -> Self {
+        Manifest {
+            name: name.to_string(),
+            version,
+            deps: Vec::new(),
+        }
+    }
+
+    /// Add a dependency declaration (builder-style).
+    pub fn with_dep(mut self, name: &str, range: &str) -> Result<Self, SemverError> {
+        self.deps.push(Dependency::new(name, range)?);
+        Ok(self)
+    }
+
+    /// Parse the line-oriented text form.
+    pub fn parse(text: &str) -> Result<Manifest, ManifestError> {
+        let mut root: Option<(String, Version)> = None;
+        let mut deps = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fail = |message: String| ManifestError {
+                line: line_no,
+                message,
+            };
+            let mut words = line.split_whitespace();
+            match words.next() {
+                Some("package") => {
+                    let name = words
+                        .next()
+                        .ok_or_else(|| fail("`package` needs a name".into()))?;
+                    let version: Version = words
+                        .next()
+                        .ok_or_else(|| fail("`package` needs a version".into()))?
+                        .parse()
+                        .map_err(|e: SemverError| fail(e.to_string()))?;
+                    if root.is_some() {
+                        return Err(fail("second `package` declaration".into()));
+                    }
+                    root = Some((name.to_string(), version));
+                }
+                Some("dep") => {
+                    let name = words
+                        .next()
+                        .ok_or_else(|| fail("`dep` needs a name".into()))?;
+                    let range_text: Vec<&str> = words.collect();
+                    if range_text.is_empty() {
+                        return Err(fail("`dep` needs a range".into()));
+                    }
+                    let range = Range::parse(&range_text.join(" "))
+                        .map_err(|e| fail(e.to_string()))?;
+                    deps.push(Dependency {
+                        name: name.to_string(),
+                        range,
+                    });
+                }
+                Some(other) => {
+                    return Err(fail(format!(
+                        "unknown declaration `{other}` (package|dep)"
+                    )))
+                }
+                None => unreachable!("blank lines were skipped"),
+            }
+        }
+        let (name, version) =
+            root.ok_or(ManifestError {
+                line: 1,
+                message: "missing `package <name> <version>` declaration".into(),
+            })?;
+        Ok(Manifest { name, version, deps })
+    }
+
+    /// The canonical text form: header, the `package` line, then one
+    /// `dep` line per dependency with ranges in their canonical
+    /// interval spelling.  `parse(canonical())` reproduces the manifest
+    /// (ranges compare equal as intervals; sugar is desugared).
+    pub fn canonical(&self) -> String {
+        let mut out = String::from("# harbor-manifest v1\n");
+        out.push_str(&format!("package {} {}\n", self.name, self.version));
+        for d in &self.deps {
+            out.push_str(&format!("dep {} {}\n", d.name, d.range));
+        }
+        out
+    }
+}
+
+/// The registry's view of the package universe: every published
+/// `(name, version)` and that version's dependency ranges.  Ordered
+/// maps throughout, so iteration — and everything resolution derives
+/// from it — is deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct PackageIndex {
+    packages: BTreeMap<String, BTreeMap<Version, Vec<Dependency>>>,
+}
+
+impl PackageIndex {
+    /// An empty index.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish `(name, version)` with its dependency ranges.
+    /// Re-publishing an existing version replaces its declarations.
+    pub fn add(&mut self, name: &str, version: Version, deps: Vec<Dependency>) {
+        self.packages
+            .entry(name.to_string())
+            .or_default()
+            .insert(version, deps);
+    }
+
+    /// Published versions of `name`, ascending (empty if unknown).
+    pub fn versions(&self, name: &str) -> Vec<Version> {
+        self.packages
+            .get(name)
+            .map(|v| v.keys().copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// The newest published version satisfying `range`, if any.
+    pub fn best_match(&self, name: &str, range: &Range) -> Option<Version> {
+        self.packages
+            .get(name)?
+            .keys()
+            .rev()
+            .copied()
+            .find(|&v| range.contains(v))
+    }
+
+    /// The dependency declarations of one published version.
+    pub fn deps(&self, name: &str, version: Version) -> Option<&[Dependency]> {
+        self.packages
+            .get(name)
+            .and_then(|v| v.get(&version))
+            .map(|d| d.as_slice())
+    }
+
+    /// Whether `name` has any published version.
+    pub fn contains(&self, name: &str) -> bool {
+        self.packages.contains_key(name)
+    }
+
+    /// Package names, ascending.
+    pub fn names(&self) -> Vec<&str> {
+        self.packages.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Number of distinct packages.
+    pub fn len(&self) -> usize {
+        self.packages.len()
+    }
+
+    /// Whether the index has no packages.
+    pub fn is_empty(&self) -> bool {
+        self.packages.is_empty()
+    }
+
+    /// Publish a patch bump of `name`'s newest version, cloning its
+    /// dependency declarations, and return the new version.  This is
+    /// the `version-churn` scenario's "one dep bump" primitive: the new
+    /// patch still satisfies every caret/tilde range the old one did.
+    pub fn bump_patch(&mut self, name: &str) -> Option<Version> {
+        let versions = self.packages.get(name)?;
+        let (&newest, deps) = versions.iter().next_back()?;
+        let deps = deps.clone();
+        let bumped = newest.bump_patch();
+        self.add(name, bumped, deps);
+        Some(bumped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(ma: u64, mi: u64, pa: u64) -> Version {
+        Version::new(ma, mi, pa)
+    }
+
+    #[test]
+    fn manifest_parse_and_canonical_round_trip() {
+        let text = "# note\npackage app 1.0.0\ndep numpy ^1.11.0\ndep petsc ~3.7.2\n";
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.name, "app");
+        assert_eq!(m.version, v(1, 0, 0));
+        assert_eq!(m.deps.len(), 2);
+        let back = Manifest::parse(&m.canonical()).unwrap();
+        assert_eq!(m, back);
+        // canonical is a fixed point
+        assert_eq!(back.canonical(), m.canonical());
+    }
+
+    #[test]
+    fn manifest_rejects_malformed_lines() {
+        assert!(Manifest::parse("dep numpy ^1.0.0\n").is_err()); // no package
+        assert!(Manifest::parse("package a 1.0.0\npackage b 1.0.0\n").is_err());
+        assert!(Manifest::parse("package a 1.0.0\ndep numpy\n").is_err());
+        assert!(Manifest::parse("package a 1.0.0\nfrobnicate x\n").is_err());
+        let e = Manifest::parse("package a 1.0.0\ndep numpy ^bad\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn index_best_match_is_newest_satisfying() {
+        let mut idx = PackageIndex::new();
+        idx.add("numpy", v(1, 11, 0), vec![]);
+        idx.add("numpy", v(1, 11, 1), vec![]);
+        idx.add("numpy", v(2, 0, 0), vec![]);
+        let caret = Range::parse("^1.11.0").unwrap();
+        assert_eq!(idx.best_match("numpy", &caret), Some(v(1, 11, 1)));
+        assert_eq!(idx.best_match("numpy", &Range::any()), Some(v(2, 0, 0)));
+        assert_eq!(idx.best_match("scipy", &Range::any()), None);
+        let nothing = Range::parse("^3.0.0").unwrap();
+        assert_eq!(idx.best_match("numpy", &nothing), None);
+    }
+
+    #[test]
+    fn bump_patch_clones_the_newest_deps() {
+        let mut idx = PackageIndex::new();
+        idx.add(
+            "scipy",
+            v(0, 17, 1),
+            vec![Dependency::new("numpy", "^1.11.0").unwrap()],
+        );
+        let bumped = idx.bump_patch("scipy").unwrap();
+        assert_eq!(bumped, v(0, 17, 2));
+        assert_eq!(idx.versions("scipy"), vec![v(0, 17, 1), v(0, 17, 2)]);
+        assert_eq!(idx.deps("scipy", bumped).unwrap().len(), 1);
+        assert!(idx.bump_patch("missing").is_none());
+    }
+}

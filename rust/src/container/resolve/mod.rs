@@ -1,0 +1,345 @@
+//! The package-resolver tier: semver ranges → lockfile → generated
+//! multi-stage buildfiles.
+//!
+//! The paper assembles the FEniCS stack from dozens of versioned
+//! packages (§2.2) but our buildfiles were hand-written, so the build
+//! farm could only replay fixed stacks.  This module closes the gap:
+//!
+//! * [`semver`] — versions, total order, half-open ranges, intersection;
+//! * [`manifest`] — root package declarations and the registry's
+//!   [`PackageIndex`] of published `(package, version, deps)`;
+//! * [`resolver`] — seeded, deterministic resolution to a pinned set
+//!   with a topological build order (conflict/cycle errors carry
+//!   context);
+//! * [`lockfile`] — canonical byte-stable serialisation whose diff
+//!   *predicts* the rebuild frontier;
+//! * [`cache`] — a content-addressed package cache on [`LayerStore`]
+//!   hashing.
+//!
+//! [`emit_stack_buildfile`] renders a lockfile as a multi-stage
+//! buildfile the PR 5 DAG builder consumes unchanged: one stage per
+//! package in topological order (`FROM <first-dep> AS pkg-<name>`,
+//! `COPY --from=` the remaining dependency stages, `RUN pip install
+//! name==version`), then a terminal stage that copies the root
+//! dependencies out and optionally `ARCH_OPT`s an arch-specific build.
+//! Because layer cache keys commit to the parent chain, the canonical
+//! `RUN` text (which embeds the pinned version) and `COPY --from`
+//! source digests, *the set of stages a version bump invalidates equals
+//! the lockfile-diff frontier* — the equality the `version-churn`
+//! scenario asserts per cell and `tests/build_graph.rs` sweeps across
+//! the variant matrix.
+//!
+//! [`LayerStore`]: crate::container::store::LayerStore
+
+pub mod cache;
+pub mod lockfile;
+pub mod manifest;
+pub mod resolver;
+pub mod semver;
+
+pub use cache::PackageCache;
+pub use lockfile::{LockDiff, Lockfile, LockedPackage};
+pub use manifest::{Dependency, Manifest, PackageIndex};
+pub use resolver::{resolve, Resolution, ResolveError};
+pub use semver::{Range, SemverError, Version};
+
+use std::collections::BTreeSet;
+
+use anyhow::Result;
+
+use crate::container::buildfile::Buildfile;
+use crate::container::builder::BuildReport;
+use crate::des::Duration;
+
+/// The stage-name prefix package stages carry in emitted buildfiles
+/// (`pkg-<package>`); the terminal stage is anonymous.
+pub const PKG_STAGE_PREFIX: &str = "pkg-";
+
+/// Render a pinned stack as a multi-stage buildfile (see the module
+/// docs for the shape).  `base` is the catalogue base image every
+/// chain bottoms out in; `arch` adds the per-microarchitecture
+/// `RUN make -j ARCH=<arch>` + `ARCH_OPT` pair to the terminal stage
+/// (the §4.3 variant axis).  The output is in canonical directive
+/// spelling, so it round-trips losslessly through
+/// [`Buildfile::canonical`].
+pub fn emit_stack_buildfile(
+    manifest: &Manifest,
+    lock: &Lockfile,
+    base: &str,
+    arch: Option<&str>,
+) -> Result<String> {
+    let order = lock_topo_order(lock)?;
+    let mut out = String::new();
+    for name in &order {
+        let p = &lock.packages[name];
+        match p.deps.first() {
+            None => out.push_str(&format!("FROM {base} AS {PKG_STAGE_PREFIX}{name}\n")),
+            Some((first, _)) => {
+                out.push_str(&format!(
+                    "FROM {PKG_STAGE_PREFIX}{first} AS {PKG_STAGE_PREFIX}{name}\n"
+                ));
+                for (dep, _) in &p.deps[1..] {
+                    out.push_str(&format!(
+                        "COPY --from={PKG_STAGE_PREFIX}{dep} /opt/pkgs/{dep} /opt/pkgs/{dep}\n"
+                    ));
+                }
+            }
+        }
+        out.push_str(&format!("RUN pip install {name}=={}\n", p.version));
+    }
+    out.push_str(&format!("FROM {base}\n"));
+    let mut roots: Vec<&str> = manifest.deps.iter().map(|d| d.name.as_str()).collect();
+    roots.sort_unstable();
+    roots.dedup();
+    for root in roots {
+        anyhow::ensure!(
+            lock.packages.contains_key(root),
+            "manifest root dependency `{root}` is not pinned by the lockfile"
+        );
+        out.push_str(&format!(
+            "COPY --from={PKG_STAGE_PREFIX}{root} /opt/pkgs/{root} /opt/pkgs/{root}\n"
+        ));
+    }
+    if let Some(arch) = arch {
+        out.push_str(&format!("RUN make -j ARCH={arch} {}\n", manifest.name));
+        out.push_str("ARCH_OPT\n");
+    }
+    out.push_str(&format!("ENTRYPOINT /opt/{}/bin/run\n", manifest.name));
+    Ok(out)
+}
+
+/// Kahn topological order over a lockfile's pinned edge set,
+/// dependencies first, ties broken by name — the same rule the
+/// resolver uses, recomputed here so a parsed lockfile can be emitted
+/// without re-resolving.  Errors on a cyclic lockfile.
+fn lock_topo_order(lock: &Lockfile) -> Result<Vec<String>> {
+    let mut indegree: std::collections::BTreeMap<&String, usize> = std::collections::BTreeMap::new();
+    let mut dependents: std::collections::BTreeMap<&String, Vec<&String>> =
+        std::collections::BTreeMap::new();
+    for (name, p) in &lock.packages {
+        let pinned_deps: Vec<&String> = p
+            .deps
+            .iter()
+            .map(|(d, _)| d)
+            .filter(|d| lock.packages.contains_key(*d))
+            .collect();
+        indegree.insert(name, pinned_deps.len());
+        for d in pinned_deps {
+            dependents.entry(d).or_default().push(name);
+        }
+    }
+    let mut ready: BTreeSet<&String> = indegree
+        .iter()
+        .filter(|(_, &d)| d == 0)
+        .map(|(&n, _)| n)
+        .collect();
+    let mut order = Vec::with_capacity(lock.packages.len());
+    while let Some(&name) = ready.iter().next() {
+        ready.remove(name);
+        order.push(name.clone());
+        for &dep in dependents.get(name).map(|v| v.as_slice()).unwrap_or(&[]) {
+            let d = indegree.get_mut(dep).expect("dependent is a lock package");
+            *d -= 1;
+            if *d == 0 {
+                ready.insert(dep);
+            }
+        }
+    }
+    anyhow::ensure!(
+        order.len() == lock.packages.len(),
+        "lockfile contains a dependency cycle ({} of {} packages orderable)",
+        order.len(),
+        lock.packages.len()
+    );
+    Ok(order)
+}
+
+/// The package stages a build actually rebuilt: stage names with the
+/// [`PKG_STAGE_PREFIX`] stripped whose stage time is non-zero (skipped
+/// and fully-cached stages cost zero).  Compared against
+/// [`LockDiff::rebuild_frontier`] by `version-churn` and
+/// `tests/build_graph.rs`.
+pub fn rebuilt_packages(bf: &Buildfile, report: &BuildReport) -> BTreeSet<String> {
+    bf.stages()
+        .iter()
+        .zip(&report.stage_times)
+        .filter(|(_, &t)| t > Duration::ZERO)
+        .filter_map(|(s, _)| s.name.and_then(|n| n.strip_prefix(PKG_STAGE_PREFIX)))
+        .map(String::from)
+        .collect()
+}
+
+/// Whether a build's terminal (anonymous) stage rebuilt — the lockfile
+/// diff predicts this too: the terminal stage copies from every root
+/// dependency, so it rebuilds iff the frontier is non-empty.
+pub fn terminal_rebuilt(report: &BuildReport) -> bool {
+    report
+        .stage_times
+        .last()
+        .map(|&t| t > Duration::ZERO)
+        .unwrap_or(false)
+}
+
+/// The published package universe behind the paper's §2.2 FEniCS
+/// stack: MPI + linear algebra (openmpi, petsc, slepc and their Python
+/// bindings), the Python scientific tier (numpy, scipy, sympy), the
+/// form-compiler chain (fiat, ufl, dijitso, ffc), build glue (swig,
+/// instant, boost, eigen) and dolfin on top.  Version sets are small
+/// but real enough that caret/tilde ranges have non-trivial choices.
+pub fn fenics_index() -> PackageIndex {
+    let v = Version::new;
+    let dep = |name: &str, range: &str| Dependency::new(name, range).expect("static range parses");
+    let mut idx = PackageIndex::new();
+    idx.add("openmpi", v(1, 10, 2), vec![]);
+    idx.add("openmpi", v(2, 0, 0), vec![]);
+    idx.add("boost", v(1, 61, 0), vec![]);
+    idx.add("eigen", v(3, 2, 8), vec![]);
+    idx.add("eigen", v(3, 2, 9), vec![]);
+    idx.add("swig", v(3, 0, 10), vec![]);
+    idx.add("numpy", v(1, 11, 0), vec![]);
+    idx.add("numpy", v(1, 11, 1), vec![]);
+    idx.add("sympy", v(1, 0, 0), vec![]);
+    idx.add("scipy", v(0, 17, 0), vec![dep("numpy", "^1.11.0")]);
+    idx.add("scipy", v(0, 17, 1), vec![dep("numpy", "^1.11.0")]);
+    idx.add("petsc", v(3, 7, 2), vec![dep("openmpi", "^1.10.0")]);
+    idx.add("petsc", v(3, 7, 3), vec![dep("openmpi", "^1.10.0")]);
+    idx.add("slepc", v(3, 7, 1), vec![dep("petsc", "~3.7.2")]);
+    idx.add(
+        "petsc4py",
+        v(3, 7, 0),
+        vec![dep("numpy", "^1.11.0"), dep("petsc", "~3.7.0")],
+    );
+    idx.add(
+        "slepc4py",
+        v(3, 7, 0),
+        vec![dep("petsc4py", "~3.7.0"), dep("slepc", "~3.7.0")],
+    );
+    idx.add("fiat", v(2016, 1, 0), vec![dep("sympy", "^1.0.0")]);
+    idx.add("ufl", v(2016, 1, 0), vec![dep("numpy", "^1.11.0")]);
+    idx.add("dijitso", v(2016, 1, 0), vec![dep("numpy", "^1.11.0")]);
+    idx.add("instant", v(2016, 1, 0), vec![dep("swig", "^3.0.0")]);
+    idx.add(
+        "ffc",
+        v(2016, 1, 0),
+        vec![
+            dep("dijitso", "~2016.1.0"),
+            dep("fiat", "~2016.1.0"),
+            dep("ufl", "~2016.1.0"),
+        ],
+    );
+    idx.add(
+        "dolfin",
+        v(2016, 1, 0),
+        vec![
+            dep("boost", "^1.61.0"),
+            dep("eigen", "^3.2.8"),
+            dep("ffc", "~2016.1.0"),
+            dep("instant", "~2016.1.0"),
+            dep("openmpi", "^1.10.0"),
+            dep("petsc4py", "~3.7.0"),
+            dep("slepc4py", "~3.7.0"),
+            dep("swig", "^3.0.0"),
+        ],
+    );
+    idx
+}
+
+/// The paper's §2.2 stack as a root manifest: dolfin (which pulls the
+/// whole FEM chain) plus scipy for the Python driver scripts.
+pub fn fenics_manifest() -> Manifest {
+    Manifest::new("fenics-stack", Version::new(2016, 1, 0))
+        .with_dep("dolfin", "~2016.1.0")
+        .expect("static range parses")
+        .with_dep("scipy", "^0.17.0")
+        .expect("static range parses")
+}
+
+/// The base image emitted FEniCS stacks build on (§2.2 builds on
+/// Ubuntu 16.04).
+pub const STACK_BASE: &str = "ubuntu:16.04";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::builder::Builder;
+    use crate::container::store::LayerStore;
+
+    #[test]
+    fn fenics_stack_resolves_and_emits_a_valid_buildfile() {
+        let index = fenics_index();
+        let manifest = fenics_manifest();
+        let res = resolve(&manifest, &index, 42).unwrap();
+        assert_eq!(res.pinned.len(), 17);
+        assert_eq!(res.pinned["numpy"], Version::new(1, 11, 1));
+        assert_eq!(res.pinned["petsc"], Version::new(3, 7, 3));
+        assert_eq!(res.pinned["openmpi"], Version::new(1, 10, 2));
+        let lock = Lockfile::from_resolution(&res, &index);
+        let text = emit_stack_buildfile(&manifest, &lock, STACK_BASE, Some("haswell")).unwrap();
+        let bf = Buildfile::parse(&text).expect("emitted buildfile parses");
+        // lossless canonical round-trip: emission is already canonical
+        assert_eq!(bf.canonical(), text);
+        // one stage per package plus the terminal stage
+        assert_eq!(bf.stage_count(), 18);
+    }
+
+    #[test]
+    fn emitted_stack_builds_and_rebuild_matches_frontier() {
+        let mut index = fenics_index();
+        let manifest = fenics_manifest();
+        let res = resolve(&manifest, &index, 1).unwrap();
+        let lock = Lockfile::from_resolution(&res, &index);
+        let text = emit_stack_buildfile(&manifest, &lock, STACK_BASE, None).unwrap();
+        let bf = Buildfile::parse(&text).unwrap();
+        let mut builder = Builder::new();
+        let mut store = LayerStore::new();
+        let cold = builder.build(&bf, "stack:r1", &mut store).unwrap();
+        assert!(cold.layers_built > 0);
+
+        // bump sympy: the frontier is the fiat -> ffc -> dolfin chain
+        index.bump_patch("sympy").unwrap();
+        let res2 = resolve(&manifest, &index, 1).unwrap();
+        let lock2 = Lockfile::from_resolution(&res2, &index);
+        let frontier = lock.diff(&lock2).rebuild_frontier(&lock2);
+        let expect: BTreeSet<String> = ["sympy", "fiat", "ffc", "dolfin"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(frontier, expect);
+
+        let text2 = emit_stack_buildfile(&manifest, &lock2, STACK_BASE, None).unwrap();
+        let bf2 = Buildfile::parse(&text2).unwrap();
+        let warm = builder.build(&bf2, "stack:r2", &mut store).unwrap();
+        assert_eq!(rebuilt_packages(&bf2, &warm), frontier);
+        assert!(terminal_rebuilt(&warm));
+    }
+
+    #[test]
+    fn rebuilding_the_same_lock_is_fully_cached() {
+        let index = fenics_index();
+        let manifest = fenics_manifest();
+        let res = resolve(&manifest, &index, 7).unwrap();
+        let lock = Lockfile::from_resolution(&res, &index);
+        let text = emit_stack_buildfile(&manifest, &lock, STACK_BASE, Some("knl")).unwrap();
+        let bf = Buildfile::parse(&text).unwrap();
+        let mut builder = Builder::new();
+        let mut store = LayerStore::new();
+        builder.build(&bf, "stack:a", &mut store).unwrap();
+        let warm = builder.build(&bf, "stack:b", &mut store).unwrap();
+        assert_eq!(warm.layers_built, 0);
+        assert!(rebuilt_packages(&bf, &warm).is_empty());
+        assert!(!terminal_rebuilt(&warm));
+    }
+
+    #[test]
+    fn lockfile_canonical_bytes_are_seed_invariant() {
+        let index = fenics_index();
+        let manifest = fenics_manifest();
+        let reference =
+            Lockfile::from_resolution(&resolve(&manifest, &index, 0).unwrap(), &index).canonical();
+        for seed in [1, 7, 42, 1234, u64::MAX] {
+            let lock =
+                Lockfile::from_resolution(&resolve(&manifest, &index, seed).unwrap(), &index);
+            assert_eq!(lock.canonical(), reference, "seed {seed}");
+        }
+    }
+}

@@ -1,0 +1,413 @@
+//! Deterministic dependency resolution: semver ranges → a pinned set.
+//!
+//! [`resolve`] turns a [`Manifest`] plus a [`PackageIndex`] into a
+//! [`Resolution`]: one pinned [`Version`] per reachable package and a
+//! topological build order (dependencies first).  The algorithm is a
+//! Jacobi-style fixed point: each round recomputes, *from the previous
+//! round's selection only*, the constraint on every reachable package
+//! (the intersection of the root's range and every selected dependent's
+//! range) and picks the newest published version satisfying it.  A
+//! round is a pure function of the previous selection, so the result is
+//! independent of evaluation order — the `seed` parameter shuffles the
+//! within-round evaluation order precisely to *exercise* that claim
+//! (same manifest + index ⇒ byte-identical lockfile for every seed;
+//! property-swept in `tests/resolver.rs`).
+//!
+//! Failures carry context: a [`ResolveError::Conflict`] names every
+//! dependent whose ranges intersected to nothing, and a
+//! [`ResolveError::Cycle`] prints the dependency cycle path.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::fmt;
+
+use crate::des::SimRng;
+
+use super::manifest::{Manifest, PackageIndex};
+use super::semver::{Range, Version};
+
+/// Why resolution failed, with enough context to fix the manifest.
+#[derive(Debug, Clone)]
+pub enum ResolveError {
+    /// A required package has no published version at all.
+    UnknownPackage {
+        /// The missing package.
+        name: String,
+        /// Who required it (`<root>` or `name version`).
+        dependents: Vec<String>,
+    },
+    /// The dependents' ranges intersect to an empty interval.
+    Conflict {
+        /// The contested package.
+        name: String,
+        /// Every `(dependent, range)` constraint on it.
+        constraints: Vec<(String, Range)>,
+    },
+    /// The combined range is satisfiable but no published version
+    /// falls inside it.
+    NoMatchingVersion {
+        /// The package without a matching version.
+        name: String,
+        /// The combined interval.
+        range: Range,
+        /// Every `(dependent, range)` constraint on it.
+        constraints: Vec<(String, Range)>,
+    },
+    /// The pinned set contains a dependency cycle.
+    Cycle {
+        /// The cycle, first node repeated at the end.
+        path: Vec<String>,
+    },
+    /// The fixed point did not settle within the round bound
+    /// (pathological index; never reachable from a finite acyclic one).
+    NoConverge {
+        /// Rounds attempted.
+        rounds: usize,
+    },
+}
+
+impl fmt::Display for ResolveError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let list = |cs: &[(String, Range)]| {
+            cs.iter()
+                .map(|(who, r)| format!("{who} wants `{r}`"))
+                .collect::<Vec<_>>()
+                .join("; ")
+        };
+        match self {
+            ResolveError::UnknownPackage { name, dependents } => write!(
+                f,
+                "unknown package `{name}` (required by {})",
+                dependents.join(", ")
+            ),
+            ResolveError::Conflict { name, constraints } => write!(
+                f,
+                "conflicting requirements on `{name}`: {}",
+                list(constraints)
+            ),
+            ResolveError::NoMatchingVersion {
+                name,
+                range,
+                constraints,
+            } => write!(
+                f,
+                "no published version of `{name}` satisfies `{range}` ({})",
+                list(constraints)
+            ),
+            ResolveError::Cycle { path } => {
+                write!(f, "dependency cycle: {}", path.join(" -> "))
+            }
+            ResolveError::NoConverge { rounds } => {
+                write!(f, "resolution did not converge after {rounds} rounds")
+            }
+        }
+    }
+}
+impl std::error::Error for ResolveError {}
+
+/// A successful resolution: the pinned set and a build order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Resolution {
+    /// Pinned version per reachable package, name-ordered.
+    pub pinned: BTreeMap<String, Version>,
+    /// Topological order, dependencies before dependents (ties broken
+    /// lexicographically) — the emitted buildfile's stage order.
+    pub order: Vec<String>,
+}
+
+/// The label constraints from the manifest itself carry.
+const ROOT: &str = "<root>";
+
+/// Resolve `manifest` against `index`.  `seed` shuffles within-round
+/// evaluation order only; the returned resolution is identical for
+/// every seed (see the module docs).
+pub fn resolve(
+    manifest: &Manifest,
+    index: &PackageIndex,
+    seed: u64,
+) -> Result<Resolution, ResolveError> {
+    let mut rng = SimRng::new(seed, "resolve-order");
+    let mut selection: BTreeMap<String, Version> = BTreeMap::new();
+    // Each round either grows the reachable set or settles a version,
+    // so |packages| + 2 rounds bound any convergent instance.
+    let rounds = index.len() + 2;
+    for _ in 0..rounds {
+        let constraints = gather_constraints(manifest, index, &selection);
+
+        // Evaluate in seed-shuffled order.  Results and failures land
+        // in name-ordered maps, so neither the selection nor the error
+        // reported can depend on the shuffle.
+        let mut names: Vec<&String> = constraints.keys().collect();
+        shuffle(&mut names, &mut rng);
+        let mut next: BTreeMap<String, Version> = BTreeMap::new();
+        let mut failures: BTreeMap<String, ResolveError> = BTreeMap::new();
+        for name in names {
+            let entries = &constraints[name];
+            match pick(name, entries, index) {
+                Ok(v) => {
+                    next.insert(name.clone(), v);
+                }
+                Err(e) => {
+                    failures.insert(name.clone(), e);
+                }
+            }
+        }
+        if let Some((_, e)) = failures.into_iter().next() {
+            return Err(e);
+        }
+        if next == selection {
+            let order = topo_order(&selection, index)?;
+            return Ok(Resolution {
+                pinned: selection,
+                order,
+            });
+        }
+        selection = next;
+    }
+    Err(ResolveError::NoConverge { rounds })
+}
+
+/// The constraints on every package reachable from the root through the
+/// previous round's selection: `name → [(dependent, range)]`, both maps
+/// name-ordered.
+fn gather_constraints(
+    manifest: &Manifest,
+    index: &PackageIndex,
+    selection: &BTreeMap<String, Version>,
+) -> BTreeMap<String, Vec<(String, Range)>> {
+    let mut constraints: BTreeMap<String, Vec<(String, Range)>> = BTreeMap::new();
+    let mut queue: VecDeque<String> = VecDeque::new();
+    let mut visited: BTreeSet<String> = BTreeSet::new();
+    for d in &manifest.deps {
+        constraints
+            .entry(d.name.clone())
+            .or_default()
+            .push((ROOT.to_string(), d.range));
+        queue.push_back(d.name.clone());
+    }
+    while let Some(name) = queue.pop_front() {
+        if !visited.insert(name.clone()) {
+            continue;
+        }
+        let Some(&version) = selection.get(&name) else {
+            continue; // not selected yet; its deps join next round
+        };
+        for dep in index.deps(&name, version).unwrap_or(&[]) {
+            constraints
+                .entry(dep.name.clone())
+                .or_default()
+                .push((format!("{name} {version}"), dep.range));
+            queue.push_back(dep.name.clone());
+        }
+    }
+    constraints
+}
+
+/// Pick the newest published version of `name` satisfying every
+/// constraint, or say precisely why none exists.
+fn pick(
+    name: &str,
+    entries: &[(String, Range)],
+    index: &PackageIndex,
+) -> Result<Version, ResolveError> {
+    if !index.contains(name) {
+        return Err(ResolveError::UnknownPackage {
+            name: name.to_string(),
+            dependents: entries.iter().map(|(who, _)| who.clone()).collect(),
+        });
+    }
+    let combined = entries
+        .iter()
+        .fold(Range::any(), |acc, (_, r)| acc.intersect(r));
+    if combined.is_empty() {
+        return Err(ResolveError::Conflict {
+            name: name.to_string(),
+            constraints: entries.to_vec(),
+        });
+    }
+    index
+        .best_match(name, &combined)
+        .ok_or_else(|| ResolveError::NoMatchingVersion {
+            name: name.to_string(),
+            range: combined,
+            constraints: entries.to_vec(),
+        })
+}
+
+/// Kahn's algorithm over the pinned set, dependencies first, ready set
+/// drained in name order — the deterministic stage order the emitter
+/// relies on.  A non-empty residue is a cycle; its path is extracted by
+/// walking dependency edges inside the residue until a node repeats.
+fn topo_order(
+    pinned: &BTreeMap<String, Version>,
+    index: &PackageIndex,
+) -> Result<Vec<String>, ResolveError> {
+    let deps_of = |name: &str| -> Vec<String> {
+        index
+            .deps(name, pinned[name])
+            .unwrap_or(&[])
+            .iter()
+            .filter(|d| pinned.contains_key(&d.name))
+            .map(|d| d.name.clone())
+            .collect()
+    };
+    let mut indegree: BTreeMap<&String, usize> = BTreeMap::new();
+    let mut dependents: BTreeMap<String, Vec<&String>> = BTreeMap::new();
+    for name in pinned.keys() {
+        let ds = deps_of(name);
+        indegree.insert(name, ds.len());
+        for d in ds {
+            dependents.entry(d).or_default().push(name);
+        }
+    }
+    let mut ready: BTreeSet<&String> = indegree
+        .iter()
+        .filter(|(_, &d)| d == 0)
+        .map(|(&n, _)| n)
+        .collect();
+    let mut order = Vec::with_capacity(pinned.len());
+    while let Some(&name) = ready.iter().next() {
+        ready.remove(name);
+        order.push(name.clone());
+        for &dep in dependents.get(name).map(|v| v.as_slice()).unwrap_or(&[]) {
+            let d = indegree.get_mut(dep).expect("dependent is pinned");
+            *d -= 1;
+            if *d == 0 {
+                ready.insert(dep);
+            }
+        }
+    }
+    if order.len() == pinned.len() {
+        return Ok(order);
+    }
+    // extract one cycle from the residue
+    let residue: BTreeSet<&String> = pinned
+        .keys()
+        .filter(|n| !order.contains(*n))
+        .collect();
+    let start = (*residue.iter().next().expect("residue is non-empty")).clone();
+    let mut path = vec![start.clone()];
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    seen.insert(start);
+    loop {
+        let here = path.last().expect("path starts non-empty").clone();
+        let next = deps_of(&here)
+            .into_iter()
+            .find(|d| residue.contains(d))
+            .expect("every residue node keeps an in-residue dependency");
+        path.push(next.clone());
+        if !seen.insert(next) {
+            break;
+        }
+    }
+    // trim the lead-in so the path starts at the repeated node
+    let repeat = path.last().expect("loop pushed at least one node").clone();
+    let from = path.iter().position(|n| *n == repeat).expect("repeat is in path");
+    Err(ResolveError::Cycle {
+        path: path[from..].to_vec(),
+    })
+}
+
+/// Fisher–Yates over `SimRng` (no `std` RNG anywhere in the simulator).
+fn shuffle<T>(items: &mut [T], rng: &mut SimRng) {
+    for i in (1..items.len()).rev() {
+        items.swap(i, rng.index(i + 1));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::resolve::manifest::Dependency;
+
+    fn v(ma: u64, mi: u64, pa: u64) -> Version {
+        Version::new(ma, mi, pa)
+    }
+
+    fn dep(name: &str, range: &str) -> Dependency {
+        Dependency::new(name, range).unwrap()
+    }
+
+    fn small_index() -> PackageIndex {
+        let mut idx = PackageIndex::new();
+        idx.add("numpy", v(1, 11, 0), vec![]);
+        idx.add("numpy", v(1, 11, 1), vec![]);
+        idx.add("scipy", v(0, 17, 1), vec![dep("numpy", "^1.11.0")]);
+        idx.add("ufl", v(2016, 1, 0), vec![dep("numpy", "^1.11.0")]);
+        idx
+    }
+
+    #[test]
+    fn resolves_newest_satisfying_and_topo_orders() {
+        let m = Manifest::new("app", v(1, 0, 0))
+            .with_dep("scipy", "^0.17.0")
+            .unwrap()
+            .with_dep("ufl", "~2016.1.0")
+            .unwrap();
+        let r = resolve(&m, &small_index(), 42).unwrap();
+        assert_eq!(r.pinned["numpy"], v(1, 11, 1));
+        assert_eq!(r.pinned["scipy"], v(0, 17, 1));
+        assert_eq!(r.order, vec!["numpy", "scipy", "ufl"]);
+    }
+
+    #[test]
+    fn seed_does_not_change_the_resolution() {
+        let m = Manifest::new("app", v(1, 0, 0))
+            .with_dep("scipy", "^0.17.0")
+            .unwrap();
+        let reference = resolve(&m, &small_index(), 0).unwrap();
+        for seed in 1..16 {
+            assert_eq!(resolve(&m, &small_index(), seed).unwrap(), reference);
+        }
+    }
+
+    #[test]
+    fn conflict_carries_both_dependents() {
+        let mut idx = small_index();
+        idx.add("tight", v(1, 0, 0), vec![dep("numpy", "=1.11.0")]);
+        let m = Manifest::new("app", v(1, 0, 0))
+            .with_dep("tight", "*")
+            .unwrap()
+            .with_dep("numpy", "=1.11.1")
+            .unwrap();
+        let e = resolve(&m, &idx, 42).unwrap_err();
+        let text = e.to_string();
+        assert!(text.contains("conflicting requirements on `numpy`"), "{text}");
+        assert!(text.contains("<root>"), "{text}");
+        assert!(text.contains("tight 1.0.0"), "{text}");
+    }
+
+    #[test]
+    fn unknown_package_names_its_dependents() {
+        let m = Manifest::new("app", v(1, 0, 0))
+            .with_dep("no-such-pkg", "*")
+            .unwrap();
+        let e = resolve(&m, &small_index(), 42).unwrap_err();
+        assert!(matches!(e, ResolveError::UnknownPackage { .. }));
+        assert!(e.to_string().contains("<root>"));
+    }
+
+    #[test]
+    fn no_matching_version_reports_the_interval() {
+        let m = Manifest::new("app", v(1, 0, 0))
+            .with_dep("numpy", "^2.0.0")
+            .unwrap();
+        let e = resolve(&m, &small_index(), 42).unwrap_err();
+        assert!(matches!(e, ResolveError::NoMatchingVersion { .. }));
+        assert!(e.to_string().contains("numpy"));
+    }
+
+    #[test]
+    fn cycles_are_reported_with_their_path() {
+        let mut idx = PackageIndex::new();
+        idx.add("a", v(1, 0, 0), vec![dep("b", "*")]);
+        idx.add("b", v(1, 0, 0), vec![dep("a", "*")]);
+        let m = Manifest::new("app", v(1, 0, 0)).with_dep("a", "*").unwrap();
+        let e = resolve(&m, &idx, 42).unwrap_err();
+        let ResolveError::Cycle { path } = &e else {
+            panic!("expected a cycle, got {e}");
+        };
+        assert!(path.len() >= 3);
+        assert_eq!(path.first(), path.last());
+        assert!(e.to_string().contains(" -> "));
+    }
+}

@@ -1,0 +1,312 @@
+//! Semantic versions and version ranges.
+//!
+//! The resolver's arithmetic layer: a [`Version`] is a `major.minor.patch`
+//! triple with the usual lexicographic total order, and a [`Range`] is a
+//! half-open interval `[lo, hi)` over that order.  Every range the
+//! manifest syntax can express (`*`, `=`, `^`, `~`, `>=`, `>`, `<`,
+//! `<=`, and comma-conjunctions) normalises into one interval, which
+//! makes intersection — the only operation resolution needs — a
+//! two-comparison `max(lo) / min(hi)`.
+//!
+//! There are no pre-release or build tags: versions are exactly triples,
+//! so the successor of `1.2.3` in the order is `1.2.4`.  That is what
+//! lets `>v` desugar to `>= v.bump_patch()` and `<=v` to
+//! `< v.bump_patch()` without a separate bound-kind flag, and it is the
+//! property the brute-force oracle in `tests/resolver.rs` checks over an
+//! enumerated version universe.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// A `major.minor.patch` version triple, totally ordered
+/// lexicographically (derived `Ord` on the field order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Version {
+    /// Incompatible-change counter.
+    pub major: u64,
+    /// Feature counter.
+    pub minor: u64,
+    /// Fix counter.
+    pub patch: u64,
+}
+
+impl Version {
+    /// Construct a version from its three components.
+    pub fn new(major: u64, minor: u64, patch: u64) -> Self {
+        Version { major, minor, patch }
+    }
+
+    /// The immediate successor in the total order (`1.2.3` → `1.2.4`).
+    /// With no pre-release tags, `> v` is exactly `>= v.bump_patch()`.
+    pub fn bump_patch(self) -> Self {
+        Version::new(self.major, self.minor, self.patch + 1)
+    }
+
+    /// The first version of the next minor series (`1.2.3` → `1.3.0`);
+    /// the exclusive upper bound a tilde range commits to.
+    pub fn bump_minor(self) -> Self {
+        Version::new(self.major, self.minor + 1, 0)
+    }
+
+    /// The first version of the next major series (`1.2.3` → `2.0.0`);
+    /// the exclusive upper bound a caret range commits to.
+    pub fn bump_major(self) -> Self {
+        Version::new(self.major + 1, 0, 0)
+    }
+}
+
+impl fmt::Display for Version {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}.{}.{}", self.major, self.minor, self.patch)
+    }
+}
+
+/// A malformed version or range literal, with the offending text.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SemverError {
+    /// The literal that failed to parse.
+    pub text: String,
+    /// What was wrong with it.
+    pub message: String,
+}
+
+impl fmt::Display for SemverError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "bad version syntax `{}`: {}", self.text, self.message)
+    }
+}
+impl std::error::Error for SemverError {}
+
+fn err(text: &str, message: impl Into<String>) -> SemverError {
+    SemverError {
+        text: text.to_string(),
+        message: message.into(),
+    }
+}
+
+impl FromStr for Version {
+    type Err = SemverError;
+
+    fn from_str(s: &str) -> Result<Self, SemverError> {
+        let mut parts = s.split('.');
+        let mut component = |name: &str| -> Result<u64, SemverError> {
+            let p = parts
+                .next()
+                .ok_or_else(|| err(s, format!("missing {name} component")))?;
+            if p.is_empty() || !p.bytes().all(|b| b.is_ascii_digit()) {
+                return Err(err(s, format!("{name} component `{p}` is not a number")));
+            }
+            p.parse()
+                .map_err(|_| err(s, format!("{name} component `{p}` overflows")))
+        };
+        let v = Version::new(component("major")?, component("minor")?, component("patch")?);
+        if parts.next().is_some() {
+            return Err(err(s, "more than three components"));
+        }
+        Ok(v)
+    }
+}
+
+/// A half-open version interval `[lo, hi)`; `hi = None` means unbounded
+/// above.  This is the normal form every piece of range syntax reduces
+/// to, so intersection and emptiness are interval arithmetic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Range {
+    /// Inclusive lower bound.
+    pub lo: Version,
+    /// Exclusive upper bound (`None` = unbounded).
+    pub hi: Option<Version>,
+}
+
+impl Range {
+    /// The full range `*` — every version.
+    pub fn any() -> Self {
+        Range {
+            lo: Version::new(0, 0, 0),
+            hi: None,
+        }
+    }
+
+    /// The single-version range `[v, v.bump_patch())`.
+    pub fn exact(v: Version) -> Self {
+        Range {
+            lo: v,
+            hi: Some(v.bump_patch()),
+        }
+    }
+
+    /// The caret range of `v`: compatible within the leftmost non-zero
+    /// component (`^1.2.3` = `[1.2.3, 2.0.0)`, `^0.2.3` = `[0.2.3,
+    /// 0.3.0)`, `^0.0.3` = `[0.0.3, 0.0.4)`).
+    pub fn caret(v: Version) -> Self {
+        let hi = if v.major > 0 {
+            v.bump_major()
+        } else if v.minor > 0 {
+            v.bump_minor()
+        } else {
+            v.bump_patch()
+        };
+        Range { lo: v, hi: Some(hi) }
+    }
+
+    /// The tilde range of `v`: patch-level flexibility (`~1.2.3` =
+    /// `[1.2.3, 1.3.0)`).
+    pub fn tilde(v: Version) -> Self {
+        Range {
+            lo: v,
+            hi: Some(v.bump_minor()),
+        }
+    }
+
+    /// Whether `v` lies in the interval.
+    pub fn contains(&self, v: Version) -> bool {
+        self.lo <= v && self.hi.map_or(true, |hi| v < hi)
+    }
+
+    /// The interval common to both ranges: `[max(lo), min(hi))`.  May
+    /// be empty — check [`is_empty`](Range::is_empty).
+    pub fn intersect(&self, other: &Range) -> Range {
+        let lo = self.lo.max(other.lo);
+        let hi = match (self.hi, other.hi) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (h, None) | (None, h) => h,
+        };
+        Range { lo, hi }
+    }
+
+    /// Whether the interval contains no version at all.
+    pub fn is_empty(&self) -> bool {
+        matches!(self.hi, Some(hi) if hi <= self.lo)
+    }
+
+    /// Parse range syntax: `*`, `1.2.3` / `=1.2.3`, `^1.2.3`, `~1.2.3`,
+    /// `>=1.2.3`, `>1.2.3`, `<2.0.0`, `<=2.0.0`, and comma- or
+    /// whitespace-separated conjunctions thereof (intersected).
+    pub fn parse(s: &str) -> Result<Range, SemverError> {
+        let text = s.trim();
+        if text.is_empty() {
+            return Err(err(s, "empty range"));
+        }
+        let mut range = Range::any();
+        for clause in text.split(',').flat_map(|c| c.split_whitespace()) {
+            range = range.intersect(&Self::parse_clause(clause)?);
+        }
+        Ok(range)
+    }
+
+    fn parse_clause(clause: &str) -> Result<Range, SemverError> {
+        let version = |rest: &str| -> Result<Version, SemverError> { rest.parse() };
+        Ok(match clause {
+            "*" => Range::any(),
+            _ if clause.starts_with(">=") => Range {
+                lo: version(&clause[2..])?,
+                hi: None,
+            },
+            _ if clause.starts_with("<=") => Range {
+                lo: Version::new(0, 0, 0),
+                hi: Some(version(&clause[2..])?.bump_patch()),
+            },
+            _ if clause.starts_with('>') => Range {
+                lo: version(&clause[1..])?.bump_patch(),
+                hi: None,
+            },
+            _ if clause.starts_with('<') => Range {
+                lo: Version::new(0, 0, 0),
+                hi: Some(version(&clause[1..])?),
+            },
+            _ if clause.starts_with('^') => Range::caret(version(&clause[1..])?),
+            _ if clause.starts_with('~') => Range::tilde(version(&clause[1..])?),
+            _ if clause.starts_with('=') => Range::exact(version(&clause[1..])?),
+            _ => Range::exact(version(clause)?),
+        })
+    }
+}
+
+impl fmt::Display for Range {
+    /// Canonical form: `*` for the full range, else `>=lo` /
+    /// `>=lo, <hi`.  Idempotent under [`Range::parse`] — re-parsing the
+    /// printed form reproduces the interval exactly.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.hi {
+            None if self.lo == Version::new(0, 0, 0) => write!(f, "*"),
+            None => write!(f, ">={}", self.lo),
+            Some(hi) => write!(f, ">={}, <{}", self.lo, hi),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(ma: u64, mi: u64, pa: u64) -> Version {
+        Version::new(ma, mi, pa)
+    }
+
+    #[test]
+    fn version_parse_print_round_trip() {
+        for text in ["0.0.0", "1.2.3", "2016.1.0", "10.20.30"] {
+            let ver: Version = text.parse().unwrap();
+            assert_eq!(ver.to_string(), text);
+        }
+    }
+
+    #[test]
+    fn version_parse_rejects_malformed() {
+        for bad in ["", "1", "1.2", "1.2.3.4", "1.2.x", "a.b.c", "1..3", "-1.0.0"] {
+            assert!(bad.parse::<Version>().is_err(), "`{bad}` parsed");
+        }
+    }
+
+    #[test]
+    fn order_is_lexicographic() {
+        assert!(v(1, 0, 0) < v(1, 0, 1));
+        assert!(v(1, 0, 9) < v(1, 1, 0));
+        assert!(v(1, 9, 9) < v(2, 0, 0));
+        assert_eq!(v(3, 7, 2), v(3, 7, 2));
+    }
+
+    #[test]
+    fn caret_follows_leftmost_nonzero() {
+        assert_eq!(Range::caret(v(1, 2, 3)).hi, Some(v(2, 0, 0)));
+        assert_eq!(Range::caret(v(0, 2, 3)).hi, Some(v(0, 3, 0)));
+        assert_eq!(Range::caret(v(0, 0, 3)).hi, Some(v(0, 0, 4)));
+    }
+
+    #[test]
+    fn sugar_desugars_to_intervals() {
+        assert_eq!(Range::parse("*").unwrap(), Range::any());
+        assert_eq!(Range::parse("1.2.3").unwrap(), Range::exact(v(1, 2, 3)));
+        assert_eq!(Range::parse("=1.2.3").unwrap(), Range::exact(v(1, 2, 3)));
+        assert_eq!(Range::parse("~3.7.2").unwrap().hi, Some(v(3, 8, 0)));
+        assert_eq!(Range::parse(">1.2.3").unwrap().lo, v(1, 2, 4));
+        assert_eq!(Range::parse("<=1.2.3").unwrap().hi, Some(v(1, 2, 4)));
+        assert_eq!(
+            Range::parse(">=1.10.0, <2.0.0").unwrap(),
+            Range {
+                lo: v(1, 10, 0),
+                hi: Some(v(2, 0, 0))
+            }
+        );
+    }
+
+    #[test]
+    fn intersection_is_max_lo_min_hi() {
+        let a = Range::parse("^3.7.0").unwrap();
+        let b = Range::parse("~3.7.2").unwrap();
+        let i = a.intersect(&b);
+        assert_eq!(i.lo, v(3, 7, 2));
+        assert_eq!(i.hi, Some(v(3, 8, 0)));
+        assert!(!i.is_empty());
+        let disjoint = Range::caret(v(1, 10, 2)).intersect(&Range::caret(v(2, 0, 0)));
+        assert!(disjoint.is_empty());
+    }
+
+    #[test]
+    fn display_round_trips_through_parse() {
+        for text in ["*", "^1.2.3", "~3.7.2", ">=1.0.0", ">=1.10.0, <2.0.0", "=2016.1.0"] {
+            let r = Range::parse(text).unwrap();
+            assert_eq!(Range::parse(&r.to_string()).unwrap(), r, "via `{text}`");
+        }
+    }
+}

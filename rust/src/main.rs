@@ -84,6 +84,13 @@ live registry — the same table lives in EXPERIMENTS.md):
               (resumable chunked transfers on 2..8 shard frontends);
               sweeps offered load x shard count, reports warmup-trimmed
               p50/p99/p999 latency and the saturation knee
+  version-churn  bump one pinned package of the resolved FEniCS stack
+              and rebuild the ARCH_OPT variant matrix warm; asserts the
+              lockfile-diff rebuild frontier equals the stages actually
+              rebuilt and reports the cache-invalidation %
+  dep-storm   cold-resolve storm: N random manifests over the FEniCS
+              package universe resolved, pinned, fetched through one
+              shared package cache and built through a CI farm pass
   all         every registered scenario
 
 Scenarios expand into independent cells run across `--jobs N` worker
@@ -244,9 +251,9 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
         .opt("out", "also write a JSON report to this path", None)
         .opt(
             "nodes",
-            "comma-separated fleet sizes (fig1-scale, chaos-canary), workers (build-farm) \
-             or registry shards (registry-storm); binary suffixes accepted \
-             (64k = 65536, 1m = 1048576)",
+            "comma-separated fleet sizes (fig1-scale, chaos-canary), workers (build-farm), \
+             registry shards (registry-storm) or manifest counts (dep-storm); binary \
+             suffixes accepted (64k = 65536, 1m = 1048576)",
             None,
         )
         .opt("jobs", "matrix workers; 0 = available parallelism (bit-identical)", Some("0"))
@@ -296,11 +303,16 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
         one => vec![one.to_string()],
     };
     let takes_nodes = |f: &str| {
-        f == "fig1-scale" || f == "build-farm" || f == "chaos-canary" || f == "registry-storm"
+        f == "fig1-scale"
+            || f == "build-farm"
+            || f == "chaos-canary"
+            || f == "registry-storm"
+            || f == "dep-storm"
     };
     if p.get("nodes").is_some() && !figures.iter().any(|f| takes_nodes(f)) {
         anyhow::bail!(
-            "--nodes only applies to fig1-scale, build-farm, chaos-canary and registry-storm"
+            "--nodes only applies to fig1-scale, build-farm, chaos-canary, registry-storm \
+             and dep-storm"
         );
     }
     let mut all_json = Vec::new();
@@ -338,7 +350,8 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
                 // ones stay per-entity and keep a tight ceiling
                 let ceiling: usize = match figure.as_str() {
                     "fig1-scale" | "chaos-canary" => 1 << 20,
-                    _ => 1024, // build-farm workers, registry-storm shards
+                    _ => 1024, // build-farm workers, registry-storm shards,
+                               // dep-storm manifest counts
                 };
                 let parsed = nodes
                     .split(',')

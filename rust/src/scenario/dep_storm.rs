@@ -1,0 +1,262 @@
+//! `dep-storm`: a cold-resolve storm of N randomly drawn manifests,
+//! resolved, fetched through one shared package cache, and built
+//! through the CI farm.
+//!
+//! The paper's §2.2 productivity story is one curated stack; a real
+//! registry serves *many* stack authors at once, each declaring a
+//! different slice of the package universe.  This scenario generates N
+//! root manifests over the FEniCS [`fenics_index`] universe (1–3 root
+//! dependencies each, caret/tilde ranges anchored at published
+//! versions), resolves them all, materialises every pinned package
+//! through one shared content-addressed [`PackageCache`], and feeds the
+//! emitted buildfiles through a [`BuildFarm`] pass — measuring what the
+//! resolver tier amortises: package-cache hit rate, build-cache hit
+//! rate, and the farm makespan for the whole storm.
+//!
+//! Manifests that cannot resolve (e.g. a root pinned to `openmpi 2.x`
+//! colliding with the PETSc chain's `^1.10.0`) are counted, not
+//! retried: conflict reporting is part of the resolver's contract and
+//! the count is deterministic for a given cell seed.
+//!
+//! Cell = one storm size from `cfg.nodes` ([`STORM_MANIFESTS`] by
+//! default).  Everything is seeded from
+//! [`CellId::seed`](super::CellId::seed); the figure renders
+//! byte-identically at every `--jobs` setting, which CI gates.
+//!
+//! [`STORM_MANIFESTS`]: crate::config::STORM_MANIFESTS
+
+use std::collections::BTreeSet;
+
+use anyhow::Result;
+
+use crate::bench::{Figure, Row};
+use crate::config::ExperimentConfig;
+use crate::container::resolve::{
+    emit_stack_buildfile, fenics_index, resolve, Dependency, Lockfile, Manifest, PackageCache,
+    PackageIndex, Range, Version, STACK_BASE,
+};
+use crate::container::Buildfile;
+use crate::des::SimRng;
+use crate::metrics::Stats;
+
+use super::build_farm::{BuildFarm, FarmConfig};
+use super::{Cell, CellResult, Scenario, SimContext};
+
+/// CI workers the storm's farm pass runs on (the farm-size sweep
+/// belongs to `build-farm`; here the swept axis is the manifest count).
+pub const STORM_WORKERS: usize = 4;
+
+/// The cold-resolve storm scenario.
+pub struct DepStorm;
+
+/// Draw one random root manifest over `index`: 1–3 distinct root
+/// dependencies, each a caret or tilde range anchored at a published
+/// version of the package.
+fn random_manifest(i: usize, index: &PackageIndex, rng: &mut SimRng) -> Manifest {
+    let names = index.names();
+    let mut manifest = Manifest::new(&format!("stack-{i:03}"), Version::new(1, 0, 0));
+    let want = 1 + rng.index(3);
+    let mut chosen: BTreeSet<&str> = BTreeSet::new();
+    while chosen.len() < want {
+        let name = names[rng.index(names.len())];
+        if !chosen.insert(name) {
+            continue;
+        }
+        let versions = index.versions(name);
+        let anchor = versions[rng.index(versions.len())];
+        let range = if rng.uniform(0.0, 1.0) < 0.5 {
+            Range::caret(anchor)
+        } else {
+            Range::tilde(anchor)
+        };
+        manifest.deps.push(Dependency {
+            name: name.to_string(),
+            range,
+        });
+    }
+    manifest
+}
+
+impl Scenario for DepStorm {
+    fn name(&self) -> &'static str {
+        "dep-storm"
+    }
+
+    fn describe(&self) -> &'static str {
+        "cold-resolve storm: N randomly drawn manifests over the FEniCS \
+         package universe, resolved and pinned, packages fetched through \
+         one shared content-addressed cache, emitted buildfiles run \
+         through a CI farm pass; reports resolve conflicts, cache hit \
+         rates, and the storm makespan"
+    }
+
+    fn cells(&self, cfg: &ExperimentConfig) -> Result<Vec<Cell>> {
+        anyhow::ensure!(
+            !cfg.nodes.is_empty(),
+            "dep-storm needs at least one manifest count in `nodes`"
+        );
+        anyhow::ensure!(
+            cfg.nodes.iter().all(|&n| n >= 1),
+            "dep-storm manifest counts must be >= 1 (got {:?})",
+            cfg.nodes
+        );
+        Ok(cfg
+            .nodes
+            .iter()
+            .map(|&n| Cell::new(format!("{n} manifests"), n))
+            .collect())
+    }
+
+    fn run_cell(&self, ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult> {
+        let n: usize = *cell.payload()?;
+        let seed = cell.id.seed(ctx.cfg.seed);
+        let index = fenics_index();
+        let mut rng = SimRng::new(seed, "dep-storm-manifests");
+
+        let mut packages = PackageCache::new();
+        let mut jobs = Vec::with_capacity(n);
+        let mut unresolvable = 0usize;
+        let mut pinned_total = 0usize;
+        for i in 0..n {
+            let manifest = random_manifest(i, &index, &mut rng);
+            match resolve(&manifest, &index, seed ^ i as u64) {
+                Ok(res) => {
+                    let lock = Lockfile::from_resolution(&res, &index);
+                    for (name, p) in &lock.packages {
+                        packages.fetch(name, p.version);
+                    }
+                    pinned_total += lock.packages.len();
+                    let text = emit_stack_buildfile(&manifest, &lock, STACK_BASE, None)?;
+                    let bf = Buildfile::parse(&text).map_err(anyhow::Error::new)?;
+                    jobs.push((format!("local/{}", manifest.name), bf));
+                }
+                Err(_) => unresolvable += 1,
+            }
+        }
+        anyhow::ensure!(
+            !jobs.is_empty(),
+            "a storm where nothing resolves builds nothing ({unresolvable}/{n} conflicts)"
+        );
+
+        let mut farm = BuildFarm::new(FarmConfig::ci(STORM_WORKERS));
+        let pass = farm.run_pass(&jobs)?;
+        let makespan = pass.makespan.as_secs_f64();
+
+        Ok(
+            CellResult::values(vec![makespan, jobs.len() as f64]).with_breakdown(vec![
+                ("manifests".into(), n as f64),
+                ("resolved".into(), jobs.len() as f64),
+                ("unresolvable".into(), unresolvable as f64),
+                ("packages pinned".into(), pinned_total as f64),
+                ("pkg cache hit rate".into(), packages.hit_rate()),
+                ("pkg blobs resident".into(), packages.len() as f64),
+                ("pkg store dedup x".into(), packages.store().dedup_ratio()),
+                ("farm layers built".into(), pass.layers_built as f64),
+                ("farm layers cached".into(), pass.layers_cached as f64),
+                ("build hit rate".into(), pass.build_hit_rate()),
+                ("images pushed".into(), pass.images_pushed as f64),
+                ("wan MB".into(), pass.wan_bytes as f64 / 1e6),
+            ]),
+        )
+    }
+
+    fn assemble(
+        &self,
+        _ctx: &SimContext<'_>,
+        cells: &[Cell],
+        rows: Vec<CellResult>,
+    ) -> Result<Vec<Figure>> {
+        let mut fig = Figure::new(
+            "Dep storm — cold-resolve storm makespan through the CI farm",
+            "farm makespan [virtual s]",
+            false,
+        );
+        for r in &rows {
+            fig.push(
+                Row::new(cells[r.cell].label.clone(), Stats::from_samples(vec![r.values[0]]))
+                    .with_breakdown(r.breakdown.clone()),
+            );
+        }
+        fig.note(
+            "manifests draw 1-3 caret/tilde root ranges over the FEniCS \
+             universe; unresolvable draws are counted, not retried; the \
+             shared package cache and build cache amortise the storm, so \
+             makespan grows sublinearly in the manifest count",
+        );
+        Ok(vec![fig])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::CalibrationTable;
+    use crate::scenario::CellId;
+
+    fn run(n: usize, index: usize) -> CellResult {
+        let cfg = ExperimentConfig::paper_default("dep-storm").unwrap();
+        let table = CalibrationTable::builtin_fallback();
+        let ctx = SimContext {
+            cfg: &cfg,
+            table: &table,
+        };
+        let mut cell = Cell::new(format!("{n} manifests"), n);
+        cell.id = CellId {
+            scenario: "dep-storm",
+            index,
+        };
+        DepStorm.run_cell(&ctx, &cell).unwrap()
+    }
+
+    fn stat(r: &CellResult, key: &str) -> f64 {
+        r.breakdown
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|&(_, v)| v)
+            .unwrap()
+    }
+
+    #[test]
+    fn cells_follow_the_configured_manifest_counts() {
+        let cfg = ExperimentConfig::paper_default("dep-storm").unwrap();
+        let cells = DepStorm.cells(&cfg).unwrap();
+        assert_eq!(cells.len(), cfg.nodes.len());
+        assert!(cells[0].label.ends_with("manifests"));
+        assert!(DepStorm
+            .cells(&ExperimentConfig {
+                nodes: vec![],
+                ..cfg.clone()
+            })
+            .is_err());
+        assert!(DepStorm
+            .cells(&ExperimentConfig {
+                nodes: vec![0],
+                ..cfg
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn storm_cell_is_deterministic_and_mostly_resolves() {
+        let a = run(16, 0);
+        let b = run(16, 0);
+        assert_eq!(a.values, b.values);
+        assert_eq!(a.breakdown, b.breakdown);
+        assert!(stat(&a, "resolved") >= 1.0);
+        assert_eq!(stat(&a, "resolved") + stat(&a, "unresolvable"), 16.0);
+        // 16 manifests over a 17-package universe share pins heavily
+        assert!(stat(&a, "pkg cache hit rate") > 0.5, "{a:?}");
+        assert!(a.values[0] > 0.0, "the farm pass takes virtual time");
+    }
+
+    #[test]
+    fn bigger_storms_amortise_the_caches() {
+        let small = run(16, 0);
+        let big = run(64, 1);
+        assert!(stat(&big, "pkg cache hit rate") > stat(&small, "pkg cache hit rate"));
+        assert!(stat(&big, "build hit rate") > 0.5);
+        // makespan grows sublinearly: 4x the manifests, well under 4x
+        // the virtual time
+        assert!(big.values[0] < 4.0 * small.values[0]);
+    }
+}

@@ -13,13 +13,15 @@
 //! All of the paper's figures (`fig1-scale`, `fig2`, `fig3`, `fig4`,
 //! `fig5a`, `fig5b`) live here as scenario modules, next to scenarios
 //! the paper discusses but never measures (`mixed-fleet`,
-//! `build-farm`, `chaos-canary`, `registry-storm`).  Adding a new
+//! `build-farm`, `chaos-canary`, `registry-storm`, `version-churn`,
+//! `dep-storm`).  Adding a new
 //! experiment is a
 //! [`ScenarioRegistry::register`] call away — the walkthrough lives in
 //! `docs/ARCHITECTURE.md` §5.
 
 pub mod build_farm;
 pub mod chaos_canary;
+pub mod dep_storm;
 pub mod fig1_scale;
 pub mod fig2;
 pub mod fig34;
@@ -27,6 +29,7 @@ pub mod fig5;
 pub mod mixed_fleet;
 pub mod registry_storm;
 pub mod runner;
+pub mod version_churn;
 
 pub use runner::MatrixRunner;
 
@@ -255,6 +258,8 @@ impl ScenarioRegistry {
         r.register(Box::new(build_farm::BuildFarmScenario));
         r.register(Box::new(chaos_canary::ChaosCanary));
         r.register(Box::new(registry_storm::RegistryStorm));
+        r.register(Box::new(version_churn::VersionChurn));
+        r.register(Box::new(dep_storm::DepStorm));
         r
     }
 
@@ -329,12 +334,14 @@ mod tests {
                 "mixed-fleet",
                 "build-farm",
                 "chaos-canary",
-                "registry-storm"
+                "registry-storm",
+                "version-churn",
+                "dep-storm"
             ]
         );
         assert!(r.get("fig2").is_some());
         assert!(r.get("fig9").is_none());
-        assert_eq!(r.len(), 10);
+        assert_eq!(r.len(), 12);
         assert!(!r.is_empty());
     }
 

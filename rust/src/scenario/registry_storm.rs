@@ -324,6 +324,12 @@ impl Scenario for RegistryStorm {
             ("sat:queue hwm".into(), report.queue.depth_hwm as f64),
             ("sat:failed sessions".into(), report.failed as f64),
             ("sat:availability".into(), availability),
+            // per-session availability percentiles (fraction of the
+            // payload each client actually received, 1 s == 1.0): the
+            // tail the scalar availability above averages away
+            ("sat:avail p01".into(), report.availability.quantile(0.01).as_secs_f64()),
+            ("sat:avail p05".into(), report.availability.quantile(0.05).as_secs_f64()),
+            ("sat:avail p50".into(), report.availability.quantile(0.50).as_secs_f64()),
         ]))
     }
 
@@ -466,10 +472,22 @@ mod tests {
         };
         let avail = stat(&a, "sat:availability");
         assert!((0.0..=1.0).contains(&avail), "availability {avail}");
-        // the fault-free sweep cells always sit at exactly 1.0
+        // per-session percentiles: monotone in q, bounded by [0, 1]
+        let (p01, p05, p50) = (
+            stat(&a, "sat:avail p01"),
+            stat(&a, "sat:avail p05"),
+            stat(&a, "sat:avail p50"),
+        );
+        assert!((0.0..=1.0).contains(&p01), "p01 {p01}");
+        assert!(p01 <= p05 && p05 <= p50, "quantiles must be monotone");
+        // the fault-free sweep cells always sit at exactly 1.0: every
+        // session delivers every byte, and the quantile estimator
+        // clamps to the exact observed maximum
         let calm = run(4, 0.9, 2);
         assert_eq!(stat(&calm, "sat:availability"), 1.0);
         assert_eq!(stat(&calm, "sat:failed sessions"), 0.0);
+        assert_eq!(stat(&calm, "sat:avail p01"), 1.0);
+        assert_eq!(stat(&calm, "sat:avail p50"), 1.0);
     }
 
     #[test]

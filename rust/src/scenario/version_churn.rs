@@ -1,0 +1,233 @@
+//! `version-churn`: bump one pinned package and measure how much of
+//! the shared `ARCH_OPT` variant matrix cache the bump invalidates.
+//!
+//! The paper's §2.2 stack pins dozens of package versions; §4.3 makes
+//! every host microarchitecture its own build variant.  The operational
+//! question a resolver answers is therefore *incremental*: when one
+//! version moves, which of the `variants × stages` cells must rebuild?
+//! The lockfile answers it before any build runs —
+//! [`LockDiff::rebuild_frontier`] is exactly the set of package stages
+//! whose cache keys change — and this scenario *asserts* that
+//! prediction per cell: every variant is rebuilt against a fork of the
+//! cold builder cache and the stages that actually cost time must equal
+//! the predicted frontier (no over-invalidation, no under-invalidation).
+//!
+//! Cell = one bump target from [`BUMP_TARGETS`], chosen to span the
+//! dependency depths of the FEniCS graph: `numpy` (a root of the
+//! Python tier — widest frontier), `petsc` (the linear-algebra spine),
+//! `sympy` (a leaf-ish chain into the form compilers), and `dolfin`
+//! (the top — frontier of one).  The figure reports the rebuild cost
+//! and the cache-invalidation percentage per target.
+//!
+//! Determinism: resolution is seed-invariant by construction (the
+//! resolver's fixed point is order-free; `tests/resolver.rs` pins it),
+//! the builder is deterministic, and cells share nothing — the figure
+//! renders byte-identically at every `--jobs` setting, which CI gates.
+//!
+//! [`LockDiff::rebuild_frontier`]:
+//!     crate::container::resolve::LockDiff::rebuild_frontier
+
+use std::collections::BTreeSet;
+
+use anyhow::Result;
+
+use crate::bench::{Figure, Row};
+use crate::config::ExperimentConfig;
+use crate::container::resolve::{
+    emit_stack_buildfile, fenics_index, fenics_manifest, rebuilt_packages, resolve,
+    terminal_rebuilt, Lockfile, STACK_BASE,
+};
+use crate::container::{Builder, Buildfile, LayerStore};
+use crate::metrics::Stats;
+
+use super::build_farm::ARCHES;
+use super::{Cell, CellResult, Scenario, SimContext};
+
+/// The packages the churn sweep bumps, one cell each — spanning the
+/// FEniCS graph from a wide-frontier root (`numpy`) to the top of the
+/// stack (`dolfin`, frontier of one).
+pub const BUMP_TARGETS: [&str; 4] = ["numpy", "petsc", "sympy", "dolfin"];
+
+/// The single-dep-bump churn scenario.
+pub struct VersionChurn;
+
+impl Scenario for VersionChurn {
+    fn name(&self) -> &'static str {
+        "version-churn"
+    }
+
+    fn describe(&self) -> &'static str {
+        "bump one pinned package of the resolved FEniCS stack and \
+         rebuild the ARCH_OPT variant matrix against the warm cache; \
+         asserts the lockfile-diff rebuild frontier equals the stages \
+         actually rebuilt, per variant, and reports the invalidation %"
+    }
+
+    fn cells(&self, _cfg: &ExperimentConfig) -> Result<Vec<Cell>> {
+        Ok(BUMP_TARGETS
+            .iter()
+            .map(|&pkg| Cell::new(format!("bump {pkg}"), pkg.to_string()))
+            .collect())
+    }
+
+    fn run_cell(&self, ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult> {
+        let target: &String = cell.payload()?;
+        let seed = cell.id.seed(ctx.cfg.seed);
+        let mut index = fenics_index();
+        let manifest = fenics_manifest();
+
+        // cold pass: resolve, emit every arch variant, build them all
+        // against one shared builder cache (variants share the package
+        // stages; only the terminal make/ARCH_OPT stage is per-arch)
+        let res = resolve(&manifest, &index, seed).map_err(anyhow::Error::new)?;
+        let lock = Lockfile::from_resolution(&res, &index);
+        let mut builder = Builder::new();
+        let mut store = LayerStore::new();
+        let mut cold_built = 0usize;
+        let mut cold_time = 0.0;
+        for arch in ARCHES {
+            let text = emit_stack_buildfile(&manifest, &lock, STACK_BASE, Some(arch))?;
+            let bf = Buildfile::parse(&text).map_err(anyhow::Error::new)?;
+            let cold = builder.build(&bf, &format!("churn/{arch}:cold"), &mut store)?;
+            cold_built += cold.layers_built;
+            cold_time += cold.critical_path.as_secs_f64();
+        }
+
+        // the bump: one patch release, re-resolve, predict the frontier
+        let bumped = index
+            .bump_patch(target)
+            .ok_or_else(|| anyhow::anyhow!("bump target `{target}` not in the index"))?;
+        let res2 = resolve(&manifest, &index, seed).map_err(anyhow::Error::new)?;
+        let lock2 = Lockfile::from_resolution(&res2, &index);
+        let diff = lock.diff(&lock2);
+        let frontier = diff.rebuild_frontier(&lock2);
+        anyhow::ensure!(
+            frontier.contains(target),
+            "a patch bump of `{target}` must land in its own frontier ({diff})"
+        );
+
+        // warm pass: every variant rebuilds against a *fork* of the
+        // cold cache (variants stay independent, exactly like farm
+        // workers), and the stages that actually cost time must equal
+        // the predicted frontier — the scenario's core assertion
+        let mut churn_built = 0usize;
+        let mut churn_cached = 0usize;
+        let mut rebuild_time = 0.0;
+        for arch in ARCHES {
+            let text = emit_stack_buildfile(&manifest, &lock2, STACK_BASE, Some(arch))?;
+            let bf = Buildfile::parse(&text).map_err(anyhow::Error::new)?;
+            let mut fork = builder.fork();
+            let warm = fork.build(&bf, &format!("churn/{arch}:bumped"), &mut store)?;
+            let rebuilt: BTreeSet<String> = rebuilt_packages(&bf, &warm);
+            anyhow::ensure!(
+                rebuilt == frontier,
+                "{arch}: rebuilt stages {rebuilt:?} != predicted frontier {frontier:?}"
+            );
+            anyhow::ensure!(
+                terminal_rebuilt(&warm),
+                "{arch}: a non-empty frontier must rebuild the terminal stage"
+            );
+            churn_built += warm.layers_built;
+            churn_cached += warm.layers_cached;
+            rebuild_time += warm.critical_path.as_secs_f64();
+        }
+
+        let invalidation_pct = 100.0 * churn_built as f64 / cold_built.max(1) as f64;
+        Ok(CellResult::values(vec![rebuild_time, invalidation_pct]).with_breakdown(vec![
+            ("frontier stages".into(), frontier.len() as f64),
+            ("packages pinned".into(), lock2.packages.len() as f64),
+            ("bumped to patch".into(), bumped.patch as f64),
+            ("cold layers built".into(), cold_built as f64),
+            ("churn layers built".into(), churn_built as f64),
+            ("churn layers cached".into(), churn_cached as f64),
+            ("invalidation %".into(), invalidation_pct),
+            ("cold build s".into(), cold_time),
+            ("rebuild s".into(), rebuild_time),
+            ("store dedup x".into(), store.dedup_ratio()),
+        ]))
+    }
+
+    fn assemble(
+        &self,
+        _ctx: &SimContext<'_>,
+        cells: &[Cell],
+        rows: Vec<CellResult>,
+    ) -> Result<Vec<Figure>> {
+        let mut fig = Figure::new(
+            "Version churn — rebuild cost of a one-package patch bump \
+             across the ARCH_OPT variant matrix",
+            "rebuild critical path [virtual s]",
+            false,
+        );
+        for r in &rows {
+            fig.push(
+                Row::new(cells[r.cell].label.clone(), Stats::from_samples(vec![r.values[0]]))
+                    .with_breakdown(r.breakdown.clone()),
+            );
+        }
+        fig.note(
+            "every cell asserts the lockfile-diff rebuild frontier equals \
+             the stages the builder actually re-ran, per variant — no \
+             over- or under-invalidation; `invalidation %` is bumped-pass \
+             layers built over cold-pass layers built",
+        );
+        Ok(vec![fig])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::CalibrationTable;
+    use crate::scenario::CellId;
+
+    fn run(target: &str, index: usize) -> CellResult {
+        let cfg = ExperimentConfig::paper_default("version-churn").unwrap();
+        let table = CalibrationTable::builtin_fallback();
+        let ctx = SimContext {
+            cfg: &cfg,
+            table: &table,
+        };
+        let mut cell = Cell::new(format!("bump {target}"), target.to_string());
+        cell.id = CellId {
+            scenario: "version-churn",
+            index,
+        };
+        VersionChurn.run_cell(&ctx, &cell).unwrap()
+    }
+
+    #[test]
+    fn cells_cover_the_bump_targets() {
+        let cfg = ExperimentConfig::paper_default("version-churn").unwrap();
+        let cells = VersionChurn.cells(&cfg).unwrap();
+        assert_eq!(cells.len(), BUMP_TARGETS.len());
+        assert_eq!(cells[0].label, "bump numpy");
+        assert_eq!(cells[3].label, "bump dolfin");
+    }
+
+    #[test]
+    fn frontier_width_tracks_dependency_depth() {
+        let stat = |r: &CellResult, key: &str| {
+            r.breakdown
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|&(_, v)| v)
+                .unwrap()
+        };
+        // numpy sits under half the stack; dolfin is the top of it
+        let numpy = run("numpy", 0);
+        let dolfin = run("dolfin", 3);
+        assert_eq!(stat(&numpy, "frontier stages"), 8.0);
+        assert_eq!(stat(&dolfin, "frontier stages"), 1.0);
+        assert!(stat(&numpy, "invalidation %") > stat(&dolfin, "invalidation %"));
+        assert!(numpy.values[0] > dolfin.values[0], "wider frontier costs more");
+    }
+
+    #[test]
+    fn churn_cell_is_deterministic() {
+        let a = run("petsc", 1);
+        let b = run("petsc", 1);
+        assert_eq!(a.values, b.values);
+        assert_eq!(a.breakdown, b.breakdown);
+    }
+}

@@ -8,10 +8,17 @@
 //! * non-terminal stage pruning and the store GC that collects it;
 //! * `build-farm` renders byte-identically under `--jobs N` and is
 //!   listed by the scenario registry (what `harbor bench --list`
-//!   prints).
+//!   prints);
+//! * resolver-driven invalidation: a single-version bump in the
+//!   package index rebuilds exactly the lockfile-predicted frontier
+//!   across the full arch variant matrix.
 
 use harbor::bench::Figure;
 use harbor::config::ExperimentConfig;
+use harbor::container::resolve::{
+    emit_stack_buildfile, fenics_index, fenics_manifest, rebuilt_packages, resolve,
+    terminal_rebuilt, Lockfile, STACK_BASE,
+};
 use harbor::container::{BuildGraph, Builder, Buildfile, LayerStore};
 use harbor::coordinator::Coordinator;
 use harbor::runtime::CalibrationTable;
@@ -19,6 +26,7 @@ use harbor::scenario::ScenarioRegistry;
 use harbor::scenario::build_farm::{
     APPS, ARCHES, BuildFarm, FarmConfig, variant_buildfile, variant_matrix,
 };
+use harbor::scenario::version_churn::BUMP_TARGETS;
 
 fn render_all(figs: &[Figure]) -> String {
     figs.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
@@ -201,6 +209,52 @@ fn build_farm_renders_byte_identically_under_jobs() {
     assert!(serial.contains("Build farm — cold pass makespan"));
     assert!(serial.contains("4 workers"));
     assert!(serial.contains("warm/cold makespan ratio"));
+}
+
+#[test]
+fn version_bump_invalidates_exactly_the_predicted_frontier() {
+    // For every churn target and every arch variant: bump one package
+    // in the index, re-resolve, and check that the set of package
+    // stages the builder actually rebuilds equals the lockfile diff's
+    // predicted frontier — no over-invalidation (unrelated stages stay
+    // cached) and no under-invalidation (every dependent rebuilds).
+    for target in BUMP_TARGETS {
+        let mut index = fenics_index();
+        let manifest = fenics_manifest();
+        let lock1 =
+            Lockfile::from_resolution(&resolve(&manifest, &index, 0).unwrap(), &index);
+        let mut builder = Builder::new();
+        let mut store = LayerStore::new();
+        for arch in ARCHES {
+            let text = emit_stack_buildfile(&manifest, &lock1, STACK_BASE, Some(arch)).unwrap();
+            let bf = Buildfile::parse(&text).unwrap();
+            builder.build(&bf, &format!("local/{target}-{arch}:cold"), &mut store).unwrap();
+        }
+        let bumped = index.bump_patch(target).expect("target is in the index");
+        assert!(bumped > lock1.packages[target].version, "bump moves {target} forward");
+        let lock2 =
+            Lockfile::from_resolution(&resolve(&manifest, &index, 0).unwrap(), &index);
+        let frontier = lock1.diff(&lock2).rebuild_frontier(&lock2);
+        assert!(frontier.contains(target), "{target} itself is on the frontier");
+        for arch in ARCHES {
+            let text = emit_stack_buildfile(&manifest, &lock2, STACK_BASE, Some(arch)).unwrap();
+            let bf = Buildfile::parse(&text).unwrap();
+            // fork per arch so one variant's rebuilds cannot warm
+            // another variant's cache mid-measurement
+            let mut fork = builder.fork();
+            let warm = fork.build(&bf, &format!("local/{target}-{arch}:warm"), &mut store).unwrap();
+            let rebuilt = rebuilt_packages(&bf, &warm);
+            assert_eq!(
+                rebuilt, frontier,
+                "bump {target} on {arch}: rebuilt stages must equal the predicted frontier"
+            );
+            assert!(
+                terminal_rebuilt(&warm),
+                "bump {target} on {arch}: the terminal stage re-links the stack"
+            );
+            assert!(warm.stages_skipped > 0, "unrelated stages stayed cached");
+        }
+    }
 }
 
 #[test]

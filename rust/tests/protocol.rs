@@ -98,6 +98,19 @@ fn prop_resume_conserves_bytes_on_any_fault_schedule() {
                     s.id
                 ));
             }
+            let a = s.availability();
+            if !(0.0..=1.0).contains(&a) {
+                return Err(format!("session {}: availability {a} out of range", s.id));
+            }
+            if s.delivered && a != 1.0 {
+                return Err(format!("session {}: delivered but availability {a}", s.id));
+            }
+        }
+        if report.availability.count() != n {
+            return Err(format!(
+                "availability histogram scored {} of {n} sessions",
+                report.availability.count()
+            ));
         }
         if report.wire_bytes != report.payload_bytes + report.resent_bytes {
             return Err(format!(
@@ -211,6 +224,60 @@ fn zero_intensity_run_is_bit_identical_to_fault_free_with_rng_untouched() {
         fresh.uniform(0.0, 1.0).to_bits(),
         "a fault-free run must not consult the rng"
     );
+}
+
+#[test]
+fn availability_percentiles_separate_calm_from_chaotic_runs() {
+    let layers: Vec<Layer> = (0..4).map(|i| blob(&format!("a{i}"), 56_000_000)).collect();
+    let pulls = |n: usize| -> Vec<SessionRequest> {
+        (0..n)
+            .map(|i| {
+                let at = VirtualTime::ZERO + Duration::from_secs_f64(i as f64 * 0.7);
+                SessionRequest::pull(at, layers[i % layers.len()].id.clone())
+            })
+            .collect()
+    };
+
+    // fault-free: every session delivers every byte, so every
+    // percentile — including the worst — reads exactly 1.0 (the
+    // estimator clamps to the exact observed extremes)
+    let mut calm = front(&layers, 2);
+    let (_, calm_report) = calm.run(pulls(16), None);
+    assert_eq!(calm_report.availability.count(), calm_report.sessions);
+    assert_eq!(calm_report.availability.quantile(0.01).as_secs_f64(), 1.0);
+    assert_eq!(calm_report.availability.quantile(0.50).as_secs_f64(), 1.0);
+    assert_eq!(calm_report.availability.min().as_secs_f64(), 1.0);
+
+    // chaotic arm with a starved retry budget: some sessions abandon
+    // mid-transfer, and the histogram's floor drops below 1.0 by
+    // exactly the worst per-session fraction
+    let chaotic_arm = || {
+        let cfg = FaultConfig::new(6, 2, Duration::from_secs_f64(45.0), 1.0);
+        let schedule = FaultSchedule::generate(&cfg, &mut SimRng::new(21, "fault-schedule"));
+        let mut fd = front(&layers, 2)
+            .with_chunk_bytes(4_000_000)
+            .with_policy(RetryPolicy::none());
+        fd.apply_faults(schedule);
+        fd.run(pulls(32), None)
+    };
+    let (sessions, report) = chaotic_arm();
+    assert_eq!(report.availability.count(), report.sessions);
+    if report.failed > 0 {
+        let worst = sessions
+            .iter()
+            .map(|s| s.availability())
+            .fold(f64::INFINITY, f64::min);
+        assert!(worst < 1.0, "a failed session kept full availability");
+        let floor = report.availability.min().as_secs_f64();
+        assert!(
+            (floor - worst).abs() < 1e-6,
+            "histogram floor {floor} != worst session {worst}"
+        );
+        assert!(report.availability.quantile(0.01) <= report.availability.quantile(0.50));
+    }
+    // the new field participates in report equality/determinism
+    let (_, report_b) = chaotic_arm();
+    assert_eq!(report, report_b);
 }
 
 #[test]

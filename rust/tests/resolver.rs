@@ -1,0 +1,293 @@
+//! Oracle-and-golden tests for the package-resolver tier.
+//!
+//! Three layers of defence around `container::resolve`:
+//!
+//! 1. **Property suite vs brute-force oracles** — semver ordering is
+//!    checked against plain tuple comparison, range intersection
+//!    against membership over an enumerated version universe, and the
+//!    caret/tilde sugar against its textbook definition.  The oracles
+//!    are deliberately naive: they re-derive the answer a slow way the
+//!    implementation never uses.
+//! 2. **Determinism** — the same manifest and index must produce
+//!    byte-identical lockfiles under eight different resolver seeds,
+//!    and the resolver-driven scenarios must render byte-identically
+//!    under `--jobs 1` and `--jobs 4` (CI diffs the same invariant on
+//!    the real binary).
+//! 3. **Goldens** — the §2.2 FEniCS stack's manifest, lockfile, and
+//!    emitted sandybridge buildfile are committed under
+//!    `tests/golden/` and diffed byte-for-byte; every emitted
+//!    buildfile must round-trip losslessly through
+//!    `Buildfile::canonical`.
+
+use harbor::container::resolve::{
+    emit_stack_buildfile, fenics_index, fenics_manifest, resolve, Lockfile, Manifest, Range,
+    ResolveError, Version, STACK_BASE,
+};
+use harbor::container::Buildfile;
+use harbor::config::ExperimentConfig;
+use harbor::coordinator::Coordinator;
+use harbor::runtime::CalibrationTable;
+use harbor::scenario::build_farm::ARCHES;
+use harbor::util::proptest::{run, Gen};
+
+const GOLDEN_MANIFEST: &str = include_str!("golden/fenics.manifest");
+const GOLDEN_LOCK: &str = include_str!("golden/fenics.lock");
+const GOLDEN_BUILDFILE: &str = include_str!("golden/fenics-sandybridge.buildfile");
+
+/// Every version with components in `0..=2` — small enough to
+/// enumerate, rich enough that caret/tilde/intersection edge cases
+/// (zero majors, equal bounds) all occur.
+fn universe() -> Vec<Version> {
+    let mut all = Vec::with_capacity(27);
+    for major in 0..3 {
+        for minor in 0..3 {
+            for patch in 0..3 {
+                all.push(Version::new(major, minor, patch));
+            }
+        }
+    }
+    all
+}
+
+fn gen_version(g: &mut Gen) -> Version {
+    Version::new(g.u64_in(0, 2), g.u64_in(0, 2), g.u64_in(0, 2))
+}
+
+fn gen_range(g: &mut Gen) -> Range {
+    match g.usize_in(0, 4) {
+        0 => Range::any(),
+        1 => Range::exact(gen_version(g)),
+        2 => Range::caret(gen_version(g)),
+        3 => Range::tilde(gen_version(g)),
+        // raw interval, possibly empty (hi may sit at or below lo)
+        _ => Range {
+            lo: gen_version(g),
+            hi: Some(gen_version(g)),
+        },
+    }
+}
+
+#[test]
+fn semver_order_matches_the_tuple_oracle_and_round_trips() {
+    run("semver-order-round-trip", 500, |g| {
+        let a = gen_version(g);
+        let b = gen_version(g);
+        let oracle = (a.major, a.minor, a.patch).cmp(&(b.major, b.minor, b.patch));
+        if a.cmp(&b) != oracle {
+            return Err(format!("{a} vs {b}: order disagrees with the tuple oracle"));
+        }
+        let back: Version = a
+            .to_string()
+            .parse()
+            .map_err(|e| format!("reparse {a}: {e}"))?;
+        if back != a {
+            return Err(format!("{a} printed and reparsed as {back}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn range_display_reparses_to_the_same_interval() {
+    run("range-display-round-trip", 500, |g| {
+        let r = gen_range(g);
+        let back = Range::parse(&r.to_string()).map_err(|e| format!("reparse `{r}`: {e}"))?;
+        if back != r {
+            return Err(format!("`{r}` reparsed as `{back}`"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn range_intersection_matches_the_membership_oracle() {
+    let all = universe();
+    run("range-intersection-oracle", 500, |g| {
+        let a = gen_range(g);
+        let b = gen_range(g);
+        let both = a.intersect(&b);
+        for &v in &all {
+            let oracle = a.contains(v) && b.contains(v);
+            if both.contains(v) != oracle {
+                return Err(format!(
+                    "({a}) ∩ ({b}) = ({both}) wrong at {v}: oracle {oracle}"
+                ));
+            }
+        }
+        if both.is_empty() && all.iter().any(|&v| both.contains(v)) {
+            return Err(format!("({both}) claims empty but has members"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn caret_tilde_and_exact_match_their_definitions() {
+    let all = universe();
+    run("range-sugar-oracle", 300, |g| {
+        let v = gen_version(g);
+        for &u in &all {
+            // ~v: same major.minor, at least v
+            let tilde_oracle = u.major == v.major && u.minor == v.minor && u >= v;
+            if Range::tilde(v).contains(u) != tilde_oracle {
+                return Err(format!("~{v} wrong at {u}"));
+            }
+            // ^v: compatible with v — nothing left of the leftmost
+            // nonzero component may move
+            let caret_oracle = if v.major > 0 {
+                u.major == v.major && u >= v
+            } else if v.minor > 0 {
+                u.major == 0 && u.minor == v.minor && u >= v
+            } else {
+                u == v
+            };
+            if Range::caret(v).contains(u) != caret_oracle {
+                return Err(format!("^{v} wrong at {u}"));
+            }
+            if Range::exact(v).contains(u) != (u == v) {
+                return Err(format!("={v} wrong at {u}"));
+            }
+        }
+        // the sugar spellings parse to the constructors
+        for (text, want) in [
+            (format!("^{v}"), Range::caret(v)),
+            (format!("~{v}"), Range::tilde(v)),
+            (format!("={v}"), Range::exact(v)),
+            (format!("{v}"), Range::exact(v)),
+        ] {
+            let got = Range::parse(&text).map_err(|e| format!("`{text}`: {e}"))?;
+            if got != want {
+                return Err(format!("`{text}` parsed as `{got}`, want `{want}`"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn resolution_is_byte_identical_across_eight_seeds() {
+    let index = fenics_index();
+    let manifest = fenics_manifest();
+    let reference =
+        Lockfile::from_resolution(&resolve(&manifest, &index, 0).unwrap(), &index).canonical();
+    for seed in [1, 2, 3, 7, 42, 1234, 0xdead_beef, u64::MAX] {
+        let lock = Lockfile::from_resolution(&resolve(&manifest, &index, seed).unwrap(), &index);
+        assert_eq!(
+            lock.canonical(),
+            reference,
+            "seed {seed} changed the lockfile bytes"
+        );
+    }
+}
+
+#[test]
+fn resolver_conflicts_carry_their_constraint_context() {
+    let index = fenics_index();
+    // openmpi pinned to 2.x at the root collides with the PETSc
+    // chain's ^1.10.0 pulled in through dolfin
+    let manifest = Manifest::new("clash", Version::new(1, 0, 0))
+        .with_dep("dolfin", "~2016.1.0")
+        .unwrap()
+        .with_dep("openmpi", "^2.0.0")
+        .unwrap();
+    match resolve(&manifest, &index, 0) {
+        Err(ResolveError::Conflict { name, constraints }) => {
+            assert_eq!(name, "openmpi");
+            assert!(
+                constraints.len() >= 2,
+                "both sides of the conflict must be reported: {constraints:?}"
+            );
+            let text = ResolveError::Conflict { name, constraints }.to_string();
+            assert!(text.contains("openmpi"), "{text}");
+        }
+        other => panic!("expected a conflict, got {other:?}"),
+    }
+}
+
+#[test]
+fn golden_manifest_parses_to_the_paper_stack() {
+    let parsed = Manifest::parse(GOLDEN_MANIFEST).expect("golden manifest parses");
+    assert_eq!(parsed, fenics_manifest(), "golden manifest is the §2.2 stack");
+    // canonicalisation is a fixed point (ranges desugar to intervals)
+    let canonical = parsed.canonical();
+    let reparsed = Manifest::parse(&canonical).unwrap();
+    assert_eq!(reparsed.canonical(), canonical);
+}
+
+#[test]
+fn golden_lockfile_bytes_match_resolution() {
+    let index = fenics_index();
+    let manifest = Manifest::parse(GOLDEN_MANIFEST).unwrap();
+    let lock = Lockfile::from_resolution(&resolve(&manifest, &index, 42).unwrap(), &index);
+    assert_eq!(
+        lock.canonical(),
+        GOLDEN_LOCK,
+        "resolved lockfile drifted from tests/golden/fenics.lock"
+    );
+    // the committed bytes themselves are canonical
+    let parsed = Lockfile::parse(GOLDEN_LOCK).expect("golden lockfile parses");
+    assert_eq!(parsed.canonical(), GOLDEN_LOCK);
+}
+
+#[test]
+fn golden_buildfile_bytes_match_emission() {
+    let index = fenics_index();
+    let manifest = Manifest::parse(GOLDEN_MANIFEST).unwrap();
+    let lock = Lockfile::parse(GOLDEN_LOCK).unwrap();
+    let emitted =
+        emit_stack_buildfile(&manifest, &lock, STACK_BASE, Some("sandybridge")).unwrap();
+    assert_eq!(
+        emitted, GOLDEN_BUILDFILE,
+        "emitted buildfile drifted from tests/golden/fenics-sandybridge.buildfile"
+    );
+    // and the same lockfile reached through resolution emits the same
+    let lock2 = Lockfile::from_resolution(&resolve(&manifest, &index, 7).unwrap(), &index);
+    let emitted2 =
+        emit_stack_buildfile(&manifest, &lock2, STACK_BASE, Some("sandybridge")).unwrap();
+    assert_eq!(emitted2, GOLDEN_BUILDFILE);
+}
+
+#[test]
+fn every_emitted_buildfile_round_trips_through_canonical() {
+    let index = fenics_index();
+    let manifest = fenics_manifest();
+    let lock = Lockfile::from_resolution(&resolve(&manifest, &index, 0).unwrap(), &index);
+    let variants: Vec<Option<&str>> =
+        std::iter::once(None).chain(ARCHES.iter().map(|&a| Some(a))).collect();
+    for arch in variants {
+        let emitted = emit_stack_buildfile(&manifest, &lock, STACK_BASE, arch).unwrap();
+        let bf = Buildfile::parse(&emitted)
+            .unwrap_or_else(|e| panic!("emitted buildfile ({arch:?}) must parse: {e}"));
+        assert_eq!(
+            bf.canonical(),
+            emitted,
+            "emission ({arch:?}) is not canonical-lossless"
+        );
+        // one stage per pinned package plus the terminal stage
+        assert_eq!(bf.stage_count(), lock.packages.len() + 1);
+    }
+}
+
+fn coordinator(jobs: usize) -> Coordinator {
+    Coordinator::with_table(CalibrationTable::builtin_fallback()).with_jobs(jobs)
+}
+
+#[test]
+fn resolver_scenarios_render_identically_across_jobs() {
+    for (name, nodes) in [("version-churn", vec![]), ("dep-storm", vec![8, 24])] {
+        let mut cfg = ExperimentConfig::paper_default(name).unwrap();
+        if !nodes.is_empty() {
+            cfg.nodes = nodes;
+        }
+        let serial = coordinator(1).run(&cfg).expect(name);
+        let parallel = coordinator(4).run(&cfg).expect(name);
+        let render = |figs: &[harbor::bench::Figure]| {
+            figs.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+        };
+        assert_eq!(
+            render(&serial),
+            render(&parallel),
+            "`{name}` must render byte-identically under --jobs 4"
+        );
+    }
+}
