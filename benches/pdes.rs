@@ -1,0 +1,146 @@
+//! Conservative parallel DES bench: serial pop stream vs lookahead
+//! domains, at fleet scale.
+//!
+//! The workload is an open-loop arrival stream (the shape of the
+//! fig1-scale fan-out waves and the registry-storm front door): `N`
+//! events spread uniformly over ten WAN-lookahead windows, each event
+//! carrying a fixed chunk of per-event work (an FNV mixing loop — a
+//! stand-in for pricing a deploy hop).  The serial row folds the work
+//! over [`EventQueue`]'s pop stream; the domain rows drain a
+//! [`PartitionedQueue`] window-by-window with the per-event work running
+//! inside the domain threads ([`PartitionedQueue::drain_fold_hash`]).
+//!
+//! Keys landed in `BENCH_micro.json` (CI-gated non-null):
+//!
+//! * `pdes_serial_{16k,256k,1m}_ns_per_iter` — serial fold wall time;
+//! * `pdes_domains_{16k,256k,1m}_ns_per_iter` — 4-domain drain;
+//! * `pdes_speedup_{16k,256k,1m}_x` — serial / domains ratio
+//!   (acceptance bar: > 1 on the 256k row);
+//! * `pdes_cross_msg_rate` — cross-domain share of pushes at 4 domains;
+//! * `pdes_determinism_ok` — 1.0 iff the domain digests for
+//!   D ∈ {1, 2, 4} are byte-identical to the serial digest;
+//! * `pdes_wall_s` — total bench wall time.
+
+mod common;
+
+use std::time::Instant;
+
+use harbor::des::{EventQueue, PartitionedQueue, SimRng, VirtualTime};
+use harbor::net::wan_lookahead;
+
+use common::{record_bench, time_rec};
+
+/// Node counts for the timing rows (the fig1-scale sweep's top end).
+const TIMED: [(usize, &str); 3] = [(16_384, "16k"), (262_144, "256k"), (1_048_576, "1m")];
+
+/// FNV mixing rounds per event — the simulated per-event pricing work.
+const WORK_ROUNDS: u64 = 64;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_fold(acc: u64, value: u64) -> u64 {
+    let mut h = acc;
+    for byte in value.to_le_bytes() {
+        h ^= byte as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// The per-event work: a fixed FNV mixing loop over the event payload.
+fn price(t: VirtualTime, ev: &u64) -> u64 {
+    let mut h = FNV_OFFSET ^ t.0;
+    for round in 0..WORK_ROUNDS {
+        h = fnv_fold(h, ev.wrapping_add(round));
+    }
+    h
+}
+
+/// `n` events spread uniformly over ten lookahead windows: domain =
+/// node index, payload = a seeded per-event word.
+fn workload(n: usize) -> Vec<(usize, VirtualTime, u64)> {
+    let span = 10 * wan_lookahead().0;
+    let mut rng = SimRng::new(42, "pdes-bench");
+    (0..n)
+        .map(|node| {
+            let t = VirtualTime(rng.uniform(0.0, span as f64) as u64);
+            (node, t, (node as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15))
+        })
+        .collect()
+}
+
+/// Serial reference: fold `price` over the [`EventQueue`] pop stream.
+fn serial_digest(events: &[(usize, VirtualTime, u64)]) -> u64 {
+    let mut q: EventQueue<u64> = EventQueue::with_capacity(events.len());
+    q.push_batch(events.iter().map(|&(_, t, ev)| (t, ev)).collect());
+    let mut digest = FNV_OFFSET;
+    while let Some((t, ev)) = q.pop() {
+        digest = fnv_fold(digest, price(t, &ev));
+    }
+    digest
+}
+
+/// Domain path: drain a [`PartitionedQueue`] with the work inside the
+/// domain threads. Returns the digest (byte-compared against serial).
+fn domain_digest(events: &[(usize, VirtualTime, u64)], domains: usize) -> u64 {
+    let mut q: PartitionedQueue<u64> =
+        PartitionedQueue::new(domains, wan_lookahead(), events.len());
+    q.push_batch(events.to_vec());
+    q.drain_fold_hash(price)
+}
+
+fn main() {
+    let t0 = Instant::now();
+    let mut rec: Vec<(String, f64)> = Vec::new();
+
+    println!("== conservative parallel DES: serial vs lookahead domains ==");
+    for &(n, tag) in &TIMED {
+        let events = workload(n);
+        let serial_ns = time_rec(
+            &mut rec,
+            &format!("pdes_serial_{tag}"),
+            &format!("serial pop-stream fold, {n} events"),
+            || {
+                std::hint::black_box(serial_digest(&events));
+            },
+        );
+        let domains_ns = time_rec(
+            &mut rec,
+            &format!("pdes_domains_{tag}"),
+            &format!("4-domain window drain, {n} events"),
+            || {
+                std::hint::black_box(domain_digest(&events, 4));
+            },
+        );
+        let speedup = serial_ns / domains_ns;
+        println!("  {n:>8} events: {speedup:.2}x serial/domains");
+        rec.push((format!("pdes_speedup_{tag}_x"), speedup));
+    }
+
+    // determinism + cross-domain traffic, measured untimed at 256k
+    let events = workload(262_144);
+    let reference = serial_digest(&events);
+    let mut ok = true;
+    for d in [1usize, 2, 4] {
+        let digest = domain_digest(&events, d);
+        if digest != reference {
+            eprintln!("[pdes] digest diverged at {d} domains: {digest:#x} vs {reference:#x}");
+            ok = false;
+        }
+    }
+    let mut q: PartitionedQueue<u64> = PartitionedQueue::new(4, wan_lookahead(), events.len());
+    q.push_batch(events.clone());
+    q.drain_fold_hash(price);
+    let stats = q.pdes_stats();
+    println!(
+        "  determinism {} | {}",
+        if ok { "ok" } else { "DIVERGED" },
+        stats.render()
+    );
+    rec.push(("pdes_determinism_ok".into(), if ok { 1.0 } else { 0.0 }));
+    rec.push(("pdes_cross_msg_rate".into(), stats.cross_rate()));
+    rec.push(("pdes_wall_s".into(), t0.elapsed().as_secs_f64()));
+
+    record_bench(&rec);
+}

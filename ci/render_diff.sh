@@ -1,0 +1,58 @@
+#!/usr/bin/env bash
+# Determinism render-diff gate, shared by CI and local runs.
+#
+# Every scenario below must render byte-identically for every
+# --domains x --jobs combination (the conservative-parallel-DES and
+# matrix-parallelism contracts), and rerun-stably at the widest
+# setting.  diff(1) on the CLI output is the bluntest possible check —
+# exactly what we want: any drift in a figure, note, or stat line
+# fails the gate.
+#
+# One scenario per entry: "<scenario> [extra flags...]".  Add new
+# scenarios here, not as copy-pasted workflow steps.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+SCENARIOS=(
+  "chaos-canary --nodes 512"
+  "registry-storm --nodes 4"
+  "version-churn"
+  "dep-storm --nodes 16,64"
+  "fig1-scale --nodes 4096"
+  "build-farm"
+)
+
+out=$(mktemp -d)
+trap 'rm -rf "$out"' EXIT
+
+for spec in ${SCENARIOS[@]+"${SCENARIOS[@]}"}; do
+  name=${spec%% *}
+  ref="$out/$name-ref.txt"
+  # shellcheck disable=SC2086  # $spec is a scenario plus its flags
+  cargo run --release -q -- bench $spec --domains 1 --jobs 1 > "$ref"
+  for domains in 1 2 4; do
+    for jobs in 1 4; do
+      if [ "$domains" -eq 1 ] && [ "$jobs" -eq 1 ]; then continue; fi
+      got="$out/$name-d$domains-j$jobs.txt"
+      # shellcheck disable=SC2086
+      cargo run --release -q -- bench $spec --domains "$domains" --jobs "$jobs" > "$got"
+      if ! diff "$ref" "$got"; then
+        echo "$name diverged at --domains $domains --jobs $jobs" >&2
+        exit 1
+      fi
+    done
+  done
+  # rerun stability at the widest setting
+  # shellcheck disable=SC2086
+  cargo run --release -q -- bench $spec --domains 4 --jobs 4 > "$out/$name-again.txt"
+  diff "$out/$name-d4-j4.txt" "$out/$name-again.txt"
+  echo "$name: byte-identical across --domains {1,2,4} x --jobs {1,4}, rerun-stable"
+done
+
+# Golden gate from the node-class collapsing tentpole: the collapsed
+# fig1-scale engine (the default) must render byte-identically to the
+# per-node reference walk at a size the reference can still afford.
+cargo run --release -q -- bench fig1-scale --nodes 4096 --jobs 1 > "$out/fig1-collapsed.txt"
+cargo run --release -q -- bench fig1-scale --nodes 4096 --jobs 1 --per-rank > "$out/fig1-per-rank.txt"
+diff "$out/fig1-collapsed.txt" "$out/fig1-per-rank.txt"
+echo "fig1-scale: collapsed engine matches the per-node reference at 4096 nodes"

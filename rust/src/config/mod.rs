@@ -31,6 +31,12 @@ pub struct ExperimentConfig {
     /// Rank-class batched engine for the modeled workloads (the default;
     /// `false` forces the O(ranks) per-rank reference path).
     pub batched: bool,
+    /// Lookahead domains for the container tiers' conservative
+    /// parallel DES (`--domains`; see [`crate::des::pdes`]): 1 runs
+    /// the serial reference queue, more partitions each cell's event
+    /// queue under the WAN lookahead bound.  Renders are
+    /// byte-identical for any value — this is a pure parallelism knob.
+    pub domains: usize,
     /// Fleet node counts (the `fig1-scale` deployment and
     /// `chaos-canary` upgrade sweeps), CI worker counts (the
     /// `build-farm` sweep), registry shard counts (the
@@ -81,6 +87,7 @@ impl ExperimentConfig {
                 ranks: vec![1],
                 sizes: vec![],
                 batched: true,
+                domains: 1,
                 nodes: vec![],
             },
             "fig3" => ExperimentConfig {
@@ -90,6 +97,7 @@ impl ExperimentConfig {
                 ranks: vec![24, 48, 96, 192],
                 sizes: vec![],
                 batched: true,
+                domains: 1,
                 nodes: vec![],
             },
             "fig4" => ExperimentConfig {
@@ -99,6 +107,7 @@ impl ExperimentConfig {
                 ranks: vec![24, 48, 96],
                 sizes: vec![],
                 batched: true,
+                domains: 1,
                 nodes: vec![],
             },
             "fig5a" => ExperimentConfig {
@@ -108,6 +117,7 @@ impl ExperimentConfig {
                 ranks: vec![16],
                 sizes: vec![2, 1, 0],
                 batched: true,
+                domains: 1,
                 nodes: vec![],
             },
             "fig5b" => ExperimentConfig {
@@ -117,6 +127,7 @@ impl ExperimentConfig {
                 ranks: vec![192],
                 sizes: vec![2, 1, 0],
                 batched: true,
+                domains: 1,
                 nodes: vec![],
             },
             "fig1-scale" => ExperimentConfig {
@@ -126,6 +137,7 @@ impl ExperimentConfig {
                 ranks: vec![],
                 sizes: vec![],
                 batched: true,
+                domains: 1,
                 nodes: SCALE_NODES.to_vec(),
             },
             // co-scheduled tenants on the shared Lustre (the §4
@@ -138,6 +150,7 @@ impl ExperimentConfig {
                 ranks: vec![24, 96],
                 sizes: vec![],
                 batched: true,
+                domains: 1,
                 nodes: vec![],
             },
             // the CI build farm (the §4.3 per-platform ARCH_OPT matrix
@@ -150,6 +163,7 @@ impl ExperimentConfig {
                 ranks: vec![],
                 sizes: vec![],
                 batched: true,
+                domains: 1,
                 nodes: FARM_WORKERS.to_vec(),
             },
             // the chaos canary upgrade: `nodes` carries the fleet
@@ -163,6 +177,7 @@ impl ExperimentConfig {
                 ranks: vec![],
                 sizes: vec![],
                 batched: true,
+                domains: 1,
                 nodes: vec![CHAOS_FLEET],
             },
             // the registry front-door storm: `nodes` carries the shard
@@ -175,6 +190,7 @@ impl ExperimentConfig {
                 ranks: vec![],
                 sizes: vec![],
                 batched: true,
+                domains: 1,
                 nodes: STORM_SHARDS.to_vec(),
             },
             // the version-churn sweep: cells are the fixed bump
@@ -189,6 +205,7 @@ impl ExperimentConfig {
                 ranks: vec![],
                 sizes: vec![],
                 batched: true,
+                domains: 1,
                 nodes: vec![],
             },
             // the cold-resolve storm: `nodes` carries the manifest
@@ -201,6 +218,7 @@ impl ExperimentConfig {
                 ranks: vec![],
                 sizes: vec![],
                 batched: true,
+                domains: 1,
                 nodes: STORM_MANIFESTS.to_vec(),
             },
             // no name enumeration here: the live list belongs to the
@@ -246,6 +264,7 @@ impl ExperimentConfig {
                 Value::Arr(self.sizes.iter().map(|&s| Value::num(s as f64)).collect()),
             ),
             ("batched", Value::Bool(self.batched)),
+            ("domains", Value::num(self.domains as f64)),
             (
                 "nodes",
                 Value::Arr(self.nodes.iter().map(|&n| Value::num(n as f64)).collect()),
@@ -282,6 +301,10 @@ impl ExperimentConfig {
         }
         if let Some(b) = v.get("batched").as_bool() {
             cfg.batched = b;
+        }
+        if let Some(d) = v.get("domains").as_u64() {
+            anyhow::ensure!(d >= 1, "`domains` must be >= 1 (got {d})");
+            cfg.domains = d as usize;
         }
         if let Some(arr) = v.get("nodes").as_arr() {
             cfg.nodes = arr
@@ -393,8 +416,19 @@ mod tests {
     fn json_round_trip() {
         let mut cfg = ExperimentConfig::paper_default("fig4").unwrap();
         cfg.batched = false;
+        cfg.domains = 4;
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn domains_default_to_serial_and_reject_zero() {
+        let cfg = ExperimentConfig::paper_default("fig1-scale").unwrap();
+        assert_eq!(cfg.domains, 1, "serial reference queue by default");
+        let v = json::parse(r#"{"figure": "fig1-scale", "domains": 4}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&v).unwrap().domains, 4);
+        let bad = json::parse(r#"{"figure": "fig1-scale", "domains": 0}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err());
     }
 
     #[test]

@@ -56,7 +56,7 @@
 //! a class) and re-merge after each wave when representative states
 //! reconverge ([`LayerCache::recency_signature`]), so a fault-free
 //! million-node deploy costs O(waves × layers) events through the same
-//! calendar [`EventQueue`] (class-level completions enter via
+//! calendar [`EventQueue`](crate::des::EventQueue) (class-level completions enter via
 //! `push_batch`).  [`Fleet`] is retained as the per-node reference
 //! implementation — the same pattern as `HeapEventQueue` — and for
 //! fleets of any size the collapsed path renders byte-identically
@@ -71,10 +71,10 @@
 use std::ops::Range;
 
 use crate::des::{
-    Duration, EventQueue, Fault, FaultSchedule, FaultStats, FifoResource, QueueStats, SimRng,
+    CellQueue, Duration, Fault, FaultSchedule, FaultStats, FifoResource, QueueStats, SimRng,
     VirtualTime,
 };
-use crate::net::{Fabric, PathCost};
+use crate::net::{wan_lookahead, Fabric, PathCost};
 use crate::util::human;
 
 use super::cache::{CacheStats, LayerCache};
@@ -491,13 +491,21 @@ pub struct FleetConfig {
     /// deploy, hit or miss (the `shifterimg`-style verify/mount cost —
     /// what a fully warm deploy still costs).
     pub per_layer_check: Duration,
+    /// Lookahead domains for the wave scheduler (see
+    /// [`crate::des::pdes`]): 1 runs the serial reference
+    /// [`EventQueue`](crate::des::EventQueue), more partitions the
+    /// fleet's completion events
+    /// by node index under the WAN lookahead bound
+    /// ([`crate::net::wan_lookahead`]).  Renders are byte-identical
+    /// for any value — this is a pure parallelism knob (`--domains`).
+    pub domains: usize,
 }
 
 impl FleetConfig {
     /// An Edison-like deployment target: Aries fabric, binary peer
     /// fan-out, unbounded node caches, 2 ms local metadata check per
-    /// layer.  (The registry shard count lives on the
-    /// [`ShardedRegistry`] the fleet pulls through.)
+    /// layer, serial scheduling.  (The registry shard count lives on
+    /// the [`ShardedRegistry`] the fleet pulls through.)
     pub fn hpc(nodes: usize) -> Self {
         FleetConfig {
             nodes,
@@ -505,6 +513,7 @@ impl FleetConfig {
             cache_capacity_bytes: u64::MAX,
             fabric: Fabric::aries(),
             per_layer_check: Duration::from_millis(2),
+            domains: 1,
         }
     }
 }
@@ -931,11 +940,15 @@ impl Fleet {
         // instant each node has all its layers (before local checks)
         let mut node_ready = vec![t0; n];
         // every transfer-completion instant is scheduled through one
-        // calendar queue (fan-out waves enter as batches) and drained
+        // cell queue (fan-out waves enter as batches) and drained
         // in time order at the end of its layer, so the depth
         // high-water mark in the report is the peak of concurrently
-        // in-flight completions, not a lifetime push count
-        let mut sched: EventQueue<usize> = EventQueue::with_capacity(scope.len());
+        // in-flight completions, not a lifetime push count.  With
+        // --domains > 1 the completions partition by node index under
+        // the WAN lookahead bound; the pop stream (and therefore the
+        // report) is byte-identical either way.
+        let mut sched: CellQueue<usize> =
+            CellQueue::new(self.config.domains, wan_lookahead(), scope.len());
 
         for &id in &unique {
             let mut needers: Vec<usize> = Vec::new();
@@ -966,7 +979,7 @@ impl Fleet {
                     for &node in &needers {
                         match ctx.deliver_direct(registry, id, blob.bytes, node, t0) {
                             Some(done) => {
-                                arrivals.push((done, node));
+                                arrivals.push((node, done, node));
                                 self.caches[node].admit(blob.clone());
                             }
                             None => failed[node] = true,
@@ -1053,7 +1066,7 @@ impl Fleet {
                             continue;
                         };
                         let seeder = remaining.remove(idx);
-                        sched.push(done, seeder);
+                        sched.push(seeder, done, seeder);
                         self.caches[seeder].admit(blob.clone());
                         holder_nodes.push(seeder);
                         (done, remaining)
@@ -1107,7 +1120,7 @@ impl Fleet {
                                     failed[node] = true;
                                 }
                             } else {
-                                arrivals.push((t, node));
+                                arrivals.push((node, t, node));
                                 self.caches[node].admit(blob.clone());
                                 holder_nodes.push(node);
                             }
@@ -1151,7 +1164,7 @@ impl Fleet {
                                 when = arrival;
                                 continue;
                             }
-                            sched.push(arrival, node);
+                            sched.push(node, arrival, node);
                             self.caches[node].admit(blob.clone());
                             holder_nodes.push(node);
                             break;
@@ -1760,8 +1773,11 @@ impl ClassFleet {
         // are synthesized alongside (its queue fully drains between
         // layers, so the node-level high-water mark is the largest
         // per-layer multiplicity sum)
-        let mut sched: EventQueue<(usize, u64)> =
-            EventQueue::with_capacity(self.classes.len().max(16));
+        let mut sched: CellQueue<(usize, u64)> = CellQueue::new(
+            self.config.domains,
+            wan_lookahead(),
+            self.classes.len().max(16),
+        );
         let mut v_pushes = 0u64;
         let mut v_hwm = 0u64;
 
@@ -1889,7 +1905,7 @@ impl ClassFleet {
                     remaining.insert(idx, origin);
                     si
                 };
-                sched.push(done, (seeder_ci, 1));
+                sched.push(seeder_ci, done, (seeder_ci, 1));
                 v_pushes += 1;
                 layer_inflight += 1;
                 v_hwm = v_hwm.max(layer_inflight);
@@ -1975,7 +1991,7 @@ impl ClassFleet {
                 }
                 let wave = (live * arity).min(total - served);
                 t += hop;
-                let mut arrivals: Vec<(VirtualTime, (usize, u64))> = Vec::new();
+                let mut arrivals: Vec<(usize, VirtualTime, (usize, u64))> = Vec::new();
                 let mut need = wave;
                 while need > 0 {
                     let (s, e, ci) = segments[cur_seg];
@@ -1996,7 +2012,7 @@ impl ClassFleet {
                                 self.classes[ci].dead = true;
                             }
                         } else {
-                            arrivals.push((t, (ci, 1)));
+                            arrivals.push((ci, t, (ci, 1)));
                             charge(&mut self.agg_cache, &mut self.classes[ci], |c| {
                                 c.admit(blob.clone())
                             });
@@ -2010,7 +2026,7 @@ impl ClassFleet {
                         } else {
                             self.split_run(ci, s2, s2 + take)
                         };
-                        arrivals.push((t, (target, take as u64)));
+                        arrivals.push((target, t, (target, take as u64)));
                         charge(&mut self.agg_cache, &mut self.classes[target], |c| {
                             c.admit(blob.clone())
                         });
@@ -2023,7 +2039,7 @@ impl ClassFleet {
                         cur_off = 0;
                     }
                 }
-                for &(_, (_, m)) in &arrivals {
+                for &(_, _, (_, m)) in &arrivals {
                     v_pushes += m;
                     layer_inflight += m;
                 }
@@ -2070,7 +2086,7 @@ impl ClassFleet {
                         when = arrival;
                         continue;
                     }
-                    sched.push(arrival, (ci, 1));
+                    sched.push(ci, arrival, (ci, 1));
                     v_pushes += 1;
                     layer_inflight += 1;
                     v_hwm = v_hwm.max(layer_inflight);

@@ -24,7 +24,9 @@
 //! ```
 //!
 //! Every concurrent session is multiplexed onto the shard frontends
-//! through one calendar [`EventQueue`], so submissions happen in
+//! through one calendar [`CellQueue`] (serial at `--domains 1`,
+//! lookahead-partitioned by session index otherwise — see
+//! [`crate::des::pdes`]), so submissions happen in
 //! nondecreasing virtual time (the FIFO contract of
 //! [`FifoResource`](crate::des::FifoResource)) and the whole run is a
 //! deterministic function of `(requests, schedule, policy, seed)` —
@@ -44,9 +46,10 @@
 use std::fmt;
 
 use crate::des::{
-    Duration, EventQueue, FaultSchedule, FaultStats, LatencyHistogram, QueueStats, SimRng,
+    CellQueue, Duration, FaultSchedule, FaultStats, LatencyHistogram, QueueStats, SimRng,
     VirtualTime,
 };
+use crate::net::wan_lookahead;
 use crate::util::rng::fnv1a;
 
 use super::cache::LayerCache;
@@ -297,6 +300,7 @@ pub struct FrontDoor {
     edge_cache: Option<LayerCache>,
     edge_hit_time: Duration,
     next_session: u64,
+    domains: usize,
 }
 
 impl FrontDoor {
@@ -312,7 +316,19 @@ impl FrontDoor {
             edge_cache: None,
             edge_hit_time: Duration::from_millis(2),
             next_session: 0,
+            domains: 1,
         }
+    }
+
+    /// Partition the session event loop into `domains` lookahead
+    /// domains (see [`crate::des::pdes`]): sessions are routed by
+    /// index under the WAN lookahead bound
+    /// ([`crate::net::wan_lookahead`]).  Reports are byte-identical
+    /// for any value — this is a pure parallelism knob (`--domains`);
+    /// 1 (the default) keeps the serial reference queue.
+    pub fn with_domains(mut self, domains: usize) -> Self {
+        self.domains = domains.max(1);
+        self
     }
 
     /// Override the transfer chunk size (must be ≥ 1).
@@ -387,7 +403,7 @@ impl FrontDoor {
         let n = requests.len();
         let mut sessions: Vec<TransferSession> = Vec::with_capacity(n);
         let mut payloads: Vec<Option<Layer>> = Vec::with_capacity(n);
-        let mut q: EventQueue<Ev> = EventQueue::with_capacity(n.max(1));
+        let mut q: CellQueue<Ev> = CellQueue::new(self.domains, wan_lookahead(), n.max(1));
         let mut opens = Vec::with_capacity(n);
         for (i, req) in requests.into_iter().enumerate() {
             sessions.push(TransferSession {
@@ -414,7 +430,7 @@ impl FrontDoor {
             });
             self.next_session += 1;
             payloads.push(req.payload);
-            opens.push((req.at, Ev::Open(i)));
+            opens.push((i, req.at, Ev::Open(i)));
         }
         q.push_batch(opens);
 
@@ -472,7 +488,7 @@ impl FrontDoor {
                             let wait =
                                 self.policy.backoff(sessions[i].attempt, rng.as_deref_mut());
                             sessions[i].retries += 1;
-                            q.push(now + wait, Ev::Retry(i));
+                            q.push(i, now + wait, Ev::Retry(i));
                         }
                     } else {
                         sessions[i].acked_bytes += bytes;
@@ -537,7 +553,7 @@ impl FrontDoor {
         i: usize,
         now: VirtualTime,
         sessions: &mut [TransferSession],
-        q: &mut EventQueue<Ev>,
+        q: &mut CellQueue<Ev>,
         rng: &mut Option<&mut SimRng>,
     ) -> bool {
         let s = &mut sessions[i];
@@ -548,7 +564,7 @@ impl FrontDoor {
                 if failover {
                     s.failovers += 1;
                 }
-                q.push(done, Ev::Sent { s: i, start: now, bytes: chunk });
+                q.push(i, done, Ev::Sent { s: i, start: now, bytes: chunk });
                 true
             }
             ShardAttempt::AllDown { next_up } => {
@@ -559,7 +575,7 @@ impl FrontDoor {
                 }
                 let wait = self.policy.backoff(s.attempt, rng.as_deref_mut());
                 s.retries += 1;
-                q.push(up.max(now) + wait, Ev::Retry(i));
+                q.push(i, up.max(now) + wait, Ev::Retry(i));
                 true
             }
         }

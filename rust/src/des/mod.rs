@@ -16,6 +16,11 @@
 //!   and benchmarked against (doc-hidden: diff-test/bench use only);
 //!   [`stats`] holds the scheduler's observability counters.  The
 //!   internals guide is docs/DES.md.
+//! * [`CellQueue`] / [`PartitionedQueue`] — the conservative parallel
+//!   DES over lookahead domains ([`pdes`]): per-domain calendar queues
+//!   advanced window-by-window under a lookahead bound, merged
+//!   deterministically so the pop stream is byte-identical to the
+//!   serial queue for any `--domains` count.
 //! * [`FifoResource`] — a `c`-server queueing station with deterministic
 //!   service times; models the Lustre metadata server, NICs under
 //!   contention, and the registry's upload slots.  Its servers are
@@ -31,6 +36,7 @@
 //!   scenarios.
 
 pub mod fault;
+pub mod pdes;
 mod queue;
 mod resource;
 mod rng;
@@ -38,6 +44,7 @@ pub mod stats;
 mod time;
 
 pub use fault::{Fault, FaultConfig, FaultSchedule};
+pub use pdes::{CellQueue, PartitionedQueue, PdesStats};
 pub use queue::{EventQueue, HeapEventQueue};
 pub use resource::FifoResource;
 pub use rng::SimRng;

@@ -1,0 +1,787 @@
+//! Conservative parallel DES over lookahead domains.
+//!
+//! The calendar queue ([`EventQueue`]) is deterministic but
+//! single-threaded: a million-node `fig1-scale` deploy or a 16-worker
+//! build farm burns one core however many the machine has.  This
+//! module partitions a cell's event population into **lookahead
+//! domains** — disjoint slices of the simulated cluster (node ranges,
+//! node classes, sessions, workers) — and runs a conservative
+//! parallel simulation across them in the Chandy–Misra–Bryant style:
+//!
+//! * each domain owns a private [`EventQueue`], so intra-domain
+//!   scheduling stays the O(1) calendar hot path;
+//! * a **lookahead bound** `L` (for the container tiers: the WAN
+//!   registry latency, [`wan_lookahead`](crate::net::wan_lookahead) —
+//!   no cross-domain effect can land sooner than a registry round
+//!   trip) lets every domain advance to the horizon
+//!   `LBTS = min(domain heads) + L` without waiting on its peers;
+//! * domains with nothing due before the horizon contribute only
+//!   their lower-bound time stamp — the classic **null message**,
+//!   counted in [`PdesStats::null_msgs`];
+//! * the per-window drains run on scoped threads (one per domain)
+//!   when the population is large enough to pay for them, and their
+//!   results are **merged deterministically**.
+//!
+//! ## The determinism contract survives
+//!
+//! Every event carries a **global push sequence number** (`gseq`),
+//! assigned in push order exactly like the serial queue's `seq`.  The
+//! merge pops the minimum `(time, gseq)` over the window buffer and
+//! the live domain heads, so the pop stream is **byte-for-byte the
+//! serial `(time, seq)` stream for any domain count and any domain
+//! mapping** — partitioning affects only which core does the work,
+//! never the answer.  Late pushes that land inside an already-drained
+//! window (a consumer scheduling new work mid-drain) are caught by the
+//! live-head comparison and pop in their correct slot
+//! ([`PdesStats::preemptions`] counts them).  `tests/queue_equivalence.rs`
+//! diff-tests partitioned pop streams against the serial reference on
+//! randomized workloads, and the scenario renders are CI-gated
+//! byte-identical across `--domains {1,2,4}` (`ci/render_diff.sh`).
+//!
+//! [`CellQueue`] is the front consumers use: `--domains 1` selects the
+//! plain serial [`EventQueue`] (the retained reference path), anything
+//! larger the partitioned engine — mirroring the per-rank vs collapsed
+//! split in the distribution tier.
+
+use std::collections::VecDeque;
+use std::thread;
+
+use super::stats::QueueStats;
+use super::{Duration, EventQueue, VirtualTime};
+
+/// Queued events required before a window drain recruits threads: a
+/// scoped spawn costs ~10 µs, so small populations drain serially
+/// (identical results either way — the threshold is a pure perf knob).
+const PARALLEL_DRAIN_MIN: usize = 4096;
+
+/// FNV-1a offset basis (used by the deterministic drain digest).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a prime.
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold one value into an FNV-1a accumulator (order-sensitive, so a
+/// digest pins the exact merge order, not just the event multiset).
+fn fnv_fold(acc: u64, value: u64) -> u64 {
+    let mut h = acc;
+    for b in value.to_le_bytes() {
+        h = (h ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Observability counters for one [`PartitionedQueue`] lifetime.
+///
+/// These describe the *parallel machinery* — windows, null messages,
+/// cross-domain traffic — and are reported beside the semantic
+/// [`QueueStats`].  None of them feed back into scheduling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PdesStats {
+    /// Lookahead domains the queue was built with.
+    pub domains: usize,
+    /// LBTS windows advanced (one horizon computation + drain each).
+    pub windows: u64,
+    /// Windows whose drain ran on scoped threads (the rest stayed
+    /// serial because the population was below the threshold).
+    pub parallel_windows: u64,
+    /// Events moved from domain queues into the merge buffer by
+    /// window drains.
+    pub drained: u64,
+    /// Domain-windows that contributed no event, only their lower
+    /// bound time stamp (the conservative null message).
+    pub null_msgs: u64,
+    /// Pushes routed to a different domain than the one whose event
+    /// the consumer was processing (cross-domain messages).
+    pub cross_msgs: u64,
+    /// Pushes that stayed inside the processing domain.
+    pub local_msgs: u64,
+    /// Pushes that landed earlier than already-drained window events
+    /// (served correctly via the live-head comparison).
+    pub preemptions: u64,
+}
+
+impl PdesStats {
+    /// Fraction of pushes that crossed a domain boundary, in `[0, 1]`
+    /// (0.0 before any push).  High rates mean the domain mapping
+    /// fights the workload's communication structure.
+    pub fn cross_rate(&self) -> f64 {
+        let total = self.cross_msgs + self.local_msgs;
+        if total == 0 {
+            0.0
+        } else {
+            self.cross_msgs as f64 / total as f64
+        }
+    }
+
+    /// One-line summary for reports and bench output.
+    pub fn render(&self) -> String {
+        format!(
+            "pdes: {} domain(s), {} window(s) ({} threaded), {} drained, \
+             {} null msg(s), {} cross / {} local push(es), {} preemption(s)",
+            self.domains,
+            self.windows,
+            self.parallel_windows,
+            self.drained,
+            self.null_msgs,
+            self.cross_msgs,
+            self.local_msgs,
+            self.preemptions,
+        )
+    }
+}
+
+/// Drain every event due at or before `horizon` out of one domain
+/// queue, preserving the domain's own `(time, gseq)` order.
+fn drain_until<T>(
+    q: &mut EventQueue<(u64, T)>,
+    horizon: VirtualTime,
+) -> Vec<(VirtualTime, u64, T)> {
+    let mut out = Vec::new();
+    while q.peek_time().is_some_and(|t| t <= horizon) {
+        let (t, (g, ev)) = q.pop().expect("peeked event pops");
+        out.push((t, g, ev));
+    }
+    out
+}
+
+/// A conservatively parallel event queue: per-domain calendar queues
+/// advanced window-by-window under a lookahead bound, with a
+/// deterministic `(time, gseq)` merge that reproduces the serial
+/// [`EventQueue`] pop stream byte-for-byte (module docs tell the full
+/// story).
+#[derive(Clone, Debug)]
+pub struct PartitionedQueue<T> {
+    /// One calendar queue per lookahead domain; payloads carry their
+    /// global push sequence number so the merge can break time ties
+    /// exactly as the serial queue does.
+    domains: Vec<EventQueue<(u64, T)>>,
+    /// Cached `(time, gseq)` of each domain's earliest live event
+    /// (`None` = empty).  Kept exact on every push/pop so the merge's
+    /// per-pop live minimum is O(domains), not O(buckets).
+    heads: Vec<Option<(VirtualTime, u64)>>,
+    /// The lookahead bound `L`: no cross-domain push can land earlier
+    /// than `now + L`, so every domain may drain to `LBTS + L`.
+    lookahead: Duration,
+    /// Window events already drained out of the domain queues, merged
+    /// ascending by `(time, gseq)`; entries remember their domain.
+    buffer: VecDeque<(VirtualTime, u64, usize, T)>,
+    /// Global push counter — the serial queue's `seq`, reproduced.
+    gseq: u64,
+    /// Live events (buffered-but-unpopped ones still count).
+    len: usize,
+    /// High-water mark of `len` (matches the serial trajectory).
+    depth_hwm: usize,
+    /// Lifetime pops.
+    pops: u64,
+    /// Domain of the most recently popped event (cross-message
+    /// accounting: a consumer's pushes are attributed to it).
+    current_domain: Option<usize>,
+    /// Parallel-machinery counters.
+    stats: PdesStats,
+}
+
+impl<T: Send> PartitionedQueue<T> {
+    /// A queue over `domains` lookahead domains (clamped to >= 1) with
+    /// lookahead bound `lookahead`, pre-sized for `cap` in-flight
+    /// events split across the domains.
+    pub fn new(domains: usize, lookahead: Duration, cap: usize) -> Self {
+        let n = domains.max(1);
+        let per = cap / n + 1;
+        PartitionedQueue {
+            domains: (0..n).map(|_| EventQueue::with_capacity(per)).collect(),
+            heads: vec![None; n],
+            lookahead,
+            buffer: VecDeque::new(),
+            gseq: 0,
+            len: 0,
+            depth_hwm: 0,
+            pops: 0,
+            current_domain: None,
+            stats: PdesStats {
+                domains: n,
+                ..PdesStats::default()
+            },
+        }
+    }
+
+    /// Number of lookahead domains.
+    pub fn domains(&self) -> usize {
+        self.domains.len()
+    }
+
+    /// The lookahead bound the horizons advance by.
+    pub fn lookahead(&self) -> Duration {
+        self.lookahead
+    }
+
+    /// Schedule `event` at `time` in `domain` (wrapped modulo the
+    /// domain count, so callers can pass a raw node/class/session
+    /// index).  The event's pop position is independent of the domain:
+    /// routing affects which core drains it, never the order.
+    pub fn push(&mut self, domain: usize, time: VirtualTime, event: T) {
+        let d = domain % self.domains.len();
+        match self.current_domain {
+            Some(cd) if cd != d => self.stats.cross_msgs += 1,
+            _ => self.stats.local_msgs += 1,
+        }
+        if let Some(&(last, _, _, _)) = self.buffer.back() {
+            if time < last {
+                self.stats.preemptions += 1;
+            }
+        }
+        let g = self.gseq;
+        self.gseq += 1;
+        self.domains[d].push(time, (g, event));
+        if self.heads[d].map_or(true, |head| (time, g) < head) {
+            self.heads[d] = Some((time, g));
+        }
+        self.len += 1;
+        self.depth_hwm = self.depth_hwm.max(self.len);
+    }
+
+    /// Schedule a whole batch of `(domain, time, event)` entries.
+    ///
+    /// Exactly the serial [`EventQueue::push_batch`] contract: the
+    /// batch is stably sorted by time **globally** (across domains)
+    /// and sequence numbers are assigned in sorted order, so events
+    /// earlier in the batch keep FIFO priority among equal timestamps
+    /// no matter which domains they route to.
+    pub fn push_batch(&mut self, mut batch: Vec<(usize, VirtualTime, T)>) {
+        if batch.is_empty() {
+            return;
+        }
+        batch.sort_by_key(|e| e.1);
+        for (domain, time, event) in batch {
+            self.push(domain, time, event);
+        }
+    }
+
+    /// Pop the earliest event — globally, in `(time, gseq)` order,
+    /// byte-identical to the serial pop stream.
+    pub fn pop(&mut self) -> Option<(VirtualTime, T)> {
+        loop {
+            let buffered = self.buffer.front().map(|&(t, g, _, _)| (t, g));
+            let live = self.min_live();
+            match (buffered, live) {
+                (None, None) => return None,
+                // A late push beat the drained window: serve it live.
+                (Some(b), Some((lt, lg, d))) if (lt, lg) < b => return Some(self.pop_live(d)),
+                (Some(_), _) => {
+                    let (t, _, d, ev) = self.buffer.pop_front().expect("buffered event");
+                    self.finish_pop(d);
+                    return Some((t, ev));
+                }
+                (None, Some(_)) => self.refill(),
+            }
+        }
+    }
+
+    /// Timestamp of the next event without removing it.
+    pub fn peek_time(&self) -> Option<VirtualTime> {
+        let buffered = self.buffer.front().map(|&(t, g, _, _)| (t, g));
+        let live = self.min_live().map(|(t, g, _)| (t, g));
+        match (buffered, live) {
+            (Some(a), Some(b)) => Some(a.min(b).0),
+            (Some(a), None) => Some(a.0),
+            (None, Some(b)) => Some(b.0),
+            (None, None) => None,
+        }
+    }
+
+    /// Number of queued events (window-buffered ones included).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether no events are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Semantic scheduler counters, serial-identical by construction:
+    /// `depth`/`depth_hwm`/`pushes`/`pops` track the wrapper-level
+    /// push/pop trajectory, which is the same sequence the serial
+    /// queue sees.  The geometry fields (buckets, width, resizes,
+    /// sparse jumps) are summed over the per-domain calendars — they
+    /// describe this engine's internals and are *not* part of the
+    /// determinism contract (reports that must stay byte-identical
+    /// across `--domains` render only the semantic counters).
+    pub fn stats(&self) -> QueueStats {
+        let mut buckets = 0;
+        let mut occupied = 0;
+        let mut width = 0;
+        let mut resizes = 0;
+        let mut jumps = 0;
+        for q in &self.domains {
+            let s = q.stats();
+            buckets += s.buckets;
+            occupied += s.occupied_buckets;
+            width = s.bucket_width_ns.max(width);
+            resizes += s.resizes;
+            jumps += s.sparse_jumps;
+        }
+        QueueStats {
+            depth: self.len,
+            depth_hwm: self.depth_hwm,
+            pushes: self.gseq,
+            pops: self.pops,
+            buckets,
+            occupied_buckets: occupied,
+            bucket_width_ns: width,
+            resizes,
+            sparse_jumps: jumps,
+        }
+    }
+
+    /// Snapshot of the parallel-machinery counters.
+    pub fn pdes_stats(&self) -> PdesStats {
+        self.stats
+    }
+
+    /// Drain the whole queue, computing `work(time, &event)` for every
+    /// event *inside its domain's drain thread* and folding the
+    /// results into an FNV-1a digest in global `(time, gseq)` order.
+    ///
+    /// This is the parallel payoff path for workloads that are fully
+    /// scheduled up front (fan-out waves, open-loop arrival streams):
+    /// the per-event work runs domain-parallel, yet the returned
+    /// digest is byte-identical to folding the serial pop stream —
+    /// `benches/pdes.rs` records the serial-vs-domains speedup and
+    /// asserts the digests agree.  Events already moved to the window
+    /// buffer are folded first (they precede everything live).
+    pub fn drain_fold_hash<W>(&mut self, work: W) -> u64
+    where
+        W: Fn(VirtualTime, &T) -> u64 + Sync,
+    {
+        let mut digest = FNV_OFFSET;
+        while let Some((t, _, d, ev)) = self.buffer.pop_front() {
+            digest = fnv_fold(digest, work(t, &ev));
+            self.finish_pop(d);
+        }
+        loop {
+            let Some((min_t, _, _)) = self.min_live() else {
+                return digest;
+            };
+            let horizon = min_t + self.lookahead;
+            self.stats.windows += 1;
+            let parallel = self.domains.len() > 1 && self.len >= PARALLEL_DRAIN_MIN;
+            let per_domain: Vec<Vec<(VirtualTime, u64, u64)>> = if parallel {
+                self.stats.parallel_windows += 1;
+                let w = &work;
+                thread::scope(|s| {
+                    let handles: Vec<_> = self
+                        .domains
+                        .iter_mut()
+                        .map(|q| {
+                            s.spawn(move || {
+                                let mut out = Vec::new();
+                                while q.peek_time().is_some_and(|t| t <= horizon) {
+                                    let (t, (g, ev)) = q.pop().expect("peeked event pops");
+                                    out.push((t, g, w(t, &ev)));
+                                }
+                                out
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("domain drain thread"))
+                        .collect()
+                })
+            } else {
+                self.domains
+                    .iter_mut()
+                    .map(|q| {
+                        drain_until(q, horizon)
+                            .into_iter()
+                            .map(|(t, g, ev)| (t, g, work(t, &ev)))
+                            .collect()
+                    })
+                    .collect()
+            };
+            let mut window: Vec<(VirtualTime, u64, u64)> = Vec::new();
+            for (d, part) in per_domain.into_iter().enumerate() {
+                if part.is_empty() {
+                    self.stats.null_msgs += 1;
+                }
+                self.heads[d] = self.domains[d].peek().map(|(t, &(g, _))| (t, g));
+                window.extend(part);
+            }
+            window.sort_unstable_by_key(|&(t, g, _)| (t, g));
+            self.stats.drained += window.len() as u64;
+            for &(_, _, r) in &window {
+                digest = fnv_fold(digest, r);
+                self.len -= 1;
+                self.pops += 1;
+            }
+        }
+    }
+
+    /// Cached minimum live `(time, gseq)` with its domain — O(domains).
+    fn min_live(&self) -> Option<(VirtualTime, u64, usize)> {
+        let mut best: Option<(VirtualTime, u64, usize)> = None;
+        for (d, head) in self.heads.iter().enumerate() {
+            if let Some((t, g)) = *head {
+                if best.map_or(true, |(bt, bg, _)| (t, g) < (bt, bg)) {
+                    best = Some((t, g, d));
+                }
+            }
+        }
+        best
+    }
+
+    /// Pop domain `d`'s head directly (a preempting late push).
+    fn pop_live(&mut self, d: usize) -> (VirtualTime, T) {
+        let (t, (_, ev)) = self.domains[d].pop().expect("live head pops");
+        self.heads[d] = self.domains[d].peek().map(|(ht, &(hg, _))| (ht, hg));
+        self.finish_pop(d);
+        (t, ev)
+    }
+
+    /// Shared pop bookkeeping (both the buffered and live paths).
+    fn finish_pop(&mut self, d: usize) {
+        self.len -= 1;
+        self.pops += 1;
+        self.current_domain = Some(d);
+    }
+
+    /// Advance one LBTS window: drain every domain to
+    /// `min(live heads) + lookahead` (threaded when the population
+    /// pays for it) and merge the results into the buffer in global
+    /// `(time, gseq)` order.  Guaranteed progress: the domain holding
+    /// the minimum always contributes at least that event.
+    fn refill(&mut self) {
+        let Some((min_t, _, _)) = self.min_live() else {
+            return;
+        };
+        let horizon = min_t + self.lookahead;
+        self.stats.windows += 1;
+        let parallel = self.domains.len() > 1 && self.len >= PARALLEL_DRAIN_MIN;
+        let per_domain: Vec<Vec<(VirtualTime, u64, T)>> = if parallel {
+            self.stats.parallel_windows += 1;
+            thread::scope(|s| {
+                let handles: Vec<_> = self
+                    .domains
+                    .iter_mut()
+                    .map(|q| s.spawn(move || drain_until(q, horizon)))
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("domain drain thread"))
+                    .collect()
+            })
+        } else {
+            self.domains
+                .iter_mut()
+                .map(|q| drain_until(q, horizon))
+                .collect()
+        };
+        let mut window: Vec<(VirtualTime, u64, usize, T)> = Vec::new();
+        for (d, part) in per_domain.into_iter().enumerate() {
+            if part.is_empty() {
+                self.stats.null_msgs += 1;
+            }
+            self.heads[d] = self.domains[d].peek().map(|(t, &(g, _))| (t, g));
+            for (t, g, ev) in part {
+                window.push((t, g, d, ev));
+            }
+        }
+        window.sort_unstable_by_key(|&(t, g, _, _)| (t, g));
+        self.stats.drained += window.len() as u64;
+        self.buffer.extend(window);
+    }
+}
+
+/// The queue a simulation cell schedules through: the serial
+/// [`EventQueue`] reference at `--domains 1`, the conservatively
+/// parallel [`PartitionedQueue`] above it — same pop stream either
+/// way, so the choice is a pure performance knob (exactly the
+/// per-rank-vs-collapsed split the distribution tier already uses).
+#[derive(Clone, Debug)]
+pub enum CellQueue<T> {
+    /// The single serial calendar queue (reference path).
+    Serial(EventQueue<T>),
+    /// Per-domain queues under the conservative parallel merge.
+    Partitioned(PartitionedQueue<T>),
+}
+
+impl<T: Send> CellQueue<T> {
+    /// A cell queue over `domains` lookahead domains (<= 1 selects the
+    /// serial reference), with lookahead bound `lookahead`, pre-sized
+    /// for `cap` in-flight events.
+    pub fn new(domains: usize, lookahead: Duration, cap: usize) -> Self {
+        if domains <= 1 {
+            CellQueue::Serial(EventQueue::with_capacity(cap))
+        } else {
+            CellQueue::Partitioned(PartitionedQueue::new(domains, lookahead, cap))
+        }
+    }
+
+    /// Schedule `event` at `time`; `domain` is a raw partition index
+    /// (node, class, session, worker — wrapped modulo the domain
+    /// count) and is ignored on the serial path.
+    pub fn push(&mut self, domain: usize, time: VirtualTime, event: T) {
+        match self {
+            CellQueue::Serial(q) => q.push(time, event),
+            CellQueue::Partitioned(q) => q.push(domain, time, event),
+        }
+    }
+
+    /// Schedule a batch of `(domain, time, event)` entries under the
+    /// [`EventQueue::push_batch`] contract (global stable sort by
+    /// time; FIFO priority by batch position among ties).
+    pub fn push_batch(&mut self, batch: Vec<(usize, VirtualTime, T)>) {
+        match self {
+            CellQueue::Serial(q) => {
+                q.push_batch(batch.into_iter().map(|(_, t, ev)| (t, ev)).collect())
+            }
+            CellQueue::Partitioned(q) => q.push_batch(batch),
+        }
+    }
+
+    /// Pop the earliest event in global `(time, seq)` order.
+    pub fn pop(&mut self) -> Option<(VirtualTime, T)> {
+        match self {
+            CellQueue::Serial(q) => q.pop(),
+            CellQueue::Partitioned(q) => q.pop(),
+        }
+    }
+
+    /// Timestamp of the next event without removing it.
+    pub fn peek_time(&self) -> Option<VirtualTime> {
+        match self {
+            CellQueue::Serial(q) => q.peek_time(),
+            CellQueue::Partitioned(q) => q.peek_time(),
+        }
+    }
+
+    /// Number of queued events.
+    pub fn len(&self) -> usize {
+        match self {
+            CellQueue::Serial(q) => q.len(),
+            CellQueue::Partitioned(q) => q.len(),
+        }
+    }
+
+    /// Whether no events are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Scheduler counters: the semantic fields
+    /// (`depth`/`depth_hwm`/`pushes`/`pops`) are byte-identical across
+    /// domain counts; see [`PartitionedQueue::stats`] for the geometry
+    /// caveat.
+    pub fn stats(&self) -> QueueStats {
+        match self {
+            CellQueue::Serial(q) => q.stats(),
+            CellQueue::Partitioned(q) => q.stats(),
+        }
+    }
+
+    /// The parallel-machinery counters, when partitioned.
+    pub fn pdes(&self) -> Option<PdesStats> {
+        match self {
+            CellQueue::Serial(_) => None,
+            CellQueue::Partitioned(q) => Some(q.pdes_stats()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(ns: u64) -> VirtualTime {
+        VirtualTime::ZERO + Duration::from_nanos(ns)
+    }
+
+    const L: Duration = Duration::from_nanos(50);
+
+    /// Serial pop stream of the same (time, payload) push sequence.
+    fn serial_stream(pushes: &[(usize, u64, u32)]) -> Vec<(VirtualTime, u32)> {
+        let mut q = EventQueue::new();
+        for &(_, ns, ev) in pushes {
+            q.push(t(ns), ev);
+        }
+        std::iter::from_fn(move || q.pop()).collect()
+    }
+
+    fn partitioned_stream(domains: usize, pushes: &[(usize, u64, u32)]) -> Vec<(VirtualTime, u32)> {
+        let mut q = PartitionedQueue::new(domains, L, pushes.len());
+        for &(d, ns, ev) in pushes {
+            q.push(d, t(ns), ev);
+        }
+        std::iter::from_fn(move || q.pop()).collect()
+    }
+
+    #[test]
+    fn pop_stream_matches_serial_for_any_domain_count() {
+        // ties at the horizon, a sparse outlier, interleaved domains
+        let pushes: Vec<(usize, u64, u32)> = vec![
+            (0, 100, 0),
+            (1, 100, 1), // cross-domain tie: gseq must break it
+            (2, 150, 2), // exactly at domain 0's first horizon (100+50)
+            (0, 100, 3),
+            (3, 5_000, 4), // beyond every early horizon
+            (1, 0, 5),
+            (2, 151, 6), // just past the horizon
+        ];
+        let reference = serial_stream(&pushes);
+        for domains in [1, 2, 3, 4, 8] {
+            assert_eq!(
+                partitioned_stream(domains, &pushes),
+                reference,
+                "domains={domains}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_domain_and_all_in_one_domain_are_fine() {
+        // everything routes to domain 0 of 4: three permanently idle
+        // domains emit only null messages
+        let pushes: Vec<(usize, u64, u32)> =
+            (0..200).map(|i| (0usize, i * 7 % 90, i as u32)).collect();
+        let reference = serial_stream(&pushes);
+        let mut q = PartitionedQueue::new(4, L, pushes.len());
+        for &(d, ns, ev) in &pushes {
+            q.push(d, t(ns), ev);
+        }
+        let got: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(got, reference);
+        let s = q.pdes_stats();
+        assert!(s.null_msgs >= 3, "idle domains must show as null messages");
+        assert!(s.windows >= 1);
+    }
+
+    #[test]
+    fn push_batch_keeps_global_fifo_priority_across_domains() {
+        let batch: Vec<(usize, VirtualTime, u32)> = vec![
+            (1, t(30), 0),
+            (0, t(10), 1),
+            (2, t(10), 2), // same instant, later in batch: pops after 1
+            (1, t(10), 3),
+        ];
+        let mut serial = EventQueue::new();
+        serial.push_batch(batch.iter().map(|&(_, tt, ev)| (tt, ev)).collect());
+        let reference: Vec<_> = std::iter::from_fn(|| serial.pop()).collect();
+        for domains in [2, 3] {
+            let mut q = PartitionedQueue::new(domains, L, 8);
+            q.push_batch(batch.clone());
+            let got: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+            assert_eq!(got, reference, "domains={domains}");
+        }
+    }
+
+    #[test]
+    fn late_pushes_preempt_the_drained_window() {
+        let mut q = PartitionedQueue::new(2, Duration::from_nanos(1_000), 16);
+        q.push(0, t(100), 0u32);
+        q.push(1, t(200), 1);
+        q.push(0, t(300), 2);
+        // first pop drains the whole window [100, 1100] into the buffer
+        assert_eq!(q.pop(), Some((t(100), 0)));
+        // now schedule work *inside* the drained span — it must pop in
+        // its correct slot, before the buffered t=200/t=300 events
+        q.push(1, t(150), 9);
+        assert_eq!(q.pop(), Some((t(150), 9)));
+        assert_eq!(q.pop(), Some((t(200), 1)));
+        assert_eq!(q.pop(), Some((t(300), 2)));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pdes_stats().preemptions, 1);
+    }
+
+    #[test]
+    fn semantic_stats_match_the_serial_trajectory() {
+        let pushes: Vec<(usize, u64, u32)> =
+            (0..500).map(|i| (i % 5, (i * 31) % 400, i as u32)).collect();
+        let mut serial = EventQueue::new();
+        let mut part = PartitionedQueue::new(4, L, 64);
+        for &(d, ns, ev) in &pushes {
+            serial.push(t(ns), ev);
+            part.push(d, t(ns), ev);
+        }
+        for _ in 0..200 {
+            assert_eq!(serial.pop(), part.pop());
+        }
+        let (a, b) = (serial.stats(), part.stats());
+        assert_eq!(a.depth, b.depth);
+        assert_eq!(a.depth_hwm, b.depth_hwm);
+        assert_eq!(a.pushes, b.pushes);
+        assert_eq!(a.pops, b.pops);
+    }
+
+    #[test]
+    fn drain_fold_hash_is_domain_invariant() {
+        let work = |tt: VirtualTime, ev: &u32| {
+            tt.0.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ u64::from(*ev)
+        };
+        let pushes: Vec<(usize, u64, u32)> =
+            (0..3_000).map(|i| (i % 7, (i * 131) % 5_000, i as u32)).collect();
+        // serial reference digest over the serial pop stream
+        let mut serial = EventQueue::new();
+        for &(_, ns, ev) in &pushes {
+            serial.push(t(ns), ev);
+        }
+        let mut reference = FNV_OFFSET;
+        while let Some((tt, ev)) = serial.pop() {
+            reference = fnv_fold(reference, work(tt, &ev));
+        }
+        for domains in [1, 2, 4] {
+            let mut q = PartitionedQueue::new(domains, L, pushes.len());
+            for &(d, ns, ev) in &pushes {
+                q.push(d, t(ns), ev);
+            }
+            assert_eq!(q.drain_fold_hash(work), reference, "domains={domains}");
+            assert!(q.is_empty());
+        }
+    }
+
+    #[test]
+    fn cross_and_local_messages_are_counted() {
+        let mut q = PartitionedQueue::new(2, L, 8);
+        q.push(0, t(10), 0u32); // no current domain yet: local
+        assert_eq!(q.pop(), Some((t(10), 0)));
+        q.push(0, t(20), 1); // same domain as the popped event
+        q.push(1, t(30), 2); // crosses to domain 1
+        let s = q.pdes_stats();
+        assert_eq!(s.local_msgs, 2);
+        assert_eq!(s.cross_msgs, 1);
+        assert!(s.cross_rate() > 0.3 && s.cross_rate() < 0.34);
+        assert!(s.render().contains("2 domain(s)"));
+    }
+
+    #[test]
+    fn cell_queue_selects_serial_at_one_domain() {
+        let q: CellQueue<u32> = CellQueue::new(1, L, 4);
+        assert!(matches!(q, CellQueue::Serial(_)));
+        assert!(q.pdes().is_none());
+        let q: CellQueue<u32> = CellQueue::new(4, L, 4);
+        assert!(matches!(q, CellQueue::Partitioned(_)));
+        assert_eq!(q.pdes().expect("partitioned").domains, 4);
+    }
+
+    #[test]
+    fn cell_queue_paths_agree() {
+        let batch: Vec<(usize, VirtualTime, u32)> =
+            (0..100).map(|i| (i, t((i as u64 * 37) % 200), i as u32)).collect();
+        let mut serial: CellQueue<u32> = CellQueue::new(1, L, 100);
+        let mut part: CellQueue<u32> = CellQueue::new(3, L, 100);
+        serial.push_batch(batch.clone());
+        part.push_batch(batch);
+        assert_eq!(serial.len(), part.len());
+        assert_eq!(serial.peek_time(), part.peek_time());
+        loop {
+            let (a, b) = (serial.pop(), part.pop());
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+        let (a, b) = (serial.stats(), part.stats());
+        assert_eq!(
+            (a.pushes, a.pops, a.depth, a.depth_hwm),
+            (b.pushes, b.pops, b.depth, b.depth_hwm)
+        );
+    }
+}

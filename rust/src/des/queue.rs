@@ -354,6 +354,36 @@ impl<T> EventQueue<T> {
         self.min_entry().map(|(t, _, _)| t)
     }
 
+    /// The next event's timestamp and a borrow of its payload, without
+    /// removing it.  Same O(buckets) scan as [`peek_time`], but it
+    /// must find the minimum's *slot*, so it re-walks the bucket heads
+    /// instead of reusing the internal `min_entry` (which returns the
+    /// bucket index).  Used by the partitioned merge in
+    /// [`crate::des::pdes`] to compare domain heads by their embedded
+    /// sequence tags.
+    ///
+    /// [`peek_time`]: Self::peek_time
+    pub fn peek(&self) -> Option<(VirtualTime, &T)> {
+        let mut best: Option<Key> = None;
+        for bucket in &self.buckets {
+            if let Some(&Reverse((t, s, slot))) = bucket.peek() {
+                let better = match best {
+                    None => true,
+                    Some((bt, bs, _)) => (t, s) < (bt, bs),
+                };
+                if better {
+                    best = Some((t, s, slot));
+                }
+            }
+        }
+        best.map(|(t, _, slot)| {
+            (
+                t,
+                self.slots[slot].as_ref().expect("event slot occupied"),
+            )
+        })
+    }
+
     /// Number of queued events.
     pub fn len(&self) -> usize {
         self.len
@@ -539,10 +569,23 @@ mod tests {
         let mut q = EventQueue::new();
         q.push(t(7), ());
         assert_eq!(q.peek_time(), Some(t(7)));
+        assert_eq!(q.peek(), Some((t(7), &())));
         assert_eq!(q.len(), 1);
         assert!(q.pop().is_some());
         assert!(q.is_empty());
         assert_eq!(q.peek_time(), None);
+        assert_eq!(q.peek(), None);
+    }
+
+    #[test]
+    fn peek_returns_the_fifo_minimum_payload() {
+        let mut q = EventQueue::new();
+        q.push(t(9), "late");
+        q.push(t(2), "first");
+        q.push(t(2), "second"); // same instant, pushed later
+        assert_eq!(q.peek(), Some((t(2), &"first")));
+        q.pop();
+        assert_eq!(q.peek(), Some((t(2), &"second")));
     }
 
     #[test]

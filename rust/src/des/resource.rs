@@ -147,6 +147,16 @@ impl FifoResource {
         self.free_at.peek_time().unwrap_or(VirtualTime::ZERO)
     }
 
+    /// This station's lower-bound time stamp for conservative parallel
+    /// simulation ([`crate::des::pdes`]): no submission processed from
+    /// now on can complete before the earliest server frees up, so a
+    /// lookahead domain containing this station may be advanced to
+    /// `lbts() + lookahead` without waiting on it.  Identical to
+    /// [`next_free`](Self::next_free); the alias names the PDES role.
+    pub fn lbts(&self) -> VirtualTime {
+        self.next_free()
+    }
+
     /// How long a request arriving at `at` would wait before service
     /// starts ([`Duration::ZERO`] when a server is already idle).
     /// This is the queueing-delay view a saturation sweep reports.
@@ -280,6 +290,17 @@ mod tests {
                 b.submit(t(2), Duration::from_millis(1))
             );
         }
+    }
+
+    #[test]
+    fn lbts_is_the_earliest_server_release() {
+        let mut r = FifoResource::new(2);
+        assert_eq!(r.lbts(), VirtualTime::ZERO, "idle station bounds at zero");
+        r.submit(t(0), Duration::from_millis(10));
+        assert_eq!(r.lbts(), VirtualTime::ZERO, "second server still idle");
+        r.submit(t(0), Duration::from_millis(4));
+        assert_eq!(r.lbts(), t(4), "earliest completion bounds the domain");
+        assert_eq!(r.lbts(), r.next_free());
     }
 
     #[test]

@@ -20,8 +20,9 @@ impl Duration {
     /// The zero-length span.
     pub const ZERO: Duration = Duration(0);
 
-    /// A span of `ns` nanoseconds.
-    pub fn from_nanos(ns: u64) -> Self {
+    /// A span of `ns` nanoseconds (`const`, so lookahead bounds can be
+    /// named constants).
+    pub const fn from_nanos(ns: u64) -> Self {
         Duration(ns)
     }
     /// A span of `us` microseconds.

@@ -22,7 +22,7 @@ use harbor::fem::exec::Exec;
 use harbor::mpi::AbiResolver;
 use harbor::platform::Platform;
 use harbor::runtime::{calibrate, CalibrationTable, Engine};
-use harbor::util::cli::{parse_count, Args};
+use harbor::util::cli::{parse_count, parse_workers, Args};
 use harbor::util::json::Value;
 use harbor::workload::{run_poisson_app, AppConfig};
 
@@ -256,16 +256,28 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
              suffixes accepted (64k = 65536, 1m = 1048576)",
             None,
         )
-        .opt("jobs", "matrix workers; 0 = available parallelism (bit-identical)", Some("0"))
+        .opt(
+            "jobs",
+            "matrix workers; `auto` = available parallelism (bit-identical)",
+            Some("auto"),
+        )
+        .opt(
+            "domains",
+            "lookahead domains per cell's event queue; 1 = serial reference \
+             (bit-identical for any value)",
+            Some("1"),
+        )
         .switch("list", "list the registered scenarios and exit")
         .switch("json", "print JSON instead of ASCII bars")
         .switch("scale", "paper-scale rank counts (fig3/fig4: 1536, 12288, 98304)")
         .switch("per-rank", "force the O(ranks) per-rank engine (default: class-batched)");
     let p = args.parse(raw)?;
-    let jobs = match p.parse_num::<usize>("jobs")? {
-        0 => harbor::scenario::MatrixRunner::available_jobs(),
-        n => n,
-    };
+    let jobs = parse_workers(
+        "jobs",
+        p.req("jobs"),
+        Some(harbor::scenario::MatrixRunner::available_jobs()),
+    )?;
+    let domains = parse_workers("domains", p.req("domains"), None)?;
     let coordinator = Coordinator::new().with_jobs(jobs);
     if p.flag("list") {
         println!("SCENARIOS (harbor bench <scenario>):");
@@ -334,6 +346,7 @@ fn cmd_bench(raw: &[String]) -> anyhow::Result<()> {
                 .default_config()?,
         };
         cfg.figure = figure.clone();
+        cfg.domains = domains;
         if p.flag("per-rank") {
             cfg.batched = false;
         }

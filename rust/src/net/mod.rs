@@ -44,6 +44,18 @@ impl PathCost {
     }
 }
 
+/// The natural lookahead bound for the container tiers' conservative
+/// parallel DES ([`crate::des::pdes`]): no cross-domain effect — a
+/// pull served by another domain's shard, a peer hand-off, a retried
+/// chunk — can land sooner than one WAN registry round trip, so every
+/// lookahead domain may safely advance [`PathCost::registry_wan`]'s
+/// `alpha` (120 ms of virtual time) past the global minimum.  A larger
+/// bound would admit more parallelism but claim causal independence
+/// the WAN model does not guarantee; this is the conservative floor.
+pub fn wan_lookahead() -> Duration {
+    PathCost::registry_wan().alpha
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,6 +76,12 @@ mod tests {
         // 30 MB at 30 MB/s + 120 ms request latency ≈ 1.12 s
         let t = w.transfer(30_000_000);
         assert!((t.as_secs_f64() - 1.12).abs() < 0.01);
+    }
+
+    #[test]
+    fn wan_lookahead_is_the_registry_latency() {
+        assert_eq!(wan_lookahead(), Duration::from_millis(120));
+        assert_eq!(wan_lookahead(), PathCost::registry_wan().alpha);
     }
 
     #[test]

@@ -12,7 +12,9 @@
 //! `O(distinct stages)`.
 //!
 //! The farm is a DES: worker-completion events go through one calendar
-//! [`EventQueue`] (the initial wave enters as a `push_batch`), each
+//! [`CellQueue`] (the initial wave enters as a `push_batch`; at
+//! `--domains` > 1 completions are partitioned by worker index under
+//! the WAN lookahead bound — see [`crate::des::pdes`]), each
 //! build runs against a **fork** of the committed [`Builder`] cache
 //! and is absorbed only at its completion instant (a build cannot hit
 //! cache entries from builds that finish after it started), and each
@@ -24,7 +26,7 @@
 //! Cell = one farm size; the cold pass vs the warm re-run of the same
 //! matrix become the paper-style figure rows.
 //!
-//! [`EventQueue`]: crate::des::EventQueue
+//! [`CellQueue`]: crate::des::CellQueue
 
 use std::collections::HashSet;
 
@@ -36,8 +38,9 @@ use crate::container::{
     BuildReport, Builder, Buildfile, CacheStats, LayerCache, LayerId, LayerStore, Registry,
     ShardedRegistry,
 };
-use crate::des::{Duration, EventQueue, QueueStats, VirtualTime};
+use crate::des::{CellQueue, Duration, QueueStats, VirtualTime};
 use crate::metrics::Stats;
+use crate::net::wan_lookahead;
 
 use super::{Cell, CellResult, Scenario, SimContext};
 
@@ -99,17 +102,23 @@ pub struct FarmConfig {
     /// Per-directive cache-probe cost a build pays, hit or miss (what
     /// a fully warm build still costs).
     pub per_layer_probe: Duration,
+    /// Lookahead domains for the completion scheduler (see
+    /// [`crate::des::pdes`]): 1 runs the serial reference queue, more
+    /// partitions completions by worker index under the WAN lookahead
+    /// bound.  Renders are byte-identical for any value (`--domains`).
+    pub domains: usize,
 }
 
 impl FarmConfig {
     /// A CI-fleet default: 4 registry shards, 500 ms job setup, 5 ms
-    /// per-directive cache probe.
+    /// per-directive cache probe, serial scheduling.
     pub fn ci(workers: usize) -> Self {
         FarmConfig {
             workers,
             shards: 4,
             setup: Duration::from_millis(500),
             per_layer_probe: Duration::from_millis(5),
+            domains: 1,
         }
     }
 }
@@ -213,7 +222,8 @@ impl BuildFarm {
         let t0 = self.clock;
         let workers = self.config.workers;
         let cache_before = self.blob_cache.stats();
-        let mut queue: EventQueue<usize> = EventQueue::with_capacity(workers);
+        let mut queue: CellQueue<usize> =
+            CellQueue::new(self.config.domains, wan_lookahead(), workers);
         let mut pending: Vec<Option<(Builder, BuildReport)>> =
             (0..workers).map(|_| None).collect();
         let mut next_job = 0usize;
@@ -229,7 +239,7 @@ impl BuildFarm {
         let mut batch = Vec::with_capacity(workers.min(jobs.len()));
         for worker in 0..workers.min(jobs.len()) {
             let done = self.start_job(&jobs[next_job], t0, worker, &mut pending)?;
-            batch.push((done, worker));
+            batch.push((worker, done, worker));
             next_job += 1;
         }
         queue.push_batch(batch);
@@ -257,7 +267,7 @@ impl BuildFarm {
 
             if next_job < jobs.len() {
                 let done = self.start_job(&jobs[next_job], now, worker, &mut pending)?;
-                queue.push(done, worker);
+                queue.push(worker, done, worker);
                 next_job += 1;
             }
         }
@@ -348,10 +358,13 @@ impl Scenario for BuildFarmScenario {
             .collect())
     }
 
-    fn run_cell(&self, _ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult> {
+    fn run_cell(&self, ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult> {
         let c: &FarmCell = cell.payload()?;
         let jobs = variant_matrix()?;
-        let mut farm = BuildFarm::new(FarmConfig::ci(c.workers));
+        let mut farm = BuildFarm::new(FarmConfig {
+            domains: ctx.cfg.domains,
+            ..FarmConfig::ci(c.workers)
+        });
         let cold = farm.run_pass(&jobs)?;
         let warm = farm.run_pass(&jobs)?;
         // breakdown keys carry a structural "cold:"/"warm:" tag so

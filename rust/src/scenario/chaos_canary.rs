@@ -169,7 +169,13 @@ impl Scenario for ChaosCanary {
         let mut registry = canary_registry()?;
         // batched (the default) rides the collapsed node-class engine;
         // --per-rank forces the per-node reference walk
-        let mut fleet = DeployEngine::new(FleetConfig::hpc(c.nodes), ctx.cfg.batched);
+        let mut fleet = DeployEngine::new(
+            FleetConfig {
+                domains: ctx.cfg.domains,
+                ..FleetConfig::hpc(c.nodes)
+            },
+            ctx.cfg.batched,
+        );
 
         // the fleet runs r1 before the chaos starts (fault-free warmup)
         let baseline = fleet.deploy(&mut registry, V1_REFERENCE)?;

@@ -70,7 +70,13 @@ impl Scenario for Fig1Scale {
         // batched (the default) = the collapsed node-class engine;
         // --per-rank opts into the per-node reference walk (feasible
         // up to the 16k rows, used by the CI golden-diff gate)
-        let mut fleet = DeployEngine::new(FleetConfig::hpc(c.nodes), ctx.cfg.batched);
+        let mut fleet = DeployEngine::new(
+            FleetConfig {
+                domains: ctx.cfg.domains,
+                ..FleetConfig::hpc(c.nodes)
+            },
+            ctx.cfg.batched,
+        );
         let cold = fleet.deploy(&mut sharded, REFERENCE)?;
         let warm = fleet.deploy(&mut sharded, REFERENCE)?;
         // breakdown keys carry a structural "cold:"/"warm:" tag so

@@ -176,7 +176,7 @@ impl Scenario for RegistryStorm {
 
     fn run_cell(&self, ctx: &SimContext<'_>, cell: &Cell) -> Result<CellResult> {
         let c: &StormCell = cell.payload()?;
-        let mut fd = storm_front_door(c.shards)?;
+        let mut fd = storm_front_door(c.shards)?.with_domains(ctx.cfg.domains);
 
         // calibrate the mean inter-arrival gap so `load` is the exact
         // fraction of aggregate shard capacity the stream requests,

@@ -70,6 +70,36 @@ pub fn parse_count(raw: &str) -> Result<usize, UsageError> {
     base.checked_mul(mult).ok_or_else(bad)
 }
 
+/// Parse a worker/domain count for `flag` (e.g. `--jobs`,
+/// `--domains`): a positive integer, or the word `auto` when `auto` is
+/// `Some(n)` (resolving to `n`).  Zero and garbage are rejected with a
+/// usage error listing the accepted forms, the same shape
+/// [`parse_count`] uses — a silent `--jobs 0` → "all cores" mapping
+/// reads like a typo check that never fires.
+pub fn parse_workers(flag: &str, raw: &str, auto: Option<usize>) -> Result<usize, UsageError> {
+    let s = raw.trim();
+    let bad = || {
+        let auto_form = if auto.is_some() {
+            " and `auto` = available parallelism"
+        } else {
+            ""
+        };
+        UsageError(format!(
+            "cannot parse `{raw}` for --{flag}: accepted forms are positive \
+             integers (`4`){auto_form}"
+        ))
+    };
+    if let Some(n) = auto {
+        if s.eq_ignore_ascii_case("auto") {
+            return Ok(n);
+        }
+    }
+    match s.parse::<usize>() {
+        Ok(0) | Err(_) => Err(bad()),
+        Ok(n) => Ok(n),
+    }
+}
+
 impl Args {
     /// A spec for `command` with a one-line description.
     pub fn new(command: &'static str, about: &'static str) -> Self {
@@ -350,6 +380,30 @@ mod tests {
         }
         // overflow on the multiply is an error, not a wrap
         assert!(parse_count("99999999999999999m").is_err());
+    }
+
+    #[test]
+    fn parse_workers_accepts_positive_counts_and_auto() {
+        assert_eq!(parse_workers("jobs", "4", Some(8)).unwrap(), 4);
+        assert_eq!(parse_workers("jobs", " 1 ", Some(8)).unwrap(), 1);
+        assert_eq!(parse_workers("jobs", "auto", Some(8)).unwrap(), 8);
+        assert_eq!(parse_workers("jobs", "AUTO", Some(8)).unwrap(), 8);
+        assert_eq!(parse_workers("domains", "2", None).unwrap(), 2);
+    }
+
+    #[test]
+    fn parse_workers_rejects_zero_and_garbage_with_the_accepted_forms() {
+        for bad in ["0", "", "many", "-1", "1.5", "4k"] {
+            let e = parse_workers("jobs", bad, Some(8)).unwrap_err();
+            assert!(e.0.contains("--jobs"), "error names the flag: {e}");
+            assert!(e.0.contains("accepted forms"), "error for `{bad}`: {e}");
+            assert!(e.0.contains("auto"), "auto is offered when available: {e}");
+        }
+        // without an auto resolution, `auto` is garbage too
+        let e = parse_workers("domains", "auto", None).unwrap_err();
+        assert!(e.0.contains("--domains"), "{e}");
+        assert!(!e.0.contains("`auto` ="), "auto not offered: {e}");
+        assert!(parse_workers("domains", "0", None).is_err());
     }
 
     #[test]

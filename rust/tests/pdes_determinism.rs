@@ -1,0 +1,75 @@
+//! Integration: the conservative parallel DES keeps the determinism
+//! contract at scenario level.
+//!
+//! `--domains N` partitions each cell's event queue into lookahead
+//! domains (`harbor::des::pdes`); the contract is that the partitioning
+//! is a *pure parallelism knob* — every figure renders byte-identically
+//! for any domain count, composed with any `--jobs` worker count.  The
+//! unit and property layers pin the pop stream itself
+//! (`des::pdes::tests`, `tests/queue_equivalence.rs`); this suite pins
+//! the scenarios that schedule through [`CellQueue`]: the fleet deploy
+//! engines (`fig1-scale`), the front-door protocol tier
+//! (`registry-storm`) and the CI build farm (`build-farm`).
+//! `ci/render_diff.sh` enforces the same sweep on the release binary.
+//!
+//! [`CellQueue`]: harbor::des::CellQueue
+
+use harbor::bench::Figure;
+use harbor::config::ExperimentConfig;
+use harbor::coordinator::Coordinator;
+use harbor::runtime::CalibrationTable;
+
+fn coordinator(jobs: usize) -> Coordinator {
+    Coordinator::with_table(CalibrationTable::builtin_fallback()).with_jobs(jobs)
+}
+
+fn render_all(figs: &[Figure]) -> String {
+    figs.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+}
+
+/// Render `scenario` with `domains` lookahead domains on `jobs` matrix
+/// workers, over a test-sized cell set.
+fn render(scenario: &str, nodes: Vec<usize>, domains: usize, jobs: usize) -> String {
+    let mut cfg = ExperimentConfig::paper_default(scenario).expect("registered default");
+    cfg.nodes = nodes;
+    cfg.domains = domains;
+    render_all(&coordinator(jobs).run(&cfg).expect(scenario))
+}
+
+fn assert_domain_invariant(scenario: &str, nodes: Vec<usize>) {
+    let reference = render(scenario, nodes.clone(), 1, 1);
+    assert!(!reference.is_empty(), "`{scenario}` rendered nothing");
+    for domains in [2usize, 4] {
+        for jobs in [1usize, 4] {
+            assert_eq!(
+                render(scenario, nodes.clone(), domains, jobs),
+                reference,
+                "`{scenario}` must render byte-identically at \
+                 --domains {domains} --jobs {jobs}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fig1_scale_renders_identically_across_domains() {
+    // both engines: 4 nodes rides Fleet-per-node sizes, 64 exercises
+    // the collapsed ClassFleet path through the same CellQueue
+    assert_domain_invariant("fig1-scale", vec![4, 64]);
+}
+
+#[test]
+fn registry_storm_renders_identically_across_domains() {
+    assert_domain_invariant("registry-storm", vec![2]);
+}
+
+#[test]
+fn build_farm_renders_identically_across_domains() {
+    assert_domain_invariant("build-farm", vec![4]);
+}
+
+#[test]
+fn chaos_canary_renders_identically_across_domains() {
+    // faulted deploys under retries — the late-push (preemption) path
+    assert_domain_invariant("chaos-canary", vec![128]);
+}

@@ -11,8 +11,16 @@
 //! model of the original implementation, and a bounded-Pareto stream
 //! replays the registry-storm arrival process (bursts plus a sparse
 //! heavy tail in one schedule) against the heap reference.
+//!
+//! The partitioned-queue properties pin the conservative parallel DES
+//! ([`PartitionedQueue`]) to the serial calendar the same way: for any
+//! domain count — including empty domains, everything in one domain,
+//! and cross-domain ties at the lookahead horizon — the `(time, seq)`
+//! pop stream must match the serial queue event for event.
 
-use harbor::des::{Duration, EventQueue, FifoResource, HeapEventQueue, VirtualTime};
+use harbor::des::{
+    Duration, EventQueue, FifoResource, HeapEventQueue, PartitionedQueue, VirtualTime,
+};
 use harbor::util::proptest::{run, Gen};
 
 fn t(ns: u64) -> VirtualTime {
@@ -202,6 +210,132 @@ fn prop_heavy_tailed_open_loop_stream_matches_heap() {
                 return Ok(());
             }
         }
+    });
+}
+
+/// The partitioned queue must reproduce the serial pop stream for any
+/// domain count and any routing, under interleaved pushes, batches and
+/// pops — including pushes that land inside already-drained windows.
+#[test]
+fn prop_partitioned_pop_stream_matches_the_serial_queue() {
+    run("partitioned-vs-serial", 200, |g: &mut Gen| {
+        let domains = [1usize, 2, 3, 8][g.usize_in(0, 3)];
+        let lookahead = Duration::from_nanos(g.u64_in(0, 1_000_000));
+        let mut part = PartitionedQueue::new(domains, lookahead, 64);
+        let mut serial = EventQueue::new();
+        let mut next_id = 0usize;
+        for _ in 0..g.usize_in(1, 120) {
+            match g.usize_in(0, 3) {
+                0 | 1 => {
+                    let time = random_time(g);
+                    // over-range domain indices exercise the modulo wrap
+                    let d = g.usize_in(0, domains * 2);
+                    part.push(d, time, next_id);
+                    serial.push(time, next_id);
+                    next_id += 1;
+                }
+                2 => {
+                    let k = g.usize_in(0, 40);
+                    let batch: Vec<(usize, VirtualTime, usize)> = (0..k)
+                        .map(|i| (g.usize_in(0, domains), random_time(g), next_id + i))
+                        .collect();
+                    next_id += k;
+                    serial.push_batch(batch.iter().map(|&(_, tt, ev)| (tt, ev)).collect());
+                    part.push_batch(batch);
+                }
+                _ => {
+                    let (a, b) = (part.pop(), serial.pop());
+                    if a != b {
+                        return Err(format!(
+                            "pop diverged at {domains} domain(s): {a:?} vs {b:?}"
+                        ));
+                    }
+                }
+            }
+            if part.len() != serial.len() {
+                return Err(format!("len diverged: {} vs {}", part.len(), serial.len()));
+            }
+            if part.peek_time() != serial.peek_time() {
+                return Err(format!(
+                    "peek diverged: {:?} vs {:?}",
+                    part.peek_time(),
+                    serial.peek_time()
+                ));
+            }
+        }
+        loop {
+            let (a, b) = (part.pop(), serial.pop());
+            if a != b {
+                return Err(format!("drain diverged: {a:?} vs {b:?}"));
+            }
+            if a.is_none() {
+                return Ok(());
+            }
+        }
+    });
+}
+
+/// Cross-domain timestamp ties sitting exactly on the lookahead
+/// horizon are where a sloppy merge would reorder: the global push
+/// sequence must break them identically to the serial queue.
+#[test]
+fn partitioned_cross_domain_ties_at_the_lookahead_horizon_stay_fifo() {
+    let lookahead = Duration::from_nanos(100);
+    // domain 0 anchors the window at t=0, so the first horizon is
+    // exactly t=100: ties at 100 across three domains, one event just
+    // past it, and a second anchor tie at t=0
+    let pushes: &[(usize, u64)] = &[(0, 0), (1, 100), (2, 100), (0, 100), (3, 101), (1, 0)];
+    let mut serial = EventQueue::new();
+    for (i, &(_, ns)) in pushes.iter().enumerate() {
+        serial.push(t(ns), i);
+    }
+    let reference: Vec<_> = std::iter::from_fn(|| serial.pop()).collect();
+    for domains in [2usize, 3, 4, 8] {
+        let mut q = PartitionedQueue::new(domains, lookahead, pushes.len());
+        for (i, &(d, ns)) in pushes.iter().enumerate() {
+            q.push(d, t(ns), i);
+        }
+        let got: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(got, reference, "domains={domains}");
+    }
+}
+
+/// Degenerate routings — every event in one domain, the rest
+/// permanently idle — must still match the serial stream, with the
+/// idle domains contributing only null messages.
+#[test]
+fn prop_skewed_domain_routings_match_serial() {
+    run("partitioned-skew", 150, |g: &mut Gen| {
+        let domains = [2usize, 3, 8][g.usize_in(0, 2)];
+        let hot = g.usize_in(0, domains - 1);
+        let lookahead = Duration::from_nanos(g.u64_in(0, 10_000));
+        let mut part = PartitionedQueue::new(domains, lookahead, 64);
+        let mut serial = EventQueue::new();
+        for id in 0..g.usize_in(1, 150) {
+            let time = random_time(g);
+            part.push(hot, time, id);
+            serial.push(time, id);
+        }
+        let mut popped = false;
+        loop {
+            let (a, b) = (part.pop(), serial.pop());
+            if a != b {
+                return Err(format!("skewed drain diverged: {a:?} vs {b:?}"));
+            }
+            if a.is_none() {
+                break;
+            }
+            popped = true;
+        }
+        let s = part.pdes_stats();
+        if popped && s.null_msgs < (domains - 1) as u64 {
+            return Err(format!(
+                "idle domains must null-message every window: {} < {}",
+                s.null_msgs,
+                domains - 1
+            ));
+        }
+        Ok(())
     });
 }
 
